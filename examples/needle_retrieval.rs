@@ -1,0 +1,58 @@
+//! Needle-in-a-haystack across methods (the RULER mechanism, standalone):
+//! plant facts in long synthetic contexts, serve the retrieval query
+//! through the engine under each attention method, and report accuracy +
+//! decode latency side by side.
+//!
+//! Requires artifacts. Run:
+//!   cargo run --release --example needle_retrieval -- [context_bytes]
+
+use std::path::Path;
+
+use selfindex_kv::config::EngineConfig;
+use selfindex_kv::coordinator::{Engine, MethodKind};
+use selfindex_kv::substrate::benchkit::{fmt_duration, Table};
+use selfindex_kv::workloads::ruler::{self, RulerConfig};
+
+const METHODS: &[(&str, MethodKind)] = &[
+    ("full", MethodKind::Full),
+    ("snapkv", MethodKind::SnapKv),
+    ("quest", MethodKind::Quest),
+    ("doublesparse", MethodKind::DoubleSparse),
+    ("ours", MethodKind::SelfIndex),
+];
+
+fn main() -> anyhow::Result<()> {
+    let ctx: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1024);
+    let artifacts = std::env::var("SIKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let items = ruler::generate(&RulerConfig { context: ctx, items: 3, seed: 11 });
+    let needles: Vec<_> = items
+        .iter()
+        .filter(|i| i.task.starts_with("NS") || i.task.starts_with("NM"))
+        .collect();
+    println!("{} needle items at context {ctx}B\n", needles.len());
+
+    let mut table = Table::new(&["method", "accuracy", "mean decode step"]);
+    for &(name, kind) in METHODS {
+        let mut cfg = EngineConfig::default();
+        cfg.max_batch = 1;
+        cfg.max_new_tokens = 5;
+        let mut engine = Engine::new(Path::new(&artifacts), cfg, kind)?;
+        let mut acc = 0.0;
+        for item in &needles {
+            engine.submit(item.prompt.clone(), item.expected.len().min(5))?;
+            let results = engine.run_to_completion()?;
+            acc += item.score(&results[0].generated);
+        }
+        let step = engine.metrics.histogram("engine.decode_step_latency");
+        table.row(vec![
+            name.to_string(),
+            format!("{:.3}", acc / needles.len() as f64),
+            fmt_duration(step.mean()),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! End-to-end validation driver (DESIGN.md §End-to-end validation):
+//! load the build-time-trained tiny model via PJRT, serve a batched
+//! open-loop trace of long-context requests through the full stack
+//! (router → scheduler → PJRT prefill → compressed cache → LUT-GEMV
+//! retrieval → fused sparse attention → PJRT decode), and report
+//! latency/throughput plus needle-recall accuracy of the generations.
+//!
+//! Requires artifacts: `make artifacts` first.
+//! Run: `cargo run --release --example serve_longcontext -- [method]`
+
+use std::path::Path;
+
+use selfindex_kv::config::EngineConfig;
+use selfindex_kv::coordinator::{Engine, MethodKind};
+use selfindex_kv::substrate::benchkit::{fmt_bytes, fmt_duration, Table};
+use selfindex_kv::workloads::trace::{self, TraceConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let method = MethodKind::parse(args.first().map(|s| s.as_str()).unwrap_or("selfindex"))
+        .expect("method: selfindex|full|kivi|snapkv|quest|doublesparse");
+    let artifacts = std::env::var("SIKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    let mut cfg = EngineConfig::default();
+    cfg.max_batch = 4;
+    cfg.max_new_tokens = 8;
+    println!("loading engine (artifacts={artifacts}, method={method:?}) ...");
+    let mut engine = Engine::new(Path::new(&artifacts), cfg, method)?;
+
+    let tcfg = TraceConfig {
+        requests: 12,
+        mean_gap_ms: 0.0, // closed burst: stress continuous batching
+        prompt_lens: &[256, 512, 1024],
+        decode_tokens: 8,
+        seed: 2024,
+    };
+    let reqs = trace::generate(&tcfg);
+    // expected values: each trace prompt ends with "?key:" whose
+    // continuation should be the planted value
+    let expectations: Vec<Vec<u8>> = reqs
+        .iter()
+        .map(|r| {
+            // recover the planted fact from the prompt: find last "?k:"
+            let p = &r.prompt;
+            let qpos = p.iter().rposition(|&b| b == b'?').unwrap();
+            let key = &p[qpos + 1..p.len() - 1];
+            // find "@key=" earlier
+            let pat: Vec<u8> = [b"@".as_ref(), key, b"=".as_ref()].concat();
+            let at = p
+                .windows(pat.len())
+                .position(|w| w == pat.as_slice())
+                .expect("fact planted");
+            let vstart = at + pat.len();
+            let vend = p[vstart..].iter().position(|&b| b == b';').unwrap() + vstart;
+            p[vstart..vend].to_vec()
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    for r in &reqs {
+        engine.submit(r.prompt.clone(), r.max_new_tokens)?;
+    }
+    let mut results = engine.run_to_completion()?;
+    let wall = t0.elapsed();
+    results.sort_by_key(|r| r.id);
+
+    let mut table = Table::new(&["req", "prompt", "ttft", "latency", "tok/s", "needle", "output"]);
+    let mut hits = 0.0;
+    for (r, exp) in results.iter().zip(&expectations) {
+        let got = &r.generated[..exp.len().min(r.generated.len())];
+        let score = selfindex_kv::eval::prefix_accuracy(got, exp);
+        hits += score;
+        table.row(vec![
+            r.id.to_string(),
+            format!("{}B", r.prompt_len),
+            fmt_duration(r.ttft),
+            fmt_duration(r.latency),
+            format!("{:.1}", r.decode_tps()),
+            format!("{score:.2}"),
+            String::from_utf8_lossy(&r.generated).into_owned(),
+        ]);
+    }
+    println!("{}", table.render());
+    let total_tokens: usize = results.iter().map(|r| r.generated.len()).sum();
+    println!(
+        "== {} requests | {} tokens | wall {} | {:.1} tok/s | needle acc {:.2} | kv cache {} ==",
+        results.len(),
+        total_tokens,
+        fmt_duration(wall),
+        total_tokens as f64 / wall.as_secs_f64(),
+        hits / results.len() as f64,
+        fmt_bytes(engine.cache_bytes()),
+    );
+    println!("\nengine metrics:\n{}", engine.metrics.snapshot());
+    Ok(())
+}

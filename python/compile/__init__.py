@@ -1,0 +1,1 @@
+"""Self-Indexing KVCache compile path (build-time only; see DESIGN.md)."""

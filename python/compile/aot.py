@@ -1,0 +1,218 @@
+"""AOT pipeline: train (or load) weights, lower every entry point to HLO
+text, and write the artifact manifest the Rust runtime consumes.
+
+HLO *text* — not serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  weights.bin        model parameters (contract: rust/src/model/weights.rs)
+  manifest.json      model config + per-artifact input/output specs
+  <name>.hlo.txt     one per entry point × static-shape bucket
+
+Usage: python -m compile.aot [--steps N] [--out-dir DIR] [--force]
+       python -m compile.aot --skip-train   # random weights (CI / tests)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import (DECODE_BATCHES, QUANT_GROUP, SINK_TOKENS,
+                     SPARSE_K, VQ_CLUSTERS, VQ_GROUP, default_model)
+from .train import load_weights, save_weights, train
+
+PREFILL_LENS = (256, 1024, 4096)
+DENSE_PARITY = ((1, 256), (4, 1024))   # dense_attn buckets for tests/baseline
+QUANT_T = 256                          # quantize_block token tile
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _iospec(args, names):
+    assert len(args) == len(names), (len(args), names)
+    return [
+        {"name": n, "dtype": str(a.dtype), "shape": list(a.shape)}
+        for n, a in zip(names, args)
+    ]
+
+
+def build_entries(cfg):
+    """Yield (artifact_name, fn, arg_specs, arg_names, output_names)."""
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g, ng = cfg.vq_groups, cfg.quant_groups
+    vocab, ff = cfg.vocab_size, cfg.d_ff
+    pspec = M.param_spec(cfg)
+    pnames = [f"param:{n}" for n, _ in pspec]
+    pargs = [spec(s) for _, s in pspec]
+
+    entries = []
+
+    for L in PREFILL_LENS:
+        entries.append((
+            f"prefill_l{L}",
+            lambda *a, cfg=cfg: M.prefill(a[:-2], a[-2], a[-1], cfg),
+            pargs + [spec((1, L), jnp.int32), spec((), jnp.int32)],
+            pnames + ["tokens", "true_len"],
+            ["k_cache", "v_cache", "last_logits", "q_window"],
+        ))
+
+    for B in DECODE_BATCHES:
+        entries.append((
+            f"embed_b{B}",
+            lambda emb, tok: (M.embed(emb, tok),),
+            [spec((vocab, d)), spec((B,), jnp.int32)],
+            ["param:emb", "tokens"],
+            ["x"],
+        ))
+        entries.append((
+            f"decode_qkv_b{B}",
+            lambda ln1, wq, wk, wv, x, pos, cfg=cfg: M.decode_qkv(
+                ln1, wq, wk, wv, x, pos, cfg),
+            [spec((d,)), spec((d, h * hd)), spec((d, kvh * hd)),
+             spec((d, kvh * hd)), spec((B, d)), spec((B,), jnp.int32)],
+            ["layer:ln1", "layer:wq", "layer:wk", "layer:wv", "x", "pos"],
+            ["q", "k", "v"],
+        ))
+        s, t = SPARSE_K, SINK_TOKENS
+        entries.append((
+            f"sparse_attn_b{B}",
+            lambda *a, cfg=cfg: (M.sparse_attn_step(*a, cfg),),
+            [spec((B, h, hd)), spec((B, kvh, s, g), jnp.int32),
+             spec((B, kvh, s, hd), jnp.uint8), spec((B, kvh, s, ng)),
+             spec((B, kvh, s, ng)), spec((B, kvh, s, hd), jnp.uint8),
+             spec((B, kvh, s, ng)), spec((B, kvh, s, ng)),
+             spec((B, kvh, hd)), spec((B, kvh, t, hd)), spec((B, kvh, t, hd)),
+             spec((B, kvh, s)), spec((B, kvh, t))],
+            ["q", "codes", "k_q", "k_qs", "k_zp", "v_q", "v_qs", "v_zp",
+             "alpha", "k_sink", "v_sink", "sel_mask", "sink_mask"],
+            ["o"],
+        ))
+        entries.append((
+            f"decode_out_b{B}",
+            lambda o, x, wo, ln2, w1, w2: (M.decode_out(o, x, wo, ln2, w1, w2),),
+            [spec((B, h, hd)), spec((B, d)), spec((h * hd, d)), spec((d,)),
+             spec((d, ff)), spec((ff, d))],
+            ["o", "x", "layer:wo", "layer:ln2", "layer:w1", "layer:w2"],
+            ["x_next"],
+        ))
+        entries.append((
+            f"logits_b{B}",
+            lambda x, ln_f, emb: (M.logits_head(x, ln_f, emb),),
+            [spec((B, d)), spec((d,)), spec((vocab, d))],
+            ["x", "param:ln_f", "param:emb"],
+            ["logits"],
+        ))
+
+    for B, L in DENSE_PARITY:
+        entries.append((
+            f"dense_attn_b{B}_l{L}",
+            lambda q, k, v, n, cfg=cfg: (M.dense_attn_step(q, k, v, n, cfg),),
+            [spec((B, h, hd)), spec((B, L, kvh, hd)), spec((B, L, kvh, hd)),
+             spec((B,), jnp.int32)],
+            ["q", "k_cache", "v_cache", "cache_len"],
+            ["o"],
+        ))
+
+    entries.append((
+        f"quantize_t{QUANT_T}",
+        lambda k, v, mu, alpha: M.quantize_block(k, v, mu, alpha),
+        [spec((QUANT_T, hd)), spec((QUANT_T, hd)), spec((hd,)), spec((hd,))],
+        ["k_block", "v_block", "mu", "alpha"],
+        ["codes", "sums", "counts", "k_q", "k_qs", "k_zp",
+         "v_q", "v_qs", "v_zp"],
+    ))
+    return entries
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("TRAIN_STEPS", 240)))
+    ap.add_argument("--skip-train", action="store_true",
+                    help="random-init weights (fast; tests/CI)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    cfg = default_model()
+
+    wpath = os.path.join(out, "weights.bin")
+    if os.path.exists(wpath) and not args.force:
+        print(f"weights: reusing {wpath}")
+        params = load_weights(wpath, cfg)
+    elif args.skip_train or os.environ.get("SKIP_TRAIN"):
+        print("weights: random init (--skip-train)")
+        params = M.init_params(0, cfg)
+        save_weights(wpath, params, cfg)
+    else:
+        print(f"weights: training {args.steps} steps ...", flush=True)
+        params, history = train(cfg, steps=args.steps)
+        save_weights(wpath, params, cfg)
+        with open(os.path.join(out, "train_log.json"), "w") as f:
+            json.dump({"loss": history}, f)
+        print(f"weights: final loss {history[-1]:.4f}")
+
+    manifest = {
+        "model": {
+            "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "rope_theta": cfg.rope_theta,
+        },
+        "selfindex": {
+            "vq_group": VQ_GROUP, "vq_clusters": VQ_CLUSTERS,
+            "quant_bits": 2, "quant_group": QUANT_GROUP,
+            "sink_tokens": SINK_TOKENS, "sparse_k": SPARSE_K,
+        },
+        "params": [{"name": n, "shape": list(s)} for n, s in M.param_spec(cfg)],
+        "artifacts": {},
+    }
+
+    for name, fn, arg_specs, arg_names, out_names in build_entries(cfg):
+        path = os.path.join(out, f"{name}.hlo.txt")
+        if os.path.exists(path) and not args.force:
+            print(f"lower: reusing {name}")
+        else:
+            print(f"lower: {name} ...", flush=True)
+            lowered = jax.jit(fn).lower(*arg_specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+        out_shapes = jax.eval_shape(fn, *arg_specs)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _iospec(arg_specs, arg_names),
+            "outputs": [
+                {"name": n, "dtype": str(o.dtype), "shape": list(o.shape)}
+                for n, o in zip(out_names, out_shapes)
+            ],
+        }
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts"
+          f" -> {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Shared model / cache hyper-parameters for the compile path.
+
+These mirror `rust/src/config` — the Rust side re-validates every value at
+artifact-load time (shape metadata is embedded in `artifacts/manifest.json`).
+
+Paper defaults (Self-Indexing KVCache, AAAI 2026):
+  * sign-VQ group size   = 4 channels  -> 16 clusters / group   (Eq. 1-3)
+  * codebook             = 16 centroids per group, one-pass      (Eq. 4)
+  * quantization         = 2-bit token-wise, groups of 32        (Eq. 9-11)
+  * sink tokens          = 64 full-precision (SnapKV-selected)
+  * decode sparsity      = 7.5 % of context (dynamic top-k)
+"""
+
+from dataclasses import dataclass, field
+
+
+VQ_GROUP: int = 4          # channels per sign-VQ group
+VQ_CLUSTERS: int = 16      # 2**VQ_GROUP sign patterns
+QUANT_BITS: int = 2        # bits per magnitude / value element
+QUANT_GROUP: int = 32      # channels per quant scale/zero-point group
+SINK_TOKENS: int = 64
+DEFAULT_SPARSITY: float = 0.075
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Tiny GQA transformer served by the Rust coordinator.
+
+    Sized so that build-time training (a few hundred steps, CPU) and
+    interpret-mode Pallas stay tractable while keeping the attention
+    geometry of the paper's targets (GQA, head_dim that divides into
+    4-channel VQ groups and 32-channel quant groups).
+    """
+
+    vocab_size: int = 256          # byte-level
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8               # query heads
+    n_kv_heads: int = 2            # GQA 4:1 like Llama-3.1 (32:8)
+    head_dim: int = 64             # -> G = 16 sign-VQ groups, 2 quant groups
+    d_ff: int = 512
+    max_seq: int = 8192
+    rope_theta: float = 10000.0
+
+    @property
+    def vq_groups(self) -> int:
+        assert self.head_dim % VQ_GROUP == 0
+        return self.head_dim // VQ_GROUP
+
+    @property
+    def quant_groups(self) -> int:
+        assert self.head_dim % QUANT_GROUP == 0
+        return self.head_dim // QUANT_GROUP
+
+    @property
+    def gqa_ratio(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+
+# Static shape buckets lowered to HLO (PJRT executables are shape-specialized).
+PREFILL_CHUNKS = (128, 512)        # tokens per prefill call
+DECODE_BATCHES = (1, 4, 8)         # sequences per decode step
+SPARSE_K = 96                      # dynamically selected tokens (paper: 160 budget - 64 sink)
+
+
+def default_model() -> ModelConfig:
+    return ModelConfig()

@@ -1,0 +1,89 @@
+"""Golden-vector exporter: deterministic test tensors for the Rust side.
+
+Writes artifacts/golden.bin in the weights.bin format (all f32; small
+integers are exact in f32). The Rust unit tests (rust/src/selfindex,
+rust/src/quant, rust/src/attention) recompute each stage natively and
+compare: codes/topk bit-exact, floats within tolerance. This pins the
+Python↔Rust contract far more tightly than shape checks.
+
+Usage: python -m compile.golden [--out ../artifacts/golden.bin]
+"""
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .train import MAGIC
+
+L, D, K_SEL, N_SINK = 256, 64, 32, 8
+
+
+def tensors():
+    r = np.random.default_rng(12345)
+    # clustered keys: the regime retrieval targets (see test_kernels.py)
+    dirs = r.standard_normal((8, D)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    assign = r.integers(0, 8, L)
+    k = jnp.asarray((4.0 * dirs[assign]
+                     + 0.8 * r.standard_normal((L, D))
+                     + 0.5 * r.standard_normal(D)).astype(np.float32))
+    v = jnp.asarray(r.standard_normal((L, D)).astype(np.float32))
+    q = jnp.asarray((4.0 * dirs[0]
+                     + 0.4 * r.standard_normal(D)).astype(np.float32))
+
+    kn, mu = ref.normalize_keys(k)
+    st = ref.compress_prefill(k, v)
+    lut = ref.build_lut(q, st["codebook"])
+    scores = ref.lut_scores(lut, st["codes"])
+    exact = ref.exact_scores(q, kn)
+    topk = ref.topk_indices(scores, K_SEL)
+
+    k_rec = ref.dequantize_key(st["codes"], st["k_q"], st["k_qs"],
+                               st["k_zp"], st["alpha"])
+    v_rec = ref.dequantize_token_wise(st["v_q"], st["v_qs"], st["v_zp"])
+    dense_out = ref.attention_ref(q, kn, v)
+    sink = jnp.arange(N_SINK, dtype=jnp.int32)
+    sparse_out, sel = ref.retrieve_and_attend(q, st, K_SEL, sink_idx=sink)
+
+    out = {
+        "k": k, "v": v, "q": q, "mu": mu, "kn": kn,
+        "codes": st["codes"].astype(jnp.float32),
+        "codebook": st["codebook"], "alpha": st["alpha"],
+        "k_q": st["k_q"].astype(jnp.float32),
+        "k_qs": st["k_qs"], "k_zp": st["k_zp"],
+        "v_q": st["v_q"].astype(jnp.float32),
+        "v_qs": st["v_qs"], "v_zp": st["v_zp"],
+        "lut": lut, "scores": scores, "exact_scores": exact,
+        "topk": topk.astype(jnp.float32),
+        "sel": sel.astype(jnp.float32),
+        "k_rec": k_rec, "v_rec": v_rec,
+        "dense_out": dense_out, "sparse_out": sparse_out,
+    }
+    return out
+
+
+def save(path, named):
+    with open(path, "wb") as f:
+        f.write(np.array([MAGIC, 1, len(named)], dtype="<u4").tobytes())
+        for name, arr in named.items():
+            arr = np.asarray(arr, dtype="<f4")
+            nb = name.encode()
+            f.write(np.array([len(nb)], dtype="<u4").tobytes())
+            f.write(nb)
+            f.write(bytes([0, arr.ndim]))
+            f.write(np.array(arr.shape, dtype="<u4").tobytes())
+            f.write(arr.tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/golden.bin")
+    args = ap.parse_args()
+    save(args.out, tensors())
+    print(f"golden vectors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

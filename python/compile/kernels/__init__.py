@@ -1,0 +1,11 @@
+"""Self-Indexing KVCache — Layer-1 Pallas kernels (build-time only).
+
+Modules:
+  ref         pure-jnp correctness oracle for everything below
+  sign_vq     one-pass sign-based VQ: codes + codebook        (Eq. 1-4)
+  lut_gemv    compressed-domain retrieval scoring             (Eq. 8)
+  quant       token-wise 2-bit quantization                   (Eq. 9-13)
+  sparse_attn dequant-fused sparse attention over sinks+top-k
+"""
+
+from . import lut_gemv, quant, ref, sign_vq, sparse_attn  # noqa: F401

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: compressed-domain retrieval scoring — LUT-GEMV (Eq. 8).
+
+Two pieces, matching the paper's Figure 3:
+
+  1. `build_lut`   — q's G subvectors · 16 centroids each → (G, 16) table.
+     A (16·G × 4) GEMV; tiny, one MXU pass, done once per (query, head).
+  2. `lut_gemv`    — score every cached token by summing G table lookups
+     indexed by its stored 4-bit codes.  This replaces the O(L·D) f32
+     dot-product sweep with O(L·G) int-indexed loads: the paper's 4×+
+     retrieval speedup and the core "self-indexing" operation.
+
+TPU mapping: the LUT (G×16 f32 = 1 KB at G=16) is broadcast to every token
+tile and stays VMEM-resident (the shared-memory LUT of the CUDA version);
+token code tiles stream HBM→VMEM once.  The gather is expressed as a
+one-hot contraction so it maps onto the MXU rather than scalar loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import VQ_CLUSTERS, VQ_GROUP
+
+TOKEN_TILE = 512
+
+
+def build_lut(q, codebook):
+    """q: (D,), codebook: (G, 16, 4) -> lut: (G, 16).  Pure-jnp on purpose:
+    a G×16×4 einsum is a single tiny MXU op; a custom kernel adds nothing."""
+    g = codebook.shape[0]
+    qsub = q.reshape(g, VQ_GROUP)
+    return jnp.einsum("gv,gcv->gc", qsub, codebook)
+
+
+def _lut_gemv_kernel(lut_ref, codes_ref, scores_ref):
+    lut = lut_ref[...]                               # (G, 16)
+    codes = codes_ref[...]                           # (T, G)
+    # One-hot contraction == gather: onehot (T, G, 16) · lut (G, 16) -> (T,)
+    # (iota instead of jnp.arange: pallas kernels may not capture constants)
+    cluster_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, VQ_CLUSTERS), 2)
+    onehot = (codes[:, :, None] == cluster_ids)
+    scores_ref[...] = jnp.einsum(
+        "tgc,gc->t", onehot.astype(lut.dtype), lut
+    )
+
+
+def lut_gemv(lut, codes, *, token_tile=TOKEN_TILE, interpret=True):
+    """Approximate scores q·K'ᵀ from the compressed domain.
+
+    lut: (G, 16) f32, codes: (L, G) int32 -> scores: (L,) f32.
+    """
+    l, g = codes.shape
+    assert l % token_tile == 0, (l, token_tile)
+    n_tiles = l // token_tile
+
+    return pl.pallas_call(
+        _lut_gemv_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((g, VQ_CLUSTERS), lambda i: (0, 0)),   # LUT: resident
+            pl.BlockSpec((token_tile, g), lambda i: (i, 0)),    # codes: stream
+        ],
+        out_specs=pl.BlockSpec((token_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l,), lut.dtype),
+        interpret=interpret,
+    )(lut, codes)
+
+
+def retrieval_scores(q, codebook, codes, *, interpret=True, token_tile=TOKEN_TILE):
+    """Fused convenience wrapper: LUT build + LUT-GEMV for one (query, head)."""
+    return lut_gemv(build_lut(q, codebook), codes,
+                    token_tile=token_tile, interpret=interpret)

@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: token-wise low-bit quantization (Eq. 9-13).
+
+Token-wise (not channel-wise à la KIVI) so that a *single* retrieved token
+can be dequantized from a contiguous record — the property that makes the
+compressed cache random-access and therefore compatible with top-k sparse
+attention (paper §Token-Wise Quantization Format).
+
+Two entry points:
+
+  * `quantize_tokens`  — asymmetric min/max uint{B} quantization of V (or of
+    |K'|/α for keys) per (token × 32-channel group).
+  * `dequantize_tokens`— the inverse, used by tests; the serving path fuses
+    dequantization into the sparse-attention kernel instead (sparse_attn.py).
+
+The kernel is elementwise-per-token: a 1-D grid over token tiles, every
+tile touched exactly once (quantization is a single HBM pass, part of the
+paper's "minimal prefill overhead" claim).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import QUANT_BITS, QUANT_GROUP
+
+TOKEN_TILE = 256
+
+
+def _quant_kernel(v_ref, q_ref, qs_ref, zp_ref, *, bits, group):
+    v = v_ref[...]                                   # (T, D)
+    t, d = v.shape
+    ng = d // group
+    grouped = v.reshape(t, ng, group)
+    vmin = jnp.min(grouped, axis=-1)
+    vmax = jnp.max(grouped, axis=-1)
+    qs = (vmax - vmin) / (2**bits - 1)
+    qs = jnp.where(qs <= 0, 1.0, qs)                 # constant group guard
+    q = jnp.clip(
+        jnp.round((grouped - vmin[:, :, None]) / qs[:, :, None]),
+        0, 2**bits - 1,
+    )
+    q_ref[...] = q.reshape(t, d).astype(jnp.uint8)
+    qs_ref[...] = qs
+    zp_ref[...] = vmin
+
+
+def quantize_tokens(v, *, bits=QUANT_BITS, group=QUANT_GROUP,
+                    token_tile=TOKEN_TILE, interpret=True):
+    """v: (L, D) -> (qvals uint8 (L, D), qs (L, D/group), zp (L, D/group))."""
+    l, d = v.shape
+    assert d % group == 0, (d, group)
+    assert l % token_tile == 0, (l, token_tile)
+    ng = d // group
+    n_tiles = l // token_tile
+
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits, group=group),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((token_tile, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((token_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((token_tile, ng), lambda i: (i, 0)),
+            pl.BlockSpec((token_tile, ng), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, d), jnp.uint8),
+            jax.ShapeDtypeStruct((l, ng), v.dtype),
+            jax.ShapeDtypeStruct((l, ng), v.dtype),
+        ],
+        interpret=interpret,
+    )(v)
+
+
+def _dequant_kernel(q_ref, qs_ref, zp_ref, v_ref, *, group):
+    q = q_ref[...]
+    t, d = q.shape
+    ng = d // group
+    grouped = q.reshape(t, ng, group).astype(qs_ref.dtype)
+    v_ref[...] = (
+        grouped * qs_ref[...][:, :, None] + zp_ref[...][:, :, None]
+    ).reshape(t, d)
+
+
+def dequantize_tokens(qvals, qs, zp, *, group=QUANT_GROUP,
+                      token_tile=TOKEN_TILE, interpret=True):
+    """Inverse of `quantize_tokens` (Eq. 11)."""
+    l, d = qvals.shape
+    ng = d // group
+    assert qs.shape == (l, ng) and zp.shape == (l, ng)
+    assert l % token_tile == 0, (l, token_tile)
+    n_tiles = l // token_tile
+
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, group=group),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((token_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((token_tile, ng), lambda i: (i, 0)),
+            pl.BlockSpec((token_tile, ng), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, d), qs.dtype),
+        interpret=interpret,
+    )(qvals, qs, zp)

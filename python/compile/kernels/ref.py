@@ -1,0 +1,253 @@
+"""Pure-jnp reference oracle for every Self-Indexing KVCache kernel.
+
+Everything here is written for clarity, not speed: it is the correctness
+ground truth that the Pallas kernels (sign_vq / lut_gemv / quant /
+sparse_attn) and the Rust-native hot-path implementations are tested
+against (pytest + hypothesis on the Python side, golden-vector files on the
+Rust side — see python/tests/test_golden.py).
+
+Shapes follow the paper's notation: K ∈ R^{L×D}, groups of VQ_GROUP=4
+channels, G = D/4 groups, 16 sign-pattern clusters per group.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import QUANT_BITS, QUANT_GROUP, VQ_CLUSTERS, VQ_GROUP
+
+# ---------------------------------------------------------------------------
+# Entropy-aware normalization (Eq. 5-7)
+# ---------------------------------------------------------------------------
+
+
+def normalize_keys(k):
+    """Channel-wise mean subtraction: K' = K - mu, mu_d = mean_i K[i, d].
+
+    Maximizes sign-bit entropy (Eq. 6).  Softmax over q·K'ᵀ differs from
+    q·Kᵀ by the token-independent constant q·mu, so attention weights are
+    unchanged (Eq. 7).
+
+    Returns (K', mu) with mu of shape (D,).
+    """
+    mu = jnp.mean(k, axis=0)
+    return k - mu[None, :], mu
+
+
+# ---------------------------------------------------------------------------
+# One-pass sign-based clustering (Eq. 1-4)
+# ---------------------------------------------------------------------------
+
+
+def sign_codes(k):
+    """Map each 4-channel subvector to its 4-bit sign pattern (Eq. 2-3).
+
+    Bit order per Eq. 3: channel 0 of the group is the MSB (weight 8),
+    channel 3 the LSB (weight 1); sign >= 0 encodes as bit 1.
+
+    k: (L, D) -> codes: (L, G) int32 in [0, 16).
+    """
+    l, d = k.shape
+    g = d // VQ_GROUP
+    sub = k.reshape(l, g, VQ_GROUP)
+    bits = (sub >= 0).astype(jnp.int32)
+    weights = 2 ** jnp.arange(VQ_GROUP - 1, -1, -1, dtype=jnp.int32)  # [8,4,2,1]
+    return jnp.sum(bits * weights[None, None, :], axis=-1)
+
+
+def build_codebook(k, codes):
+    """Per-group centroids: mean of the subvectors sharing a sign pattern (Eq. 4).
+
+    Empty clusters get the zero vector (they are never looked up for this K,
+    and zero contributes nothing if a future key lands there before the
+    codebook is refreshed — matching the Rust implementation).
+
+    k: (L, D), codes: (L, G) -> codebook: (G, 16, VQ_GROUP) f32.
+    """
+    l, d = k.shape
+    g = d // VQ_GROUP
+    sub = k.reshape(l, g, VQ_GROUP)                      # (L, G, 4)
+    onehot = (codes[:, :, None] == jnp.arange(VQ_CLUSTERS)[None, None, :])
+    onehot = onehot.astype(k.dtype)                      # (L, G, 16)
+    sums = jnp.einsum("lgc,lgv->gcv", onehot, sub)       # (G, 16, 4)
+    counts = jnp.sum(onehot, axis=0)                     # (G, 16)
+    safe = jnp.maximum(counts, 1.0)
+    return sums / safe[:, :, None]
+
+
+# ---------------------------------------------------------------------------
+# Compressed-domain retrieval: LUT build + LUT-GEMV (Eq. 8)
+# ---------------------------------------------------------------------------
+
+
+def build_lut(q, codebook):
+    """Dot each query subvector with its group's 16 centroids.
+
+    q: (D,), codebook: (G, 16, 4) -> lut: (G, 16).
+    """
+    g = codebook.shape[0]
+    qsub = q.reshape(g, VQ_GROUP)
+    return jnp.einsum("gv,gcv->gc", qsub, codebook)
+
+
+def lut_scores(lut, codes):
+    """score(token) = sum_g lut[g, codes[token, g]]  (Eq. 8).
+
+    lut: (G, 16), codes: (L, G) -> scores: (L,).
+    """
+    g = lut.shape[0]
+    per_group = lut[jnp.arange(g)[None, :], codes]       # (L, G)
+    return jnp.sum(per_group, axis=-1)
+
+
+def exact_scores(q, k):
+    """Full-precision retrieval scores q·Kᵀ (what LUT-GEMV approximates)."""
+    return k @ q
+
+
+def topk_indices(scores, k):
+    """Indices of the k largest scores, descending — ties broken by lower index.
+
+    Matches the Rust `selfindex::topk` contract exactly so golden vectors
+    compare bit-for-bit: sort key is (-score, index).
+    """
+    scores = np.asarray(scores)
+    order = np.lexsort((np.arange(len(scores)), -scores))
+    return jnp.asarray(order[:k])
+
+
+# ---------------------------------------------------------------------------
+# Token-wise quantization (Eq. 9-13)
+# ---------------------------------------------------------------------------
+
+
+def quantize_token_wise(v, bits=QUANT_BITS, group=QUANT_GROUP):
+    """Asymmetric min/max quantization per (token, channel-group) (Eq. 9-10).
+
+    v: (L, D) -> (qvals uint8 (L, D), scale (L, D/group), zp (L, D/group)).
+    qs == 0 (constant group) is clamped to 1 so dequant returns the constant.
+    """
+    l, d = v.shape
+    ng = d // group
+    grouped = v.reshape(l, ng, group)
+    vmin = jnp.min(grouped, axis=-1)
+    vmax = jnp.max(grouped, axis=-1)
+    qs = (vmax - vmin) / (2**bits - 1)
+    qs = jnp.where(qs <= 0, 1.0, qs)
+    zp = vmin
+    q = jnp.clip(
+        jnp.round((grouped - zp[:, :, None]) / qs[:, :, None]), 0, 2**bits - 1
+    )
+    return q.reshape(l, d).astype(jnp.uint8), qs, zp
+
+
+def dequantize_token_wise(qvals, qs, zp, group=QUANT_GROUP):
+    """D(V) = qs * Q(V) + zp  (Eq. 11)."""
+    l, d = qvals.shape
+    ng = d // group
+    grouped = qvals.reshape(l, ng, group).astype(qs.dtype)
+    return (grouped * qs[:, :, None] + zp[:, :, None]).reshape(l, d)
+
+
+def channel_alpha(k):
+    """Per-channel magnitude normalizer alpha_j = max_i |K'[i, j]|  (Eq. 12)."""
+    alpha = jnp.max(jnp.abs(k), axis=0)
+    return jnp.where(alpha <= 0, 1.0, alpha)
+
+
+def quantize_key_mag(k, alpha, bits=QUANT_BITS, group=QUANT_GROUP):
+    """Quantize |K'|/alpha token-wise; signs live in the VQ codes (Eq. 12-13)."""
+    khat = jnp.abs(k) / alpha[None, :]
+    return quantize_token_wise(khat, bits=bits, group=group)
+
+
+def code_signs(codes, d):
+    """Expand 4-bit sign codes back to a (L, D) ±1 sign plane (MSB-first)."""
+    l = codes.shape[0]
+    shifts = jnp.arange(VQ_GROUP - 1, -1, -1, dtype=jnp.int32)    # MSB-first
+    bits = (codes[:, :, None] >> shifts[None, None, :]) & 1       # (L, G, 4)
+    return (bits * 2 - 1).astype(jnp.float32).reshape(l, d)
+
+
+def dequantize_key(codes, qvals, qs, zp, alpha, group=QUANT_GROUP):
+    """Reconstruct K' from sign codes + quantized magnitudes (Eq. 13):
+
+        D(K') = sign ⊙ (alpha ⊙ (qs·Q + zp))
+    """
+    l, d = qvals.shape
+    mag = dequantize_token_wise(qvals, qs, zp, group=group) * alpha[None, :]
+    return code_signs(codes, d) * mag
+
+
+# ---------------------------------------------------------------------------
+# Attention references
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(q, k, v, scale=None):
+    """Dense single-query attention: softmax(q·Kᵀ/sqrt(D))·V.
+
+    q: (D,), k/v: (L, D) -> (D,).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = (k @ q) * scale
+    w = jnp.exp(logits - jnp.max(logits))
+    w = w / jnp.sum(w)
+    return w @ v
+
+
+def sparse_attention_ref(q, k_sel, v_sel, k_sink, v_sink, scale=None):
+    """Sparse attention over [sink tokens ++ selected tokens] (paper Fig. 2).
+
+    All inputs full precision — quantized variants dequantize first and then
+    call this. q: (D,), *_sel: (S, D), *_sink: (T, D) -> (D,).
+    """
+    k_all = jnp.concatenate([k_sink, k_sel], axis=0)
+    v_all = jnp.concatenate([v_sink, v_sel], axis=0)
+    return attention_ref(q, k_all, v_all, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end pipeline (prefill-side compression + decode-side retrieval)
+# ---------------------------------------------------------------------------
+
+
+def compress_prefill(k, v):
+    """Everything the paper does to one head's K/V at prefill, as one function.
+
+    Returns a dict mirroring the Rust `kvcache::layout` per-head state.
+    """
+    k_norm, mu = normalize_keys(k)
+    codes = sign_codes(k_norm)
+    codebook = build_codebook(k_norm, codes)
+    alpha = channel_alpha(k_norm)
+    k_q, k_qs, k_zp = quantize_key_mag(k_norm, alpha)
+    v_q, v_qs, v_zp = quantize_token_wise(v)
+    return {
+        "mu": mu, "codes": codes, "codebook": codebook, "alpha": alpha,
+        "k_q": k_q, "k_qs": k_qs, "k_zp": k_zp,
+        "v_q": v_q, "v_qs": v_qs, "v_zp": v_zp,
+    }
+
+
+def retrieve_and_attend(q, state, k_budget, sink_idx=None, scale=None):
+    """Decode-side reference: LUT-GEMV scores → top-k → dequant → attention.
+
+    Sink tokens always attend (in full reconstruction here; the engine keeps
+    them fp16) and are excluded from dynamic selection.
+    """
+    lut = build_lut(q, state["codebook"])
+    scores = lut_scores(lut, state["codes"])
+    if sink_idx is None:
+        sink_idx = jnp.zeros((0,), dtype=jnp.int32)
+    sink_idx = jnp.asarray(sink_idx, dtype=jnp.int32)
+    if sink_idx.shape[0] > 0:
+        scores = scores.at[sink_idx].set(-jnp.inf)
+    sel = topk_indices(scores, k_budget)
+    k_rec = dequantize_key(state["codes"], state["k_q"], state["k_qs"],
+                           state["k_zp"], state["alpha"])
+    v_rec = dequantize_token_wise(state["v_q"], state["v_qs"], state["v_zp"])
+    out = sparse_attention_ref(
+        q, k_rec[sel], v_rec[sel], k_rec[sink_idx], v_rec[sink_idx], scale=scale
+    )
+    return out, sel

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: one-pass sign-based vector quantization (Eq. 1-4).
+
+Produces, for one attention head's normalized key matrix K' ∈ R^{L×D}:
+
+  * codes     (L, G) int32   — 4-bit sign pattern per 4-channel group
+  * codebook  (G, 16, 4) f32 — centroid = mean of member subvectors
+
+The kernel runs a 1-D grid over token tiles.  The (G, 16, 4) sums and
+(G, 16) counts outputs map every grid step to the same block (index_map
+→ 0), so they act as accumulators living in VMEM for the whole pass —
+this is the "one pass" property the paper contrasts with k-means: each
+key subvector is read exactly once from HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a token tile of 256×64 f32
+is 64 KB; sums+counts are 16×16×4 + 16×16 f32 ≈ 5 KB — everything stays
+VMEM-resident.  interpret=True is mandatory on this CPU backend.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import VQ_CLUSTERS, VQ_GROUP
+
+TOKEN_TILE = 256
+
+
+def _sign_vq_kernel(k_ref, codes_ref, sums_ref, counts_ref, *, g):
+    step = pl.program_id(0)
+
+    k = k_ref[...]                                   # (T, D)
+    t = k.shape[0]
+    sub = k.reshape(t, g, VQ_GROUP)                  # (T, G, 4)
+
+    # Eq. 2-3: sign pattern -> 4-bit code, channel 0 of the group = MSB.
+    # (iota instead of jnp.arange: pallas kernels may not capture constants)
+    bits = (sub >= 0).astype(jnp.int32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, VQ_GROUP), 2)
+    weights = jnp.left_shift(1, VQ_GROUP - 1 - pos)
+    codes = jnp.sum(bits * weights, axis=-1)         # (T, G)
+    codes_ref[...] = codes
+
+    # Eq. 4 numerators: scatter-add subvectors into their cluster slot via
+    # a one-hot contraction (no data-dependent writes — TPU friendly).
+    cluster_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, VQ_CLUSTERS), 2)
+    onehot = (codes[:, :, None] == cluster_ids)
+    onehot = onehot.astype(k.dtype)                  # (T, G, 16)
+    tile_sums = jnp.einsum("tgc,tgv->gcv", onehot, sub)
+    tile_counts = jnp.sum(onehot, axis=0)
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = tile_sums
+        counts_ref[...] = tile_counts
+
+    @pl.when(step != 0)
+    def _acc():
+        sums_ref[...] += tile_sums
+        counts_ref[...] += tile_counts
+
+
+def sign_vq(k, *, token_tile=TOKEN_TILE, interpret=True):
+    """One-pass sign-VQ over K' (L, D) -> (codes (L,G) i32, codebook (G,16,4)).
+
+    L must be a multiple of `token_tile` (the callers pad; static shapes are
+    required for AOT lowering anyway).
+    """
+    l, d = k.shape
+    assert d % VQ_GROUP == 0, d
+    g = d // VQ_GROUP
+    assert l % token_tile == 0, (l, token_tile)
+    n_tiles = l // token_tile
+
+    codes, sums, counts = pl.pallas_call(
+        functools.partial(_sign_vq_kernel, g=g),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((token_tile, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((token_tile, g), lambda i: (i, 0)),
+            pl.BlockSpec((g, VQ_CLUSTERS, VQ_GROUP), lambda i: (0, 0, 0)),
+            pl.BlockSpec((g, VQ_CLUSTERS), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, g), jnp.int32),
+            jax.ShapeDtypeStruct((g, VQ_CLUSTERS, VQ_GROUP), k.dtype),
+            jax.ShapeDtypeStruct((g, VQ_CLUSTERS), k.dtype),
+        ],
+        interpret=interpret,
+    )(k)
+
+    codebook = sums / jnp.maximum(counts, 1.0)[:, :, None]
+    return codes, codebook

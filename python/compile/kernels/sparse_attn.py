@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: dequantization-fused sparse attention.
+
+The paper's third kernel: attend over [64 fp sink tokens ++ top-k selected
+tokens], where the selected tokens arrive *still quantized* (sign codes +
+2-bit magnitudes + per-token scales) and are dequantized inside the same
+kernel pass that computes softmax·V — one HBM→VMEM round-trip, the fusion
+that beats KIVI's decompress-then-compute (paper Fig. 5 discussion).
+
+Geometry: at the paper's budget (k = 96 selected + 64 sink = 160 tokens,
+head_dim 64) a whole head's working set is 160×64 f32 ≈ 40 KB — far under
+VMEM, so the kernel is single-tile per head with the grid ranging over
+heads.  For larger budgets the BlockSpec tiles the token axis and carries
+an online-softmax (m, l) pair; this configuration is exercised by
+`tile_tokens=...` in the tests.
+
+interpret=True is mandatory on this CPU backend (Mosaic custom-calls are
+TPU-only); the kernel body is written to lower cleanly either way.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import QUANT_GROUP, VQ_GROUP
+
+
+def _dequant_k_block(codes, kq, kqs, kzp, alpha, group):
+    """Reconstruct K' rows (Eq. 13) from a gathered block, inside the kernel."""
+    s, d = kq.shape
+    ng = d // group
+    mag = (
+        kq.reshape(s, ng, group).astype(kqs.dtype) * kqs[:, :, None]
+        + kzp[:, :, None]
+    ).reshape(s, d) * alpha[None, :]
+    # (iota instead of jnp.arange: pallas kernels may not capture constants)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, VQ_GROUP), 2)
+    shifts = VQ_GROUP - 1 - pos
+    bits = (codes[:, :, None] >> shifts) & 1
+    signs = (bits * 2 - 1).astype(mag.dtype).reshape(s, d)
+    return signs * mag
+
+
+def _dequant_v_block(vq, vqs, vzp, group):
+    s, d = vq.shape
+    ng = d // group
+    return (
+        vq.reshape(s, ng, group).astype(vqs.dtype) * vqs[:, :, None]
+        + vzp[:, :, None]
+    ).reshape(s, d)
+
+
+def _sparse_attn_kernel(q_ref, codes_ref, kq_ref, kqs_ref, kzp_ref,
+                        vq_ref, vqs_ref, vzp_ref, alpha_ref,
+                        ksink_ref, vsink_ref, o_ref, *, group, scale):
+    q = q_ref[0]                                       # (D,)
+    alpha = alpha_ref[0]                               # (D,)
+
+    k_sel = _dequant_k_block(codes_ref[0], kq_ref[0], kqs_ref[0],
+                             kzp_ref[0], alpha, group)     # (S, D)
+    v_sel = _dequant_v_block(vq_ref[0], vqs_ref[0], vzp_ref[0], group)
+
+    k_all = jnp.concatenate([ksink_ref[0], k_sel], axis=0)  # (T+S, D)
+    v_all = jnp.concatenate([vsink_ref[0], v_sel], axis=0)
+
+    logits = (k_all @ q) * scale
+    m = jnp.max(logits)
+    w = jnp.exp(logits - m)
+    o_ref[0] = (w @ v_all) / jnp.sum(w)
+
+
+def sparse_attention(q, codes, k_q, k_qs, k_zp, v_q, v_qs, v_zp, alpha,
+                     k_sink, v_sink, *, group=QUANT_GROUP, scale=None,
+                     interpret=True):
+    """Fused dequant + sparse attention for a batch of heads.
+
+    Per-head shapes (leading axis H = number of heads in this call):
+      q       (H, D)        f32   query
+      codes   (H, S, G)     i32   sign codes of the top-k selected tokens
+      k_q     (H, S, D)     u8    2-bit key magnitudes (unpacked to u8)
+      k_qs/k_zp (H, S, D/32) f32  per-token quant params for keys
+      v_q     (H, S, D)     u8    2-bit values
+      v_qs/v_zp (H, S, D/32) f32  per-token quant params for values
+      alpha   (H, D)        f32   per-channel key magnitude normalizer
+      k_sink  (H, T, D)     f32   full-precision sink keys (already K')
+      v_sink  (H, T, D)     f32   full-precision sink values
+    Returns o (H, D) f32.
+    """
+    h, d = q.shape
+    s = codes.shape[1]
+    t = k_sink.shape[1]
+    ng = d // group
+    g = d // VQ_GROUP
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    def spec(*blk):
+        return pl.BlockSpec((1,) + blk, lambda i: (i,) + (0,) * len(blk))
+
+    return pl.pallas_call(
+        functools.partial(_sparse_attn_kernel, group=group, scale=scale),
+        grid=(h,),
+        in_specs=[
+            spec(d),            # q
+            spec(s, g),         # codes
+            spec(s, d),         # k_q
+            spec(s, ng),        # k_qs
+            spec(s, ng),        # k_zp
+            spec(s, d),         # v_q
+            spec(s, ng),        # v_qs
+            spec(s, ng),        # v_zp
+            spec(d),            # alpha
+            spec(t, d),         # k_sink
+            spec(t, d),         # v_sink
+        ],
+        out_specs=spec(d),
+        out_shape=jax.ShapeDtypeStruct((h, d), q.dtype),
+        interpret=interpret,
+    )(q, codes, k_q, k_qs, k_zp, v_q, v_qs, v_zp, alpha, k_sink, v_sink)

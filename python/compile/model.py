@@ -1,0 +1,388 @@
+"""L2: the served model — a tiny GQA transformer in JAX (build-time only).
+
+Exposes the *exact* entry points the Rust coordinator executes via PJRT
+(lowered to HLO text by aot.py).  The decode path is split per-layer so the
+KV cache never crosses the PJRT boundary: the compressed cache lives in
+Rust, which performs compress/append/score/top-k/gather between the
+`decode_qkv` and `sparse_attn_step` executables — exactly the paper's
+split, where retrieval runs where the cache lives and attention arithmetic
+runs in kernels.
+
+Entry points (all functional, weights passed as leading args):
+  prefill            tokens -> per-layer K/V + last-token logits
+  decode_qkv         x, pos -> q, k, v for ONE layer (shared program,
+                     per-layer weights passed as buffers)
+  sparse_attn_step   dequant + sparse attention with padding masks (AOT path)
+  sparse_attn_step_pallas  full-slot fast path via the fused Pallas kernel
+  dense_attn_step    full-cache attention (parity/baseline)
+  decode_out         attention output -> next-layer input (o-proj + MLP)
+  logits_head        final norm + tied unembedding
+  quantize_block     prefill-side sign-VQ + 2-bit quantization (Pallas)
+
+Conventions: f32 activations, RMSNorm, RoPE applied to q/k before caching
+(the compressed cache therefore stores *rotated* keys; retrieval scores
+use the rotated query — self-consistent).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, QUANT_GROUP, VQ_CLUSTERS, VQ_GROUP
+from .kernels import quant as quant_k
+from .kernels import sign_vq as sign_vq_k
+from .kernels import sparse_attn as sparse_attn_k
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+LAYER_PARAM_NAMES = ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2")
+
+
+def param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list — the weights.bin / manifest contract
+    shared with rust/src/model/weights.rs.  Order is load-bearing."""
+    d, h, kvh, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.head_dim, cfg.d_ff)
+    spec = [("emb", (cfg.vocab_size, d))]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1", (d,)),
+            (f"l{i}.wq", (d, h * hd)),
+            (f"l{i}.wk", (d, kvh * hd)),
+            (f"l{i}.wv", (d, kvh * hd)),
+            (f"l{i}.wo", (h * hd, d)),
+            (f"l{i}.ln2", (d,)),
+            (f"l{i}.w1", (d, ff)),
+            (f"l{i}.w2", (ff, d)),
+        ]
+    spec.append(("ln_f", (d,)))
+    return spec
+
+
+def init_params(seed, cfg: ModelConfig):
+    """He-ish init as a flat {name: array} dict (f32)."""
+    params = {}
+    key = jax.random.PRNGKey(seed)
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            / math.sqrt(fan_in))
+    return params
+
+
+def layer_params(params, i):
+    return [params[f"l{i}.{n}"] for n in LAYER_PARAM_NAMES]
+
+
+def params_to_list(params, cfg):
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def _dict_from_list(params_list, cfg):
+    return {name: arr for (name, _), arr in zip(param_spec(cfg), params_list)}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps=1e-5):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def rope(x, pos, theta):
+    """Rotary embedding.  x: (..., T, n_heads, head_dim), pos: (..., T) i32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., :, None, None].astype(jnp.float32) * freqs[None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)          # (..., T, 1, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _gqa_expand(k, r):
+    """(..., S, KVH, hd) -> (..., S, KVH*r, hd) repeating each kv head r×."""
+    return jnp.repeat(k, r, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training + prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, tokens, cfg: ModelConfig, *, collect_kv=False):
+    """Causal forward over tokens (B, T) -> logits (B, T, vocab).
+
+    With collect_kv=True also returns (K, V): (layers, B, T, KVH, hd),
+    post-RoPE — exactly what the Rust cache ingests after prefill — and
+    Q: (layers, B, T, H, hd) for SnapKV sink selection.
+    """
+    b, t = tokens.shape
+    r = cfg.gqa_ratio
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None, :], (b, t))
+    causal = jnp.where(
+        jnp.arange(t)[:, None] >= jnp.arange(t)[None, :], 0.0, -jnp.inf
+    )[None, None, :, :]                                   # (1, 1, T, S)
+
+    x = params["emb"][tokens]                             # (B, T, d)
+    kv_out = []
+    for i in range(cfg.n_layers):
+        ln1, wq, wk, wv, wo, ln2, w1, w2 = layer_params(params, i)
+        h = rmsnorm(x, ln1)
+        q = (h @ wq).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (h @ wk).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ wv).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        if collect_kv:
+            kv_out.append((k, v, q))
+        kx = _gqa_expand(k, r)
+        vx = _gqa_expand(v, r)
+        logits = jnp.einsum("bthd,bshd->bhts", q, kx) * scale + causal
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        w = jnp.exp(logits - m)
+        w = w / jnp.sum(w, axis=-1, keepdims=True)
+        o = jnp.einsum("bhts,bshd->bthd", w, vx).reshape(b, t, -1)
+        x = x + o @ wo
+        h2 = rmsnorm(x, ln2)
+        x = x + jax.nn.gelu(h2 @ w1) @ w2
+
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["emb"].T
+    if collect_kv:
+        ks = jnp.stack([k for k, _, _ in kv_out])         # (L*, B, T, KVH, hd)
+        vs = jnp.stack([v for _, v, _ in kv_out])
+        qs = jnp.stack([q for _, _, q in kv_out])         # (L*, B, T, H, hd)
+        return logits, ks, vs, qs
+    return logits
+
+
+SNAPKV_WINDOW = 32
+
+
+def prefill(params_list, tokens, true_len, cfg: ModelConfig):
+    """AOT prefill entry: tokens (1, T) padded, true_len scalar i32.
+
+    Returns (k_cache, v_cache, last_logits, q_window):
+      k_cache/v_cache: (layers, T, KVH, hd) f32 (RoPE'd)
+      last_logits:     (vocab,) — logits at position true_len-1
+      q_window:        (layers, W, H, hd) — the last W=32 *real* queries
+                       (positions true_len-W .. true_len-1), for SnapKV
+                       sink selection on the Rust side.
+    params_list follows param_spec order (flat, AOT-friendly).
+    """
+    params = _dict_from_list(params_list, cfg)
+    logits, ks, vs, qs = forward(params, tokens, cfg, collect_kv=True)
+    last = jnp.take(logits[0], true_len - 1, axis=0)
+    start = jnp.maximum(true_len - SNAPKV_WINDOW, 0)
+    q_window = jax.lax.dynamic_slice_in_dim(
+        qs[:, 0], start, SNAPKV_WINDOW, axis=1)           # (L*, W, H, hd)
+    return ks[:, 0], vs[:, 0], last, q_window
+
+
+# ---------------------------------------------------------------------------
+# Decode-path entry points (per layer, batch B)
+# ---------------------------------------------------------------------------
+
+
+def decode_qkv(ln1, wq, wk, wv, x, pos, cfg: ModelConfig):
+    """One layer's pre-attention: x (B, d), pos (B,) i32 ->
+    q (B, H, hd), k (B, KVH, hd), v (B, KVH, hd)."""
+    b = x.shape[0]
+    h = rmsnorm(x, ln1)
+    q = (h @ wq).reshape(b, cfg.n_heads, cfg.head_dim)
+    k = (h @ wk).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ wv).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    # RoPE with per-sequence positions: insert a singleton token axis.
+    q = rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k = rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    return q, k, v
+
+
+def sparse_attn_step(q, codes, k_q, k_qs, k_zp, v_q, v_qs, v_zp, alpha,
+                     k_sink, v_sink, sel_mask, sink_mask, cfg: ModelConfig):
+    """Dequant + sparse attention with GQA and padding masks (AOT decode path).
+
+    Shapes (S = dynamic budget, T = sink slots, G = hd/4, NG = hd/32):
+      q        (B, H, hd)       f32
+      codes    (B, KVH, S, G)   i32
+      k_q/v_q  (B, KVH, S, hd)  u8    2-bit payloads (unpacked)
+      *_qs/zp  (B, KVH, S, NG)  f32
+      alpha    (B, KVH, hd)     f32
+      k_sink/v_sink (B, KVH, T, hd) f32
+      sel_mask (B, KVH, S)      f32   0 = live, -inf = padded slot
+      sink_mask(B, KVH, T)      f32
+    Returns o (B, H, hd).
+
+    The dequantization math is identical to the fused Pallas kernel
+    (sparse_attn.py); this masked variant is what aot.py lowers because the
+    engine must handle short contexts with padded slots at static shapes.
+    """
+    b, hq, hd = q.shape
+    kvh = codes.shape[1]
+    r = hq // kvh
+    scale = 1.0 / math.sqrt(hd)
+
+    k_sel = _dequant_keys(codes, k_q, k_qs, k_zp, alpha)       # (B,KVH,S,hd)
+    v_sel = _dequant_vals(v_q, v_qs, v_zp)
+
+    k_all = jnp.concatenate([k_sink, k_sel], axis=2)           # (B,KVH,T+S,hd)
+    v_all = jnp.concatenate([v_sink, v_sel], axis=2)
+    mask = jnp.concatenate([sink_mask, sel_mask], axis=2)      # (B,KVH,T+S)
+
+    qg = q.reshape(b, kvh, r, hd)
+    logits = jnp.einsum("bkrd,bksd->bkrs", qg, k_all) * scale
+    logits = logits + mask[:, :, None, :]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits - m)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o = jnp.einsum("bkrs,bksd->bkrd", w, v_all)
+    return o.reshape(b, hq, hd)
+
+
+def sparse_attn_step_pallas(q, codes, k_q, k_qs, k_zp, v_q, v_qs, v_zp,
+                            alpha, k_sink, v_sink, cfg: ModelConfig,
+                            *, interpret=True):
+    """Full-slot fast path through the fused Pallas kernel (no padding).
+
+    Same shapes as sparse_attn_step minus the masks. GQA is realized by
+    flattening (B, KVH, R) -> heads and repeating the kv blocks R×.
+    """
+    b, hq, hd = q.shape
+    kvh = codes.shape[1]
+    r = hq // kvh
+
+    def rep(x):  # (B, KVH, ...) -> (B*KVH*R, ...)
+        x = jnp.repeat(x[:, :, None], r, axis=2)
+        return x.reshape((b * kvh * r,) + x.shape[3:])
+
+    qf = q.reshape(b * hq, hd)
+    o = sparse_attn_k.sparse_attention(
+        qf, rep(codes), rep(k_q), rep(k_qs), rep(k_zp),
+        rep(v_q), rep(v_qs), rep(v_zp), rep(alpha),
+        rep(k_sink), rep(v_sink), interpret=interpret,
+    )
+    return o.reshape(b, hq, hd)
+
+
+def _dequant_keys(codes, k_q, k_qs, k_zp, alpha):
+    """Vectorized Eq. 13 over arbitrary leading axes."""
+    lead = k_q.shape[:-2]
+    s, hd = k_q.shape[-2:]
+    ng = hd // QUANT_GROUP
+    mag = (k_q.reshape(lead + (s, ng, QUANT_GROUP)).astype(jnp.float32)
+           * k_qs[..., None] + k_zp[..., None]).reshape(lead + (s, hd))
+    mag = mag * alpha[..., None, :]
+    shifts = jnp.arange(VQ_GROUP - 1, -1, -1, dtype=jnp.int32)
+    bits = (codes[..., None] >> shifts) & 1
+    signs = (bits * 2 - 1).astype(jnp.float32).reshape(lead + (s, hd))
+    return signs * mag
+
+
+def _dequant_vals(v_q, v_qs, v_zp):
+    lead = v_q.shape[:-2]
+    s, hd = v_q.shape[-2:]
+    ng = hd // QUANT_GROUP
+    return (v_q.reshape(lead + (s, ng, QUANT_GROUP)).astype(jnp.float32)
+            * v_qs[..., None] + v_zp[..., None]).reshape(lead + (s, hd))
+
+
+def dense_attn_step(q, k_cache, v_cache, cache_len, cfg: ModelConfig):
+    """Full-cache decode attention (the FlashAttention-2 baseline role).
+
+    q (B, H, hd), k_cache/v_cache (B, Lmax, KVH, hd), cache_len (B,) i32.
+    """
+    b, hq, hd = q.shape
+    lmax = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    r = hq // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kvh, r, hd)
+    kx = k_cache.swapaxes(1, 2)                              # (B, KVH, L, hd)
+    vx = v_cache.swapaxes(1, 2)
+    mask = jnp.where(
+        jnp.arange(lmax)[None, :] < cache_len[:, None], 0.0, -jnp.inf
+    )[:, None, None, :]                                      # (B,1,1,L)
+    logits = jnp.einsum("bkrd,bkld->bkrl", qg, kx) * scale + mask
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits - m)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    o = jnp.einsum("bkrl,bkld->bkrd", w, vx)
+    return o.reshape(b, hq, hd)
+
+
+def decode_out(o, x, wo, ln2, w1, w2):
+    """Post-attention half of a layer: o (B,H,hd) flat-proj + MLP residual."""
+    b = x.shape[0]
+    x = x + o.reshape(b, -1) @ wo
+    h2 = rmsnorm(x, ln2)
+    return x + jax.nn.gelu(h2 @ w1) @ w2
+
+
+def logits_head(x, ln_f, emb):
+    """Final RMSNorm + tied unembedding: x (B, d) -> (B, vocab)."""
+    return rmsnorm(x, ln_f) @ emb.T
+
+
+def embed(emb, tokens):
+    """Token embedding lookup (B,) -> (B, d)."""
+    return emb[tokens]
+
+
+# ---------------------------------------------------------------------------
+# Prefill-side compression (AOT program exercising the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def quantize_block(k_block, v_block, mu, alpha, *, interpret=True):
+    """Compress one kv-head block of T tokens with the Pallas kernels.
+
+    k_block/v_block (T, hd) f32; mu/alpha (hd,) — prefill statistics.
+    Returns (codes i32 (T,G), sums f32 (G,16,4), counts f32 (G,16),
+             k_q u8, k_qs, k_zp, v_q u8, v_qs, v_zp).
+    sums/counts let the caller accumulate the codebook across blocks
+    (preserving the one-pass property when prefill streams in chunks).
+    """
+    t, hd = k_block.shape
+    kn = k_block - mu[None, :]
+    codes, sums, counts = _sign_vq_sums(kn, interpret=interpret)
+    khat = jnp.abs(kn) / alpha[None, :]
+    k_q, k_qs, k_zp = quant_k.quantize_tokens(
+        khat, token_tile=t, interpret=interpret)
+    v_q, v_qs, v_zp = quant_k.quantize_tokens(
+        v_block, token_tile=t, interpret=interpret)
+    return codes, sums, counts, k_q, k_qs, k_zp, v_q, v_qs, v_zp
+
+
+def _sign_vq_sums(kn, *, interpret):
+    """sign_vq but returning raw sums/counts (pre-division) for streaming."""
+    from jax.experimental import pallas as pl
+    l, d = kn.shape
+    g = d // VQ_GROUP
+    return pl.pallas_call(
+        functools.partial(sign_vq_k._sign_vq_kernel, g=g),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((l, d), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((l, g), lambda i: (0, 0)),
+            pl.BlockSpec((g, VQ_CLUSTERS, VQ_GROUP), lambda i: (0, 0, 0)),
+            pl.BlockSpec((g, VQ_CLUSTERS), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, g), jnp.int32),
+            jax.ShapeDtypeStruct((g, VQ_CLUSTERS, VQ_GROUP), kn.dtype),
+            jax.ShapeDtypeStruct((g, VQ_CLUSTERS), kn.dtype),
+        ],
+        interpret=interpret,
+    )(kn)

@@ -1,0 +1,186 @@
+"""Build-time training of the tiny served model (never runs at serve time).
+
+The corpus is synthetic but *structured for long-range retrieval*: a mix of
+key-value recall, span copying, and zipf-ish filler. A few hundred Adam
+steps teach the model induction/retrieval attention heads — giving the key
+cache the clustered, anisotropic statistics that the paper's sign-VQ
+retrieval is designed for (and that the LongBench/RULER-proxy workloads
+exercise; see DESIGN.md §Substitutions).
+
+Usage: python -m compile.train [--steps N] [--out artifacts/weights.bin]
+"""
+
+import argparse
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, default_model
+from .model import forward, init_params, param_spec
+
+# ---------------------------------------------------------------------------
+# Synthetic long-range corpus (byte-level)
+# ---------------------------------------------------------------------------
+
+FILLER_WORDS = [
+    b"the", b"of", b"and", b"to", b"in", b"is", b"that", b"for", b"as",
+    b"with", b"on", b"by", b"at", b"from", b"system", b"cache", b"token",
+    b"memory", b"sparse", b"attention", b"index", b"query", b"model",
+]
+
+
+def _rand_word(r, lo=2, hi=5):
+    n = int(r.integers(lo, hi + 1))
+    return bytes(r.integers(97, 123, n).tolist())  # a-z
+
+
+def make_sequence(r, t):
+    """One training sequence of exactly t bytes with embedded recall tasks."""
+    out = bytearray()
+    pending = []  # (key, val) pairs planted, waiting to be queried
+    while len(out) < t:
+        roll = r.random()
+        if roll < 0.3:
+            k, v = _rand_word(r, 2, 3), _rand_word(r, 3, 4)
+            out += b"@" + k + b"=" + v + b";"
+            pending.append((k, v))
+        elif roll < 0.65 and pending:
+            idx = int(r.integers(0, len(pending)))
+            k, v = pending.pop(idx)
+            out += b"?" + k + b":" + v + b";"
+        elif roll < 0.72:
+            span = _rand_word(r, 4, 8)
+            out += b"[" + span + b"|" + span + b"]"
+        else:
+            out += FILLER_WORDS[int(r.integers(0, len(FILLER_WORDS)))] + b" "
+    return bytes(out[:t])
+
+
+def make_batch(r, b, t):
+    """Token batch (B, T+1) uint8 — inputs tokens[:, :-1], targets [:, 1:]."""
+    return np.stack(
+        [np.frombuffer(make_sequence(r, t + 1), dtype=np.uint8) for _ in range(b)]
+    ).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Loss + Adam (hand-rolled: optax is not in this image)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg):
+    logits = forward(params, batch[:, :-1], cfg)
+    targets = batch[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: ModelConfig, steps=200, batch=4, seq=384, lr=1e-3, seed=0,
+          log_every=20, log=print):
+    """Train and return (params, loss_history)."""
+    r = np.random.default_rng(seed)
+    params = init_params(seed, cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt_mv, opt_t, batch_arr, lr_now):
+        opt_state = {"m": opt_mv[0], "v": opt_mv[1], "t": opt_t}
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch_arr, cfg)
+        new_params, new_state = adam_update(params, grads, opt_state, lr_now)
+        return new_params, (new_state["m"], new_state["v"]), loss
+
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        lr_now = lr * 0.5 * (1 + math.cos(math.pi * i / steps))  # cosine
+        batch_arr = jnp.asarray(make_batch(r, batch, seq))
+        params, (opt["m"], opt["v"]), loss = step(
+            params, (opt["m"], opt["v"]), opt["t"], batch_arr, lr_now)
+        opt["t"] += 1
+        history.append(float(loss))
+        if i % log_every == 0 or i == steps - 1:
+            log(f"step {i:4d}  loss {float(loss):.4f}  "
+                f"({time.time() - t0:.1f}s elapsed)")
+    return params, history
+
+
+# ---------------------------------------------------------------------------
+# weights.bin — the Rust-side contract (rust/src/model/weights.rs)
+# ---------------------------------------------------------------------------
+
+MAGIC = 0x53494B56  # "SIKV"
+
+
+def save_weights(path, params, cfg):
+    """magic u32 | version u32 | count u32 | per tensor:
+    name_len u32 | name | dtype u8 (0=f32) | ndim u8 | dims u32* | data LE."""
+    spec = param_spec(cfg)
+    with open(path, "wb") as f:
+        f.write(np.array([MAGIC, 1, len(spec)], dtype="<u4").tobytes())
+        for name, shape in spec:
+            arr = np.asarray(params[name], dtype="<f4")
+            assert arr.shape == shape, (name, arr.shape, shape)
+            nb = name.encode()
+            f.write(np.array([len(nb)], dtype="<u4").tobytes())
+            f.write(nb)
+            f.write(bytes([0, arr.ndim]))
+            f.write(np.array(arr.shape, dtype="<u4").tobytes())
+            f.write(arr.tobytes())
+
+
+def load_weights(path, cfg):
+    """Inverse of save_weights (used to skip retraining on rebuilds)."""
+    params = {}
+    with open(path, "rb") as f:
+        magic, version, count = np.frombuffer(f.read(12), dtype="<u4")
+        assert magic == MAGIC and version == 1, (magic, version)
+        for _ in range(count):
+            (nlen,) = np.frombuffer(f.read(4), dtype="<u4")
+            name = f.read(int(nlen)).decode()
+            dtype, ndim = f.read(2)
+            assert dtype == 0
+            dims = np.frombuffer(f.read(4 * ndim), dtype="<u4")
+            n = int(np.prod(dims))
+            params[name] = jnp.asarray(
+                np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims))
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=384)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts/weights.bin")
+    args = ap.parse_args()
+    cfg = default_model()
+    params, history = train(cfg, steps=args.steps, batch=args.batch,
+                            seq=args.seq, seed=args.seed)
+    save_weights(args.out, params, cfg)
+    print(f"final loss {history[-1]:.4f} -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Make `compile` importable as a package from the python/ directory, and
+# keep JAX on CPU with deterministic, quiet behaviour.
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,138 @@
+//! Shared helpers for the table/figure bench binaries.
+#![allow(dead_code)]
+
+use selfindex_kv::substrate::rng::Rng;
+
+/// Synthetic transformer-like key/value state: clustered directions with
+/// per-channel offsets (what entropy-aware normalization targets), plus a
+/// query aligned with cluster 0.
+pub fn clustered_state(
+    seed: u64,
+    tokens: usize,
+    dim: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut r = Rng::new(seed);
+    let n_dir = 10;
+    // mild per-channel scale spread (trained-LLM-like anisotropy) — this
+    // is what makes magnitude-bearing centroids beat sign-only ones
+    let scales: Vec<f32> = (0..dim).map(|_| (0.4 * r.normal_f32()).exp()).collect();
+    let dirs: Vec<Vec<f32>> = (0..n_dir)
+        .map(|_| {
+            let v: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            v.iter().map(|x| 5.0 * x / n).collect()
+        })
+        .collect();
+    let offset: Vec<f32> = (0..dim).map(|_| 0.8 * r.normal_f32()).collect();
+    let mut keys = Vec::with_capacity(tokens * dim);
+    for _ in 0..tokens {
+        let c = r.below(n_dir as u64) as usize;
+        for j in 0..dim {
+            keys.push(
+                scales[j] * (dirs[c][j] + 0.4 * r.normal_f32()) + offset[j],
+            );
+        }
+    }
+    let vals: Vec<f32> = (0..tokens * dim).map(|_| r.normal_f32()).collect();
+    let query: Vec<f32> = (0..dim)
+        .map(|j| scales[j] * (dirs[0][j] + 0.2 * r.normal_f32()))
+        .collect();
+    (keys, vals, query)
+}
+
+/// `SIKV_BENCH_FAST=1` shrinks workloads for smoke runs.
+pub fn fast_mode() -> bool {
+    std::env::var("SIKV_BENCH_FAST").is_ok()
+}
+
+/// Artifact dir (engine-based benches); honors SIKV_ARTIFACTS.
+pub fn artifact_dir() -> String {
+    std::env::var("SIKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+pub fn artifacts_available() -> bool {
+    std::path::Path::new(&artifact_dir()).join("manifest.json").exists()
+}
+
+use std::collections::BTreeMap;
+
+use selfindex_kv::config::EngineConfig;
+use selfindex_kv::coordinator::{Engine, MethodKind};
+use selfindex_kv::workloads::EvalItem;
+
+/// Run eval items through a fresh engine with `method`; returns per-task
+/// mean scores. One request at a time (accuracy protocol, like the
+/// paper's single-sequence evaluation).
+pub fn run_eval(
+    method: MethodKind,
+    items: &[EvalItem],
+    mut cfg: EngineConfig,
+) -> anyhow::Result<BTreeMap<&'static str, f64>> {
+    cfg.max_batch = 1;
+    let mut engine = Engine::new(
+        std::path::Path::new(&artifact_dir()),
+        cfg,
+        method,
+    )?;
+    let mut sums: BTreeMap<&'static str, (f64, usize)> = BTreeMap::new();
+    for item in items {
+        let new_tokens = item.expected.len().clamp(1, 8);
+        engine.submit(item.prompt.clone(), new_tokens)?;
+        let results = engine.run_to_completion()?;
+        let score = item.score(&results[0].generated);
+        let e = sums.entry(item.task).or_insert((0.0, 0));
+        e.0 += score;
+        e.1 += 1;
+    }
+    Ok(sums
+        .into_iter()
+        .map(|(k, (s, n))| (k, s / n as f64))
+        .collect())
+}
+
+/// Fidelity protocol shared by table1/table2: identical synthetic states,
+/// per-method (recall@budget, output cosine vs full attention).
+pub fn run_fidelity(
+    make: &dyn Fn() -> Box<dyn selfindex_kv::baselines::AttentionMethod>,
+    trials: u64,
+    tokens: usize,
+    budget: usize,
+) -> (f64, f64) {
+    use selfindex_kv::baselines::{AttentionMethod, FullCache};
+    use selfindex_kv::eval::{cosine, mean, recall_at_k};
+    let dim = 64;
+    let mut recalls = vec![];
+    let mut cosines = vec![];
+    for seed in 0..trials {
+        let (keys, vals, query) = clustered_state(900 + seed, tokens, dim);
+        let mut m = make();
+        let qw: Vec<f32> = (0..8).flat_map(|_| query.clone()).collect();
+        m.prefill(&keys, &vals, &qw, 1);
+        let mut full = FullCache::new(dim);
+        full.prefill(&keys, &vals, &[], 1);
+        let mut a = vec![0.0; dim];
+        let mut b = vec![0.0; dim];
+        m.attend(&query, budget, &mut a);
+        full.attend(&query, usize::MAX, &mut b);
+        cosines.push(cosine(&a, &b));
+        if let Some(approx) = m.retrieval_scores(&query) {
+            let mu: Vec<f32> = (0..dim)
+                .map(|j| keys.iter().skip(j).step_by(dim).sum::<f32>() / tokens as f32)
+                .collect();
+            let centered: Vec<f32> = keys
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| v - mu[i % dim])
+                .collect();
+            let mut exact = Vec::new();
+            selfindex_kv::selfindex::score::exact_scores(
+                &query, &centered, dim, &mut exact,
+            );
+            recalls.push(recall_at_k(&approx, &exact, budget));
+        }
+    }
+    (
+        if recalls.is_empty() { f64::NAN } else { mean(&recalls) },
+        mean(&cosines),
+    )
+}

@@ -1,0 +1,102 @@
+//! **Table 3**: Time-To-2nd-Token (prefill + first decode step) across
+//! prompt lengths and methods {Ours, KIVI, FlashAttention2(full)}.
+//!
+//! Paper lengths are 8K–64K on GPUs; this testbed scales to the AOT
+//! prefill buckets {256, 1024, 4096}. The paper's claims re-checked:
+//! (i) ours ≈ full + small % (compression amortizes into prefill);
+//! (ii) the compressed cache admits longer contexts at fixed memory
+//! (shown as the cache-bytes column — the OOM column of the paper).
+
+mod common;
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use selfindex_kv::config::EngineConfig;
+use selfindex_kv::coordinator::{Engine, MethodKind};
+use selfindex_kv::substrate::benchkit::{fmt_bytes, fmt_duration, Table};
+use selfindex_kv::workloads::corpus::{context_with_facts, KvFact};
+use selfindex_kv::substrate::rng::Rng;
+
+const LENGTHS: &[usize] = &[256, 1024, 4096];
+const METHODS: &[(&str, MethodKind)] = &[
+    ("Ours", MethodKind::SelfIndex),
+    ("KIVI", MethodKind::Kivi),
+    ("Flash Attention2", MethodKind::Full),
+];
+
+fn tt2t(engine: &mut Engine, prompt: Vec<u8>) -> anyhow::Result<Duration> {
+    let t0 = Instant::now();
+    engine.submit(prompt, 2)?; // prefill token + 1 decode step
+    engine.run_to_completion()?;
+    Ok(t0.elapsed())
+}
+
+fn main() -> anyhow::Result<()> {
+    if !common::artifacts_available() {
+        println!("(artifacts missing — run `make artifacts`)");
+        return Ok(());
+    }
+    let fast = common::fast_mode();
+    let lengths: &[usize] = if fast { &LENGTHS[..2] } else { LENGTHS };
+    let iters = if fast { 1 } else { 3 };
+
+    println!("== Table 3: TT2T (prefill + 1 decode) ==\n");
+    let mut table = Table::new(&["Prompt Length", "Ours", "KIVI", "Flash Attention2",
+                                 "Ours cache", "KIVI cache", "Full cache"]);
+    let mut engines: Vec<Engine> = METHODS
+        .iter()
+        .map(|&(_, kind)| {
+            Engine::new(
+                Path::new(&common::artifact_dir()),
+                EngineConfig { max_batch: 1, max_new_tokens: 2, ..Default::default() },
+                kind,
+            )
+        })
+        .collect::<Result<_, _>>()?;
+
+    for &len in lengths {
+        let mut r = Rng::new(len as u64);
+        let fact = KvFact::random(&mut r);
+        let mut times = vec![];
+        let mut caches = vec![];
+        for engine in engines.iter_mut() {
+            let mut best = Duration::MAX;
+            let mut cache_bytes = 0;
+            for _ in 0..iters {
+                let prompt = {
+                    let mut p =
+                        context_with_facts(&mut r, len - 8, &[fact.clone()], &[0.4]);
+                    p.extend_from_slice(&fact.query());
+                    p
+                };
+                // capture cache footprint right after prefill: run one step
+                let t0 = Instant::now();
+                engine.submit(prompt, 2)?;
+                while engine.running() == 0 && !engine.idle() {
+                    engine.step()?; // the prefill step
+                }
+                cache_bytes = engine.cache_bytes();
+                engine.run_to_completion()?;
+                best = best.min(t0.elapsed());
+            }
+            times.push(best);
+            caches.push(cache_bytes);
+        }
+        table.row(vec![
+            format!("{len}"),
+            fmt_duration(times[0]),
+            fmt_duration(times[1]),
+            fmt_duration(times[2]),
+            fmt_bytes(caches[0]),
+            fmt_bytes(caches[1]),
+            fmt_bytes(caches[2]),
+        ]);
+        eprintln!("  [len {len}] done");
+    }
+    println!("{}", table.render());
+    println!("paper shape: ours within ~5% of full TT2T; compressed cache ~4-5x smaller\n\
+              (paper's OOM rows correspond to the full/KIVI cache columns growing fastest)");
+    let _ = tt2t; // kept for API symmetry in docs
+    Ok(())
+}

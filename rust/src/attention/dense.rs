@@ -1,0 +1,131 @@
+//! Dense single-query attention over f32 K/V (online softmax, one pass).
+
+/// out = softmax(K·q / √d) · V over `len` tokens.
+/// `keys`/`vals`: (len × dim) row-major; `out`: dim.
+pub fn attend_dense(
+    query: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    len: usize,
+    out: &mut [f32],
+) {
+    let dim = query.len();
+    assert!(keys.len() >= len * dim && vals.len() >= len * dim);
+    assert_eq!(out.len(), dim);
+    let scale = 1.0 / (dim as f32).sqrt();
+
+    let mut m = f32::NEG_INFINITY; // running max
+    let mut l = 0.0f32; // running denom
+    out.fill(0.0);
+
+    for t in 0..len {
+        let k = &keys[t * dim..(t + 1) * dim];
+        let s = crate::tensor::dot(query, k) * scale;
+        let v = &vals[t * dim..(t + 1) * dim];
+        if s <= m {
+            let w = (s - m).exp();
+            l += w;
+            crate::tensor::axpy(w, v, out);
+        } else {
+            // rescale accumulated state to the new max
+            let c = (m - s).exp();
+            let c = if c.is_finite() { c } else { 0.0 };
+            l = l * c + 1.0;
+            for (o, &vi) in out.iter_mut().zip(v) {
+                *o = *o * c + vi;
+            }
+            m = s;
+        }
+    }
+    if l > 0.0 {
+        let inv = 1.0 / l;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+/// Two-pass reference (max, then exp-sum) for tests.
+pub fn attend_dense_twopass(
+    query: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    len: usize,
+    out: &mut [f32],
+) {
+    let dim = query.len();
+    let scale = 1.0 / (dim as f32).sqrt();
+    let scores: Vec<f32> = (0..len)
+        .map(|t| crate::tensor::dot(query, &keys[t * dim..(t + 1) * dim]) * scale)
+        .collect();
+    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let ws: Vec<f32> = scores.iter().map(|&s| (s - m).exp()).collect();
+    let denom: f32 = ws.iter().sum();
+    out.fill(0.0);
+    for t in 0..len {
+        crate::tensor::axpy(ws[t] / denom, &vals[t * dim..(t + 1) * dim], out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn online_matches_twopass() {
+        let mut r = Rng::new(1);
+        for &(len, dim) in &[(1usize, 8usize), (7, 16), (128, 64), (1000, 32)] {
+            let q: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+            let k: Vec<f32> = (0..len * dim).map(|_| r.normal_f32()).collect();
+            let v: Vec<f32> = (0..len * dim).map(|_| r.normal_f32()).collect();
+            let mut a = vec![0.0; dim];
+            let mut b = vec![0.0; dim];
+            attend_dense(&q, &k, &v, len, &mut a);
+            attend_dense_twopass(&q, &k, &v, len, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn attends_to_dominant_token() {
+        let dim = 16;
+        let mut r = Rng::new(2);
+        let q: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        let mut k = vec![0.0f32; 10 * dim];
+        // token 3 = strongly aligned with q
+        for j in 0..dim {
+            k[3 * dim + j] = q[j] * 10.0;
+        }
+        let mut v: Vec<f32> = (0..10 * dim).map(|_| r.normal_f32()).collect();
+        for j in 0..dim {
+            v[3 * dim + j] = 7.0;
+        }
+        let mut out = vec![0.0; dim];
+        attend_dense(&q, &k, &v, 10, &mut out);
+        for &o in &out {
+            assert!((o - 7.0).abs() < 0.5, "{o}");
+        }
+    }
+
+    #[test]
+    fn extreme_logits_stable() {
+        let dim = 8;
+        let q = vec![100.0f32; dim];
+        let k = vec![100.0f32; 3 * dim];
+        let v = vec![1.0f32; 3 * dim];
+        let mut out = vec![0.0; dim];
+        attend_dense(&q, &k, &v, 3, &mut out);
+        assert!(out.iter().all(|o| (o - 1.0).abs() < 1e-5), "{out:?}");
+    }
+
+    #[test]
+    fn zero_len_outputs_zero() {
+        let q = vec![1.0f32; 4];
+        let mut out = vec![9.0; 4];
+        attend_dense(&q, &[], &[], 0, &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+}

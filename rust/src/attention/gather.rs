@@ -1,0 +1,92 @@
+//! Gather staging for the PJRT sparse-attention executable.
+//!
+//! The `sparse_attn_b{B}` program takes statically-shaped inputs
+//! (B × KVH × S slots); real selections can be shorter (short prompts),
+//! so this module pads the gathered fields and produces the matching
+//! `sel_mask`/`sink_mask` (-inf on padded slots) that the masked AOT
+//! program consumes.
+
+use crate::kvcache::pool::BlockPool;
+use crate::kvcache::sink::SinkStore;
+use crate::kvcache::store::{GatheredQuant, HeadCache};
+
+pub const NEG_INF: f32 = f32::NEG_INFINITY;
+
+/// Gathered + padded fields of one (seq, kv-head) for slot count `s_slots`.
+#[derive(Clone, Debug, Default)]
+pub struct PaddedGather {
+    pub quant: GatheredQuant,
+    pub sel_mask: Vec<f32>,
+    pub k_sink: Vec<f32>,
+    pub v_sink: Vec<f32>,
+    pub sink_mask: Vec<f32>,
+}
+
+/// Pad `selected` to exactly `s_slots` entries. Padded slots replicate
+/// token 0's record (any valid record works — the mask removes it).
+pub fn gather_padded(
+    cache: &HeadCache,
+    pool: &BlockPool,
+    selected: &[u32],
+    s_slots: usize,
+    sinks: &SinkStore,
+    sink_slots: usize,
+    out: &mut PaddedGather,
+) {
+    assert!(selected.len() <= s_slots);
+    assert!(sinks.len() <= sink_slots);
+    assert!(cache.len() > 0, "gather from empty cache");
+    let dim = cache.dim;
+
+    let mut idx: Vec<u32> = selected.to_vec();
+    idx.resize(s_slots, 0); // replicate token 0 on padded slots
+    cache.gather_quant(pool, &idx, &mut out.quant);
+
+    out.sel_mask.clear();
+    out.sel_mask.resize(s_slots, 0.0);
+    for slot in selected.len()..s_slots {
+        out.sel_mask[slot] = NEG_INF;
+    }
+
+    let (ks, vs) = sinks.rows_f32();
+    out.k_sink.clear();
+    out.k_sink.extend_from_slice(&ks);
+    out.k_sink.resize(sink_slots * dim, 0.0);
+    out.v_sink.clear();
+    out.v_sink.extend_from_slice(&vs);
+    out.v_sink.resize(sink_slots * dim, 0.0);
+    out.sink_mask.clear();
+    out.sink_mask.resize(sink_slots, 0.0);
+    for slot in sinks.len()..sink_slots {
+        out.sink_mask[slot] = NEG_INF;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::layout::RecordLayout;
+    use crate::selfindex::SelfIndexConfig;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn pads_and_masks() {
+        let mut r = Rng::new(1);
+        let cfg = SelfIndexConfig::default();
+        let mut pool = BlockPool::new(RecordLayout::new(64, &cfg), 16, 32);
+        let mut hc = HeadCache::new(64, cfg);
+        let keys: Vec<f32> = (0..20 * 64).map(|_| r.normal_f32()).collect();
+        let vals: Vec<f32> = (0..20 * 64).map(|_| r.normal_f32()).collect();
+        hc.ingest_prefill(&mut pool, &keys, &vals).unwrap();
+        let sinks = SinkStore::build(64, &[0, 3], &keys, &vals);
+
+        let mut pg = PaddedGather::default();
+        gather_padded(&hc, &pool, &[5, 7, 9], 8, &sinks, 4, &mut pg);
+        assert_eq!(pg.quant.codes_i32.len(), 8 * 16);
+        assert_eq!(pg.sel_mask[..3], [0.0, 0.0, 0.0]);
+        assert!(pg.sel_mask[3..].iter().all(|&m| m == NEG_INF));
+        assert_eq!(pg.k_sink.len(), 4 * 64);
+        assert_eq!(pg.sink_mask[..2], [0.0, 0.0]);
+        assert!(pg.sink_mask[2..].iter().all(|&m| m == NEG_INF));
+    }
+}

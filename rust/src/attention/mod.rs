@@ -1,0 +1,18 @@
+//! Rust-native attention kernels (the `ComputeBackend::Native` path).
+//!
+//! * [`dense`]  — single-query full-cache attention (the FlashAttention-2
+//!   baseline role in every efficiency table), online-softmax, one pass.
+//! * [`sparse`] — the paper's fused kernel, CPU edition: iterate the
+//!   selected tokens' *compressed* records, dequantize each row into a
+//!   register-resident scratch, and fold it into the online softmax —
+//!   one pass over compressed memory, no decompressed KV materialization.
+//! * [`gather`] — staging of gathered quantized fields for the PJRT path.
+//!
+//! Both backends are numerically cross-checked in `rust/tests/`.
+
+pub mod dense;
+pub mod gather;
+pub mod sparse;
+
+pub use dense::attend_dense;
+pub use sparse::{attend_sparse_fused, OnlineSoftmax, SparseAttnScratch};

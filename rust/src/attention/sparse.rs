@@ -1,0 +1,269 @@
+//! Fused dequantization + sparse attention — the paper's decode kernel on
+//! the native backend.
+//!
+//! Attends over [sink rows (fp16→f32) ++ selected compressed tokens ++
+//! recent fp rows], dequantizing each selected token *inside* the softmax
+//! loop (single pass over compressed memory — the design that beats
+//! KIVI's decompress-then-compute in Fig. 5).
+
+use crate::kvcache::pool::BlockPool;
+use crate::kvcache::sink::SinkStore;
+use crate::kvcache::store::HeadCache;
+
+/// Streaming softmax accumulator (the FlashAttention recurrence).
+pub struct OnlineSoftmax {
+    pub m: f32,
+    pub l: f32,
+    pub acc: Vec<f32>,
+}
+
+impl OnlineSoftmax {
+    pub fn new(dim: usize) -> Self {
+        Self { m: f32::NEG_INFINITY, l: 0.0, acc: vec![0.0; dim] }
+    }
+
+    pub fn reset(&mut self) {
+        self.m = f32::NEG_INFINITY;
+        self.l = 0.0;
+        self.acc.fill(0.0);
+    }
+
+    #[inline]
+    pub fn push(&mut self, score: f32, value: &[f32]) {
+        if score <= self.m {
+            let w = (score - self.m).exp();
+            self.l += w;
+            crate::tensor::axpy(w, value, &mut self.acc);
+        } else {
+            let c = (self.m - score).exp();
+            let c = if c.is_finite() { c } else { 0.0 };
+            self.l = self.l * c + 1.0;
+            for (a, &v) in self.acc.iter_mut().zip(value) {
+                *a = *a * c + v;
+            }
+            self.m = score;
+        }
+    }
+
+    /// Fold a score whose value contribution is negligible (weight ~ 0)
+    /// into the denominator only.
+    #[inline]
+    pub fn push_score_only(&mut self, score: f32) {
+        if score <= self.m {
+            self.l += (score - self.m).exp();
+        } else {
+            let c = (self.m - score).exp();
+            let c = if c.is_finite() { c } else { 0.0 };
+            self.l = self.l * c + 1.0;
+            for a in self.acc.iter_mut() {
+                *a *= c;
+            }
+            self.m = score;
+        }
+    }
+
+    pub fn finish(&self, out: &mut [f32]) {
+        if self.l > 0.0 {
+            let inv = 1.0 / self.l;
+            for (o, &a) in out.iter_mut().zip(&self.acc) {
+                *o = a * inv;
+            }
+        } else {
+            out.fill(0.0);
+        }
+    }
+}
+
+/// Scratch buffers reused across calls (zero allocation per decode step).
+pub struct SparseAttnScratch {
+    k_row: Vec<f32>,
+    v_row: Vec<f32>,
+    q_alpha: Vec<f32>,
+    scores: Vec<f32>,
+    softmax: OnlineSoftmax,
+}
+
+impl SparseAttnScratch {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            k_row: vec![0.0; dim],
+            v_row: vec![0.0; dim],
+            q_alpha: vec![0.0; dim],
+            scores: vec![],
+            softmax: OnlineSoftmax::new(dim),
+        }
+    }
+}
+
+/// Fused sparse attention for one (query, head).
+///
+/// * `query` — rotated query, dim = head_dim (NOT centered; Eq. 7 makes
+///   centering the keys sufficient).
+/// * `selected` — dynamic top-k token indices into `cache`.
+/// * `sinks` — full-precision sink rows (already centered keys).
+/// * `recent` — (len × 2 × dim) interleaved [k_row, v_row] fp32 recent
+///   decode tokens that always attend (paper: decode tokens included by
+///   default).
+pub fn attend_sparse_fused(
+    query: &[f32],
+    cache: &HeadCache,
+    pool: &BlockPool,
+    selected: &[u32],
+    sinks: &SinkStore,
+    recent: &[f32],
+    scratch: &mut SparseAttnScratch,
+    out: &mut [f32],
+) {
+    let dim = query.len();
+    let scale = 1.0 / (dim as f32).sqrt();
+    scratch.softmax.reset();
+
+    // sink tokens (fp16 rows)
+    for i in 0..sinks.len() {
+        sinks.row(i, &mut scratch.k_row, &mut scratch.v_row);
+        let s = crate::tensor::dot(query, &scratch.k_row) * scale;
+        scratch.softmax.push(s, &scratch.v_row);
+    }
+
+    // selected compressed tokens — two-pass fused path (2-bit sign-plane):
+    //   pass 1: fused dequant+dot scores only (key rows never materialize)
+    //   pass 2: dequantize V only for tokens whose softmax weight is
+    //           non-negligible (exp(s - max) >= SKIP_EPS) — exact within
+    //           fp tolerance, and most tokens of a peaked distribution skip.
+    const SKIP_LOG_EPS: f32 = -18.0; // exp(-18) ≈ 1.5e-8
+    if cache.cfg.quant_bits == 2 && cache.cfg.sign_plane_quant {
+        let alpha = cache.alpha();
+        for j in 0..dim {
+            scratch.q_alpha[j] = query[j] * alpha[j];
+        }
+        scratch.scores.clear();
+        let mut smax = scratch.softmax.m; // include sink max in the bar
+        for &idx in selected {
+            let s = cache.dequant_dot_k(pool, idx as usize, &scratch.q_alpha) * scale;
+            smax = smax.max(s);
+            scratch.scores.push(s);
+        }
+        for (i, &idx) in selected.iter().enumerate() {
+            let s = scratch.scores[i];
+            if s - smax >= SKIP_LOG_EPS {
+                cache.dequant_v(pool, idx as usize, &mut scratch.v_row);
+                scratch.softmax.push(s, &scratch.v_row);
+            } else {
+                // weight ≈ 0: still fold into the denominator for exactness
+                scratch.softmax.push_score_only(s);
+            }
+        }
+    } else {
+        for &idx in selected {
+            cache.dequant_token(
+                pool, idx as usize, &mut scratch.k_row, &mut scratch.v_row,
+            );
+            let s = crate::tensor::dot(query, &scratch.k_row) * scale;
+            scratch.softmax.push(s, &scratch.v_row);
+        }
+    }
+
+    // recent fp rows
+    assert_eq!(recent.len() % (2 * dim), 0);
+    for pair in recent.chunks_exact(2 * dim) {
+        let (k, v) = pair.split_at(dim);
+        let s = crate::tensor::dot(query, k) * scale;
+        scratch.softmax.push(s, v);
+    }
+
+    scratch.softmax.finish(out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::layout::RecordLayout;
+    use crate::selfindex::SelfIndexConfig;
+    use crate::substrate::rng::Rng;
+
+    fn setup(
+        tokens: usize,
+    ) -> (HeadCache, BlockPool, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut r = Rng::new(7);
+        let cfg = SelfIndexConfig::default();
+        let mut pool = BlockPool::new(RecordLayout::new(64, &cfg), 16, 128);
+        let mut hc = HeadCache::new(64, cfg);
+        let keys: Vec<f32> = (0..tokens * 64).map(|_| r.normal_f32()).collect();
+        let vals: Vec<f32> = (0..tokens * 64).map(|_| r.normal_f32()).collect();
+        hc.ingest_prefill(&mut pool, &keys, &vals).unwrap();
+        let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
+        (hc, pool, keys, vals, q)
+    }
+
+    #[test]
+    fn fused_matches_dequant_then_dense() {
+        let (hc, pool, _, _, q) = setup(64);
+        let sel: Vec<u32> = vec![3, 17, 40, 63, 9];
+        // reference: materialize dequantized rows, run dense attention
+        let dim = 64;
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        let mut kr = vec![0.0; dim];
+        let mut vr = vec![0.0; dim];
+        for &i in &sel {
+            hc.dequant_token(&pool, i as usize, &mut kr, &mut vr);
+            ks.extend_from_slice(&kr);
+            vs.extend_from_slice(&vr);
+        }
+        let mut expect = vec![0.0; dim];
+        crate::attention::dense::attend_dense(&q, &ks, &vs, sel.len(), &mut expect);
+
+        let sinks = SinkStore::default();
+        let mut scratch = SparseAttnScratch::new(dim);
+        let mut out = vec![0.0; dim];
+        attend_sparse_fused(&q, &hc, &pool, &sel, &sinks, &[], &mut scratch, &mut out);
+        for (a, b) in out.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sinks_and_recent_participate() {
+        let (hc, pool, keys, vals, q) = setup(32);
+        let dim = 64;
+        // centered keys for the sink store
+        let mu = hc.mu().to_vec();
+        let centered: Vec<f32> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v - mu[i % dim])
+            .collect();
+        let sinks = SinkStore::build(dim, &[0, 5], &centered, &vals);
+        let recent: Vec<f32> = (0..2 * dim).map(|i| (i % 7) as f32 * 0.1).collect();
+
+        let mut scratch = SparseAttnScratch::new(dim);
+        let mut with = vec![0.0; dim];
+        attend_sparse_fused(&q, &hc, &pool, &[10, 20], &sinks, &recent,
+                            &mut scratch, &mut with);
+        let mut without = vec![0.0; dim];
+        attend_sparse_fused(&q, &hc, &pool, &[10, 20], &SinkStore::default(),
+                            &[], &mut scratch, &mut without);
+        let diff: f32 = with.iter().zip(&without).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-3, "sinks/recent must change the output");
+    }
+
+    #[test]
+    fn empty_selection_with_sinks_only() {
+        let (hc, pool, keys, vals, q) = setup(16);
+        let dim = 64;
+        let mu = hc.mu().to_vec();
+        let centered: Vec<f32> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v - mu[i % dim])
+            .collect();
+        let sinks = SinkStore::build(dim, &[1], &centered, &vals);
+        let mut scratch = SparseAttnScratch::new(dim);
+        let mut out = vec![0.0; dim];
+        attend_sparse_fused(&q, &hc, &pool, &[], &sinks, &[], &mut scratch, &mut out);
+        // attention over a single token == that token's value (fp16 slop)
+        for j in 0..dim {
+            assert!((out[j] - vals[dim + j]).abs() < 2e-3);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! DoubleSparse baseline (Yang et al. 2024): token-level sparsity via a
+//! reduced-channel ("label") index.
+//!
+//! At prefill, pick the 16 heaviest channels (by aggregate |K| magnitude —
+//! the post-training offline calibration of the paper, done online here);
+//! the index stores only those channels of each key. Decode: approximate
+//! scores = dot over the 16 label channels → token top-k → dense attend.
+//! Paper setting: 16 channels ≈ a 2-bit/parameter index.
+
+use super::AttentionMethod;
+use crate::attention::dense::attend_dense;
+use crate::selfindex::topk::top_k_indices;
+
+pub const LABEL_CHANNELS: usize = 16;
+
+pub struct DoubleSparse {
+    pub dim: usize,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    /// the heavy channel ids (chosen at prefill)
+    channels: Vec<u32>,
+    /// label index: len × LABEL_CHANNELS
+    labels: Vec<f32>,
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+}
+
+impl DoubleSparse {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim >= LABEL_CHANNELS);
+        Self {
+            dim,
+            keys: vec![],
+            vals: vec![],
+            channels: vec![],
+            labels: vec![],
+            scratch_k: vec![],
+            scratch_v: vec![],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub fn channels(&self) -> &[u32] {
+        &self.channels
+    }
+
+    fn label_of(&mut self, k_row: &[f32]) {
+        for &c in &self.channels {
+            self.labels.push(k_row[c as usize]);
+        }
+    }
+
+    /// Approximate token scores over the label channels.
+    pub fn approx_scores(&self, query: &[f32]) -> Vec<f32> {
+        let qc: Vec<f32> = self
+            .channels
+            .iter()
+            .map(|&c| query[c as usize])
+            .collect();
+        self.labels
+            .chunks_exact(LABEL_CHANNELS)
+            .map(|lab| crate::tensor::dot(&qc, lab))
+            .collect()
+    }
+}
+
+impl AttentionMethod for DoubleSparse {
+    fn name(&self) -> &'static str {
+        "doublesparse"
+    }
+
+    fn prefill(&mut self, keys: &[f32], vals: &[f32], _q: &[f32], _r: usize) {
+        let dim = self.dim;
+        // heavy channels: largest mean |K| (outlier channels dominate qk)
+        let l = keys.len() / dim;
+        let mut mass = vec![0.0f32; dim];
+        for row in keys.chunks_exact(dim) {
+            for (j, &v) in row.iter().enumerate() {
+                mass[j] += v.abs();
+            }
+        }
+        let _ = l;
+        self.channels = top_k_indices(&mass, LABEL_CHANNELS);
+        self.channels.sort_unstable();
+
+        self.keys.extend_from_slice(keys);
+        self.vals.extend_from_slice(vals);
+        let rows: Vec<Vec<f32>> = keys.chunks_exact(dim).map(|r| r.to_vec()).collect();
+        for row in rows {
+            self.label_of(&row);
+        }
+    }
+
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        self.keys.extend_from_slice(k_row);
+        self.vals.extend_from_slice(v_row);
+        let row = k_row.to_vec();
+        self.label_of(&row);
+    }
+
+    fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]) {
+        let dim = self.dim;
+        let scores = self.approx_scores(query);
+        let sel = top_k_indices(&scores, budget.min(self.len()));
+        self.scratch_k.clear();
+        self.scratch_v.clear();
+        for &t in &sel {
+            let t = t as usize;
+            self.scratch_k
+                .extend_from_slice(&self.keys[t * dim..(t + 1) * dim]);
+            self.scratch_v
+                .extend_from_slice(&self.vals[t * dim..(t + 1) * dim]);
+        }
+        let sk = std::mem::take(&mut self.scratch_k);
+        let sv = std::mem::take(&mut self.scratch_v);
+        attend_dense(query, &sk, &sv, sel.len(), out);
+        self.scratch_k = sk;
+        self.scratch_v = sv;
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // fp16 K/V + fp16 label index (16/dim of K = the "2-bit" index)
+        (self.keys.len() + self.vals.len()) * 2 + self.labels.len() * 2
+    }
+
+    fn retrieval_scores(&mut self, query: &[f32]) -> Option<Vec<f32>> {
+        Some(self.approx_scores(query))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testutil::clustered;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn picks_outlier_channels() {
+        let mut r = Rng::new(1);
+        let dim = 64;
+        let mut keys: Vec<f32> = (0..256 * dim).map(|_| r.normal_f32()).collect();
+        for row in keys.chunks_exact_mut(dim) {
+            row[7] *= 20.0;
+            row[42] *= 15.0;
+        }
+        let mut ds = DoubleSparse::new(dim);
+        ds.prefill(&keys, &keys.clone(), &[], 1);
+        assert!(ds.channels().contains(&7));
+        assert!(ds.channels().contains(&42));
+    }
+
+    #[test]
+    fn approx_topk_overlaps_exact() {
+        let dim = 64;
+        let (keys, vals, query) = clustered(2, 1024, dim, 4.0);
+        let mut ds = DoubleSparse::new(dim);
+        ds.prefill(&keys, &vals, &[], 1);
+        let approx = ds.approx_scores(&query);
+        let mut exact = Vec::new();
+        crate::selfindex::score::exact_scores(&query, &keys, dim, &mut exact);
+        let k = 64;
+        let sa: std::collections::HashSet<u32> =
+            top_k_indices(&approx, k).into_iter().collect();
+        let se: std::collections::HashSet<u32> =
+            top_k_indices(&exact, k).into_iter().collect();
+        let recall = sa.intersection(&se).count() as f32 / k as f32;
+        assert!(recall > 0.25, "recall {recall}");
+    }
+
+    #[test]
+    fn attend_respects_budget() {
+        let dim = 32;
+        let (keys, vals, query) = clustered(3, 300, dim, 3.0);
+        let mut ds = DoubleSparse::new(dim);
+        ds.prefill(&keys, &vals, &[], 1);
+        let mut out = vec![0.0; dim];
+        ds.attend(&query, 10, &mut out);
+        assert!(out.iter().any(|&x| x != 0.0));
+        assert_eq!(ds.scratch_k.capacity() >= 10 * dim, true);
+    }
+}

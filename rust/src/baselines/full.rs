@@ -1,0 +1,82 @@
+//! Full-precision cache + dense attention — the FlashAttention-2 baseline
+//! role in every table: maximal accuracy, maximal memory, O(L) attention.
+
+use super::AttentionMethod;
+use crate::attention::dense::attend_dense;
+
+pub struct FullCache {
+    pub dim: usize,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+}
+
+impl FullCache {
+    pub fn new(dim: usize) -> Self {
+        Self { dim, keys: vec![], vals: vec![] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub fn keys(&self) -> &[f32] {
+        &self.keys
+    }
+
+    pub fn vals(&self) -> &[f32] {
+        &self.vals
+    }
+}
+
+impl AttentionMethod for FullCache {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn prefill(&mut self, keys: &[f32], vals: &[f32], _q_window: &[f32], _r: usize) {
+        assert_eq!(keys.len() % self.dim, 0);
+        self.keys.extend_from_slice(keys);
+        self.vals.extend_from_slice(vals);
+    }
+
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        self.keys.extend_from_slice(k_row);
+        self.vals.extend_from_slice(v_row);
+    }
+
+    fn attend(&mut self, query: &[f32], _budget: usize, out: &mut [f32]) {
+        attend_dense(query, &self.keys, &self.vals, self.len(), out);
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.keys.len() + self.vals.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn prefill_append_attend() {
+        let mut r = Rng::new(1);
+        let dim = 16;
+        let mut fc = FullCache::new(dim);
+        let keys: Vec<f32> = (0..10 * dim).map(|_| r.normal_f32()).collect();
+        let vals: Vec<f32> = (0..10 * dim).map(|_| r.normal_f32()).collect();
+        fc.prefill(&keys, &vals, &[], 1);
+        let k: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        fc.append(&k, &k);
+        assert_eq!(fc.len(), 11);
+        assert_eq!(fc.memory_bytes(), 11 * dim * 2 * 4);
+        let q: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        let mut out = vec![0.0; dim];
+        fc.attend(&q, usize::MAX, &mut out);
+        assert!(out.iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,146 @@
+//! Iterative k-means codebook construction — the clustering baseline of
+//! Table 4 (the paper reports one-pass sign clustering at 20×+ faster
+//! than 20-iteration k-means at equal codebook size).
+//!
+//! Same geometry as the sign codebook: per 4-channel group, 16 centroids
+//! over the group's subvectors. Lloyd's algorithm with k-means++-lite
+//! seeding (random distinct points), fixed iteration count as in prior KV
+//! clustering work (PQCache uses 20-50).
+
+use crate::selfindex::codebook::Codebook;
+use crate::substrate::rng::Rng;
+
+/// Run k-means over each group's subvectors; returns a [`Codebook`]
+/// shaped exactly like the sign-based one (16 centroids × dim-4).
+pub fn kmeans_codebook(
+    centered_keys: &[f32],
+    dim: usize,
+    iters: usize,
+    seed: u64,
+) -> Codebook {
+    assert_eq!(dim % 4, 0);
+    let groups = dim / 4;
+    let tokens = centered_keys.len() / dim;
+    let k = 16usize;
+    let mut rng = Rng::new(seed);
+    let mut centroids = vec![0.0f32; groups * k * 4];
+
+    let mut assign = vec![0u8; tokens];
+    let mut sums = vec![0.0f32; k * 4];
+    let mut counts = vec![0u32; k];
+
+    for g in 0..groups {
+        // seed: k distinct tokens' subvectors
+        let seeds = rng.choose_distinct(tokens.max(k), k);
+        for (c, &t) in seeds.iter().enumerate() {
+            let t = t.min(tokens - 1);
+            let src = &centered_keys[t * dim + g * 4..t * dim + g * 4 + 4];
+            centroids[(g * k + c) * 4..(g * k + c) * 4 + 4].copy_from_slice(src);
+        }
+        for _ in 0..iters {
+            // assignment
+            for t in 0..tokens {
+                let sub = &centered_keys[t * dim + g * 4..t * dim + g * 4 + 4];
+                let mut best = 0u8;
+                let mut best_d = f32::INFINITY;
+                for c in 0..k {
+                    let cent = &centroids[(g * k + c) * 4..(g * k + c) * 4 + 4];
+                    let mut d = 0.0;
+                    for i in 0..4 {
+                        let x = sub[i] - cent[i];
+                        d += x * x;
+                    }
+                    if d < best_d {
+                        best_d = d;
+                        best = c as u8;
+                    }
+                }
+                assign[t] = best;
+            }
+            // update
+            sums.fill(0.0);
+            counts.fill(0);
+            for t in 0..tokens {
+                let c = assign[t] as usize;
+                let sub = &centered_keys[t * dim + g * 4..t * dim + g * 4 + 4];
+                for i in 0..4 {
+                    sums[c * 4 + i] += sub[i];
+                }
+                counts[c] += 1;
+            }
+            for c in 0..k {
+                if counts[c] > 0 {
+                    for i in 0..4 {
+                        centroids[(g * k + c) * 4 + i] =
+                            sums[c * 4 + i] / counts[c] as f32;
+                    }
+                }
+            }
+        }
+    }
+    Codebook { groups, centroids }
+}
+
+/// Mean squared reconstruction error of assigning each subvector to its
+/// nearest centroid (codebook quality metric for the Table-4 comparison).
+pub fn quantization_mse(codebook: &Codebook, centered_keys: &[f32], dim: usize) -> f64 {
+    let groups = dim / 4;
+    let tokens = centered_keys.len() / dim;
+    let mut total = 0.0f64;
+    for t in 0..tokens {
+        for g in 0..groups {
+            let sub = &centered_keys[t * dim + g * 4..t * dim + g * 4 + 4];
+            let mut best = f32::INFINITY;
+            for c in 0..16 {
+                let cent = codebook.centroid(g, c);
+                let mut d = 0.0;
+                for i in 0..4 {
+                    let x = sub[i] - cent[i];
+                    d += x * x;
+                }
+                best = best.min(d);
+            }
+            total += best as f64;
+        }
+    }
+    total / (tokens * groups * 4) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selfindex::codebook::CodebookBuilder;
+    use crate::substrate::rng::Rng;
+
+    fn keys(seed: u64, tokens: usize, dim: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..tokens * dim).map(|_| r.normal_f32()).collect()
+    }
+
+    #[test]
+    fn kmeans_reduces_mse_over_iterations() {
+        let dim = 16;
+        let k = keys(1, 512, dim);
+        let cb1 = kmeans_codebook(&k, dim, 1, 7);
+        let cb10 = kmeans_codebook(&k, dim, 10, 7);
+        let e1 = quantization_mse(&cb1, &k, dim);
+        let e10 = quantization_mse(&cb10, &k, dim);
+        assert!(e10 <= e1 + 1e-9, "{e10} vs {e1}");
+    }
+
+    #[test]
+    fn sign_codebook_quality_comparable_to_kmeans() {
+        // the paper's claim: one-pass sign clustering preserves "sufficient
+        // representational quality". On gaussian subvectors k-means wins on
+        // MSE, but sign clustering must be within a modest factor.
+        let dim = 32;
+        let k = keys(2, 2048, dim);
+        let mut b = CodebookBuilder::new(dim / 4);
+        b.accumulate(&k);
+        let sign_cb = b.finalize();
+        let km_cb = kmeans_codebook(&k, dim, 20, 3);
+        let e_sign = quantization_mse(&sign_cb, &k, dim);
+        let e_km = quantization_mse(&km_cb, &k, dim);
+        assert!(e_sign < e_km * 2.5, "sign {e_sign} vs kmeans {e_km}");
+    }
+}

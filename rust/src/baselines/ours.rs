@@ -1,0 +1,355 @@
+//! The paper's method behind the same [`AttentionMethod`] trait, so the
+//! accuracy/efficiency tables drive everything through one protocol.
+//!
+//! Composition: [`HeadCache`] (compressed store + LUT-GEMV scoring) +
+//! SnapKV-selected [`SinkStore`] + fused sparse attention. The ablation
+//! switches of [`SelfIndexConfig`] (sign plane, magnitude centroids,
+//! sinks) flow straight through — Table 5 is a config sweep.
+
+use super::AttentionMethod;
+use crate::attention::sparse::{attend_sparse_fused, SparseAttnScratch};
+use crate::kvcache::layout::RecordLayout;
+use crate::kvcache::pool::BlockPool;
+use crate::kvcache::sink::{snapkv_select, SinkStore};
+use crate::kvcache::store::HeadCache;
+use crate::selfindex::lut::Lut;
+use crate::selfindex::score::ByteLut;
+use crate::selfindex::topk::top_k_indices;
+use crate::selfindex::SelfIndexConfig;
+
+pub struct SelfIndexing {
+    pub dim: usize,
+    pub cfg: SelfIndexConfig,
+    pool: BlockPool,
+    cache: HeadCache,
+    sinks: SinkStore,
+    sink_set: std::collections::HashSet<u32>,
+    scratch: SparseAttnScratch,
+    scores: Vec<f32>,
+    /// decode-time fp rows that always attend ([k, v] interleaved)
+    recent: Vec<f32>,
+    /// cap on `recent` before folding into the compressed cache only
+    recent_cap: usize,
+}
+
+impl SelfIndexing {
+    pub fn new(dim: usize, cfg: SelfIndexConfig) -> Self {
+        Self::with_capacity(dim, cfg, 4096)
+    }
+
+    pub fn with_capacity(dim: usize, cfg: SelfIndexConfig, capacity_blocks: usize) -> Self {
+        let layout = RecordLayout::new(dim, &cfg);
+        Self {
+            dim,
+            pool: BlockPool::new(layout, 64, capacity_blocks),
+            cache: HeadCache::new(dim, cfg.clone()),
+            sinks: SinkStore::default(),
+            sink_set: Default::default(),
+            scratch: SparseAttnScratch::new(dim),
+            scores: vec![],
+            recent: vec![],
+            recent_cap: 64,
+            cfg,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.len() + self.recent.len() / (2 * self.dim)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn cache(&self) -> &HeadCache {
+        &self.cache
+    }
+
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    pub fn sinks(&self) -> &SinkStore {
+        &self.sinks
+    }
+
+    /// LUT-GEMV scores with sinks masked out (−inf), ready for top-k.
+    pub fn masked_scores(&mut self, query: &[f32]) -> &[f32] {
+        let mut lut = Lut::build(query, self.cache.codebook());
+        let _ = &mut lut;
+        let blut = ByteLut::from_lut(&lut);
+        let scores = &mut self.scores;
+        self.cache.scores(&self.pool, &blut, scores);
+        for &s in &self.sink_set {
+            if (s as usize) < scores.len() {
+                scores[s as usize] = f32::NEG_INFINITY;
+            }
+        }
+        scores
+    }
+}
+
+impl AttentionMethod for SelfIndexing {
+    fn name(&self) -> &'static str {
+        "selfindex"
+    }
+
+    fn prefill(&mut self, keys: &[f32], vals: &[f32], q_window: &[f32], r_heads: usize) {
+        self.cache
+            .ingest_prefill(&mut self.pool, keys, vals)
+            .expect("pool sized for prefill");
+        if self.cfg.use_sinks && self.cfg.sink_tokens > 0 {
+            let sel = if q_window.is_empty() {
+                // degenerate: first tokens (StreamingLLM-style)
+                (0..self.cfg.sink_tokens.min(keys.len() / self.dim) as u32)
+                    .collect::<Vec<_>>()
+            } else {
+                snapkv_select(q_window, r_heads, keys, self.dim, self.cfg.sink_tokens)
+            };
+            // sink store holds CENTERED keys (K'), matching the compressed
+            // cache's reconstruction target
+            let mu = self.cache.mu().to_vec();
+            let mut centered = keys.to_vec();
+            for row in centered.chunks_exact_mut(self.dim) {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v -= mu[j];
+                }
+            }
+            self.sinks = SinkStore::build(self.dim, &sel, &centered, vals);
+            self.sink_set = sel.into_iter().collect();
+        }
+    }
+
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        // compressed append (future retrievability) + fp recent window
+        self.cache
+            .append(&mut self.pool, k_row, v_row)
+            .expect("pool sized for decode");
+        let mu = self.cache.mu();
+        let dim = self.dim;
+        let start = self.recent.len();
+        self.recent.extend_from_slice(k_row);
+        for j in 0..dim {
+            self.recent[start + j] -= mu[j]; // store centered like the cache
+        }
+        self.recent.extend_from_slice(v_row);
+        // fold oldest recent rows once over cap (they remain compressed)
+        let rows = self.recent.len() / (2 * dim);
+        if rows > self.recent_cap {
+            self.recent.drain(..(rows - self.recent_cap) * 2 * dim);
+        }
+    }
+
+    fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]) {
+        let recent_rows = self.recent.len() / (2 * self.dim);
+        let compressed_recent = recent_rows; // these indices overlap `recent`
+        let dyn_budget = budget.min(self.cache.len());
+        let scores = {
+            let mut lut = Lut::build(query, self.cache.codebook());
+            let _ = &mut lut;
+            let blut = ByteLut::from_lut(&lut);
+            self.cache.scores(&self.pool, &blut, &mut self.scores);
+            // mask sinks and the fp recent tail (they always attend)
+            for &s in &self.sink_set {
+                if (s as usize) < self.scores.len() {
+                    self.scores[s as usize] = f32::NEG_INFINITY;
+                }
+            }
+            let n = self.scores.len();
+            for t in n.saturating_sub(compressed_recent)..n {
+                self.scores[t] = f32::NEG_INFINITY;
+            }
+            &self.scores
+        };
+        let selected = top_k_indices(scores, dyn_budget);
+        let recent = std::mem::take(&mut self.recent);
+        attend_sparse_fused(
+            query,
+            &self.cache,
+            &self.pool,
+            &selected,
+            &self.sinks,
+            &recent,
+            &mut self.scratch,
+            out,
+        );
+        self.recent = recent;
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.cache.payload_bytes(&self.pool)
+            + self.cache.fixed_overhead_bytes()
+            + self.sinks.bytes()
+            + self.recent.len() * 4
+    }
+
+    fn retrieval_scores(&mut self, query: &[f32]) -> Option<Vec<f32>> {
+        let lut = Lut::build(query, self.cache.codebook());
+        let blut = ByteLut::from_lut(&lut);
+        let mut out = Vec::new();
+        self.cache.scores(&self.pool, &blut, &mut out);
+        Some(out)
+    }
+
+    /// GQA aggregation (paper): sum the R query heads' LUTs — one
+    /// LUT-GEMV pass and ONE top-k for the whole group — then attend each
+    /// head over the shared selection.
+    fn attend_group(&mut self, queries: &[f32], dim: usize, budget: usize, outs: &mut [f32]) {
+        assert_eq!(dim, self.dim);
+        let r = queries.len() / dim;
+        // summed LUT over the group's queries
+        let mut lut = Lut::build(&queries[..dim], self.cache.codebook());
+        for i in 1..r {
+            lut.add_query(&queries[i * dim..(i + 1) * dim], self.cache.codebook());
+        }
+        let blut = ByteLut::from_lut(&lut);
+        self.cache.scores(&self.pool, &blut, &mut self.scores);
+        for &s in &self.sink_set {
+            if (s as usize) < self.scores.len() {
+                self.scores[s as usize] = f32::NEG_INFINITY;
+            }
+        }
+        let recent_rows = self.recent.len() / (2 * self.dim);
+        let n = self.scores.len();
+        for t in n.saturating_sub(recent_rows)..n {
+            self.scores[t] = f32::NEG_INFINITY;
+        }
+        let selected = top_k_indices(&self.scores, budget.min(self.cache.len()));
+        let recent = std::mem::take(&mut self.recent);
+        for i in 0..r {
+            let q = &queries[i * dim..(i + 1) * dim];
+            let out = &mut outs[i * dim..(i + 1) * dim];
+            attend_sparse_fused(
+                q,
+                &self.cache,
+                &self.pool,
+                &selected,
+                &self.sinks,
+                &recent,
+                &mut self.scratch,
+                out,
+            );
+        }
+        self.recent = recent;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::full::FullCache;
+    use crate::baselines::testutil::clustered;
+
+    #[test]
+    fn output_tracks_full_attention() {
+        // Decomposed guarantees (cf. python test_kernels.py):
+        //  * at 8-bit payloads, quantization error is negligible and the
+        //    whole pipeline (retrieval + fused attention) must track full
+        //    attention closely;
+        //  * at the paper's 2-bit setting, unstructured gaussian V is the
+        //    worst case (errors don't cancel against structure), so the
+        //    bar is lower — and 8-bit must strictly beat 2-bit.
+        let dim = 64;
+        let (mut keys, vals, query) = clustered(1, 1024, dim, 4.0);
+        // plant dominant needles aligned with the query (peaked attention)
+        for t in [100usize, 400, 700] {
+            for j in 0..dim {
+                keys[t * dim + j] = 2.5 * query[j];
+            }
+        }
+        let mut full = FullCache::new(dim);
+        full.prefill(&keys, &vals, &[], 1);
+        let mut b = vec![0.0; dim];
+        full.attend(&query, usize::MAX, &mut b);
+
+        let cos_at_bits = |bits: u32| {
+            let mut cfg = SelfIndexConfig::default();
+            cfg.quant_bits = bits;
+            let mut ours = SelfIndexing::new(dim, cfg);
+            ours.prefill(&keys, &vals, &[], 1);
+            let mut a = vec![0.0; dim];
+            ours.attend(&query, 96, &mut a);
+            crate::eval::cosine(&a, &b)
+        };
+        let c8 = cos_at_bits(8);
+        let c2 = cos_at_bits(2);
+        assert!(c8 > 0.95, "8-bit cosine {c8}");
+        assert!(c2 > 0.8, "2-bit cosine {c2}");
+        assert!(c8 > c2, "more bits must help: {c8} vs {c2}");
+    }
+
+    #[test]
+    fn retrieval_recall_high_in_peaked_regime() {
+        let dim = 64;
+        let (keys, _vals, query) = clustered(1, 1024, dim, 9.0);
+        let vals = vec![0.0f32; keys.len()];
+        let mut ours = SelfIndexing::new(dim, SelfIndexConfig::default());
+        ours.prefill(&keys, &vals, &[], 1);
+        let approx = ours.retrieval_scores(&query).unwrap();
+        let mu = ours.cache().mu().to_vec();
+        let centered: Vec<f32> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v - mu[i % dim])
+            .collect();
+        let mut exact = Vec::new();
+        crate::selfindex::score::exact_scores(&query, &centered, dim, &mut exact);
+        let recall = crate::eval::recall_at_k(&approx, &exact, 96);
+        assert!(recall > 0.55, "recall {recall}");
+    }
+
+    #[test]
+    fn memory_below_quarter_of_full() {
+        let dim = 64;
+        let (keys, vals, _) = clustered(2, 4096, dim, 3.0);
+        let mut ours = SelfIndexing::new(dim, SelfIndexConfig::default());
+        ours.prefill(&keys, &vals, &[], 1);
+        let full_bytes = 2 * 4096 * dim * 4;
+        assert!(
+            ours.memory_bytes() < full_bytes / 4,
+            "{} vs full {}",
+            ours.memory_bytes(),
+            full_bytes
+        );
+    }
+
+    #[test]
+    fn decode_append_and_attend() {
+        let dim = 64;
+        let (keys, vals, query) = clustered(3, 256, dim, 4.0);
+        let mut ours = SelfIndexing::new(dim, SelfIndexConfig::default());
+        ours.prefill(&keys, &vals, &[], 1);
+        for i in 0..10 {
+            let k = &keys[i * dim..(i + 1) * dim];
+            ours.append(k, k);
+        }
+        assert_eq!(ours.cache().len(), 266);
+        let mut out = vec![0.0; dim];
+        ours.attend(&query, 32, &mut out);
+        assert!(out.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn ablation_switches_change_behaviour() {
+        let dim = 64;
+        let (keys, vals, query) = clustered(4, 512, dim, 4.0);
+        let run = |cfg: SelfIndexConfig| {
+            let mut m = SelfIndexing::new(dim, cfg);
+            m.prefill(&keys, &vals, &[], 1);
+            let mut out = vec![0.0; dim];
+            m.attend(&query, 64, &mut out);
+            out
+        };
+        let base = run(SelfIndexConfig::default());
+        let mut no_sign = SelfIndexConfig::default();
+        no_sign.sign_plane_quant = false;
+        let mut sign_only = SelfIndexConfig::default();
+        sign_only.magnitude_centroids = false;
+        let a = run(no_sign);
+        let b = run(sign_only);
+        let d1: f32 = base.iter().zip(&a).map(|(x, y)| (x - y).abs()).sum();
+        let d2: f32 = base.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(d1 > 1e-4, "w/o sign must differ");
+        assert!(d2 > 1e-4, "sign-only retrieval must differ");
+    }
+}

@@ -1,0 +1,240 @@
+//! Quest baseline (Tang et al. 2024): query-aware block-sparse attention.
+//!
+//! The cache is split into pages of 16 tokens; each page stores
+//! element-wise min/max of its keys. At decode, a page's upper-bound score
+//! is `Σ_j max(q_j·min_j, q_j·max_j)`; the top pages (by bound) covering
+//! the token budget attend densely. Paper setting: page size 16, 2 extra
+//! bits/parameter of index (min+max fp16 per channel per page ≈
+//! 2×16/16 = 2 bits per cached parameter).
+
+use super::AttentionMethod;
+use crate::attention::dense::attend_dense;
+use crate::selfindex::topk::top_k_indices;
+
+pub const PAGE: usize = 16;
+
+pub struct QuestCache {
+    pub dim: usize,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    /// per page: dim mins then dim maxs
+    page_minmax: Vec<f32>,
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+}
+
+impl QuestCache {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            dim,
+            keys: vec![],
+            vals: vec![],
+            page_minmax: vec![],
+            scratch_k: vec![],
+            scratch_v: vec![],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    fn pages(&self) -> usize {
+        self.len().div_ceil(PAGE)
+    }
+
+    fn refresh_index(&mut self) {
+        let dim = self.dim;
+        let pages = self.pages();
+        self.page_minmax.resize(pages * 2 * dim, 0.0);
+        for p in 0..pages {
+            let start = p * PAGE;
+            let end = ((p + 1) * PAGE).min(self.len());
+            let (mins, maxs) = self.page_minmax[p * 2 * dim..(p + 1) * 2 * dim]
+                .split_at_mut(dim);
+            mins.fill(f32::INFINITY);
+            maxs.fill(f32::NEG_INFINITY);
+            for t in start..end {
+                for j in 0..dim {
+                    let v = self.keys[t * dim + j];
+                    if v < mins[j] {
+                        mins[j] = v;
+                    }
+                    if v > maxs[j] {
+                        maxs[j] = v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Upper-bound score of each page for `query` (Quest's criterion).
+    pub fn page_bounds(&self, query: &[f32]) -> Vec<f32> {
+        let dim = self.dim;
+        (0..self.pages())
+            .map(|p| {
+                let mins = &self.page_minmax[p * 2 * dim..p * 2 * dim + dim];
+                let maxs = &self.page_minmax[p * 2 * dim + dim..(p + 1) * 2 * dim];
+                let mut s = 0.0f32;
+                for j in 0..dim {
+                    s += (query[j] * mins[j]).max(query[j] * maxs[j]);
+                }
+                s
+            })
+            .collect()
+    }
+}
+
+impl AttentionMethod for QuestCache {
+    fn name(&self) -> &'static str {
+        "quest"
+    }
+
+    fn prefill(&mut self, keys: &[f32], vals: &[f32], _q: &[f32], _r: usize) {
+        self.keys.extend_from_slice(keys);
+        self.vals.extend_from_slice(vals);
+        self.refresh_index();
+    }
+
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        self.keys.extend_from_slice(k_row);
+        self.vals.extend_from_slice(v_row);
+        // incremental: only the last page's min/max changes
+        let dim = self.dim;
+        let pages = self.pages();
+        self.page_minmax.resize(pages * 2 * dim, 0.0);
+        let p = pages - 1;
+        let start = p * PAGE;
+        let end = self.len();
+        let (mins, maxs) =
+            self.page_minmax[p * 2 * dim..(p + 1) * 2 * dim].split_at_mut(dim);
+        mins.fill(f32::INFINITY);
+        maxs.fill(f32::NEG_INFINITY);
+        for t in start..end {
+            for j in 0..dim {
+                let v = self.keys[t * dim + j];
+                if v < mins[j] {
+                    mins[j] = v;
+                }
+                if v > maxs[j] {
+                    maxs[j] = v;
+                }
+            }
+        }
+    }
+
+    fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]) {
+        let dim = self.dim;
+        let n_pages = budget.div_ceil(PAGE).max(1);
+        let bounds = self.page_bounds(query);
+        let sel = top_k_indices(&bounds, n_pages);
+        self.scratch_k.clear();
+        self.scratch_v.clear();
+        let mut tokens = 0;
+        for &p in &sel {
+            let start = p as usize * PAGE;
+            let end = ((p as usize + 1) * PAGE).min(self.len());
+            self.scratch_k
+                .extend_from_slice(&self.keys[start * dim..end * dim]);
+            self.scratch_v
+                .extend_from_slice(&self.vals[start * dim..end * dim]);
+            tokens += end - start;
+        }
+        let sk = std::mem::take(&mut self.scratch_k);
+        let sv = std::mem::take(&mut self.scratch_v);
+        attend_dense(query, &sk, &sv, tokens, out);
+        self.scratch_k = sk;
+        self.scratch_v = sv;
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // fp16 K/V cache + fp16 min/max index (paper's accounting)
+        (self.keys.len() + self.vals.len()) * 2 + self.page_minmax.len() * 2
+    }
+
+    fn retrieval_scores(&mut self, query: &[f32]) -> Option<Vec<f32>> {
+        // token score = its page's bound (block granularity)
+        let bounds = self.page_bounds(query);
+        let mut out = Vec::with_capacity(self.len());
+        for t in 0..self.len() {
+            out.push(bounds[t / PAGE]);
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::testutil::clustered;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn bounds_are_upper_bounds() {
+        let mut r = Rng::new(1);
+        let dim = 32;
+        let (keys, vals, query) = clustered(2, 256, dim, 3.0);
+        let mut qc = QuestCache::new(dim);
+        qc.prefill(&keys, &vals, &[], 1);
+        let bounds = qc.page_bounds(&query);
+        for t in 0..qc.len() {
+            let s = crate::tensor::dot(&query, &keys[t * dim..(t + 1) * dim]);
+            assert!(
+                bounds[t / PAGE] >= s - 1e-4,
+                "page bound {} < token score {s}",
+                bounds[t / PAGE]
+            );
+        }
+        let _ = r.next_u64();
+    }
+
+    #[test]
+    fn selects_page_containing_best_token() {
+        // bounds are loose (min/max boxes), so the guarantee is soft: the
+        // best token's page bound must dominate its true score, and the
+        // page must rank in the upper half of pages by bound.
+        let (keys, vals, query) = clustered(3, 512, 32, 4.0);
+        let mut qc = QuestCache::new(32);
+        qc.prefill(&keys, &vals, &[], 1);
+        let mut exact = Vec::new();
+        crate::selfindex::score::exact_scores(&query, &keys, 32, &mut exact);
+        let best = crate::selfindex::topk::top_k_indices(&exact, 1)[0] as usize;
+        let bounds = qc.page_bounds(&query);
+        assert!(bounds[best / PAGE] >= exact[best] - 1e-4);
+        let sel = top_k_indices(&bounds, bounds.len() / 2);
+        assert!(
+            sel.contains(&((best / PAGE) as u32)),
+            "best token's page must rank in the top half of pages"
+        );
+    }
+
+    #[test]
+    fn append_updates_last_page_only() {
+        let mut r = Rng::new(4);
+        let dim = 16;
+        let keys: Vec<f32> = (0..40 * dim).map(|_| r.normal_f32()).collect();
+        let mut qc = QuestCache::new(dim);
+        qc.prefill(&keys, &keys.clone(), &[], 1);
+        let before = qc.page_minmax.clone();
+        let big = vec![100.0f32; dim];
+        qc.append(&big, &big);
+        // pages 0..2 unchanged, page 2 (tokens 32..41) updated
+        assert_eq!(qc.page_minmax[..2 * 2 * dim], before[..2 * 2 * dim]);
+        let p = 2;
+        let maxs = &qc.page_minmax[p * 2 * dim + dim..(p + 1) * 2 * dim];
+        assert!(maxs.iter().all(|&m| m == 100.0));
+    }
+
+    #[test]
+    fn memory_includes_index() {
+        let (keys, vals, _) = clustered(5, 160, 32, 3.0);
+        let mut qc = QuestCache::new(32);
+        qc.prefill(&keys, &vals, &[], 1);
+        // 160 tokens fp16 K+V = 160*32*2*2; index = 10 pages × 2×32 × 2
+        assert_eq!(qc.memory_bytes(), 160 * 32 * 2 * 2 + 10 * 2 * 32 * 2);
+    }
+}

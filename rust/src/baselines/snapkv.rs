@@ -1,0 +1,133 @@
+//! SnapKV baseline (Li et al. 2024): one-shot static pruning at prefill.
+//!
+//! Observation-window queries vote (pooled attention mass) for which
+//! prefix tokens to keep; everything else is discarded permanently. Keeps
+//! the budget in full precision. Fast and memory-light, but — as Tables
+//! 1/2 show — brittle on tasks whose relevant tokens aren't known at
+//! prefill time (its NS3/NM2/NM3 collapses in Table 2).
+
+use super::AttentionMethod;
+use crate::attention::dense::attend_dense;
+use crate::kvcache::sink::snapkv_select;
+
+pub struct SnapKv {
+    pub dim: usize,
+    /// tokens to keep at prefill (the method's *static* budget)
+    pub keep: usize,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    kept: Vec<u32>,
+}
+
+impl SnapKv {
+    pub fn new(dim: usize, keep: usize) -> Self {
+        Self { dim, keep, keys: vec![], vals: vec![], kept: vec![] }
+    }
+
+    pub fn kept_indices(&self) -> &[u32] {
+        &self.kept
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+impl AttentionMethod for SnapKv {
+    fn name(&self) -> &'static str {
+        "snapkv"
+    }
+
+    fn prefill(&mut self, keys: &[f32], vals: &[f32], q_window: &[f32], r_heads: usize) {
+        let l = keys.len() / self.dim;
+        let keep = self.keep.min(l);
+        self.kept = if q_window.is_empty() {
+            // no window: keep the tail (recency prior)
+            ((l - keep) as u32..l as u32).collect()
+        } else {
+            snapkv_select(q_window, r_heads, keys, self.dim, keep)
+        };
+        for &i in &self.kept {
+            let i = i as usize;
+            self.keys
+                .extend_from_slice(&keys[i * self.dim..(i + 1) * self.dim]);
+            self.vals
+                .extend_from_slice(&vals[i * self.dim..(i + 1) * self.dim]);
+        }
+    }
+
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        // decode tokens are always kept (standard SnapKV behaviour)
+        self.keys.extend_from_slice(k_row);
+        self.vals.extend_from_slice(v_row);
+    }
+
+    fn attend(&mut self, query: &[f32], _budget: usize, out: &mut [f32]) {
+        attend_dense(query, &self.keys, &self.vals, self.len(), out);
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.keys.len() + self.vals.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn keeps_at_most_budget_plus_decode() {
+        let mut r = Rng::new(1);
+        let dim = 32;
+        let keys: Vec<f32> = (0..100 * dim).map(|_| r.normal_f32()).collect();
+        let vals = keys.clone();
+        let qw: Vec<f32> = (0..4 * dim).map(|_| r.normal_f32()).collect();
+        let mut s = SnapKv::new(dim, 20);
+        s.prefill(&keys, &vals, &qw, 1);
+        assert_eq!(s.len(), 20);
+        let k = vec![0.0f32; dim];
+        s.append(&k, &k);
+        assert_eq!(s.len(), 21);
+    }
+
+    #[test]
+    fn misses_needle_outside_window_focus() {
+        // the failure mode the paper exploits: a token relevant only to a
+        // FUTURE query is pruned if the observation window ignores it.
+        let mut r = Rng::new(2);
+        let dim = 32;
+        let l = 128;
+        let mut keys: Vec<f32> = (0..l * dim).map(|_| r.normal_f32() * 0.2).collect();
+        // needle at 40 aligned with a direction the window never queries
+        let needle: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        for j in 0..dim {
+            keys[40 * dim + j] = needle[j] * 5.0;
+        }
+        // window queries aligned with a different direction
+        let other: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        let qw: Vec<f32> = (0..8)
+            .flat_map(|_| other.iter().map(|&x| x + 0.01).collect::<Vec<_>>())
+            .collect();
+        let mut s = SnapKv::new(dim, 16);
+        s.prefill(&keys, &keys.clone(), &qw, 1);
+        assert!(
+            !s.kept_indices().contains(&40),
+            "needle should be pruned: {:?}",
+            s.kept_indices()
+        );
+    }
+
+    #[test]
+    fn no_window_keeps_tail() {
+        let dim = 8;
+        let keys = vec![0.5f32; 50 * dim];
+        let mut s = SnapKv::new(dim, 10);
+        s.prefill(&keys, &keys.clone(), &[], 1);
+        assert_eq!(s.kept_indices(), (40u32..50).collect::<Vec<_>>());
+    }
+}

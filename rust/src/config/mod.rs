@@ -1,0 +1,217 @@
+//! Typed configuration system: engine + model + selfindex knobs, loadable
+//! from JSON (own parser) with full validation. Every paper setting is a
+//! field with the paper's value as default; the CLI overlays overrides.
+
+use crate::selfindex::SelfIndexConfig;
+use crate::substrate::json::Json;
+
+/// Model geometry (mirrors python/compile/config.py and the manifest).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+}
+
+impl ModelConfig {
+    pub fn gqa_ratio(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let u = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("model.{k} missing/invalid"))
+        };
+        let cfg = Self {
+            vocab_size: u("vocab_size")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            n_kv_heads: u("n_kv_heads")?,
+            head_dim: u("head_dim")?,
+            d_ff: u("d_ff")?,
+            max_seq: u("max_seq")?,
+            rope_theta: v
+                .get("rope_theta")
+                .and_then(Json::as_f64)
+                .ok_or("model.rope_theta missing")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_heads % self.n_kv_heads != 0 {
+            return Err(format!(
+                "n_heads {} not divisible by n_kv_heads {}",
+                self.n_heads, self.n_kv_heads
+            ));
+        }
+        if self.head_dim % 8 != 0 {
+            return Err(format!("head_dim {} must be divisible by 8", self.head_dim));
+        }
+        if self.vocab_size == 0 || self.n_layers == 0 {
+            return Err("degenerate model".into());
+        }
+        Ok(())
+    }
+}
+
+/// Serving engine knobs.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// max sequences per decode batch (must be an AOT bucket)
+    pub max_batch: usize,
+    /// dynamic sparsity: fraction of context retrieved per step
+    /// (paper Fig. 4/5: 7.5%); fixed-k mode when `sparse_k` is Some
+    pub sparsity: f64,
+    pub sparse_k: Option<usize>,
+    /// kv pool capacity in tokens per (layer, kv head)
+    pub pool_tokens: usize,
+    /// admission queue bound (backpressure)
+    pub queue_limit: usize,
+    /// max new tokens per request default
+    pub max_new_tokens: usize,
+    pub selfindex: SelfIndexConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            sparsity: 0.075,
+            sparse_k: Some(96),
+            pool_tokens: 1 << 16,
+            queue_limit: 256,
+            max_new_tokens: 32,
+            selfindex: SelfIndexConfig::default(),
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Dynamic budget for a context of `len` tokens.
+    pub fn budget_for(&self, len: usize) -> usize {
+        match self.sparse_k {
+            Some(k) => k,
+            None => ((len as f64 * self.sparsity).ceil() as usize).max(1),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let mut cfg = Self::default();
+        if let Some(x) = v.get("max_batch").and_then(Json::as_usize) {
+            cfg.max_batch = x;
+        }
+        if let Some(x) = v.get("sparsity").and_then(Json::as_f64) {
+            cfg.sparsity = x;
+        }
+        if let Some(x) = v.get("sparse_k") {
+            cfg.sparse_k = x.as_usize();
+        }
+        if let Some(x) = v.get("pool_tokens").and_then(Json::as_usize) {
+            cfg.pool_tokens = x;
+        }
+        if let Some(x) = v.get("queue_limit").and_then(Json::as_usize) {
+            cfg.queue_limit = x;
+        }
+        if let Some(x) = v.get("max_new_tokens").and_then(Json::as_usize) {
+            cfg.max_new_tokens = x;
+        }
+        let si = &mut cfg.selfindex;
+        if let Some(x) = v.path("selfindex.sink_tokens").and_then(Json::as_usize) {
+            si.sink_tokens = x;
+        }
+        if let Some(x) = v.path("selfindex.sparse_k").and_then(Json::as_usize) {
+            si.sparse_k = x;
+        }
+        if let Some(x) = v.path("selfindex.quant_bits").and_then(Json::as_usize) {
+            si.quant_bits = x as u32;
+        }
+        if let Some(x) = v.path("selfindex.use_sinks").and_then(Json::as_bool) {
+            si.use_sinks = x;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.sparsity) {
+            return Err(format!("sparsity {} outside [0,1]", self.sparsity));
+        }
+        if self.max_batch == 0 {
+            return Err("max_batch == 0".into());
+        }
+        if self.queue_limit == 0 {
+            return Err("queue_limit == 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_from_json() {
+        let j = Json::parse(
+            r#"{"vocab_size":256,"d_model":256,"n_layers":4,"n_heads":4,
+                "n_kv_heads":2,"head_dim":64,"d_ff":512,"max_seq":8192,
+                "rope_theta":10000.0}"#,
+        )
+        .unwrap();
+        let m = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(m.gqa_ratio(), 2);
+        assert_eq!(m.head_dim, 64);
+    }
+
+    #[test]
+    fn model_validation_catches_bad_gqa() {
+        let j = Json::parse(
+            r#"{"vocab_size":256,"d_model":256,"n_layers":4,"n_heads":5,
+                "n_kv_heads":2,"head_dim":64,"d_ff":512,"max_seq":8192,
+                "rope_theta":10000.0}"#,
+        )
+        .unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn engine_defaults_are_paper_settings() {
+        let e = EngineConfig::default();
+        assert_eq!(e.budget_for(10_000), 96);
+        assert!((e.sparsity - 0.075).abs() < 1e-9);
+        assert_eq!(e.selfindex.sink_tokens, 64);
+    }
+
+    #[test]
+    fn ratio_mode_budget() {
+        let mut e = EngineConfig::default();
+        e.sparse_k = None;
+        assert_eq!(e.budget_for(1000), 75);
+        assert_eq!(e.budget_for(4), 1);
+    }
+
+    #[test]
+    fn engine_overlay_from_json() {
+        let j = Json::parse(
+            r#"{"max_batch":4,"sparsity":0.1,"sparse_k":null,
+                "selfindex":{"sink_tokens":32,"use_sinks":false}}"#,
+        )
+        .unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.max_batch, 4);
+        assert_eq!(e.sparse_k, None);
+        assert_eq!(e.selfindex.sink_tokens, 32);
+        assert!(!e.selfindex.use_sinks);
+    }
+}

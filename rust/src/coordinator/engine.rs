@@ -1,0 +1,409 @@
+//! The serving engine: PJRT compute + compressed caches + retrieval.
+//!
+//! Per engine step ([`Engine::step`]): the scheduler either prefixes a
+//! queued request (PJRT `prefill_l{N}` → per-(layer, kv-head) method
+//! prefill with SnapKV windows) or decodes the running batch
+//! (`embed` → per-layer `decode_qkv` → native GQA-grouped attention via
+//! the configured [`AttentionMethod`] → `decode_out` → `logits` → greedy
+//! sample). The KV cache never crosses the PJRT boundary.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use super::request::{Request, RequestId, RequestResult};
+use super::router::{AdmitError, Router};
+use super::scheduler::{Scheduler, StepPlan};
+use crate::baselines::{
+    AttentionMethod, DoubleSparse, FullCache, KiviCache, QuestCache, SelfIndexing,
+    SnapKv,
+};
+use crate::config::{EngineConfig, ModelConfig};
+use crate::runtime::{HostTensor, PjrtRuntime};
+use crate::selfindex::SelfIndexConfig;
+use crate::substrate::metrics::Registry;
+
+/// Which attention/cache method the engine serves with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    SelfIndex,
+    Full,
+    Kivi,
+    SnapKv,
+    Quest,
+    DoubleSparse,
+}
+
+impl MethodKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "selfindex" | "ours" => Self::SelfIndex,
+            "full" | "fa2" => Self::Full,
+            "kivi" => Self::Kivi,
+            "snapkv" => Self::SnapKv,
+            "quest" => Self::Quest,
+            "doublesparse" | "ds" => Self::DoubleSparse,
+            _ => return None,
+        })
+    }
+
+    pub fn make(&self, dim: usize, si: &SelfIndexConfig, budget_hint: usize) -> Box<dyn AttentionMethod> {
+        match self {
+            Self::SelfIndex => Box::new(SelfIndexing::new(dim, si.clone())),
+            Self::Full => Box::new(FullCache::new(dim)),
+            Self::Kivi => Box::new(KiviCache::new(dim, si.quant_bits)),
+            Self::SnapKv => Box::new(SnapKv::new(dim, budget_hint)),
+            Self::Quest => Box::new(QuestCache::new(dim)),
+            Self::DoubleSparse => Box::new(DoubleSparse::new(dim)),
+        }
+    }
+}
+
+struct SeqState {
+    req: Request,
+    /// per (layer × kv-head) attention method, layer-major
+    heads: Vec<Box<dyn AttentionMethod>>,
+    /// prompt + generated tokens so far
+    tokens: Vec<u8>,
+    generated: Vec<u8>,
+    first_token_at: Option<Instant>,
+    decode_steps: usize,
+}
+
+pub struct Engine {
+    pub rt: PjrtRuntime,
+    pub model: ModelConfig,
+    pub cfg: EngineConfig,
+    pub method: MethodKind,
+    pub metrics: Registry,
+    router: Router,
+    scheduler: Scheduler,
+    seqs: HashMap<RequestId, SeqState>,
+    /// requests deferred by pool pressure (retried before the queue)
+    stash: Vec<Request>,
+    /// total cached tokens across sequences (pool pressure heuristic)
+    cached_tokens: usize,
+}
+
+impl Engine {
+    pub fn new(
+        artifact_dir: &Path,
+        cfg: EngineConfig,
+        method: MethodKind,
+    ) -> anyhow::Result<Self> {
+        let rt = PjrtRuntime::load(artifact_dir)?;
+        let model = rt.manifest.model.clone();
+        let metrics = Registry::default();
+        let max_prompt = model.max_seq;
+        Ok(Self {
+            router: Router::new(cfg.queue_limit, max_prompt, metrics.clone()),
+            scheduler: Scheduler::new(cfg.max_batch),
+            seqs: HashMap::new(),
+            stash: vec![],
+            cached_tokens: 0,
+            rt,
+            model,
+            cfg,
+            method,
+            metrics,
+        })
+    }
+
+    pub fn submit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<RequestId, AdmitError> {
+        self.router.submit(prompt, max_new)
+    }
+
+    pub fn idle(&self) -> bool {
+        self.router.is_empty() && self.seqs.is_empty() && self.stash.is_empty()
+    }
+
+    pub fn running(&self) -> usize {
+        self.scheduler.running().len()
+    }
+
+    /// KV bytes currently held across sequences/heads (Fig. 5 metric).
+    pub fn cache_bytes(&self) -> usize {
+        self.seqs
+            .values()
+            .flat_map(|s| s.heads.iter())
+            .map(|h| h.memory_bytes())
+            .sum()
+    }
+
+    fn pool_can_admit(&self, prompt_len: usize) -> bool {
+        let per_head = prompt_len + self.cfg.max_new_tokens;
+        let heads = self.model.n_layers * self.model.n_kv_heads;
+        self.cached_tokens + per_head * heads
+            <= self.cfg.pool_tokens * heads
+    }
+
+    /// Drive one scheduler step; returns requests completed in this step.
+    ///
+    /// Policy: prefill-prioritized continuous batching — admit one queued
+    /// request per step while batch capacity and pool pressure allow,
+    /// otherwise run one decode step over the whole running set.
+    pub fn step(&mut self) -> anyhow::Result<Vec<RequestResult>> {
+        if self.scheduler.has_capacity() {
+            if let Some(req) = self.stash.pop().or_else(|| self.router.pop()) {
+                // force-admit when nothing is running (deadlock guard)
+                if self.pool_can_admit(req.prompt.len()) || self.seqs.is_empty() {
+                    self.do_prefill(req)?;
+                    return Ok(vec![]);
+                }
+                self.metrics.counter("engine.deferred_admissions").inc();
+                self.stash.push(req);
+            }
+        }
+        match self.scheduler.plan(None, false) {
+            StepPlan::Decode(ids) => self.do_decode(&ids),
+            _ => Ok(vec![]),
+        }
+    }
+
+    /// Run until all submitted work completes; returns all results.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<Vec<RequestResult>> {
+        let mut out = vec![];
+        while !self.idle() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    fn do_prefill(&mut self, req: Request) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let prompt_len = req.prompt.len();
+        let bucket = self
+            .rt
+            .manifest
+            .prefill_bucket(prompt_len)
+            .ok_or_else(|| anyhow::anyhow!("prompt {} exceeds buckets", prompt_len))?
+            .name
+            .clone();
+        let padded: usize = bucket
+            .strip_prefix("prefill_l")
+            .unwrap()
+            .parse()
+            .unwrap();
+
+        let mut tokens = vec![0i32; padded];
+        for (i, &b) in req.prompt.iter().enumerate() {
+            tokens[i] = b as i32;
+        }
+        let outs = self.rt.run(
+            &bucket,
+            None,
+            &[
+                HostTensor::I32(tokens, vec![1, padded]),
+                HostTensor::scalar_i32(prompt_len as i32),
+            ],
+        )?;
+        let (k_cache, v_cache, last_logits, q_window) =
+            (&outs[0], &outs[1], &outs[2], &outs[3]);
+
+        let m = &self.model;
+        let (nl, kvh, hd, h) = (m.n_layers, m.n_kv_heads, m.head_dim, m.n_heads);
+        let r = m.gqa_ratio();
+        let w = q_window.shape()[1];
+        let kc = k_cache.as_f32();
+        let vc = v_cache.as_f32();
+        let qw = q_window.as_f32();
+
+        // build per-(layer, kv-head) methods
+        let budget_hint = self.cfg.budget_for(prompt_len) + self.cfg.selfindex.sink_tokens;
+        let mut heads: Vec<Box<dyn AttentionMethod>> =
+            Vec::with_capacity(nl * kvh);
+        let mut keys_buf = vec![0.0f32; prompt_len * hd];
+        let mut vals_buf = vec![0.0f32; prompt_len * hd];
+        let mut qw_buf = vec![0.0f32; w * r * hd];
+        for l in 0..nl {
+            for head in 0..kvh {
+                // k_cache layout: (layers, padded, kvh, hd)
+                for t in 0..prompt_len {
+                    let src = ((l * padded + t) * kvh + head) * hd;
+                    keys_buf[t * hd..(t + 1) * hd]
+                        .copy_from_slice(&kc[src..src + hd]);
+                    vals_buf[t * hd..(t + 1) * hd]
+                        .copy_from_slice(&vc[src..src + hd]);
+                }
+                // q_window layout: (layers, w, h, hd); group heads
+                for wi in 0..w {
+                    for ri in 0..r {
+                        let qh = head * r + ri;
+                        let src = ((l * w + wi) * h + qh) * hd;
+                        let dst = (wi * r + ri) * hd;
+                        qw_buf[dst..dst + hd].copy_from_slice(&qw[src..src + hd]);
+                    }
+                }
+                let mut method =
+                    self.method.make(hd, &self.cfg.selfindex, budget_hint);
+                method.prefill(&keys_buf, &vals_buf, &qw_buf, r);
+                heads.push(method);
+            }
+        }
+        self.cached_tokens += prompt_len * nl * kvh;
+
+        // first token from prefill logits
+        let first = argmax(last_logits.as_f32()) as u8;
+        let mut tokens_all = req.prompt.clone();
+        tokens_all.push(first);
+        let id = req.id;
+        let st = SeqState {
+            req,
+            heads,
+            tokens: tokens_all,
+            generated: vec![first],
+            first_token_at: Some(Instant::now()),
+            decode_steps: 1,
+        };
+        self.seqs.insert(id, st);
+        self.scheduler.add_running(id);
+        self.metrics
+            .histogram("engine.prefill_latency")
+            .observe(t0.elapsed());
+        self.metrics.counter("engine.prefills").inc();
+        Ok(())
+    }
+
+    fn do_decode(&mut self, ids: &[RequestId]) -> anyhow::Result<Vec<RequestResult>> {
+        let t0 = Instant::now();
+        let b = ids.len();
+        let m = self.model.clone();
+        let (nl, kvh, hd, h, d) = (m.n_layers, m.n_kv_heads, m.head_dim, m.n_heads, m.d_model);
+        let r = m.gqa_ratio();
+
+        let bucket = self
+            .rt
+            .manifest
+            .batch_bucket("embed_b", b)
+            .ok_or_else(|| anyhow::anyhow!("batch {} exceeds buckets", b))?
+            .name
+            .clone();
+        let bb: usize = bucket.strip_prefix("embed_b").unwrap().parse().unwrap();
+
+        // stage last tokens + positions (padded to bucket)
+        let mut toks = vec![0i32; bb];
+        let mut pos = vec![0i32; bb];
+        for (i, id) in ids.iter().enumerate() {
+            let s = &self.seqs[id];
+            toks[i] = *s.tokens.last().unwrap() as i32;
+            pos[i] = (s.tokens.len() - 1) as i32;
+        }
+        let outs = self.rt.run(
+            &format!("embed_b{bb}"),
+            None,
+            &[HostTensor::I32(toks, vec![bb])],
+        )?;
+        let mut x = outs.into_iter().next().unwrap();
+
+        let budgets: Vec<usize> = ids
+            .iter()
+            .map(|id| self.cfg.budget_for(self.seqs[id].tokens.len()))
+            .collect();
+
+        for l in 0..nl {
+            let qkv = self.rt.run(
+                &format!("decode_qkv_b{bb}"),
+                Some(l),
+                &[x.clone(), HostTensor::I32(pos.clone(), vec![bb])],
+            )?;
+            let (q, k, v) = (&qkv[0], &qkv[1], &qkv[2]);
+            let qf = q.as_f32(); // (bb, h, hd)
+            let kf = k.as_f32(); // (bb, kvh, hd)
+            let vf = v.as_f32();
+
+            // native attention per (seq, kv head), GQA-grouped
+            let mut o = vec![0.0f32; bb * h * hd];
+            for (i, id) in ids.iter().enumerate() {
+                let budget = budgets[i];
+                let seq = self.seqs.get_mut(id).unwrap();
+                for head in 0..kvh {
+                    let midx = l * kvh + head;
+                    let krow = &kf[(i * kvh + head) * hd..][..hd];
+                    let vrow = &vf[(i * kvh + head) * hd..][..hd];
+                    seq.heads[midx].append(krow, vrow);
+                    // group queries (r heads) contiguous in q layout
+                    let qbase = (i * h + head * r) * hd;
+                    let queries = &qf[qbase..qbase + r * hd];
+                    let obase = (i * h + head * r) * hd;
+                    seq.heads[midx].attend_group(
+                        queries,
+                        hd,
+                        budget,
+                        &mut o[obase..obase + r * hd],
+                    );
+                }
+            }
+            self.cached_tokens += ids.len() * kvh;
+
+            let next = self.rt.run(
+                &format!("decode_out_b{bb}"),
+                Some(l),
+                &[HostTensor::F32(o, vec![bb, h, hd]), x.clone()],
+            )?;
+            x = next.into_iter().next().unwrap();
+        }
+        debug_assert_eq!(x.shape(), &[bb, d]);
+
+        let logits = self
+            .rt
+            .run(&format!("logits_b{bb}"), None, &[x])?
+            .into_iter()
+            .next()
+            .unwrap();
+        let lf = logits.as_f32(); // (bb, vocab)
+        let vocab = self.model.vocab_size;
+
+        let mut done = vec![];
+        for (i, id) in ids.iter().enumerate() {
+            let tok = argmax(&lf[i * vocab..(i + 1) * vocab]) as u8;
+            let seq = self.seqs.get_mut(id).unwrap();
+            seq.tokens.push(tok);
+            seq.generated.push(tok);
+            seq.decode_steps += 1;
+            if seq.generated.len() >= seq.req.max_new_tokens {
+                done.push(*id);
+            }
+        }
+
+        self.metrics
+            .histogram("engine.decode_step_latency")
+            .observe(t0.elapsed());
+        self.metrics.counter("engine.decode_steps").inc();
+        self.metrics
+            .counter("engine.decoded_tokens")
+            .add(ids.len() as u64);
+
+        let mut results = vec![];
+        for id in done {
+            let seq = self.seqs.remove(&id).unwrap();
+            self.scheduler.remove(id);
+            self.cached_tokens = self.cached_tokens.saturating_sub(
+                seq.tokens.len() * nl * kvh,
+            );
+            results.push(RequestResult {
+                id,
+                prompt_len: seq.req.prompt.len(),
+                ttft: seq
+                    .first_token_at
+                    .map(|t| t - seq.req.submitted_at)
+                    .unwrap_or_default(),
+                latency: seq.req.submitted_at.elapsed(),
+                decode_steps: seq.decode_steps,
+                generated: seq.generated,
+            });
+        }
+        Ok(results)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}

@@ -1,0 +1,20 @@
+//! The serving coordinator (vLLM-router-like L3 layer).
+//!
+//! * [`request`]   — request/response types + lifecycle states.
+//! * [`router`]    — admission control: bounded FIFO queue, rejection
+//!   under backpressure, queue metrics.
+//! * [`scheduler`] — step planning: continuous batching of decodes,
+//!   prefill interleaving, pool-pressure awareness.
+//! * [`engine`]    — the serving loop: PJRT prefill → per-head compressed
+//!   caches → per-step LUT-GEMV retrieval + sparse attention → PJRT
+//!   decode projections → greedy sampling. Python never runs here.
+
+pub mod engine;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use engine::{Engine, MethodKind};
+pub use request::{Request, RequestId, RequestResult, RequestState};
+pub use router::Router;
+pub use scheduler::{Scheduler, StepPlan};

@@ -1,0 +1,64 @@
+//! Request/response types and lifecycle.
+
+use std::time::{Duration, Instant};
+
+pub type RequestId = u64;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// byte-level prompt (vocab 256: token == byte)
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    pub submitted_at: Instant,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished,
+    Rejected,
+}
+
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: RequestId,
+    pub generated: Vec<u8>,
+    pub prompt_len: usize,
+    /// queue admission -> first generated token
+    pub ttft: Duration,
+    /// queue admission -> completion
+    pub latency: Duration,
+    pub decode_steps: usize,
+}
+
+impl RequestResult {
+    /// decode throughput in tokens/sec (excludes prefill)
+    pub fn decode_tps(&self) -> f64 {
+        let decode_time = self.latency.saturating_sub(self.ttft);
+        if decode_time.is_zero() || self.decode_steps <= 1 {
+            return 0.0;
+        }
+        (self.decode_steps - 1) as f64 / decode_time.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tps_math() {
+        let r = RequestResult {
+            id: 1,
+            generated: vec![0; 11],
+            prompt_len: 100,
+            ttft: Duration::from_millis(100),
+            latency: Duration::from_millis(1100),
+            decode_steps: 11,
+        };
+        assert!((r.decode_tps() - 10.0).abs() < 1e-9);
+    }
+}

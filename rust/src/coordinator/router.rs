@@ -1,0 +1,119 @@
+//! Admission control: bounded FIFO with rejection under backpressure.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::request::{Request, RequestId};
+use crate::substrate::metrics::Registry;
+
+#[derive(Debug, thiserror::Error)]
+pub enum AdmitError {
+    #[error("queue full ({0} waiting)")]
+    QueueFull(usize),
+    #[error("prompt too long: {0} > {1}")]
+    PromptTooLong(usize, usize),
+    #[error("empty prompt")]
+    EmptyPrompt,
+}
+
+pub struct Router {
+    queue: VecDeque<Request>,
+    limit: usize,
+    max_prompt: usize,
+    next_id: RequestId,
+    metrics: Registry,
+}
+
+impl Router {
+    pub fn new(limit: usize, max_prompt: usize, metrics: Registry) -> Self {
+        Self { queue: VecDeque::new(), limit, max_prompt, next_id: 1, metrics }
+    }
+
+    /// Validate + enqueue; returns the assigned id.
+    pub fn submit(
+        &mut self,
+        prompt: Vec<u8>,
+        max_new_tokens: usize,
+    ) -> Result<RequestId, AdmitError> {
+        if prompt.is_empty() {
+            return Err(AdmitError::EmptyPrompt);
+        }
+        if prompt.len() > self.max_prompt {
+            self.metrics.counter("router.rejected_len").inc();
+            return Err(AdmitError::PromptTooLong(prompt.len(), self.max_prompt));
+        }
+        if self.queue.len() >= self.limit {
+            self.metrics.counter("router.rejected_full").inc();
+            return Err(AdmitError::QueueFull(self.queue.len()));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Request {
+            id,
+            prompt,
+            max_new_tokens,
+            submitted_at: Instant::now(),
+        });
+        self.metrics.counter("router.admitted").inc();
+        self.metrics.gauge("router.queue_depth").set(self.queue.len() as i64);
+        Ok(id)
+    }
+
+    /// Next request if the caller has capacity.
+    pub fn pop(&mut self) -> Option<Request> {
+        let r = self.queue.pop_front();
+        self.metrics.gauge("router.queue_depth").set(self.queue.len() as i64);
+        r
+    }
+
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(limit: usize) -> Router {
+        Router::new(limit, 4096, Registry::default())
+    }
+
+    #[test]
+    fn fifo_order_and_ids() {
+        let mut r = router(10);
+        let a = r.submit(vec![1], 4).unwrap();
+        let b = r.submit(vec![2], 4).unwrap();
+        assert!(b > a);
+        assert_eq!(r.pop().unwrap().id, a);
+        assert_eq!(r.pop().unwrap().id, b);
+        assert!(r.pop().is_none());
+    }
+
+    #[test]
+    fn backpressure() {
+        let mut r = router(2);
+        r.submit(vec![1], 1).unwrap();
+        r.submit(vec![2], 1).unwrap();
+        assert!(matches!(
+            r.submit(vec![3], 1),
+            Err(AdmitError::QueueFull(2))
+        ));
+        r.pop();
+        assert!(r.submit(vec![3], 1).is_ok());
+    }
+
+    #[test]
+    fn validation() {
+        let mut r = router(4);
+        assert!(matches!(r.submit(vec![], 1), Err(AdmitError::EmptyPrompt)));
+        assert!(matches!(
+            r.submit(vec![0; 5000], 1),
+            Err(AdmitError::PromptTooLong(5000, 4096))
+        ));
+    }
+}

@@ -1,0 +1,112 @@
+//! Step planning: continuous batching with prefill/decode interleaving.
+//!
+//! Policy (vLLM-flavored, prefill-prioritized): if a queued request exists
+//! and the running set is below `max_batch` (and the kv pool heuristic
+//! admits it), the next step is that request's prefill; otherwise decode
+//! the whole running set. Decode batches are padded up to the nearest AOT
+//! batch bucket by the engine.
+
+use super::request::RequestId;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StepPlan {
+    /// run one prompt's prefill (then it joins the running set)
+    Prefill(RequestId),
+    /// one decode step over these running sequences
+    Decode(Vec<RequestId>),
+    /// nothing to do
+    Idle,
+}
+
+pub struct Scheduler {
+    pub max_batch: usize,
+    running: Vec<RequestId>,
+}
+
+impl Scheduler {
+    pub fn new(max_batch: usize) -> Self {
+        Self { max_batch, running: vec![] }
+    }
+
+    pub fn running(&self) -> &[RequestId] {
+        &self.running
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.running.len() < self.max_batch
+    }
+
+    /// Called by the engine after a successful prefill.
+    pub fn add_running(&mut self, id: RequestId) {
+        assert!(self.has_capacity(), "over-admitted");
+        assert!(!self.running.contains(&id), "duplicate running id");
+        self.running.push(id);
+    }
+
+    /// Called when a sequence finishes (or is evicted).
+    pub fn remove(&mut self, id: RequestId) {
+        self.running.retain(|&r| r != id);
+    }
+
+    /// Plan the next step. `queued_head` = next queued request (if any),
+    /// `pool_can_admit` = kv-pool pressure heuristic from the engine.
+    pub fn plan(&self, queued_head: Option<RequestId>, pool_can_admit: bool) -> StepPlan {
+        if let Some(id) = queued_head {
+            if self.has_capacity() && pool_can_admit {
+                return StepPlan::Prefill(id);
+            }
+        }
+        if self.running.is_empty() {
+            StepPlan::Idle
+        } else {
+            StepPlan::Decode(self.running.clone())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_prioritized_under_capacity() {
+        let mut s = Scheduler::new(2);
+        assert_eq!(s.plan(Some(1), true), StepPlan::Prefill(1));
+        s.add_running(1);
+        assert_eq!(s.plan(Some(2), true), StepPlan::Prefill(2));
+        s.add_running(2);
+        // full: decode
+        assert_eq!(s.plan(Some(3), true), StepPlan::Decode(vec![1, 2]));
+    }
+
+    #[test]
+    fn pool_pressure_blocks_admission() {
+        let mut s = Scheduler::new(4);
+        s.add_running(1);
+        assert_eq!(s.plan(Some(2), false), StepPlan::Decode(vec![1]));
+    }
+
+    #[test]
+    fn idle_when_nothing() {
+        let s = Scheduler::new(2);
+        assert_eq!(s.plan(None, true), StepPlan::Idle);
+    }
+
+    #[test]
+    fn remove_frees_capacity() {
+        let mut s = Scheduler::new(1);
+        s.add_running(7);
+        assert!(!s.has_capacity());
+        s.remove(7);
+        assert!(s.has_capacity());
+        assert_eq!(s.plan(None, true), StepPlan::Idle);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_running_panics() {
+        let mut s = Scheduler::new(4);
+        s.add_running(1);
+        s.add_running(1);
+    }
+}

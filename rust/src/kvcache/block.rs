@@ -1,0 +1,69 @@
+//! A cache block: SoA storage for `block_tokens` compressed records.
+
+use super::layout::RecordLayout;
+use crate::quant::int2::QuantParams;
+
+/// Index into the pool's block table.
+pub type BlockId = u32;
+
+/// Fixed-capacity structure-of-arrays block. All fields are token-major;
+/// field sizes derive from [`RecordLayout`].
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub codes: Vec<u8>,
+    pub k_mag: Vec<u8>,
+    pub k_prm: Vec<QuantParams>,
+    pub v_val: Vec<u8>,
+    pub v_prm: Vec<QuantParams>,
+    /// tokens currently stored (append cursor)
+    pub used: usize,
+}
+
+impl Block {
+    pub fn new(layout: &RecordLayout, block_tokens: usize) -> Self {
+        Self {
+            codes: vec![0; block_tokens * layout.codes_bytes],
+            k_mag: vec![0; block_tokens * layout.payload_bytes],
+            k_prm: vec![
+                QuantParams { scale: 0, zero: 0 };
+                block_tokens * layout.param_groups()
+            ],
+            v_val: vec![0; block_tokens * layout.payload_bytes],
+            v_prm: vec![
+                QuantParams { scale: 0, zero: 0 };
+                block_tokens * layout.param_groups()
+            ],
+            used: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.used = 0;
+    }
+
+    /// Heap bytes held by this block (the Fig. 5 memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.codes.len()
+            + self.k_mag.len()
+            + self.v_val.len()
+            + (self.k_prm.len() + self.v_prm.len()) * std::mem::size_of::<QuantParams>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selfindex::SelfIndexConfig;
+
+    #[test]
+    fn sizes_follow_layout() {
+        let layout = RecordLayout::new(64, &SelfIndexConfig::default());
+        let b = Block::new(&layout, 16);
+        assert_eq!(b.codes.len(), 16 * 8);
+        assert_eq!(b.k_mag.len(), 16 * 16);
+        assert_eq!(b.k_prm.len(), 16 * 2);
+        assert_eq!(b.used, 0);
+        // QuantParams is 2×u16
+        assert_eq!(std::mem::size_of::<QuantParams>(), 4);
+    }
+}

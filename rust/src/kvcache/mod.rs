@@ -1,0 +1,34 @@
+//! Paged, compressed KV-cache substrate.
+//!
+//! The authoritative cache lives here, in the coordinator's memory, in the
+//! paper's self-indexing format — per token and head:
+//!
+//! ```text
+//! codes   G/2 bytes   packed 4-bit sign codes  (index AND sign plane)
+//! k_mag   D·B/8 bytes packed B-bit key magnitudes (|K'|/α, token-wise)
+//! k_prm   D/32 × 2×fp16   scale/zero-point
+//! v_val   D·B/8 bytes packed B-bit values
+//! v_prm   D/32 × 2×fp16
+//! ```
+//!
+//! * [`layout`] — the byte-level record layout + the paper's §Overhead
+//!   memory accounting (the 78%-savings derivation, re-derived in tests).
+//! * [`block`]/[`pool`] — vLLM-style paged allocation: fixed-token blocks,
+//!   refcounted, O(1) alloc/free; sequences hold block lists, enabling
+//!   preemption and (future) prefix sharing.
+//! * [`store`] — per-(layer, kv-head) [`store::HeadCache`]: streaming
+//!   prefill compression (stats → freeze → encode), decode-time append,
+//!   LUT-GEMV scoring over the packed blocks, gather + dequantize.
+//! * [`sink`] — SnapKV-style sink-token selection + full-precision store.
+
+pub mod block;
+pub mod layout;
+pub mod pool;
+pub mod sink;
+pub mod store;
+
+pub use block::BlockId;
+pub use layout::RecordLayout;
+pub use pool::BlockPool;
+pub use sink::{snapkv_select, SinkStore};
+pub use store::{GatheredQuant, HeadCache};

@@ -1,0 +1,207 @@
+//! Refcounted paged block allocator (vLLM-style).
+//!
+//! Blocks are preallocated up to `capacity_blocks`; `alloc` returns `None`
+//! under pressure, which the scheduler turns into admission backpressure
+//! or preemption. Refcounts make sequence forking / prefix sharing
+//! possible; `release` returns a block to the free list only at zero.
+
+use super::block::{Block, BlockId};
+use super::layout::RecordLayout;
+
+pub struct BlockPool {
+    pub layout: RecordLayout,
+    pub block_tokens: usize,
+    blocks: Vec<Block>,
+    refs: Vec<u32>,
+    free: Vec<BlockId>,
+}
+
+impl BlockPool {
+    pub fn new(layout: RecordLayout, block_tokens: usize, capacity_blocks: usize) -> Self {
+        assert!(block_tokens.is_multiple_of(4), "block_tokens % 4 == 0 (scorer unroll)");
+        let blocks = (0..capacity_blocks)
+            .map(|_| Block::new(&layout, block_tokens))
+            .collect();
+        Self {
+            layout,
+            block_tokens,
+            blocks,
+            refs: vec![0; capacity_blocks],
+            free: (0..capacity_blocks as BlockId).rev().collect(),
+        }
+    }
+
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refs[id as usize], 0);
+        self.refs[id as usize] = 1;
+        self.blocks[id as usize].reset();
+        Some(id)
+    }
+
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.refs[id as usize] > 0, "retain of free block {id}");
+        self.refs[id as usize] += 1;
+    }
+
+    pub fn release(&mut self, id: BlockId) {
+        let r = &mut self.refs[id as usize];
+        assert!(*r > 0, "double free of block {id}");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(id);
+        }
+    }
+
+    pub fn get(&self, id: BlockId) -> &Block {
+        debug_assert!(self.refs[id as usize] > 0, "use of free block {id}");
+        &self.blocks[id as usize]
+    }
+
+    pub fn get_mut(&mut self, id: BlockId) -> &mut Block {
+        debug_assert!(self.refs[id as usize] > 0, "use of free block {id}");
+        &mut self.blocks[id as usize]
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.capacity_blocks() - self.free_blocks()
+    }
+
+    /// Bytes held by allocated blocks (memory-footprint metric).
+    pub fn used_bytes(&self) -> usize {
+        self.refs
+            .iter()
+            .enumerate()
+            .filter(|(_, &r)| r > 0)
+            .map(|(i, _)| self.blocks[i].bytes())
+            .sum()
+    }
+
+    /// Can `tokens` more tokens be stored (worst case, fresh blocks)?
+    pub fn can_fit(&self, tokens: usize) -> bool {
+        self.free.len() * self.block_tokens >= tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selfindex::SelfIndexConfig;
+    use crate::substrate::prop::check;
+    use crate::substrate::rng::Rng;
+
+    fn pool(cap: usize) -> BlockPool {
+        let layout = RecordLayout::new(64, &SelfIndexConfig::default());
+        BlockPool::new(layout, 16, cap)
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut p = pool(4);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.used_blocks(), 2);
+        p.release(a);
+        assert_eq!(p.used_blocks(), 1);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "freed block is reused");
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut p = pool(2);
+        assert!(p.alloc().is_some());
+        assert!(p.alloc().is_some());
+        assert!(p.alloc().is_none());
+        assert!(!p.can_fit(1));
+    }
+
+    #[test]
+    fn refcounts_delay_free() {
+        let mut p = pool(1);
+        let a = p.alloc().unwrap();
+        p.retain(a);
+        p.release(a);
+        assert!(p.alloc().is_none(), "still referenced");
+        p.release(a);
+        assert!(p.alloc().is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = pool(1);
+        let a = p.alloc().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+
+    #[test]
+    fn prop_refcount_conservation() {
+        // random alloc/retain/release interleavings: free+used == capacity,
+        // and a block is in the free list iff its refcount is zero.
+        check(
+            31,
+            100,
+            |r| {
+                let ops: Vec<u8> = (0..r.below(200)).map(|_| r.below(3) as u8).collect();
+                (r.next_u64(), ops)
+            },
+            |(seed, ops)| {
+                let mut r = Rng::new(*seed);
+                let mut p = pool(8);
+                let mut live: Vec<BlockId> = vec![];
+                let mut counts: std::collections::HashMap<BlockId, u32> =
+                    Default::default();
+                for &op in ops {
+                    match op {
+                        0 => {
+                            if let Some(id) = p.alloc() {
+                                live.push(id);
+                                *counts.entry(id).or_insert(0) += 1;
+                            }
+                        }
+                        1 if !live.is_empty() => {
+                            let id = live[r.below(live.len() as u64) as usize];
+                            p.retain(id);
+                            live.push(id);
+                            *counts.get_mut(&id).unwrap() += 1;
+                        }
+                        2 if !live.is_empty() => {
+                            let i = r.below(live.len() as u64) as usize;
+                            let id = live.swap_remove(i);
+                            p.release(id);
+                            *counts.get_mut(&id).unwrap() -= 1;
+                        }
+                        _ => {}
+                    }
+                }
+                let used_expected =
+                    counts.values().filter(|&&c| c > 0).count();
+                if p.used_blocks() != used_expected {
+                    return Err(format!(
+                        "used {} != expected {}",
+                        p.used_blocks(),
+                        used_expected
+                    ));
+                }
+                if p.used_blocks() + p.free_blocks() != p.capacity_blocks() {
+                    return Err("blocks leaked".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

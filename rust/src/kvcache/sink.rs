@@ -1,0 +1,184 @@
+//! Sink tokens: SnapKV-style selection at prefill + full-precision store.
+//!
+//! The paper keeps 64 tokens full precision, selected with SnapKV (Li et
+//! al. 2024): score each prefix token by the attention mass it receives
+//! from the queries in an observation window at the end of the prompt
+//! (pooled over window positions and heads), and keep the top-n. These
+//! tokens always participate in sparse attention and are excluded from
+//! dynamic top-k.
+
+use crate::tensor::fp16::{f16_to_f32, f32_to_f16};
+
+/// SnapKV selection for one kv-head.
+///
+/// `q_window`: (W × R × dim) — the last-W prefill queries of the R query
+/// heads sharing this kv head (post-RoPE). `keys`: (L × dim) this head's
+/// (post-RoPE, uncentered) prefill keys. Returns up to `n_sinks` indices,
+/// ascending, always including token 0 (the attention-sink position).
+pub fn snapkv_select(
+    q_window: &[f32],
+    r_heads: usize,
+    keys: &[f32],
+    dim: usize,
+    n_sinks: usize,
+) -> Vec<u32> {
+    assert_eq!(keys.len() % dim, 0);
+    let l = keys.len() / dim;
+    let n = n_sinks.min(l);
+    if n == 0 {
+        return vec![];
+    }
+    assert_eq!(q_window.len() % (r_heads * dim), 0);
+    let w = q_window.len() / (r_heads * dim);
+    let scale = 1.0 / (dim as f32).sqrt();
+
+    // attention mass per token, pooled over window queries × heads
+    let mut mass = vec![0.0f32; l];
+    let mut logits = vec![0.0f32; l];
+    for wi in 0..w {
+        for h in 0..r_heads {
+            let q = &q_window[(wi * r_heads + h) * dim..][..dim];
+            let mut max = f32::NEG_INFINITY;
+            for (t, krow) in keys.chunks_exact(dim).enumerate() {
+                let s = crate::tensor::dot(q, krow) * scale;
+                logits[t] = s;
+                max = max.max(s);
+            }
+            let mut denom = 0.0f32;
+            for t in 0..l {
+                logits[t] = (logits[t] - max).exp();
+                denom += logits[t];
+            }
+            for t in 0..l {
+                mass[t] += logits[t] / denom;
+            }
+        }
+    }
+
+    let mut sel = crate::selfindex::topk::top_k_indices(&mass, n);
+    if !sel.contains(&0) {
+        // token 0 is the canonical attention sink; force-include it
+        sel.pop();
+        sel.push(0);
+    }
+    sel.sort_unstable();
+    sel
+}
+
+/// Full-precision (fp16-stored) K/V rows for the sink set of one head.
+#[derive(Clone, Debug, Default)]
+pub struct SinkStore {
+    pub dim: usize,
+    pub indices: Vec<u32>,
+    k: Vec<u16>, // n × dim fp16 (centered keys K')
+    v: Vec<u16>,
+}
+
+impl SinkStore {
+    /// Build from selected indices over the prefill K'(centered)/V rows.
+    pub fn build(
+        dim: usize,
+        indices: &[u32],
+        centered_keys: &[f32],
+        vals: &[f32],
+    ) -> Self {
+        let mut k = Vec::with_capacity(indices.len() * dim);
+        let mut v = Vec::with_capacity(indices.len() * dim);
+        for &i in indices {
+            let i = i as usize;
+            for j in 0..dim {
+                k.push(f32_to_f16(centered_keys[i * dim + j]));
+                v.push(f32_to_f16(vals[i * dim + j]));
+            }
+        }
+        Self { dim, indices: indices.to_vec(), k, v }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Decode row `i` into f32 buffers.
+    pub fn row(&self, i: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        for j in 0..self.dim {
+            k_out[j] = f16_to_f32(self.k[i * self.dim + j]);
+            v_out[j] = f16_to_f32(self.v[i * self.dim + j]);
+        }
+    }
+
+    /// All rows as f32 (PJRT literal staging).
+    pub fn rows_f32(&self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.len() * self.dim;
+        let mut k = Vec::with_capacity(n);
+        let mut v = Vec::with_capacity(n);
+        for &h in &self.k {
+            k.push(f16_to_f32(h));
+        }
+        for &h in &self.v {
+            v.push(f16_to_f32(h));
+        }
+        (k, v)
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 2 + self.indices.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn snapkv_finds_heavy_hitters() {
+        // construct keys where tokens {5, 20} match the window queries
+        let (dim, l, w, r_heads) = (32, 64, 4, 2);
+        let mut r = Rng::new(1);
+        let target: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        let mut keys: Vec<f32> = (0..l * dim).map(|_| r.normal_f32() * 0.3).collect();
+        for &t in &[5usize, 20] {
+            for j in 0..dim {
+                keys[t * dim + j] = target[j] * 3.0;
+            }
+        }
+        let mut qw = Vec::new();
+        for _ in 0..w * r_heads {
+            for j in 0..dim {
+                qw.push(target[j] + 0.1 * r.normal_f32());
+            }
+        }
+        let sel = snapkv_select(&qw, r_heads, &keys, dim, 4);
+        assert!(sel.contains(&5) && sel.contains(&20), "{sel:?}");
+        assert!(sel.contains(&0), "token 0 forced: {sel:?}");
+        assert!(sel.windows(2).all(|w| w[0] < w[1]), "sorted: {sel:?}");
+    }
+
+    #[test]
+    fn sink_store_roundtrip() {
+        let mut r = Rng::new(2);
+        let dim = 16;
+        let keys: Vec<f32> = (0..8 * dim).map(|_| r.normal_f32()).collect();
+        let vals: Vec<f32> = (0..8 * dim).map(|_| r.normal_f32()).collect();
+        let st = SinkStore::build(dim, &[1, 4, 7], &keys, &vals);
+        assert_eq!(st.len(), 3);
+        let mut k = vec![0.0; dim];
+        let mut v = vec![0.0; dim];
+        st.row(1, &mut k, &mut v);
+        for j in 0..dim {
+            assert!((k[j] - keys[4 * dim + j]).abs() < 2e-3);
+            assert!((v[j] - vals[4 * dim + j]).abs() < 2e-3);
+        }
+        assert_eq!(st.bytes(), 3 * dim * 2 * 2 + 3 * 4);
+    }
+
+    #[test]
+    fn sink_count_clamped_to_len() {
+        let sel = snapkv_select(&[1.0; 2 * 8], 1, &[0.5; 4 * 8], 8, 64);
+        assert!(sel.len() <= 4);
+    }
+}

@@ -1,0 +1,648 @@
+//! Per-(layer, kv-head) compressed cache: the paper's pipeline end-to-end.
+//!
+//! Prefill: accumulate channel stats → freeze (mu, alpha) → one-pass
+//! encode: sign codes + codebook + 2-bit magnitudes/values into pool
+//! blocks. Decode: append single tokens reusing the frozen parameters
+//! (paper: "the per-channel scaling factors α are also reused during the
+//! decoding stage"); score all cached tokens via LUT-GEMV over packed
+//! codes; gather + dequantize the top-k for attention.
+
+use super::block::BlockId;
+use super::pool::BlockPool;
+use crate::quant::int2::{QuantParams, TokenQuant};
+use crate::quant::pack;
+use crate::selfindex::codebook::{Codebook, CodebookBuilder};
+use crate::selfindex::codes::code_signs;
+use crate::selfindex::normalize::ChannelStats;
+use crate::selfindex::score::{score_tokens_bytelut, ByteLut};
+use crate::selfindex::SelfIndexConfig;
+
+/// One attention head's compressed cache.
+pub struct HeadCache {
+    pub dim: usize,
+    pub cfg: SelfIndexConfig,
+    stats: ChannelStats,
+    builder: CodebookBuilder,
+    codebook: Option<Codebook>,
+    blocks: Vec<BlockId>,
+    len: usize,
+    /// scratch for centering a token during append
+    scratch: Vec<f32>,
+}
+
+/// Raw quantized fields for a gathered token set, shaped for the PJRT
+/// `sparse_attn_b{B}` executable inputs (unpacked u8 payloads).
+#[derive(Clone, Debug, Default)]
+pub struct GatheredQuant {
+    pub codes_i32: Vec<i32>,  // S × G
+    pub k_q: Vec<u8>,         // S × D
+    pub k_qs: Vec<f32>,       // S × D/32
+    pub k_zp: Vec<f32>,       // S × D/32
+    pub v_q: Vec<u8>,         // S × D
+    pub v_qs: Vec<f32>,       // S × D/32
+    pub v_zp: Vec<f32>,       // S × D/32
+}
+
+impl HeadCache {
+    pub fn new(dim: usize, cfg: SelfIndexConfig) -> Self {
+        cfg.validate(dim).expect("invalid selfindex config");
+        Self {
+            dim,
+            stats: ChannelStats::new(dim),
+            builder: CodebookBuilder::new(dim / cfg.vq_group),
+            codebook: None,
+            blocks: vec![],
+            len: 0,
+            scratch: vec![0.0; dim],
+            cfg,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn codebook(&self) -> &Codebook {
+        self.codebook.as_ref().expect("prefill not ingested")
+    }
+
+    pub fn alpha(&self) -> &[f32] {
+        &self.stats.frozen().expect("prefill not ingested").alpha
+    }
+
+    pub fn mu(&self) -> &[f32] {
+        &self.stats.frozen().expect("prefill not ingested").mu
+    }
+
+    /// Ingest the whole prefill for this head: keys/vals are (tokens × dim)
+    /// row-major f32 (the PJRT prefill outputs). Returns tokens stored.
+    ///
+    /// One pass over the data for stats (cheap vector ops), then one
+    /// encode pass — matching the paper's prefill cost model (quantization
+    /// + codebook are ~5% of TT2T, measured in table3).
+    pub fn ingest_prefill(
+        &mut self,
+        pool: &mut BlockPool,
+        keys: &[f32],
+        vals: &[f32],
+    ) -> Result<usize, CacheFull> {
+        assert_eq!(keys.len(), vals.len());
+        assert_eq!(keys.len() % self.dim, 0);
+        assert!(self.codebook.is_none(), "prefill already ingested");
+        let tokens = keys.len() / self.dim;
+
+        self.stats.accumulate(keys);
+        self.stats.freeze(keys);
+        let mu = self.stats.frozen().unwrap().mu.clone();
+        let alpha = self.stats.frozen().unwrap().alpha.clone();
+
+        // centered copy (K')
+        let mut centered = keys.to_vec();
+        for row in centered.chunks_exact_mut(self.dim) {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v -= mu[j];
+            }
+        }
+        self.builder.accumulate(&centered);
+        self.codebook = Some(if self.cfg.magnitude_centroids {
+            self.builder.finalize()
+        } else {
+            Codebook::sign_only(self.dim / self.cfg.vq_group)
+        });
+
+        // quantize magnitudes (|K'|/alpha) and values token-wise
+        let mut khat = centered.clone();
+        for row in khat.chunks_exact_mut(self.dim) {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = v.abs() / alpha[j];
+            }
+        }
+        let kq = crate::quant::int2::quantize_tokens(
+            &khat, self.dim, self.cfg.quant_group, self.cfg.quant_bits);
+        let vq = crate::quant::int2::quantize_tokens(
+            vals, self.dim, self.cfg.quant_group, self.cfg.quant_bits);
+
+        for t in 0..tokens {
+            self.push_record(pool, &centered[t * self.dim..(t + 1) * self.dim],
+                             &kq, &vq, t)?;
+        }
+        Ok(tokens)
+    }
+
+    /// Append one decode-time token (k/v rows, dim each), reusing frozen
+    /// mu/alpha and the prefill codebook.
+    pub fn append(
+        &mut self,
+        pool: &mut BlockPool,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<(), CacheFull> {
+        assert_eq!(k_row.len(), self.dim);
+        let frozen = self.stats.frozen().expect("prefill first");
+        let (mu, alpha) = (frozen.mu.clone(), frozen.alpha.clone());
+        for j in 0..self.dim {
+            self.scratch[j] = k_row[j] - mu[j];
+        }
+        let centered = self.scratch.clone();
+        let mut khat = centered.clone();
+        for j in 0..self.dim {
+            khat[j] = khat[j].abs() / alpha[j];
+        }
+        let kq = crate::quant::int2::quantize_tokens(
+            &khat, self.dim, self.cfg.quant_group, self.cfg.quant_bits);
+        let vq = crate::quant::int2::quantize_tokens(
+            v_row, self.dim, self.cfg.quant_group, self.cfg.quant_bits);
+        self.push_record(pool, &centered, &kq, &vq, 0)
+    }
+
+    /// Write token `t` of the (already quantized) batch into the cache.
+    fn push_record(
+        &mut self,
+        pool: &mut BlockPool,
+        centered_key: &[f32],
+        kq: &TokenQuant,
+        vq: &TokenQuant,
+        t: usize,
+    ) -> Result<(), CacheFull> {
+        let bt = pool.block_tokens;
+        let layout = pool.layout;
+        if self.len % bt == 0 {
+            let id = pool.alloc().ok_or(CacheFull)?;
+            self.blocks.push(id);
+        }
+        let slot = self.len % bt;
+        let block_id = *self.blocks.last().unwrap();
+        let dim = self.dim;
+        let ng = layout.param_groups();
+
+        // encode codes from the centered key (with or without the sign
+        // plane doubling as quant signs — the storage is the same; the
+        // ablation switch changes reconstruction, not encoding)
+        let codes: Vec<u8> = centered_key
+            .chunks_exact(4)
+            .map(crate::selfindex::codes::sign_code)
+            .collect();
+        let packed_codes = pack::pack_codes(&codes);
+        let bits = self.cfg.quant_bits;
+        let packed_kmag = pack::pack_bits(&kq.values[t * dim..(t + 1) * dim], bits);
+        let packed_vval = pack::pack_bits(&vq.values[t * dim..(t + 1) * dim], bits);
+
+        let block = pool.get_mut(block_id);
+        let cb = layout.codes_bytes;
+        block.codes[slot * cb..(slot + 1) * cb].copy_from_slice(&packed_codes);
+        let pb = layout.payload_bytes;
+        block.k_mag[slot * pb..(slot + 1) * pb].copy_from_slice(&packed_kmag);
+        block.v_val[slot * pb..(slot + 1) * pb].copy_from_slice(&packed_vval);
+        block.k_prm[slot * ng..(slot + 1) * ng]
+            .copy_from_slice(&kq.params[t * ng..(t + 1) * ng]);
+        block.v_prm[slot * ng..(slot + 1) * ng]
+            .copy_from_slice(&vq.params[t * ng..(t + 1) * ng]);
+        block.used = block.used.max(slot + 1);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// LUT-GEMV scores of every cached token (appends to `out`, which is
+    /// cleared first; `out.len() == self.len` afterwards).
+    pub fn scores(&self, pool: &BlockPool, blut: &ByteLut, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.len);
+        let bt = pool.block_tokens;
+        let mut remaining = self.len;
+        let mut tmp = Vec::new();
+        for &id in &self.blocks {
+            let block = pool.get(id);
+            let n = remaining.min(bt);
+            score_tokens_bytelut(blut, &block.codes, n, &mut tmp);
+            out.extend_from_slice(&tmp);
+            remaining -= n;
+            if remaining == 0 {
+                break;
+            }
+        }
+    }
+
+    /// Dequantize token `idx`'s key (K') and value rows into `k_out`/`v_out`.
+    pub fn dequant_token(
+        &self,
+        pool: &BlockPool,
+        idx: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        assert!(idx < self.len);
+        let bt = pool.block_tokens;
+        let layout = pool.layout;
+        let block = pool.get(self.blocks[idx / bt]);
+        let slot = idx % bt;
+        let dim = self.dim;
+        let ng = layout.param_groups();
+        let group = self.cfg.quant_group;
+        let alpha = self.alpha();
+
+        let kp = &block.k_prm[slot * ng..(slot + 1) * ng];
+        let vp = &block.v_prm[slot * ng..(slot + 1) * ng];
+        let kmag = &block.k_mag[slot * layout.payload_bytes..];
+        let vval = &block.v_val[slot * layout.payload_bytes..];
+        let codes = &block.codes[slot * layout.codes_bytes..];
+
+        if self.cfg.quant_bits == 2 && self.cfg.sign_plane_quant {
+            // hot path (§Perf iteration 2): byte-level unpack — one payload
+            // byte = 4 channels, one code nibble = 4 signs; quant params
+            // stay in registers across their 32-channel group. No
+            // per-element division, array construction, or dynamic shifts.
+            let mut j = 0usize;
+            for pg in 0..ng {
+                let (kqs, kzp) = (kp[pg].scale_f32(), kp[pg].zero_f32());
+                let (vqs, vzp) = (vp[pg].scale_f32(), vp[pg].zero_f32());
+                for _ in 0..group / 4 {
+                    let nib = j / 4;
+                    let code = (codes[nib / 2] >> ((nib % 2) * 4)) & 0x0f;
+                    let kb = kmag[j / 4];
+                    let vb = vval[j / 4];
+                    // channel b of the group is bit (3-b) of the code (MSB-first)
+                    let mut bit = 0b1000u8;
+                    for b in 0..4 {
+                        let q = (kb >> (b * 2)) & 3;
+                        let mag = (kqs * q as f32 + kzp) * alpha[j + b];
+                        k_out[j + b] = if code & bit != 0 { mag } else { -mag };
+                        let qv = (vb >> (b * 2)) & 3;
+                        v_out[j + b] = vqs * qv as f32 + vzp;
+                        bit >>= 1;
+                    }
+                    j += 4;
+                }
+            }
+            return;
+        }
+
+        // generic path (other bit widths / ablations)
+        for j in 0..dim {
+            let p: QuantParams = kp[j / group];
+            let mag = p.scale_f32()
+                * pack::get_bits(kmag, j, self.cfg.quant_bits) as f32
+                + p.zero_f32();
+            let mag = mag * alpha[j];
+            let sign = if self.cfg.sign_plane_quant {
+                let code = pack::get_code(codes, j / 4);
+                code_signs(code)[j % 4]
+            } else {
+                // ablation "w/o sign in quant": the stored magnitudes were
+                // built from |K'| anyway, so reconstruct signless — this
+                // degrades keys exactly as the paper's ablation intends.
+                1.0
+            };
+            k_out[j] = sign * mag;
+            let pv: QuantParams = vp[j / group];
+            v_out[j] = pv.scale_f32()
+                * pack::get_bits(vval, j, self.cfg.quant_bits) as f32
+                + pv.zero_f32();
+        }
+    }
+
+    /// Fused dequant + dot (§Perf iteration 3): returns q·K'[idx] while
+    /// dequantizing only V into `v_out` — the key row never materializes.
+    /// `q_alpha` must be the query pre-multiplied by this head's alpha
+    /// (`q[j] * alpha[j]`), hoisting the per-channel normalizer out of the
+    /// token loop. 2-bit sign-plane fast path only; callers fall back to
+    /// `dequant_token` otherwise.
+    pub fn dequant_dot(
+        &self,
+        pool: &BlockPool,
+        idx: usize,
+        q_alpha: &[f32],
+        q_raw: &[f32],
+        v_out: &mut [f32],
+    ) -> f32 {
+        debug_assert!(self.cfg.quant_bits == 2 && self.cfg.sign_plane_quant);
+        debug_assert!(idx < self.len);
+        let bt = pool.block_tokens;
+        let layout = pool.layout;
+        let block = pool.get(self.blocks[idx / bt]);
+        let slot = idx % bt;
+        let ng = layout.param_groups();
+        let group = self.cfg.quant_group;
+
+        let kp = &block.k_prm[slot * ng..(slot + 1) * ng];
+        let vp = &block.v_prm[slot * ng..(slot + 1) * ng];
+        let kmag = &block.k_mag[slot * layout.payload_bytes..];
+        let vval = &block.v_val[slot * layout.payload_bytes..];
+        let codes = &block.codes[slot * layout.codes_bytes..];
+
+        // 4 independent accumulators (one per nibble lane) break the fp
+        // dependency chain; signs come from a 16×4 table (±1.0, branchless).
+        let mut acc = [0.0f32; 4];
+        let mut j = 0usize;
+        for pg in 0..ng {
+            let (kqs, kzp) = (kp[pg].scale_f32(), kp[pg].zero_f32());
+            let (vqs, vzp) = (vp[pg].scale_f32(), vp[pg].zero_f32());
+            for _ in 0..group / 4 {
+                let nib = j / 4;
+                let code = (codes[nib / 2] >> ((nib % 2) * 4)) & 0x0f;
+                let signs = &SIGN_TABLE[code as usize];
+                let kb = kmag[j / 4];
+                let vb = vval[j / 4];
+                for b in 0..4 {
+                    let qk = (kb >> (b * 2)) & 3;
+                    acc[b] += q_alpha[j + b] * (kqs * qk as f32 + kzp) * signs[b];
+                    let qv = (vb >> (b * 2)) & 3;
+                    v_out[j + b] = vqs * qv as f32 + vzp;
+                }
+                j += 4;
+            }
+        }
+        let _ = q_raw;
+        (acc[0] + acc[1]) + (acc[2] + acc[3])
+    }
+
+    /// Score-only variant of [`Self::dequant_dot`]: q·K'[idx] without
+    /// touching V (pass 1 of the two-pass fused attention, §Perf iter 4).
+    pub fn dequant_dot_k(&self, pool: &BlockPool, idx: usize, q_alpha: &[f32]) -> f32 {
+        debug_assert!(self.cfg.quant_bits == 2 && self.cfg.sign_plane_quant);
+        let bt = pool.block_tokens;
+        let layout = pool.layout;
+        let block = pool.get(self.blocks[idx / bt]);
+        let slot = idx % bt;
+        let ng = layout.param_groups();
+        let group = self.cfg.quant_group;
+        let kp = &block.k_prm[slot * ng..(slot + 1) * ng];
+        let kmag = &block.k_mag[slot * layout.payload_bytes..];
+        let codes = &block.codes[slot * layout.codes_bytes..];
+
+        let mut acc = [0.0f32; 4];
+        let mut j = 0usize;
+        for pg in 0..ng {
+            let (kqs, kzp) = (kp[pg].scale_f32(), kp[pg].zero_f32());
+            for _ in 0..group / 4 {
+                let nib = j / 4;
+                let code = (codes[nib / 2] >> ((nib % 2) * 4)) & 0x0f;
+                let signs = &SIGN_TABLE[code as usize];
+                let kb = kmag[j / 4];
+                for b in 0..4 {
+                    let qk = (kb >> (b * 2)) & 3;
+                    acc[b] += q_alpha[j + b] * (kqs * qk as f32 + kzp) * signs[b];
+                }
+                j += 4;
+            }
+        }
+        (acc[0] + acc[1]) + (acc[2] + acc[3])
+    }
+
+    /// V-only dequantization into `v_out` (pass 2 of the fused attention).
+    pub fn dequant_v(&self, pool: &BlockPool, idx: usize, v_out: &mut [f32]) {
+        let bt = pool.block_tokens;
+        let layout = pool.layout;
+        let block = pool.get(self.blocks[idx / bt]);
+        let slot = idx % bt;
+        let ng = layout.param_groups();
+        let group = self.cfg.quant_group;
+        let vp = &block.v_prm[slot * ng..(slot + 1) * ng];
+        let vval = &block.v_val[slot * layout.payload_bytes..];
+        if self.cfg.quant_bits == 2 {
+            let mut j = 0usize;
+            for pg in 0..ng {
+                let (vqs, vzp) = (vp[pg].scale_f32(), vp[pg].zero_f32());
+                for _ in 0..group / 4 {
+                    let vb = vval[j / 4];
+                    for b in 0..4 {
+                        v_out[j + b] = vqs * ((vb >> (b * 2)) & 3) as f32 + vzp;
+                    }
+                    j += 4;
+                }
+            }
+        } else {
+            for j in 0..self.dim {
+                let p = vp[j / group];
+                v_out[j] = p.scale_f32()
+                    * pack::get_bits(vval, j, self.cfg.quant_bits) as f32
+                    + p.zero_f32();
+            }
+        }
+    }
+
+    /// Gather raw quantized fields of `indices` for the PJRT sparse-attn
+    /// executable (unpacked u8 payloads, i32 codes).
+    pub fn gather_quant(
+        &self,
+        pool: &BlockPool,
+        indices: &[u32],
+        out: &mut GatheredQuant,
+    ) {
+        let layout = pool.layout;
+        let dim = self.dim;
+        let g = layout.groups();
+        let ng = layout.param_groups();
+        let s = indices.len();
+        out.codes_i32.clear();
+        out.codes_i32.reserve(s * g);
+        out.k_q.clear();
+        out.k_q.reserve(s * dim);
+        out.k_qs.clear();
+        out.k_zp.clear();
+        out.v_q.clear();
+        out.v_qs.clear();
+        out.v_zp.clear();
+
+        let bt = pool.block_tokens;
+        for &idx in indices {
+            let idx = idx as usize;
+            assert!(idx < self.len);
+            let block = pool.get(self.blocks[idx / bt]);
+            let slot = idx % bt;
+            let codes = &block.codes[slot * layout.codes_bytes..];
+            for gi in 0..g {
+                out.codes_i32.push(pack::get_code(codes, gi) as i32);
+            }
+            let kmag = &block.k_mag[slot * layout.payload_bytes..];
+            let vval = &block.v_val[slot * layout.payload_bytes..];
+            for j in 0..dim {
+                out.k_q.push(pack::get_bits(kmag, j, self.cfg.quant_bits));
+                out.v_q.push(pack::get_bits(vval, j, self.cfg.quant_bits));
+            }
+            for pi in 0..ng {
+                let kp = block.k_prm[slot * ng + pi];
+                out.k_qs.push(kp.scale_f32());
+                out.k_zp.push(kp.zero_f32());
+                let vp = block.v_prm[slot * ng + pi];
+                out.v_qs.push(vp.scale_f32());
+                out.v_zp.push(vp.zero_f32());
+            }
+        }
+    }
+
+    /// Release all blocks back to the pool (sequence eviction).
+    pub fn free(&mut self, pool: &mut BlockPool) {
+        for id in self.blocks.drain(..) {
+            pool.release(id);
+        }
+        self.len = 0;
+    }
+
+    /// Compressed bytes attributable to this head (token payload only;
+    /// codebook/stats are O(1) fixed overhead reported separately).
+    pub fn payload_bytes(&self, pool: &BlockPool) -> usize {
+        self.blocks.len()
+            * (pool.block_tokens
+                * (pool.layout.codes_bytes
+                    + 2 * pool.layout.payload_bytes
+                    + 2 * pool.layout.params_bytes))
+    }
+
+    pub fn fixed_overhead_bytes(&self) -> usize {
+        self.codebook.as_ref().map(|c| c.bytes()).unwrap_or(0) + 2 * self.dim * 4
+    }
+}
+
+/// Pool exhausted — scheduler must backpressure or preempt.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error("kv cache pool exhausted")]
+pub struct CacheFull;
+
+/// ±1 signs of each 4-bit code, MSB-first (code_signs as a flat table).
+static SIGN_TABLE: [[f32; 4]; 16] = {
+    let mut t = [[0.0f32; 4]; 16];
+    let mut c = 0;
+    while c < 16 {
+        let mut b = 0;
+        while b < 4 {
+            t[c][b] = if (c >> (3 - b)) & 1 == 1 { 1.0 } else { -1.0 };
+            b += 1;
+        }
+        c += 1;
+    }
+    t
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::layout::RecordLayout;
+    use crate::selfindex::lut::Lut;
+    use crate::substrate::rng::Rng;
+
+    fn mk_pool(cap: usize) -> BlockPool {
+        BlockPool::new(
+            RecordLayout::new(64, &SelfIndexConfig::default()),
+            16,
+            cap,
+        )
+    }
+
+    fn rand_rows(r: &mut Rng, tokens: usize, dim: usize) -> Vec<f32> {
+        (0..tokens * dim).map(|_| r.normal_f32()).collect()
+    }
+
+    #[test]
+    fn prefill_then_scores_and_dequant() {
+        let mut r = Rng::new(1);
+        let mut pool = mk_pool(64);
+        let mut hc = HeadCache::new(64, SelfIndexConfig::default());
+        let keys = rand_rows(&mut r, 100, 64);
+        let vals = rand_rows(&mut r, 100, 64);
+        assert_eq!(hc.ingest_prefill(&mut pool, &keys, &vals).unwrap(), 100);
+        assert_eq!(hc.len(), 100);
+
+        let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
+        let lut = Lut::build(&q, hc.codebook());
+        let blut = ByteLut::from_lut(&lut);
+        let mut scores = Vec::new();
+        hc.scores(&pool, &blut, &mut scores);
+        assert_eq!(scores.len(), 100);
+
+        // dequantized keys reconstruct within the quant error bound
+        let mut k_out = vec![0.0; 64];
+        let mut v_out = vec![0.0; 64];
+        let mu = hc.mu().to_vec();
+        for t in [0usize, 31, 99] {
+            hc.dequant_token(&pool, t, &mut k_out, &mut v_out);
+            for j in 0..64 {
+                let truth = keys[t * 64 + j] - mu[j];
+                assert!(
+                    (k_out[j] - truth).abs() < 0.8 * hc.alpha()[j].max(0.1),
+                    "t{t} j{j}: {} vs {truth}",
+                    k_out[j]
+                );
+                // sign plane is exact
+                if truth != 0.0 {
+                    assert_eq!(k_out[j] >= 0.0, truth >= 0.0, "t{t} j{j}");
+                }
+                assert!((v_out[j] - vals[t * 64 + j]).abs() < 1.5);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_append_extends_scores() {
+        let mut r = Rng::new(2);
+        let mut pool = mk_pool(64);
+        let mut hc = HeadCache::new(64, SelfIndexConfig::default());
+        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 40, 64),
+                          &rand_rows(&mut r, 40, 64)).unwrap();
+        for _ in 0..10 {
+            let k: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
+            let v: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
+            hc.append(&mut pool, &k, &v).unwrap();
+        }
+        assert_eq!(hc.len(), 50);
+        let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
+        let blut = ByteLut::from_lut(&Lut::build(&q, hc.codebook()));
+        let mut scores = Vec::new();
+        hc.scores(&pool, &blut, &mut scores);
+        assert_eq!(scores.len(), 50);
+    }
+
+    #[test]
+    fn gather_quant_shapes() {
+        let mut r = Rng::new(3);
+        let mut pool = mk_pool(64);
+        let mut hc = HeadCache::new(64, SelfIndexConfig::default());
+        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 50, 64),
+                          &rand_rows(&mut r, 50, 64)).unwrap();
+        let mut gq = GatheredQuant::default();
+        hc.gather_quant(&pool, &[0, 17, 49, 3], &mut gq);
+        assert_eq!(gq.codes_i32.len(), 4 * 16);
+        assert_eq!(gq.k_q.len(), 4 * 64);
+        assert_eq!(gq.k_qs.len(), 4 * 2);
+        assert!(gq.codes_i32.iter().all(|&c| (0..16).contains(&c)));
+        assert!(gq.k_q.iter().all(|&v| v < 4));
+    }
+
+    #[test]
+    fn pool_exhaustion_reported() {
+        let mut r = Rng::new(4);
+        let mut pool = mk_pool(2); // 32 tokens max
+        let mut hc = HeadCache::new(64, SelfIndexConfig::default());
+        let res = hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 100, 64),
+                                    &rand_rows(&mut r, 100, 64));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn free_returns_blocks() {
+        let mut r = Rng::new(5);
+        let mut pool = mk_pool(8);
+        let mut hc = HeadCache::new(64, SelfIndexConfig::default());
+        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 64, 64),
+                          &rand_rows(&mut r, 64, 64)).unwrap();
+        assert_eq!(pool.used_blocks(), 4);
+        hc.free(&mut pool);
+        assert_eq!(pool.used_blocks(), 0);
+        assert_eq!(hc.len(), 0);
+    }
+
+    #[test]
+    fn memory_accounting_matches_layout() {
+        let mut r = Rng::new(6);
+        let mut pool = mk_pool(16);
+        let mut hc = HeadCache::new(64, SelfIndexConfig::default());
+        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 64, 64),
+                          &rand_rows(&mut r, 64, 64)).unwrap();
+        let expect = 4 * 16 * RecordLayout::new(64, &hc.cfg).bytes_per_token();
+        assert_eq!(hc.payload_bytes(&pool), expect);
+        assert!(hc.fixed_overhead_bytes() > 0);
+    }
+}

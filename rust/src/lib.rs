@@ -1,0 +1,38 @@
+//! # Self-Indexing KVCache
+//!
+//! A serving-oriented reproduction of *"Self-Indexing KVCache: Predicting
+//! Sparse Attention from Compressed Keys"* (AAAI 2026): the compressed key
+//! representation itself is the retrieval index — 4-bit sign codes per
+//! 4-channel group double as (a) the vector-quantization cluster id used
+//! for compressed-domain top-k retrieval (LUT-GEMV) and (b) the exact sign
+//! plane of the 2-bit quantized key magnitudes.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — serving coordinator: paged compressed KV cache,
+//!   codebooks, LUT-GEMV scoring + top-k (the decode hot path), continuous
+//!   batching, scheduling, metrics. Python never runs at serve time.
+//! * **L2/L1 (python/compile)** — the served GQA transformer + Pallas
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt` and executed through
+//!   [`runtime`] (PJRT CPU via the `xla` crate).
+//!
+//! Entry points: [`coordinator::engine::Engine`] for serving,
+//! [`selfindex`] for the paper's algorithm as a standalone library,
+//! [`baselines`] for SnapKV / Quest / DoubleSparse / KIVI comparators.
+
+pub mod attention;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod selfindex;
+pub mod substrate;
+pub mod tensor;
+pub mod workloads;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

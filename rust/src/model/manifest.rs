@@ -1,0 +1,225 @@
+//! The artifact manifest (written by aot.py): model config, selfindex
+//! constants, parameter order, and per-artifact input/output specs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::ModelConfig;
+use crate::substrate::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: ModelConfig,
+    pub sink_tokens: usize,
+    pub sparse_k: usize,
+    pub param_order: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Self, String> {
+        let model = ModelConfig::from_json(
+            j.get("model").ok_or("manifest: no model")?,
+        )?;
+        let si = j.get("selfindex").ok_or("manifest: no selfindex")?;
+        let sink_tokens = si
+            .get("sink_tokens")
+            .and_then(Json::as_usize)
+            .ok_or("selfindex.sink_tokens")?;
+        let sparse_k = si
+            .get("sparse_k")
+            .and_then(Json::as_usize)
+            .ok_or("selfindex.sparse_k")?;
+
+        let param_order = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or("manifest: params")?
+            .iter()
+            .map(|p| {
+                p.get("name")
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| "param name".to_string())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or("manifest: artifacts")?
+        {
+            let parse_io = |key: &str| -> Result<Vec<IoSpec>, String> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("{name}.{key}"))?
+                    .iter()
+                    .map(|io| {
+                        Ok(IoSpec {
+                            name: io
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .ok_or("io name")?
+                                .to_string(),
+                            dtype: io
+                                .get("dtype")
+                                .and_then(Json::as_str)
+                                .ok_or("io dtype")?
+                                .to_string(),
+                            shape: io
+                                .get("shape")
+                                .and_then(Json::usize_list)
+                                .ok_or("io shape")?,
+                        })
+                    })
+                    .collect()
+            };
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{name}.file"))?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: parse_io("inputs")?,
+                    outputs: parse_io("outputs")?,
+                },
+            );
+        }
+        Ok(Self {
+            model,
+            sink_tokens,
+            sparse_k,
+            param_order,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec, String> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Largest prefill bucket ≥ len, e.g. `prefill_l1024` for len 700.
+    pub fn prefill_bucket(&self, len: usize) -> Option<&ArtifactSpec> {
+        let mut best: Option<(usize, &ArtifactSpec)> = None;
+        for (name, spec) in &self.artifacts {
+            if let Some(l) = name.strip_prefix("prefill_l").and_then(|s| s.parse().ok())
+            {
+                let l: usize = l;
+                if l >= len && best.map(|(b, _)| l < b).unwrap_or(true) {
+                    best = Some((l, spec));
+                }
+            }
+        }
+        best.map(|(_, s)| s)
+    }
+
+    /// Smallest decode batch bucket ≥ b for a given prefix
+    /// (e.g. "decode_qkv_b").
+    pub fn batch_bucket(&self, prefix: &str, b: usize) -> Option<&ArtifactSpec> {
+        let mut best: Option<(usize, &ArtifactSpec)> = None;
+        for (name, spec) in &self.artifacts {
+            if let Some(n) = name.strip_prefix(prefix).and_then(|s| s.parse().ok()) {
+                let n: usize = n;
+                if n >= b && best.map(|(x, _)| n < x).unwrap_or(true) {
+                    best = Some((n, spec));
+                }
+            }
+        }
+        best.map(|(_, s)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Json {
+        Json::parse(
+            r#"{
+          "model": {"vocab_size":256,"d_model":256,"n_layers":4,"n_heads":4,
+                    "n_kv_heads":2,"head_dim":64,"d_ff":512,"max_seq":8192,
+                    "rope_theta":10000.0},
+          "selfindex": {"vq_group":4,"vq_clusters":16,"quant_bits":2,
+                        "quant_group":32,"sink_tokens":64,"sparse_k":96},
+          "params": [{"name":"emb","shape":[256,256]},
+                     {"name":"l0.ln1","shape":[256]}],
+          "artifacts": {
+            "prefill_l256": {"file":"prefill_l256.hlo.txt",
+              "inputs":[{"name":"tokens","dtype":"int32","shape":[1,256]}],
+              "outputs":[{"name":"k_cache","dtype":"float32","shape":[4,256,2,64]}]},
+            "prefill_l1024": {"file":"prefill_l1024.hlo.txt",
+              "inputs":[],"outputs":[]},
+            "decode_qkv_b1": {"file":"decode_qkv_b1.hlo.txt",
+              "inputs":[],"outputs":[]},
+            "decode_qkv_b4": {"file":"decode_qkv_b4.hlo.txt",
+              "inputs":[],"outputs":[]}
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let m = Manifest::from_json(&fixture(), Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.model.n_layers, 4);
+        assert_eq!(m.sparse_k, 96);
+        assert_eq!(m.param_order[0], "emb");
+        let a = m.artifact("prefill_l256").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![1, 256]);
+        assert_eq!(a.outputs[0].elems(), 4 * 256 * 2 * 64);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::from_json(&fixture(), Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.prefill_bucket(100).unwrap().name, "prefill_l256");
+        assert_eq!(m.prefill_bucket(256).unwrap().name, "prefill_l256");
+        assert_eq!(m.prefill_bucket(257).unwrap().name, "prefill_l1024");
+        assert!(m.prefill_bucket(5000).is_none());
+        assert_eq!(
+            m.batch_bucket("decode_qkv_b", 2).unwrap().name,
+            "decode_qkv_b4"
+        );
+        assert_eq!(
+            m.batch_bucket("decode_qkv_b", 1).unwrap().name,
+            "decode_qkv_b1"
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! Model metadata + weights I/O: the manifest written by
+//! `python/compile/aot.py` and the `weights.bin` tensor container
+//! (contract: python/compile/train.py::save_weights).
+
+pub mod manifest;
+pub mod weights;
+
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+#[allow(unused_imports)]
+pub use weights::WeightsError;
+pub use weights::WeightStore;

@@ -1,0 +1,167 @@
+//! weights.bin loader.
+//!
+//! Format (little-endian; writer: python/compile/train.py::save_weights):
+//! ```text
+//! magic  u32 = 0x53494B56 ("SIKV")
+//! version u32 = 1
+//! count  u32
+//! repeat count times:
+//!   name_len u32 | name bytes | dtype u8 (0 = f32) | ndim u8 |
+//!   dims u32 × ndim | data f32-LE × prod(dims)
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+pub const MAGIC: u32 = 0x53494B56;
+
+#[derive(Debug, thiserror::Error)]
+pub enum WeightsError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic/version: {0:#x} v{1}")]
+    BadHeader(u32, u32),
+    #[error("malformed tensor entry: {0}")]
+    Malformed(String),
+}
+
+/// Named f32 tensors in insertion order.
+pub struct WeightStore {
+    tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    order: Vec<String>,
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<Self, WeightsError> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut hdr = [0u8; 12];
+        f.read_exact(&mut hdr)?;
+        let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        let count = u32::from_le_bytes(hdr[8..12].try_into().unwrap());
+        if magic != MAGIC || version != 1 {
+            return Err(WeightsError::BadHeader(magic, version));
+        }
+        let mut tensors = BTreeMap::new();
+        let mut order = Vec::new();
+        for _ in 0..count {
+            let mut len4 = [0u8; 4];
+            f.read_exact(&mut len4)?;
+            let nlen = u32::from_le_bytes(len4) as usize;
+            if nlen > 4096 {
+                return Err(WeightsError::Malformed(format!("name len {nlen}")));
+            }
+            let mut name = vec![0u8; nlen];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .map_err(|e| WeightsError::Malformed(e.to_string()))?;
+            let mut meta = [0u8; 2];
+            f.read_exact(&mut meta)?;
+            let (dtype, ndim) = (meta[0], meta[1] as usize);
+            if dtype != 0 {
+                return Err(WeightsError::Malformed(format!(
+                    "{name}: unsupported dtype {dtype}"
+                )));
+            }
+            let mut dims = vec![0usize; ndim];
+            for d in dims.iter_mut() {
+                let mut b = [0u8; 4];
+                f.read_exact(&mut b)?;
+                *d = u32::from_le_bytes(b) as usize;
+            }
+            let n: usize = dims.iter().product();
+            if n > (1 << 28) {
+                return Err(WeightsError::Malformed(format!("{name}: {n} elems")));
+            }
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            order.push(name.clone());
+            tensors.insert(name, (dims, data));
+        }
+        Ok(Self { tensors, order })
+    }
+
+    pub fn get(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.tensors
+            .get(name)
+            .map(|(s, d)| (s.as_slice(), d.as_slice()))
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|(_, d)| d.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_fixture(path: &Path, tensors: &[(&str, Vec<usize>, Vec<f32>)]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&MAGIC.to_le_bytes()).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&(tensors.len() as u32).to_le_bytes()).unwrap();
+        for (name, dims, data) in tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+            f.write_all(name.as_bytes()).unwrap();
+            f.write_all(&[0u8, dims.len() as u8]).unwrap();
+            for &d in dims {
+                f.write_all(&(d as u32).to_le_bytes()).unwrap();
+            }
+            for &x in data {
+                f.write_all(&x.to_le_bytes()).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sikv_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_fixture(
+            &p,
+            &[
+                ("emb", vec![4, 2], (0..8).map(|x| x as f32).collect()),
+                ("l0.wq", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            ],
+        );
+        let w = WeightStore::load(&p).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.names(), &["emb".to_string(), "l0.wq".to_string()]);
+        let (shape, data) = w.get("emb").unwrap();
+        assert_eq!(shape, &[4, 2]);
+        assert_eq!(data[7], 7.0);
+        assert_eq!(w.total_params(), 12);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("sikv_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [0u8; 32]).unwrap();
+        assert!(matches!(
+            WeightStore::load(&p),
+            Err(WeightsError::BadHeader(..))
+        ));
+    }
+}

@@ -1,0 +1,233 @@
+//! Token-wise asymmetric min/max quantization (paper Eq. 9-11).
+//!
+//! Parameters are stored per (token × `group` channels) in fp16 — the
+//! layout that makes single-token random access cheap (one contiguous
+//! record), unlike channel-wise schemes (KIVI) that must touch every
+//! channel's parameter row to reconstruct one token.
+
+use crate::tensor::fp16::{f16_to_f32, f32_to_f16};
+
+/// fp16-stored scale/zero-point for one quant group.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: u16, // f16 bits
+    pub zero: u16,  // f16 bits
+}
+
+impl QuantParams {
+    pub fn scale_f32(&self) -> f32 {
+        f16_to_f32(self.scale)
+    }
+
+    pub fn zero_f32(&self) -> f32 {
+        f16_to_f32(self.zero)
+    }
+}
+
+/// Quantized payload for a block of tokens (values unpacked u8 here;
+/// the cache packs them via `pack::pack_u2`).
+#[derive(Clone, Debug)]
+pub struct TokenQuant {
+    pub values: Vec<u8>,          // (tokens × dim), row-major
+    pub params: Vec<QuantParams>, // (tokens × dim/group)
+    pub dim: usize,
+    pub group: usize,
+    pub bits: u32,
+}
+
+/// Quantize rows of `x` ((tokens × dim) row-major) with `bits`-bit
+/// asymmetric quantization per (token, group-of-`group`-channels).
+///
+/// qs = (max-min)/(2^B-1) (clamped to >0), zp = min; both rounded to fp16
+/// *before* quantizing so the stored params reproduce the encoder exactly.
+pub fn quantize_tokens(x: &[f32], dim: usize, group: usize, bits: u32) -> TokenQuant {
+    assert!(dim % group == 0, "dim {dim} % group {group} != 0");
+    assert!(x.len() % dim == 0);
+    let tokens = x.len() / dim;
+    let ng = dim / group;
+    let qmax = (1u32 << bits) - 1;
+    let mut values = vec![0u8; x.len()];
+    let mut params = Vec::with_capacity(tokens * ng);
+
+    for t in 0..tokens {
+        let row = &x[t * dim..(t + 1) * dim];
+        for g in 0..ng {
+            let seg = &row[g * group..(g + 1) * group];
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &v in seg {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let mut qs = (hi - lo) / qmax as f32;
+            if !(qs > 0.0) {
+                qs = 1.0; // constant group guard (matches ref.py)
+            }
+            // round params through fp16 so encode/decode agree bit-exactly
+            let qs16 = f32_to_f16(qs);
+            let zp16 = f32_to_f16(lo);
+            let qs = f16_to_f32(qs16);
+            let zp = f16_to_f32(zp16);
+            let qs_safe = if qs > 0.0 { qs } else { 1.0 };
+            for (j, &v) in seg.iter().enumerate() {
+                let q = ((v - zp) / qs_safe).round().clamp(0.0, qmax as f32);
+                values[t * dim + g * group + j] = q as u8;
+            }
+            params.push(QuantParams { scale: qs16, zero: zp16 });
+        }
+    }
+    TokenQuant { values, params, dim, group, bits }
+}
+
+/// Dequantize one token's group segment into `out`.
+#[inline]
+pub fn dequantize_group(vals: &[u8], p: QuantParams, out: &mut [f32]) {
+    let qs = p.scale_f32();
+    let zp = p.zero_f32();
+    for (o, &v) in out.iter_mut().zip(vals) {
+        *o = qs * v as f32 + zp;
+    }
+}
+
+impl TokenQuant {
+    /// Dequantize everything back to f32 (tests / baselines).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let ng = self.dim / self.group;
+        let tokens = self.values.len() / self.dim;
+        let mut out = vec![0.0f32; self.values.len()];
+        for t in 0..tokens {
+            for g in 0..ng {
+                let p = self.params[t * ng + g];
+                let base = t * self.dim + g * self.group;
+                dequantize_group(
+                    &self.values[base..base + self.group],
+                    p,
+                    &mut out[base..base + self.group],
+                );
+            }
+        }
+        out
+    }
+
+    /// Worst-case absolute reconstruction error per group (qs/2 + fp16 slop).
+    pub fn error_bound(&self, token: usize, group_idx: usize) -> f32 {
+        let ng = self.dim / self.group;
+        let p = self.params[token * ng + group_idx];
+        0.5 * p.scale_f32() + 1e-3 * p.zero_f32().abs().max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop::check;
+    use crate::substrate::rng::Rng;
+
+    fn rand_rows(seed: u64, tokens: usize, dim: usize, scale: f32) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..tokens * dim).map(|_| r.normal_f32() * scale).collect()
+    }
+
+    #[test]
+    fn error_within_bound() {
+        let dim = 64;
+        let x = rand_rows(1, 32, dim, 3.0);
+        let q = quantize_tokens(&x, dim, 32, 2);
+        let d = q.dequantize();
+        let ng = dim / 32;
+        for t in 0..32 {
+            for g in 0..ng {
+                let bound = q.error_bound(t, g);
+                for j in 0..32 {
+                    let i = t * dim + g * 32 + j;
+                    assert!(
+                        (d[i] - x[i]).abs() <= bound + 1e-4,
+                        "t{t} g{g} j{j}: {} vs {} bound {bound}",
+                        d[i],
+                        x[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn values_in_range() {
+        for bits in [2u32, 4] {
+            let x = rand_rows(2, 16, 64, 5.0);
+            let q = quantize_tokens(&x, 64, 32, bits);
+            let m = (1u32 << bits) - 1;
+            assert!(q.values.iter().all(|&v| (v as u32) <= m));
+        }
+    }
+
+    #[test]
+    fn constant_group_exact() {
+        let x = vec![3.25f32; 4 * 64];
+        let q = quantize_tokens(&x, 64, 32, 2);
+        let d = q.dequantize();
+        for (a, b) in d.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-2, "{a} {b}"); // fp16 zero-point slop
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let x = rand_rows(3, 64, 64, 2.0);
+        let err = |bits| {
+            let q = quantize_tokens(&x, 64, 32, bits);
+            let d = q.dequantize();
+            d.iter()
+                .zip(&x)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+        };
+        let e2 = err(2);
+        let e4 = err(4);
+        let e8 = err(8);
+        assert!(e4 < e2 && e8 < e4, "{e2} {e4} {e8}");
+    }
+
+    #[test]
+    fn prop_roundtrip_error_bounded() {
+        check(
+            13,
+            100,
+            |r| {
+                let tokens = 1 + r.below(8) as usize;
+                let scale = r.uniform(0.01, 10.0);
+                rand_rows(r.next_u64(), tokens, 64, scale)
+            },
+            |x| {
+                let q = quantize_tokens(x, 64, 32, 2);
+                let d = q.dequantize();
+                let ng = 2;
+                for (i, (&a, &b)) in d.iter().zip(x.iter()).enumerate() {
+                    let t = i / 64;
+                    let g = (i % 64) / 32;
+                    let bound = q.error_bound(t, g) + 1e-4;
+                    let _ = ng;
+                    if (a - b).abs() > bound {
+                        return Err(format!(
+                            "elem {i}: |{a} - {b}| > {bound}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matches_python_golden() {
+        // cross-checked against ref.quantize_token_wise in golden.bin by
+        // tests in rust/tests/golden.rs; here: deterministic sanity only.
+        let x: Vec<f32> = (0..64).map(|i| i as f32 / 10.0).collect();
+        let q = quantize_tokens(&x, 64, 32, 2);
+        // group 0 spans 0.0..=3.1 -> qs ≈ 3.1/3
+        let qs = q.params[0].scale_f32();
+        assert!((qs - 3.1 / 3.0).abs() < 0.01, "{qs}");
+        assert_eq!(q.values[0], 0);
+        assert_eq!(q.values[31], 3);
+    }
+}

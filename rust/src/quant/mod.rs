@@ -1,0 +1,13 @@
+//! Token-wise low-bit quantization (paper Eq. 9-13) and bit-packing.
+//!
+//! * [`int2`] — asymmetric 2-bit (configurable-bit) min/max quantization
+//!   per (token × 32-channel group), parameters stored in fp16 as the
+//!   paper's overhead analysis assumes.
+//! * [`pack`] — dense bit-packing: 2-bit payloads (4/byte) and 4-bit sign
+//!   codes (2/byte), the actual in-cache storage format.
+
+pub mod int2;
+pub mod pack;
+
+pub use int2::{dequantize_group, quantize_tokens, QuantParams, TokenQuant};
+pub use pack::{pack_codes, pack_u2, unpack_codes, unpack_u2, PackedCodes};

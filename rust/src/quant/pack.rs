@@ -1,0 +1,165 @@
+//! Bit-packing for the compressed cache.
+//!
+//! Two payload kinds, both little-endian within a byte (element 0 in the
+//! least-significant bits):
+//! * 2-bit magnitudes/values — 4 per byte (`pack_u2`).
+//! * 4-bit sign codes — 2 per byte (`pack_codes`). The nibble IS the
+//!   paper's `Code(k)` (Eq. 3): MSB of the nibble = sign of the group's
+//!   channel 0. Packing codes densely is what makes the "index" free: it
+//!   is the same memory the key signs occupy.
+
+/// Pack 2-bit values (0..=3), 4 per byte. Length padded up with zeros.
+pub fn pack_u2(vals: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; vals.len().div_ceil(4)];
+    for (i, &v) in vals.iter().enumerate() {
+        debug_assert!(v < 4, "2-bit value out of range: {v}");
+        out[i / 4] |= (v & 0b11) << ((i % 4) * 2);
+    }
+    out
+}
+
+/// Unpack `n` 2-bit values.
+pub fn unpack_u2(bytes: &[u8], n: usize) -> Vec<u8> {
+    assert!(bytes.len() * 4 >= n, "not enough bytes");
+    (0..n).map(|i| (bytes[i / 4] >> ((i % 4) * 2)) & 0b11).collect()
+}
+
+/// Read one 2-bit element without unpacking.
+#[inline(always)]
+pub fn get_u2(bytes: &[u8], i: usize) -> u8 {
+    (bytes[i / 4] >> ((i % 4) * 2)) & 0b11
+}
+
+/// Pack `bits`-wide values (bits ∈ {2, 4, 8}), little-endian in a byte.
+pub fn pack_bits(vals: &[u8], bits: u32) -> Vec<u8> {
+    let per = (8 / bits) as usize;
+    let mut out = vec![0u8; vals.len().div_ceil(per)];
+    let mask = ((1u16 << bits) - 1) as u8;
+    for (i, &v) in vals.iter().enumerate() {
+        debug_assert!(v <= mask, "{bits}-bit value out of range: {v}");
+        out[i / per] |= (v & mask) << ((i % per) as u32 * bits);
+    }
+    out
+}
+
+/// Read one `bits`-wide element.
+#[inline(always)]
+pub fn get_bits(bytes: &[u8], i: usize, bits: u32) -> u8 {
+    let per = (8 / bits) as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    (bytes[i / per] >> ((i % per) as u32 * bits)) & mask
+}
+
+/// Packed 4-bit sign codes for one token: G nibbles.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedCodes {
+    pub bytes: Vec<u8>,
+    pub groups: usize,
+}
+
+/// Pack 4-bit codes (0..=15), 2 per byte (even index in low nibble).
+pub fn pack_codes(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(c < 16, "4-bit code out of range: {c}");
+        out[i / 2] |= (c & 0x0f) << ((i % 2) * 4);
+    }
+    out
+}
+
+pub fn unpack_codes(bytes: &[u8], n: usize) -> Vec<u8> {
+    assert!(bytes.len() * 2 >= n, "not enough bytes");
+    (0..n).map(|i| (bytes[i / 2] >> ((i % 2) * 4)) & 0x0f).collect()
+}
+
+/// Read one 4-bit code without unpacking.
+#[inline(always)]
+pub fn get_code(bytes: &[u8], i: usize) -> u8 {
+    (bytes[i / 2] >> ((i % 2) * 4)) & 0x0f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop::{check, shrink_vec};
+
+    #[test]
+    fn u2_roundtrip_exhaustive_small() {
+        for n in 0..16 {
+            let vals: Vec<u8> = (0..n).map(|i| (i % 4) as u8).collect();
+            assert_eq!(unpack_u2(&pack_u2(&vals), n), vals);
+        }
+    }
+
+    #[test]
+    fn codes_roundtrip_exhaustive_small() {
+        for n in 0..16 {
+            let vals: Vec<u8> = (0..n).map(|i| (i % 16) as u8).collect();
+            assert_eq!(unpack_codes(&pack_codes(&vals), n), vals);
+        }
+    }
+
+    #[test]
+    fn prop_u2_roundtrip() {
+        check(
+            11,
+            300,
+            |r| {
+                (0..r.below(257)).map(|_| r.below(4) as u8).collect::<Vec<_>>()
+            },
+            |v| {
+                let rt = unpack_u2(&pack_u2(v), v.len());
+                if &rt == v {
+                    Ok(())
+                } else {
+                    Err(format!("{v:?} -> {rt:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_codes_roundtrip_with_shrink() {
+        crate::substrate::prop::check_with_shrink(
+            12,
+            300,
+            |r| {
+                (0..r.below(129)).map(|_| r.below(16) as u8).collect::<Vec<_>>()
+            },
+            |v| shrink_vec(v),
+            |v| {
+                let rt = unpack_codes(&pack_codes(v), v.len());
+                if &rt == v {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn random_access_matches_unpack() {
+        let vals: Vec<u8> = (0..100).map(|i| (i * 7 % 16) as u8).collect();
+        let packed = pack_codes(&vals);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(get_code(&packed, i), v);
+        }
+        let v2: Vec<u8> = (0..97).map(|i| (i * 3 % 4) as u8).collect();
+        let p2 = pack_u2(&v2);
+        for (i, &v) in v2.iter().enumerate() {
+            assert_eq!(get_u2(&p2, i), v);
+        }
+    }
+
+    #[test]
+    fn packed_sizes() {
+        assert_eq!(pack_u2(&[0; 7]).len(), 2);
+        assert_eq!(pack_u2(&[0; 8]).len(), 2);
+        assert_eq!(pack_codes(&[0; 3]).len(), 2);
+        // head_dim 64: codes 32 nibbles = 16B, mags 64×2b = 16B — the
+        // storage the paper's overhead analysis counts (sign bits = D bits)
+        assert_eq!(pack_codes(&[0; 16]).len(), 8);
+        assert_eq!(pack_u2(&[0; 64]).len(), 16);
+    }
+}

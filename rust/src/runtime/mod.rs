@@ -1,0 +1,205 @@
+//! PJRT runtime: load AOT artifacts (`*.hlo.txt`), compile once, execute
+//! from the serving loop. Python never runs here — the HLO text was
+//! produced at build time by `python/compile/aot.py`.
+//!
+//! * [`PjrtRuntime`] — CPU PJRT client + compiled-executable cache keyed
+//!   by artifact name; weight tensors are uploaded once as device
+//!   buffers and reused by every call (`execute_b`).
+//! * [`HostTensor`] — typed host-side staging for inputs/outputs.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::model::manifest::Manifest;
+use crate::model::weights::WeightStore;
+
+/// Host-side tensor for staging PJRT inputs/outputs.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U8(Vec<u8>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) | HostTensor::U8(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(d, _) => d,
+            _ => panic!("not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            HostTensor::I32(d, _) => d,
+            _ => panic!("not i32"),
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32(vec![v], vec![])
+    }
+}
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// uploaded weight buffers by parameter name ("emb", "l0.wq", ...)
+    weights: HashMap<String, xla::PjRtBuffer>,
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client, load the manifest, upload weights.
+    pub fn load(artifact_dir: &Path) -> anyhow::Result<Self> {
+        let manifest =
+            Manifest::load(artifact_dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu()?;
+        let store = WeightStore::load(&artifact_dir.join("weights.bin"))?;
+        let mut weights = HashMap::new();
+        for name in store.names() {
+            let (shape, data) = store.get(name).unwrap();
+            let buf = client.buffer_from_host_buffer::<f32>(data, shape, None)?;
+            weights.insert(name.clone(), buf);
+        }
+        log::info!(
+            "pjrt: platform={} weights={} params",
+            client.platform_name(),
+            store.total_params()
+        );
+        Ok(Self { client, executables: HashMap::new(), weights, manifest })
+    }
+
+    /// Compile (or fetch) an artifact by name.
+    pub fn executable(&mut self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let spec = self.manifest.artifact(name).map_err(anyhow::Error::msg)?;
+            let t = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().expect("utf8 path"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            log::info!("pjrt: compiled {name} in {:?}", t.elapsed());
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Eagerly compile a set of artifacts (startup warmup).
+    pub fn warmup(&mut self, names: &[&str]) -> anyhow::Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    fn upload(&self, t: &HostTensor) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(match t {
+            HostTensor::F32(d, s) => {
+                self.client.buffer_from_host_buffer::<f32>(d, s, None)?
+            }
+            HostTensor::I32(d, s) => {
+                self.client.buffer_from_host_buffer::<i32>(d, s, None)?
+            }
+            HostTensor::U8(d, s) => {
+                self.client.buffer_from_host_buffer::<u8>(d, s, None)?
+            }
+        })
+    }
+
+    /// Execute an artifact. `inputs` supplies the non-weight args in spec
+    /// order; args named `param:<name>` are taken from the weight buffers
+    /// (`layer:<field>` args are supplied by the caller via `layer_params`,
+    /// mapped as `l{layer}.{field}`).
+    pub fn run(
+        &mut self,
+        name: &str,
+        layer: Option<usize>,
+        inputs: &[HostTensor],
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        // compile first (needs &mut self), then stage buffers
+        self.executable(name)?;
+        let spec = self
+            .manifest
+            .artifact(name)
+            .map_err(anyhow::Error::msg)?
+            .clone();
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(spec.inputs.len());
+        let mut staged: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut next_input = 0usize;
+
+        // two passes: first create all staged buffers, then collect refs
+        let mut plan: Vec<Result<String, usize>> = Vec::with_capacity(spec.inputs.len());
+        for io in &spec.inputs {
+            if let Some(pname) = io.name.strip_prefix("param:") {
+                plan.push(Ok(pname.to_string()));
+            } else if let Some(field) = io.name.strip_prefix("layer:") {
+                let l = layer.expect("layer-parameterized artifact needs layer idx");
+                plan.push(Ok(format!("l{l}.{field}")));
+            } else {
+                let t = inputs
+                    .get(next_input)
+                    .unwrap_or_else(|| panic!("{name}: missing input '{}'", io.name));
+                debug_assert_eq!(
+                    t.shape(),
+                    &io.shape[..],
+                    "{name}: shape mismatch on '{}'",
+                    io.name
+                );
+                staged.push(self.upload(t)?);
+                plan.push(Err(staged.len() - 1));
+                next_input += 1;
+            }
+        }
+        assert_eq!(next_input, inputs.len(), "{name}: unused inputs");
+        for p in &plan {
+            match p {
+                Ok(wname) => bufs.push(
+                    self.weights
+                        .get(wname)
+                        .unwrap_or_else(|| panic!("weight '{wname}' missing")),
+                ),
+                Err(i) => bufs.push(&staged[*i]),
+            }
+        }
+
+        let exe = &self.executables[name];
+        let result = exe.execute_b(&bufs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        assert_eq!(
+            parts.len(),
+            spec.outputs.len(),
+            "{name}: output arity mismatch"
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(&spec.outputs) {
+            out.push(literal_to_host(&lit, ospec)?);
+        }
+        Ok(out)
+    }
+}
+
+fn literal_to_host(
+    lit: &xla::Literal,
+    spec: &crate::model::manifest::IoSpec,
+) -> anyhow::Result<HostTensor> {
+    let shape = spec.shape.clone();
+    Ok(match spec.dtype.as_str() {
+        "float32" => HostTensor::F32(lit.to_vec::<f32>()?, shape),
+        "int32" => HostTensor::I32(lit.to_vec::<i32>()?, shape),
+        "uint8" => HostTensor::U8(lit.to_vec::<u8>()?, shape),
+        other => anyhow::bail!("unsupported output dtype {other}"),
+    })
+}

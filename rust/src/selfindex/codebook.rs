@@ -1,0 +1,208 @@
+//! One-pass sign-based codebook (paper Eq. 4).
+//!
+//! For every (group g, sign pattern c) the centroid is the mean of all
+//! subvectors of group g whose sign pattern is c. Built in a single pass
+//! over the prefill keys (the paper's 20×+ win over iterative k-means —
+//! measured head-to-head in `benches/table4_modules.rs` against
+//! [`crate::baselines::kmeans`]).
+//!
+//! Layout: centroids flat `[g][c][4]` (g-major) for LUT-build locality.
+
+use super::codes::{code_signs, sign_code};
+
+/// Streaming builder: accumulate blocks, finalize once.
+#[derive(Clone, Debug)]
+pub struct CodebookBuilder {
+    pub groups: usize,
+    sums: Vec<f64>,   // groups × 16 × 4
+    counts: Vec<u32>, // groups × 16
+}
+
+impl CodebookBuilder {
+    pub fn new(groups: usize) -> Self {
+        Self {
+            groups,
+            sums: vec![0.0; groups * 16 * 4],
+            counts: vec![0; groups * 16],
+        }
+    }
+
+    /// Accumulate centered keys ((tokens × 4·groups) row-major).
+    pub fn accumulate(&mut self, centered_keys: &[f32]) {
+        let dim = self.groups * 4;
+        assert_eq!(centered_keys.len() % dim, 0);
+        for row in centered_keys.chunks_exact(dim) {
+            for (g, sub) in row.chunks_exact(4).enumerate() {
+                let c = sign_code(sub) as usize;
+                let base = (g * 16 + c) * 4;
+                for i in 0..4 {
+                    self.sums[base + i] += sub[i] as f64;
+                }
+                self.counts[g * 16 + c] += 1;
+            }
+        }
+    }
+
+    /// Merge sums/counts produced elsewhere (e.g. the Pallas
+    /// `quantize_block` program returns raw sums/counts per chunk).
+    pub fn merge_raw(&mut self, sums: &[f32], counts: &[f32]) {
+        assert_eq!(sums.len(), self.sums.len());
+        assert_eq!(counts.len(), self.counts.len());
+        for (a, &b) in self.sums.iter_mut().zip(sums) {
+            *a += b as f64;
+        }
+        for (a, &b) in self.counts.iter_mut().zip(counts) {
+            *a += b as u32;
+        }
+    }
+
+    /// Finalize: empty clusters get the zero centroid (never looked up for
+    /// the keys that built the codebook; harmless for later arrivals —
+    /// matches `ref.build_codebook`).
+    pub fn finalize(&self) -> Codebook {
+        let mut centroids = vec![0.0f32; self.groups * 16 * 4];
+        for g in 0..self.groups {
+            for c in 0..16 {
+                let n = self.counts[g * 16 + c];
+                if n > 0 {
+                    let base = (g * 16 + c) * 4;
+                    for i in 0..4 {
+                        centroids[base + i] =
+                            (self.sums[base + i] / n as f64) as f32;
+                    }
+                }
+            }
+        }
+        Codebook { groups: self.groups, centroids }
+    }
+}
+
+/// Finalized codebook: `groups × 16` centroids of dim 4.
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    pub groups: usize,
+    /// flat [g][c][4]
+    pub centroids: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn centroid(&self, g: usize, c: usize) -> &[f32] {
+        let base = (g * 16 + c) * 4;
+        &self.centroids[base..base + 4]
+    }
+
+    /// Sign-only codebook for the Table-5 "sign-only retrieval" ablation:
+    /// centroid = the ±1 pattern itself (no magnitudes).
+    pub fn sign_only(groups: usize) -> Self {
+        let mut centroids = vec![0.0f32; groups * 16 * 4];
+        for g in 0..groups {
+            for c in 0..16 {
+                let signs = code_signs(c as u8);
+                centroids[(g * 16 + c) * 4..(g * 16 + c) * 4 + 4]
+                    .copy_from_slice(&signs);
+            }
+        }
+        Self { groups, centroids }
+    }
+
+    /// Memory footprint in bytes (f32 centroids) — fixed overhead in the
+    /// paper's accounting, O(1) in context length.
+    pub fn bytes(&self) -> usize {
+        self.centroids.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    fn keys(seed: u64, tokens: usize, dim: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..tokens * dim).map(|_| r.normal_f32()).collect()
+    }
+
+    #[test]
+    fn centroids_live_in_their_orthant() {
+        let dim = 32;
+        let k = keys(1, 1024, dim);
+        let mut b = CodebookBuilder::new(dim / 4);
+        b.accumulate(&k);
+        let cb = b.finalize();
+        for g in 0..cb.groups {
+            for c in 0..16 {
+                let cent = cb.centroid(g, c);
+                if cent.iter().all(|&x| x == 0.0) {
+                    continue; // empty cluster
+                }
+                assert_eq!(sign_code(cent), c as u8, "g{g} c{c} {cent:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_equals_one_shot() {
+        let dim = 16;
+        let k = keys(2, 500, dim);
+        let mut a = CodebookBuilder::new(dim / 4);
+        a.accumulate(&k);
+        let mut b = CodebookBuilder::new(dim / 4);
+        for chunk in k.chunks(13 * dim) {
+            b.accumulate(chunk);
+        }
+        let (ca, cb) = (a.finalize(), b.finalize());
+        for (x, y) in ca.centroids.iter().zip(&cb.centroids) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn merge_raw_equals_accumulate() {
+        let dim = 16;
+        let groups = dim / 4;
+        let k = keys(3, 200, dim);
+        let mut direct = CodebookBuilder::new(groups);
+        direct.accumulate(&k);
+        // build raw sums/counts separately (f32, like the pallas outputs)
+        let mut sums = vec![0.0f32; groups * 16 * 4];
+        let mut counts = vec![0.0f32; groups * 16];
+        for row in k.chunks_exact(dim) {
+            for (g, sub) in row.chunks_exact(4).enumerate() {
+                let c = sign_code(sub) as usize;
+                for i in 0..4 {
+                    sums[(g * 16 + c) * 4 + i] += sub[i];
+                }
+                counts[g * 16 + c] += 1.0;
+            }
+        }
+        let mut merged = CodebookBuilder::new(groups);
+        merged.merge_raw(&sums, &counts);
+        for (x, y) in direct.finalize().centroids.iter()
+            .zip(&merged.finalize().centroids)
+        {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sign_only_centroids_are_unit_signs() {
+        let cb = Codebook::sign_only(4);
+        assert_eq!(cb.centroid(0, 0b1010), &[1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(cb.centroid(3, 0b1111), &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn single_cluster_centroid_is_mean() {
+        // all tokens identical -> their cluster's centroid is the token
+        let dim = 8;
+        let row: Vec<f32> = vec![0.5, -0.25, 1.0, -2.0, 0.1, 0.2, -0.3, 0.4];
+        let mut b = CodebookBuilder::new(dim / 4);
+        let many: Vec<f32> = row.iter().cycle().take(dim * 10).copied().collect();
+        b.accumulate(&many);
+        let cb = b.finalize();
+        let c0 = sign_code(&row[0..4]) as usize;
+        for i in 0..4 {
+            assert!((cb.centroid(0, c0)[i] - row[i]).abs() < 1e-6);
+        }
+    }
+}

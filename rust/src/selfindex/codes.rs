@@ -1,0 +1,128 @@
+//! Sign-pattern codes (paper Eq. 2-3).
+//!
+//! `Code(k) = Σ_i ((1+sign(k_i))/2) · 2^(4-i)` — channel 0 of each
+//! 4-channel group is the most-significant bit; `x >= 0` encodes as 1
+//! (matching `ref.sign_codes`, pinned by golden vectors).
+
+/// 4-bit sign code of one 4-channel subvector.
+#[inline(always)]
+pub fn sign_code(sub: &[f32]) -> u8 {
+    debug_assert_eq!(sub.len(), 4);
+    (((sub[0] >= 0.0) as u8) << 3)
+        | (((sub[1] >= 0.0) as u8) << 2)
+        | (((sub[2] >= 0.0) as u8) << 1)
+        | ((sub[3] >= 0.0) as u8)
+}
+
+/// All G codes of one normalized key vector (head_dim = 4·G).
+pub fn encode_token(key: &[f32]) -> Vec<u8> {
+    assert_eq!(key.len() % 4, 0);
+    key.chunks_exact(4).map(sign_code).collect()
+}
+
+/// Encode a block of tokens directly into packed nibbles
+/// (token-major: token t occupies bytes [t·G/2, (t+1)·G/2)).
+pub fn encode_tokens_packed(keys: &[f32], head_dim: usize) -> Vec<u8> {
+    assert_eq!(head_dim % 8, 0, "packed layout needs even group count");
+    assert_eq!(keys.len() % head_dim, 0);
+    let g = head_dim / 4;
+    let tokens = keys.len() / head_dim;
+    let mut out = vec![0u8; tokens * g / 2];
+    for t in 0..tokens {
+        let row = &keys[t * head_dim..(t + 1) * head_dim];
+        let dst = &mut out[t * g / 2..(t + 1) * g / 2];
+        for (j, pair) in row.chunks_exact(8).enumerate() {
+            let lo = sign_code(&pair[0..4]);
+            let hi = sign_code(&pair[4..8]);
+            dst[j] = lo | (hi << 4);
+        }
+    }
+    out
+}
+
+/// Expand a 4-bit code back to ±1 signs (MSB-first), for reconstruction.
+#[inline(always)]
+pub fn code_signs(code: u8) -> [f32; 4] {
+    [
+        if code & 0b1000 != 0 { 1.0 } else { -1.0 },
+        if code & 0b0100 != 0 { 1.0 } else { -1.0 },
+        if code & 0b0010 != 0 { 1.0 } else { -1.0 },
+        if code & 0b0001 != 0 { 1.0 } else { -1.0 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::get_code;
+    use crate::substrate::prop::check;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn bit_order_msb_first() {
+        assert_eq!(sign_code(&[1.0, -1.0, -1.0, -1.0]), 0b1000);
+        assert_eq!(sign_code(&[-1.0, -1.0, -1.0, 1.0]), 0b0001);
+        assert_eq!(sign_code(&[1.0, 1.0, 1.0, 1.0]), 0b1111);
+        assert_eq!(sign_code(&[-1.0, -1.0, -1.0, -1.0]), 0);
+        // zero counts as non-negative (post-normalization measure-zero)
+        assert_eq!(sign_code(&[0.0, -1.0, 0.0, -1.0]), 0b1010);
+    }
+
+    #[test]
+    fn signs_roundtrip() {
+        for c in 0u8..16 {
+            let s = code_signs(c);
+            assert_eq!(sign_code(&s), c);
+        }
+    }
+
+    #[test]
+    fn packed_encoding_matches_per_token() {
+        let mut r = Rng::new(3);
+        let hd = 64;
+        let keys: Vec<f32> = (0..hd * 10).map(|_| r.normal_f32()).collect();
+        let packed = encode_tokens_packed(&keys, hd);
+        let g = hd / 4;
+        for t in 0..10 {
+            let codes = encode_token(&keys[t * hd..(t + 1) * hd]);
+            for (gi, &c) in codes.iter().enumerate() {
+                assert_eq!(get_code(&packed[t * g / 2..], gi), c);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_sign_consistency() {
+        // flipping one channel's sign flips exactly the matching code bit
+        check(
+            7,
+            200,
+            |r| {
+                let v: Vec<f32> = (0..4)
+                    .map(|_| {
+                        let x = r.normal_f32();
+                        if x == 0.0 {
+                            1.0
+                        } else {
+                            x
+                        }
+                    })
+                    .collect();
+                let ch = r.below(4) as usize;
+                (v, ch)
+            },
+            |(v, ch)| {
+                let before = sign_code(v);
+                let mut w = v.clone();
+                w[*ch] = -w[*ch];
+                let after = sign_code(&w);
+                let expect = before ^ (1 << (3 - ch));
+                if after == expect {
+                    Ok(())
+                } else {
+                    Err(format!("{before:04b} ^ ch{ch} -> {after:04b}"))
+                }
+            },
+        );
+    }
+}

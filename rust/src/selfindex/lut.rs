@@ -1,0 +1,92 @@
+//! LUT construction (paper Fig. 3, left half): per query, dot each of the
+//! G query subvectors with its group's 16 centroids → a G×16 table of
+//! partial scores. O(G·16·4) = O(16·D) flops — tiny, once per (query,
+//! head, step); the per-token work is then pure lookups ([`super::score`]).
+
+use super::codebook::Codebook;
+
+/// Per-query lookup table: `groups × 16` partial scores, g-major.
+#[derive(Clone, Debug)]
+pub struct Lut {
+    pub groups: usize,
+    pub table: Vec<f32>, // flat [g][c]
+}
+
+impl Lut {
+    /// Build from a (rotated, *not* centered) query — centering keys does
+    /// not require centering queries (Eq. 7); the LUT absorbs everything.
+    pub fn build(query: &[f32], codebook: &Codebook) -> Self {
+        assert_eq!(query.len(), codebook.groups * 4);
+        let mut table = vec![0.0f32; codebook.groups * 16];
+        for (g, qsub) in query.chunks_exact(4).enumerate() {
+            for c in 0..16 {
+                let cent = codebook.centroid(g, c);
+                table[g * 16 + c] = qsub[0] * cent[0]
+                    + qsub[1] * cent[1]
+                    + qsub[2] * cent[2]
+                    + qsub[3] * cent[3];
+            }
+        }
+        Self { groups: codebook.groups, table }
+    }
+
+    /// Accumulate another query's table into this one (GQA: the R query
+    /// heads sharing a KV head sum their tables, equivalent to scoring
+    /// with the summed query — one LUT-GEMV pass instead of R).
+    pub fn add_query(&mut self, query: &[f32], codebook: &Codebook) {
+        let other = Lut::build(query, codebook);
+        for (a, b) in self.table.iter_mut().zip(&other.table) {
+            *a += b;
+        }
+    }
+
+    #[inline(always)]
+    pub fn get(&self, g: usize, c: usize) -> f32 {
+        self.table[g * 16 + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selfindex::codebook::CodebookBuilder;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn lut_entries_are_dot_products() {
+        let mut r = Rng::new(1);
+        let dim = 16;
+        let keys: Vec<f32> = (0..dim * 256).map(|_| r.normal_f32()).collect();
+        let mut b = CodebookBuilder::new(dim / 4);
+        b.accumulate(&keys);
+        let cb = b.finalize();
+        let q: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        let lut = Lut::build(&q, &cb);
+        for g in 0..cb.groups {
+            for c in 0..16 {
+                let cent = cb.centroid(g, c);
+                let expect: f32 = (0..4).map(|i| q[g * 4 + i] * cent[i]).sum();
+                assert!((lut.get(g, c) - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn add_query_is_sum_of_luts() {
+        let mut r = Rng::new(2);
+        let dim = 8;
+        let keys: Vec<f32> = (0..dim * 64).map(|_| r.normal_f32()).collect();
+        let mut b = CodebookBuilder::new(dim / 4);
+        b.accumulate(&keys);
+        let cb = b.finalize();
+        let q1: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        let q2: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        let mut acc = Lut::build(&q1, &cb);
+        acc.add_query(&q2, &cb);
+        let l1 = Lut::build(&q1, &cb);
+        let l2 = Lut::build(&q2, &cb);
+        for i in 0..acc.table.len() {
+            assert!((acc.table[i] - (l1.table[i] + l2.table[i])).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! **Self-Indexing KVCache** — the paper's contribution as a library.
+//!
+//! The compressed key representation *is* the retrieval index:
+//!
+//! 1. [`normalize`] — entropy-aware channel-mean normalization (Eq. 5-7):
+//!    subtracting the per-channel mean balances sign bits (max entropy)
+//!    without changing softmax outputs.
+//! 2. [`codes`] — each 4-channel subvector of a key maps to the 4-bit
+//!    integer formed by its sign bits (Eq. 2-3). These nibbles are both
+//!    the VQ cluster ids *and* the exact sign plane of the key.
+//! 3. [`codebook`] — one-pass clustering (Eq. 4): centroid = mean of the
+//!    subvectors sharing a sign pattern. No k-means iterations.
+//! 4. [`lut`] + [`score`] — compressed-domain retrieval (Eq. 8, Fig. 3):
+//!    per query, dot the G subvectors with 16 centroids each (a tiny
+//!    GEMV), then score every cached token with G table lookups over its
+//!    packed codes. This is the decode hot path (see DESIGN.md §Perf).
+//! 5. [`topk`] — partial selection of the k highest scores.
+//!
+//! [`SelfIndexConfig`] carries every paper knob (+ ablation switches used
+//! by `benches/table5_ablation.rs`).
+
+pub mod codebook;
+pub mod codes;
+pub mod lut;
+pub mod normalize;
+pub mod score;
+pub mod topk;
+
+pub use codebook::{Codebook, CodebookBuilder};
+pub use codes::{encode_token, encode_tokens_packed, sign_code};
+pub use lut::Lut;
+pub use normalize::ChannelStats;
+pub use score::{score_tokens, score_tokens_bytelut, ByteLut};
+pub use topk::top_k_indices;
+
+/// Paper hyper-parameters + ablation switches.
+#[derive(Clone, Debug)]
+pub struct SelfIndexConfig {
+    /// channels per sign-VQ group (paper: 4 → 16 clusters).
+    pub vq_group: usize,
+    /// bits per quantized magnitude/value element (paper: 2).
+    pub quant_bits: u32,
+    /// channels per quant parameter group (paper: 32).
+    pub quant_group: usize,
+    /// full-precision sink tokens kept from prefill (paper: 64).
+    pub sink_tokens: usize,
+    /// dynamically selected tokens per decode step (paper: 96 at the
+    /// LongBench budget; RULER uses a ratio instead).
+    pub sparse_k: usize,
+    /// ablation: retrieve with centroid magnitudes (true) or sign-only
+    /// ±1 codebook (false) — Table 5 "sign-only retrieval".
+    pub magnitude_centroids: bool,
+    /// ablation: keep the sign plane exact during quantization (true) or
+    /// quantize signed values directly — Table 5 "w/o sign in quant".
+    pub sign_plane_quant: bool,
+    /// ablation: disable sink tokens — Table 5 "w/o sink tokens".
+    pub use_sinks: bool,
+}
+
+impl Default for SelfIndexConfig {
+    fn default() -> Self {
+        Self {
+            vq_group: 4,
+            quant_bits: 2,
+            quant_group: 32,
+            sink_tokens: 64,
+            sparse_k: 96,
+            magnitude_centroids: true,
+            sign_plane_quant: true,
+            use_sinks: true,
+        }
+    }
+}
+
+impl SelfIndexConfig {
+    pub fn clusters(&self) -> usize {
+        1 << self.vq_group
+    }
+
+    pub fn groups(&self, head_dim: usize) -> usize {
+        assert_eq!(head_dim % self.vq_group, 0);
+        head_dim / self.vq_group
+    }
+
+    pub fn validate(&self, head_dim: usize) -> Result<(), String> {
+        if self.vq_group != 4 {
+            // packing + LUT layouts assume nibble codes
+            return Err(format!("vq_group must be 4, got {}", self.vq_group));
+        }
+        if head_dim % self.quant_group != 0 {
+            return Err(format!(
+                "head_dim {head_dim} not divisible by quant_group {}",
+                self.quant_group
+            ));
+        }
+        if !(1..=8).contains(&self.quant_bits) {
+            return Err(format!("quant_bits out of range: {}", self.quant_bits));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_settings() {
+        let c = SelfIndexConfig::default();
+        assert_eq!(c.vq_group, 4);
+        assert_eq!(c.clusters(), 16);
+        assert_eq!(c.quant_bits, 2);
+        assert_eq!(c.quant_group, 32);
+        assert_eq!(c.sink_tokens, 64);
+        assert_eq!(c.sparse_k, 96);
+        assert!(c.validate(64).is_ok());
+        assert!(c.validate(128).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_dims() {
+        let c = SelfIndexConfig::default();
+        assert!(c.validate(48).is_err()); // not divisible by 32
+        let mut c2 = c.clone();
+        c2.vq_group = 8;
+        assert!(c2.validate(64).is_err());
+    }
+}

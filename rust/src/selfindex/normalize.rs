@@ -1,0 +1,216 @@
+//! Entropy-aware normalization (paper Eq. 5-7): per-channel statistics of
+//! the key stream — the mean `mu` subtracted before sign extraction and
+//! the magnitude normalizer `alpha = max |K'[:,j]|` (Eq. 12).
+//!
+//! Streaming: prefill may arrive in chunks and decode appends one token at
+//! a time, so stats accumulate incrementally. Following the paper, `mu`
+//! and `alpha` are *frozen* at the end of prefill (they are baked into the
+//! codebook and quantized magnitudes); later tokens reuse them — softmax
+//! shift-invariance (Eq. 7) makes a slightly-stale `mu` harmless, and the
+//! engine tracks post-freeze drift via `metrics`.
+
+/// Running per-channel statistics over keys.
+#[derive(Clone, Debug)]
+pub struct ChannelStats {
+    pub dim: usize,
+    sum: Vec<f64>,
+    max_abs_centered: Vec<f32>,
+    count: usize,
+    frozen: Option<Frozen>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Frozen {
+    pub mu: Vec<f32>,
+    pub alpha: Vec<f32>,
+}
+
+impl ChannelStats {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            dim,
+            sum: vec![0.0; dim],
+            max_abs_centered: vec![0.0; dim],
+            count: 0,
+            frozen: None,
+        }
+    }
+
+    /// Accumulate a block of tokens ((tokens × dim) row-major).
+    /// Must be called before `freeze`.
+    pub fn accumulate(&mut self, keys: &[f32]) {
+        assert!(self.frozen.is_none(), "stats already frozen");
+        assert_eq!(keys.len() % self.dim, 0);
+        for row in keys.chunks_exact(self.dim) {
+            for (j, &v) in row.iter().enumerate() {
+                self.sum[j] += v as f64;
+            }
+            self.count += 1;
+        }
+    }
+
+    pub fn tokens_seen(&self) -> usize {
+        self.count
+    }
+
+    /// Current mean estimate (valid pre- or post-freeze).
+    pub fn mu(&self) -> Vec<f32> {
+        if let Some(f) = &self.frozen {
+            return f.mu.clone();
+        }
+        let n = self.count.max(1) as f64;
+        self.sum.iter().map(|&s| (s / n) as f32).collect()
+    }
+
+    /// Freeze `mu` from accumulated sums, then compute
+    /// `alpha_j = max_i |K[i,j] - mu_j|` over the provided prefill keys.
+    /// (Two passes over prefill — cheap vector ops, matching the paper's
+    /// prefill-side normalization.)
+    pub fn freeze(&mut self, prefill_keys: &[f32]) -> &Frozen {
+        assert!(self.frozen.is_none(), "freeze called twice");
+        let mu = self.mu();
+        for row in prefill_keys.chunks_exact(self.dim) {
+            for (j, &v) in row.iter().enumerate() {
+                let a = (v - mu[j]).abs();
+                if a > self.max_abs_centered[j] {
+                    self.max_abs_centered[j] = a;
+                }
+            }
+        }
+        let alpha = self
+            .max_abs_centered
+            .iter()
+            .map(|&a| if a > 0.0 { a } else { 1.0 })
+            .collect();
+        self.frozen = Some(Frozen { mu, alpha });
+        self.frozen.as_ref().unwrap()
+    }
+
+    pub fn frozen(&self) -> Option<&Frozen> {
+        self.frozen.as_ref()
+    }
+
+    /// Subtract mu in-place from a block of tokens.
+    pub fn center(&self, keys: &mut [f32]) {
+        let f = self.frozen.as_ref().expect("center() needs frozen stats");
+        for row in keys.chunks_exact_mut(self.dim) {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v -= f.mu[j];
+            }
+        }
+    }
+}
+
+/// Sign balance of a centered key block: fraction of non-negative entries.
+/// Eq. 6: maximal code entropy at 0.5. Exposed for tests + metrics.
+pub fn sign_balance(centered: &[f32]) -> f32 {
+    if centered.is_empty() {
+        return 0.5;
+    }
+    centered.iter().filter(|&&v| v >= 0.0).count() as f32 / centered.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::rng::Rng;
+
+    fn biased_keys(seed: u64, tokens: usize, dim: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        let offsets: Vec<f32> = (0..dim).map(|_| r.uniform(-3.0, 3.0)).collect();
+        (0..tokens)
+            .flat_map(|_| {
+                let r = &mut r;
+                offsets
+                    .iter()
+                    .map(|&o| o + r.normal_f32())
+                    .collect::<Vec<_>>()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mean_converges() {
+        let dim = 8;
+        let keys = biased_keys(1, 4096, dim);
+        let mut st = ChannelStats::new(dim);
+        st.accumulate(&keys);
+        let mu = st.mu();
+        // recompute directly
+        for j in 0..dim {
+            let direct: f32 = keys.iter().skip(j).step_by(dim).sum::<f32>()
+                / 4096.0;
+            assert!((mu[j] - direct).abs() < 1e-3, "{} vs {}", mu[j], direct);
+        }
+    }
+
+    #[test]
+    fn centering_balances_signs() {
+        // balance must hold PER CHANNEL (Eq. 6 is about each sign bit);
+        // aggregate balance can average out even with skewed channels.
+        let dim = 16;
+        let n = 2048;
+        let keys = biased_keys(2, n, dim);
+        let mut st = ChannelStats::new(dim);
+        st.accumulate(&keys);
+        st.freeze(&keys);
+        let mut centered = keys.clone();
+        st.center(&mut centered);
+        let chan_balance = |data: &[f32], j: usize| {
+            data.iter().skip(j).step_by(dim).filter(|&&v| v >= 0.0).count()
+                as f32
+                / n as f32
+        };
+        let mut max_raw_dev = 0.0f32;
+        for j in 0..dim {
+            let c = chan_balance(&centered, j);
+            assert!((c - 0.5).abs() < 0.06, "channel {j} balance {c}");
+            max_raw_dev = max_raw_dev.max((chan_balance(&keys, j) - 0.5).abs());
+        }
+        // sanity: at least one raw channel WAS badly unbalanced
+        assert!(max_raw_dev > 0.2, "raw max deviation {max_raw_dev}");
+    }
+
+    #[test]
+    fn alpha_covers_all_magnitudes() {
+        let dim = 8;
+        let keys = biased_keys(3, 512, dim);
+        let mut st = ChannelStats::new(dim);
+        st.accumulate(&keys);
+        let f = st.freeze(&keys).clone();
+        let mut centered = keys.clone();
+        st.center(&mut centered);
+        for row in centered.chunks_exact(dim) {
+            for (j, &v) in row.iter().enumerate() {
+                assert!(v.abs() <= f.alpha[j] + 1e-6);
+            }
+        }
+        assert!(f.alpha.iter().all(|&a| a > 0.0));
+    }
+
+    #[test]
+    fn accumulate_in_chunks_equals_one_shot() {
+        let dim = 8;
+        let keys = biased_keys(4, 300, dim);
+        let mut a = ChannelStats::new(dim);
+        a.accumulate(&keys);
+        let mut b = ChannelStats::new(dim);
+        for chunk in keys.chunks(7 * dim) {
+            b.accumulate(chunk);
+        }
+        assert_eq!(a.tokens_seen(), b.tokens_seen());
+        let (ma, mb) = (a.mu(), b.mu());
+        for j in 0..dim {
+            assert!((ma[j] - mb[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "frozen")]
+    fn accumulate_after_freeze_panics() {
+        let mut st = ChannelStats::new(4);
+        st.accumulate(&[1.0, 2.0, 3.0, 4.0]);
+        st.freeze(&[1.0, 2.0, 3.0, 4.0]);
+        st.accumulate(&[1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Partial top-k selection over retrieval scores.
+//!
+//! Contract (shared with `ref.topk_indices`, pinned by golden vectors):
+//! returns the indices of the k largest scores in descending score order,
+//! ties broken by the smaller index. Implementation: bounded binary heap
+//! of (score, index) — O(L log k), no allocation beyond the k-slot heap,
+//! which beats a full sort at the paper's regime (k = 96, L = tens of
+//! thousands).
+
+use std::cmp::Ordering;
+
+/// (score, index) with total order: higher score first, then lower index.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Entry {
+    score: f32,
+    index: u32,
+}
+
+impl Entry {
+    /// `self` ranks better than `other`?
+    #[inline(always)]
+    fn beats(&self, other: &Entry) -> bool {
+        match self.score.partial_cmp(&other.score) {
+            Some(Ordering::Greater) => true,
+            Some(Ordering::Less) => false,
+            _ => self.index < other.index,
+        }
+    }
+}
+
+/// Top-k indices of `scores`, descending; ties -> smaller index first.
+/// NaN scores rank last (never selected unless k exceeds finite count).
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return vec![];
+    }
+    // min-heap of the current best k: root = worst of the kept set
+    let mut heap: Vec<Entry> = Vec::with_capacity(k);
+
+    let worse = |a: &Entry, b: &Entry| !a.beats(b); // a ranks worse-or-equal
+
+    for (i, &s) in scores.iter().enumerate() {
+        let s = if s.is_nan() { f32::NEG_INFINITY } else { s };
+        let e = Entry { score: s, index: i as u32 };
+        if heap.len() < k {
+            heap.push(e);
+            // sift up
+            let mut c = heap.len() - 1;
+            while c > 0 {
+                let p = (c - 1) / 2;
+                if worse(&heap[c], &heap[p]) {
+                    heap.swap(c, p);
+                    c = p;
+                } else {
+                    break;
+                }
+            }
+        } else if e.beats(&heap[0]) {
+            heap[0] = e;
+            // sift down
+            let mut p = 0;
+            loop {
+                let (l, r) = (2 * p + 1, 2 * p + 2);
+                let mut worst = p;
+                if l < k && worse(&heap[l], &heap[worst]) {
+                    worst = l;
+                }
+                if r < k && worse(&heap[r], &heap[worst]) {
+                    worst = r;
+                }
+                if worst == p {
+                    break;
+                }
+                heap.swap(p, worst);
+                p = worst;
+            }
+        }
+    }
+
+    let mut entries = heap;
+    entries.sort_unstable_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(Ordering::Equal)
+            .then(a.index.cmp(&b.index))
+    });
+    entries.into_iter().map(|e| e.index).collect()
+}
+
+/// Reference implementation (full sort) for property tests.
+pub fn top_k_indices_sort(scores: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        let (sa, sb) = (scores[a as usize], scores[b as usize]);
+        let (sa, sb) = (
+            if sa.is_nan() { f32::NEG_INFINITY } else { sa },
+            if sb.is_nan() { f32::NEG_INFINITY } else { sb },
+        );
+        sb.partial_cmp(&sa).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(k.min(scores.len()));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop::check;
+
+    #[test]
+    fn basic_selection() {
+        let s = [1.0, 5.0, 3.0, 5.0, -2.0];
+        assert_eq!(top_k_indices(&s, 3), vec![1, 3, 2]); // tie: idx 1 < 3
+        assert_eq!(top_k_indices(&s, 0), Vec::<u32>::new());
+        assert_eq!(top_k_indices(&s, 99), vec![1, 3, 2, 0, 4]);
+    }
+
+    #[test]
+    fn nan_ranks_last() {
+        let s = [f32::NAN, 1.0, 2.0];
+        assert_eq!(top_k_indices(&s, 2), vec![2, 1]);
+        assert_eq!(top_k_indices(&s, 3), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn prop_matches_sort_reference() {
+        check(
+            21,
+            300,
+            |r| {
+                let n = r.below(200) as usize;
+                let k = r.below(64) as usize;
+                let v: Vec<f32> = (0..n)
+                    .map(|_| {
+                        // coarse values to force plenty of ties
+                        (r.below(20) as f32) - 10.0
+                    })
+                    .collect();
+                (v, k)
+            },
+            |(v, k)| {
+                let heap = top_k_indices(v, *k);
+                let sorted = top_k_indices_sort(v, *k);
+                if heap == sorted {
+                    Ok(())
+                } else {
+                    Err(format!("heap {heap:?} != sort {sorted:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn descending_and_distinct() {
+        check(
+            22,
+            200,
+            |r| {
+                (0..r.below(500))
+                    .map(|_| r.normal_f32())
+                    .collect::<Vec<f32>>()
+            },
+            |v| {
+                let k = (v.len() / 3).max(1);
+                let sel = top_k_indices(v, k);
+                let set: std::collections::HashSet<_> = sel.iter().collect();
+                if set.len() != sel.len() {
+                    return Err("duplicate indices".into());
+                }
+                for w in sel.windows(2) {
+                    if v[w[0] as usize] < v[w[1] as usize] {
+                        return Err("not descending".into());
+                    }
+                }
+                // every selected >= every unselected
+                if let Some(&min_sel) = sel
+                    .iter()
+                    .map(|&i| &v[i as usize])
+                    .min_by(|a, b| a.partial_cmp(b).unwrap())
+                {
+                    for (i, &s) in v.iter().enumerate() {
+                        if !sel.contains(&(i as u32)) && s > min_sel {
+                            return Err(format!("missed better index {i}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

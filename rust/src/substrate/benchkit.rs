@@ -1,0 +1,242 @@
+//! Measurement harness (offline substitute for criterion): warmup, timed
+//! iterations, robust statistics, and aligned table printing used by every
+//! `benches/table*.rs` binary.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over per-iteration wall-clock samples.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub std_dev: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean_s;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        let pct = |p: f64| samples[(p * (n - 1) as f64).round() as usize];
+        Self {
+            iters: n,
+            mean,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            min: samples[0],
+            max: samples[n - 1],
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+        }
+    }
+
+    /// Ops/sec given `ops` operations per iteration.
+    pub fn throughput(&self, ops: f64) -> f64 {
+        ops / self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner: measures `f` with warmup and either a fixed iteration
+/// count or a time budget, whichever the caller picks.
+pub struct Bench {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            budget: Duration::from_secs(2),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 50,
+            budget: Duration::from_millis(500),
+        }
+    }
+
+    /// Honors SIKV_BENCH_FAST=1 to shrink budgets (CI / smoke runs).
+    pub fn from_env() -> Self {
+        if std::env::var("SIKV_BENCH_FAST").is_ok() {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < self.min_iters || start.elapsed() < self.budget)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        Stats::from_samples(samples)
+    }
+}
+
+/// Prevents the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+pub fn fmt_bytes(b: usize) -> String {
+    if b < 1024 {
+        format!("{b}B")
+    } else if b < 1024 * 1024 {
+        format!("{:.1}KiB", b as f64 / 1024.0)
+    } else if b < 1024 * 1024 * 1024 {
+        format!("{:.1}MiB", b as f64 / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2}GiB", b as f64 / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+/// Aligned plain-text table (the benches print paper-shaped rows).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let samples: Vec<Duration> =
+            (1..=100).map(|i| Duration::from_micros(i)).collect();
+        let s = Stats::from_samples(samples);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.p99 <= s.max);
+        assert_eq!(s.iters, 100);
+    }
+
+    #[test]
+    fn bench_runs_at_least_min_iters() {
+        let b = Bench {
+            warmup: 0,
+            min_iters: 5,
+            max_iters: 10,
+            budget: Duration::ZERO,
+        };
+        let mut count = 0;
+        let s = b.run(|| count += 1);
+        assert!(s.iters >= 5);
+        assert_eq!(count, s.iters);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats::from_samples(vec![Duration::from_millis(10); 4]);
+        let tps = s.throughput(100.0);
+        assert!((tps - 10_000.0).abs() < 1.0, "{tps}");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "ms"]);
+        t.row(vec!["ours".into(), "0.1".into()]);
+        t.row(vec!["flashattention2".into(), "0.8".into()]);
+        let out = t.render();
+        assert!(out.contains("method"));
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_duration(Duration::from_micros(1500)).ends_with("ms"));
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+    }
+}

@@ -1,0 +1,256 @@
+//! Declarative CLI argument parser (offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, typed accessors with defaults, and auto-generated help.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option '{0}' (see --help)")]
+    Unknown(String),
+    #[error("option '--{0}' expects a value")]
+    MissingValue(String),
+    #[error("invalid value for '--{0}': {1}")]
+    Invalid(String, String),
+    #[error("missing required option '--{0}'")]
+    MissingRequired(String),
+}
+
+#[derive(Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    required: bool,
+    default: Option<String>,
+}
+
+/// Builder-style command definition.
+pub struct Command {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: vec![],
+            positionals: vec![],
+        }
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: false,
+            required: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            required: false,
+            default: Some(default.into()),
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            required: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = match &o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if o.required => " [required]".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!("  --{}{val}\n      {}{def}\n", o.name, o.help));
+        }
+        if !self.positionals.is_empty() {
+            s.push_str("\nPositional:\n");
+            for (n, h) in &self.positionals {
+                s.push_str(&format!("  <{n}>  {h}\n"));
+            }
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut pos = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+        }
+
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                    };
+                    values.insert(key, v);
+                } else {
+                    flags.insert(key, true);
+                }
+            } else {
+                pos.push(a.clone());
+            }
+        }
+
+        for o in &self.opts {
+            if o.required && !values.contains_key(&o.name) {
+                return Err(CliError::MissingRequired(o.name.clone()));
+            }
+        }
+        Ok(Matches { values, flags, pos })
+    }
+}
+
+/// Parse results with typed accessors.
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub pos: Vec<String>,
+}
+
+impl Matches {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("option '{name}' not declared/provided"))
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError::Invalid(name.into(), self.str(name).into()))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.parse_as(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("serve", "run the engine")
+            .opt("batch", "8", "max batch size")
+            .opt("sparsity", "0.075", "token keep ratio")
+            .flag("verbose", "log more")
+            .req("model", "artifact dir")
+            .positional("trace", "workload trace file")
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let m = cmd()
+            .parse(&argv("--model artifacts --batch=4 --verbose tracefile"))
+            .unwrap();
+        assert_eq!(m.str("model"), "artifacts");
+        assert_eq!(m.usize("batch").unwrap(), 4);
+        assert!((m.f64("sparsity").unwrap() - 0.075).abs() < 1e-12);
+        assert!(m.flag("verbose"));
+        assert_eq!(m.pos, vec!["tracefile"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&argv("--model a")).unwrap();
+        assert_eq!(m.usize("batch").unwrap(), 8);
+        assert!(!m.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(matches!(
+            cmd().parse(&argv("--batch 4")),
+            Err(CliError::MissingRequired(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(matches!(
+            cmd().parse(&argv("--model a --bogus 1")),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let m = cmd().parse(&argv("--model a --batch nope")).unwrap();
+        assert!(m.usize("batch").is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cmd().help_text();
+        assert!(h.contains("--batch") && h.contains("default: 8"));
+        assert!(h.contains("--model") && h.contains("[required]"));
+    }
+}

@@ -1,0 +1,231 @@
+//! Thread-pool executor + channels (offline substitute for tokio).
+//!
+//! The coordinator is an event loop, not an async reactor: requests arrive
+//! on an mpsc channel, the scheduler forms batches, and the engine drives
+//! PJRT executions synchronously (PJRT CPU calls are blocking anyway).
+//! What we need from a runtime is (a) a worker pool for parallelizable
+//! work (per-head scoring, workload generation), (b) graceful shutdown,
+//! (c) scoped joins. This module provides exactly that on std primitives.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Dropping the pool joins all workers.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    in_flight: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let inf = Arc::clone(&in_flight);
+                thread::Builder::new()
+                    .name(format!("sikv-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                // swallow panics so one bad job doesn't
+                                // poison the pool; surfaced via JoinSet.
+                                let _ = panic::catch_unwind(
+                                    AssertUnwindSafe(job));
+                                let (lock, cv) = &*inf;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                cv.notify_all();
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, in_flight }
+    }
+
+    /// Pool sized to the machine (min 1).
+    pub fn default_size() -> Self {
+        Self::new(
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.in_flight;
+        *lock.lock().unwrap() += 1;
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker pool hung up");
+    }
+
+    /// Block until every spawned job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.in_flight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel -> workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Collects results of a group of spawned tasks (order = spawn order).
+pub struct JoinSet<T> {
+    rx: mpsc::Receiver<(usize, T)>,
+    tx: mpsc::Sender<(usize, T)>,
+    spawned: usize,
+}
+
+impl<T: Send + 'static> JoinSet<T> {
+    pub fn new() -> Self {
+        let (tx, rx) = mpsc::channel();
+        Self { rx, tx, spawned: 0 }
+    }
+
+    pub fn spawn_on<F>(&mut self, pool: &ThreadPool, f: F)
+    where
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let idx = self.spawned;
+        self.spawned += 1;
+        let tx = self.tx.clone();
+        pool.spawn(move || {
+            let _ = tx.send((idx, f()));
+        });
+    }
+
+    /// Wait for all results; panics if a task panicked (its slot missing).
+    pub fn join_all(self) -> Vec<T> {
+        let JoinSet { rx, tx, spawned } = self;
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..spawned).map(|_| None).collect();
+        for (idx, v) in rx.iter() {
+            slots[idx] = Some(v);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.unwrap_or_else(|| panic!("task {i} panicked")))
+            .collect()
+    }
+}
+
+impl<T: Send + 'static> Default for JoinSet<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Map `f` over items on the pool, preserving order.
+pub fn par_map<T, U, F>(pool: &ThreadPool, items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send + 'static,
+    U: Send + 'static,
+    F: Fn(T) -> U + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let mut set = JoinSet::new();
+    for item in items {
+        let f = Arc::clone(&f);
+        set.spawn_on(pool, move || f(item));
+    }
+    set.join_all()
+}
+
+/// Monotonic id generator (request ids, sequence ids).
+#[derive(Default)]
+pub struct IdGen(AtomicUsize);
+
+impl IdGen {
+    pub fn next(&self) -> usize {
+        self.0.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = par_map(&pool, (0..50).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn join_set_collects_in_spawn_order() {
+        let pool = ThreadPool::new(2);
+        let mut set = JoinSet::new();
+        for i in 0..10usize {
+            set.spawn_on(&pool, move || i * 2);
+        }
+        assert_eq!(set.join_all(), (0..10).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(1);
+        pool.spawn(|| panic!("boom"));
+        pool.wait_idle();
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        pool.spawn(move || {
+            d.store(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn idgen_monotonic() {
+        let g = IdGen::default();
+        let a = g.next();
+        let b = g.next();
+        assert!(b > a);
+    }
+}

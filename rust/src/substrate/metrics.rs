@@ -1,0 +1,234 @@
+//! Counters / gauges / histograms for the serving engine.
+//!
+//! Cheap enough for the hot path (relaxed atomics), with a registry that
+//! snapshots everything for the `/stats`-style dump the CLI prints.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram: 60 buckets, ~100ns .. ~100s.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 60;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_of(ns: u64) -> usize {
+        // ~3 buckets per decade starting at 100ns
+        if ns < 100 {
+            return 0;
+        }
+        let log = (ns as f64 / 100.0).log10();
+        ((log * 6.0) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Upper bound (ns) of bucket i.
+    fn bucket_hi(i: usize) -> u64 {
+        (100.0 * 10f64.powf((i + 1) as f64 / 6.0)) as u64
+    }
+
+    pub fn observe(&self, d: Duration) {
+        let ns = d.as_nanos().min(u128::from(u64::MAX)) as u64;
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(Self::bucket_hi(i));
+            }
+        }
+        Duration::from_nanos(Self::bucket_hi(HIST_BUCKETS - 1))
+    }
+}
+
+/// Named metric registry shared across the engine.
+#[derive(Default, Clone)]
+pub struct Registry {
+    inner: Arc<Mutex<RegistryInner>>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            self.inner
+                .lock()
+                .unwrap()
+                .counters
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(
+            self.inner
+                .lock()
+                .unwrap()
+                .gauges
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            self.inner
+                .lock()
+                .unwrap()
+                .histograms
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Render a sorted text snapshot.
+    pub fn snapshot(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, c) in &g.counters {
+            out.push_str(&format!("counter {k} = {}\n", c.get()));
+        }
+        for (k, v) in &g.gauges {
+            out.push_str(&format!("gauge   {k} = {}\n", v.get()));
+        }
+        for (k, h) in &g.histograms {
+            out.push_str(&format!(
+                "hist    {k}: n={} mean={:?} p50={:?} p99={:?}\n",
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::default();
+        r.counter("reqs").add(5);
+        r.counter("reqs").inc();
+        assert_eq!(r.counter("reqs").get(), 6);
+        r.gauge("q").set(42);
+        r.gauge("q").add(-2);
+        assert_eq!(r.gauge("q").get(), 40);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.observe(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        // p50 of 1..1000µs should land around 500µs (log-bucketed => loose)
+        assert!(p50 >= Duration::from_micros(200));
+        assert!(p50 <= Duration::from_micros(1200));
+    }
+
+    #[test]
+    fn registry_snapshot_contains_names() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.histogram("lat").observe(Duration::from_millis(1));
+        let snap = r.snapshot();
+        assert!(snap.contains("counter a = 1"));
+        assert!(snap.contains("hist    lat"));
+    }
+
+    #[test]
+    fn same_name_same_instance() {
+        let r = Registry::default();
+        let c1 = r.counter("x");
+        let c2 = r.counter("x");
+        c1.inc();
+        assert_eq!(c2.get(), 1);
+    }
+}

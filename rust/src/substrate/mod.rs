@@ -1,0 +1,22 @@
+//! From-scratch infrastructure substrates.
+//!
+//! This build environment is fully offline: only the crates vendored for
+//! the PJRT bridge are resolvable (no tokio / clap / serde / criterion /
+//! proptest / rand). Per the reproduction mandate — *build every substrate
+//! the system depends on* — this module provides the equivalents:
+//!
+//! * [`rng`]      — SplitMix64 / Xoshiro256** PRNGs + distributions
+//! * [`json`]     — JSON parser/serializer (configs, manifest)
+//! * [`cli`]      — declarative argument parser
+//! * [`exec`]     — thread-pool executor + scoped parallelism
+//! * [`prop`]     — property-based testing (generate / shrink / run)
+//! * [`benchkit`] — measurement harness (warmup, percentiles, throughput)
+//! * [`metrics`]  — counters / gauges / histograms registry
+
+pub mod benchkit;
+pub mod cli;
+pub mod exec;
+pub mod json;
+pub mod metrics;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,211 @@
+//! Mini property-based testing framework (offline substitute for proptest).
+//!
+//! `Gen`-style generators over a seeded [`rng::Rng`](super::rng::Rng), a
+//! runner that executes N cases, and greedy input shrinking on failure
+//! (halving vectors / bisecting scalars). Used across the crate for the
+//! invariants DESIGN.md §7 lists (pack round-trips, allocator conservation,
+//! batcher budgets, top-k correctness...).
+
+use super::rng::Rng;
+
+/// A generator of values of type `T` from a PRNG.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Rng) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new<F: Fn(&mut Rng) -> T + 'static>(f: F) -> Self {
+        Self { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.f)(rng)
+    }
+
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| g(self.sample(r)))
+    }
+}
+
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(hi >= lo);
+    Gen::new(move |r| lo + r.below((hi - lo + 1) as u64) as usize)
+}
+
+pub fn f32_in(lo: f32, hi: f32) -> Gen<f32> {
+    Gen::new(move |r| r.uniform(lo, hi))
+}
+
+pub fn f32_normal(scale: f32) -> Gen<f32> {
+    Gen::new(move |r| r.normal_f32() * scale)
+}
+
+pub fn vec_of<T: 'static>(elem: Gen<T>, len: Gen<usize>) -> Gen<Vec<T>> {
+    Gen::new(move |r| {
+        let n = len.sample(r);
+        (0..n).map(|_| elem.sample(r)).collect()
+    })
+}
+
+pub fn pairs<A: 'static, B: 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    Gen::new(move |r| (a.sample(r), b.sample(r)))
+}
+
+/// Outcome of a property check over one input.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random inputs; on failure, attempt shrinking via
+/// the caller-provided `shrink` (return smaller candidates to retry) and
+/// panic with the minimal failing input's debug string.
+pub fn check_with_shrink<T, G, P, S>(
+    seed: u64,
+    cases: usize,
+    gen: G,
+    shrink: S,
+    prop: P,
+) where
+    T: Clone + std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink (bounded: a candidate identical to the current
+            // input must not loop forever)
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 1000 {
+                rounds += 1;
+                improved = false;
+                for cand in shrink(&best) {
+                    if format!("{cand:?}") == format!("{best:?}") {
+                        continue; // no progress — skip
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}): {best_msg}\n\
+                 minimal input: {best:?}"
+            );
+        }
+    }
+}
+
+/// Run without shrinking.
+pub fn check<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    check_with_shrink(seed, cases, gen, |_| vec![], prop);
+}
+
+/// Standard shrinker for Vec<T>: drop halves, then single elements.
+/// Every candidate is strictly shorter than the input (termination).
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    if n >= 2 {
+        out.push(v[..n / 2].to_vec());
+        out.push(v[n / 2..].to_vec());
+    }
+    if n <= 16 {
+        for i in 0..n {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+/// Assert helper producing PropResult.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, |r| r.below(1000) as i64, |&x| {
+            if x >= 0 {
+                Ok(())
+            } else {
+                Err("negative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(2, 200, |r| r.below(1000), |&x| {
+            if x < 900 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_input() {
+        // property: no vector contains a 7. Shrinker should reduce the
+        // failing vector to a single-element [7]-ish case.
+        let result = std::panic::catch_unwind(|| {
+            check_with_shrink(
+                3,
+                500,
+                |r| {
+                    (0..(r.below(20) + 1))
+                        .map(|_| r.below(10) as u8)
+                        .collect::<Vec<u8>>()
+                },
+                |v| shrink_vec(v),
+                |v| {
+                    if v.contains(&7) {
+                        Err("contains 7".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            )
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("[7]"), "shrunk output should be [7]: {msg}");
+    }
+
+    #[test]
+    fn generators_compose() {
+        let mut rng = Rng::new(4);
+        let g = vec_of(usize_in(0, 9), usize_in(1, 5));
+        for _ in 0..50 {
+            let v = g.sample(&mut rng);
+            assert!((1..=5).contains(&v.len()));
+            assert!(v.iter().all(|&x| x < 10));
+        }
+    }
+}

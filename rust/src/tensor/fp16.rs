@@ -1,0 +1,126 @@
+//! IEEE 754 half-precision conversions (storage format for quantization
+//! scales/zero-points and sink tokens, matching the paper's 16-bit
+//! parameter accounting). Software conversion, round-to-nearest-even.
+
+/// f32 -> f16 bits (round-to-nearest-even, IEEE 754 binary16).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        let mant = if frac != 0 { 0x200 | (frac >> 13) as u16 } else { 0 };
+        return sign | 0x7c00 | mant;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal
+        let exp16 = (unbiased + 15) as u32;
+        let mant = frac >> 13;
+        let rest = frac & 0x1fff;
+        let mut h = (exp16 << 10) | mant;
+        // round to nearest even
+        if rest > 0x1000 || (rest == 0x1000 && (mant & 1) == 1) {
+            h += 1; // may carry into exponent — that's correct behaviour
+        }
+        return sign | h as u16;
+    }
+    if unbiased >= -25 {
+        // subnormal: value = m · 2⁻²⁴ with m = round(1.f · 2^(e+24)),
+        // i.e. drop s = -e-1 bits of the 24-bit significand (e=-15 → 14)
+        let s = (-unbiased - 1) as u32; // 14..=24
+        let mant_full = frac | 0x80_0000;
+        let mant = mant_full >> s;
+        let rest = mant_full & ((1u32 << s) - 1);
+        let half = 1u32 << (s - 1);
+        let mut h = mant;
+        if rest > half || (rest == half && (mant & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    sign // underflow -> ±0
+}
+
+/// f16 bits -> f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = match (exp, frac) {
+        (0, 0) => sign,
+        (0, f) => {
+            // subnormal: normalize
+            let mut e = 127 - 15 + 1;
+            let mut m = f;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, f) => sign | 0x7f80_0000 | (f << 13),
+        (e, f) => sign | ((e + 127 - 15) << 23) | (f << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip through storage precision.
+#[inline]
+pub fn round_f16(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.099975586] {
+            assert_eq!(f16_to_f32(f32_to_f16(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // half has 11 bits of significand -> rel err <= 2^-11
+        let mut r = crate::substrate::rng::Rng::new(5);
+        for _ in 0..10_000 {
+            let x = r.uniform(-1000.0, 1000.0);
+            let y = round_f16(x);
+            if x != 0.0 {
+                assert!(((y - x) / x).abs() <= 1.0 / 2048.0, "{x} -> {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f32_to_f16(1e10), 0x7c00); // overflow
+        assert_eq!(round_f16(1e-10), 0.0); // underflow
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = 6.0e-5f32; // just below the normal/subnormal boundary
+        let y = round_f16(tiny);
+        assert!((y - tiny).abs() / tiny < 1e-2, "{tiny} -> {y}");
+        let sub = 3.0e-6f32;
+        let y = round_f16(sub);
+        assert!(y > 0.0 && (y - sub).abs() / sub < 0.2, "{sub} -> {y}");
+        // monotonic across the boundary
+        let a = round_f16(6.2e-5);
+        let b = round_f16(6.0e-5);
+        assert!(a >= b, "{a} {b}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Byte-level corpus grammar — MUST mirror python/compile/train.py so
+//! evaluation prompts come from the training distribution.
+//!
+//! Productions:
+//!   kv-plant   `@<key>=<val>;`     key 2-3 a-z, val 3-4 a-z
+//!   kv-query   `?<key>:<val>;`     queries a previously planted pair
+//!   span-copy  `[<span>|<span>]`   span 4-8 a-z
+//!   filler     word + space        from FILLER_WORDS
+
+use crate::substrate::rng::Rng;
+
+pub const FILLER_WORDS: &[&str] = &[
+    "the", "of", "and", "to", "in", "is", "that", "for", "as", "with", "on",
+    "by", "at", "from", "system", "cache", "token", "memory", "sparse",
+    "attention", "index", "query", "model",
+];
+
+pub fn rand_word(r: &mut Rng, lo: usize, hi: usize) -> Vec<u8> {
+    let n = lo + r.below((hi - lo + 1) as u64) as usize;
+    (0..n).map(|_| 97 + r.below(26) as u8).collect()
+}
+
+pub fn filler(r: &mut Rng) -> Vec<u8> {
+    let w = FILLER_WORDS[r.below(FILLER_WORDS.len() as u64) as usize];
+    let mut v = w.as_bytes().to_vec();
+    v.push(b' ');
+    v
+}
+
+/// A planted key-value fact: the bytes `@k=v;` and the query `?k:`.
+#[derive(Clone, Debug)]
+pub struct KvFact {
+    pub key: Vec<u8>,
+    pub val: Vec<u8>,
+}
+
+impl KvFact {
+    pub fn random(r: &mut Rng) -> Self {
+        Self { key: rand_word(r, 2, 3), val: rand_word(r, 3, 4) }
+    }
+
+    pub fn plant(&self) -> Vec<u8> {
+        let mut v = vec![b'@'];
+        v.extend_from_slice(&self.key);
+        v.push(b'=');
+        v.extend_from_slice(&self.val);
+        v.push(b';');
+        v
+    }
+
+    /// The query prefix whose continuation should be `val` + `;`.
+    pub fn query(&self) -> Vec<u8> {
+        let mut v = vec![b'?'];
+        v.extend_from_slice(&self.key);
+        v.push(b':');
+        v
+    }
+}
+
+/// Fill `out` with filler words up to `target` bytes.
+pub fn pad_filler(r: &mut Rng, out: &mut Vec<u8>, target: usize) {
+    while out.len() < target {
+        out.extend_from_slice(&filler(r));
+    }
+    out.truncate(target);
+}
+
+/// Build a context of `len` bytes with `facts` planted at the fractional
+/// `positions` (0.0 = start .. 1.0 = end), filler elsewhere.
+pub fn context_with_facts(
+    r: &mut Rng,
+    len: usize,
+    facts: &[KvFact],
+    positions: &[f64],
+) -> Vec<u8> {
+    assert_eq!(facts.len(), positions.len());
+    let mut out = Vec::with_capacity(len + 16);
+    let mut planted = facts
+        .iter()
+        .zip(positions)
+        .map(|(f, &p)| (((len as f64 * p) as usize).min(len.saturating_sub(16)), f))
+        .collect::<Vec<_>>();
+    planted.sort_by_key(|(at, _)| *at);
+    for (at, fact) in planted {
+        let target = at.max(out.len());
+        pad_filler(r, &mut out, target);
+        out.extend_from_slice(&fact.plant());
+    }
+    pad_filler(r, &mut out, len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fact_format_matches_training_grammar() {
+        let mut r = Rng::new(1);
+        let f = KvFact::random(&mut r);
+        let p = f.plant();
+        assert_eq!(p[0], b'@');
+        assert!(p.contains(&b'='));
+        assert_eq!(*p.last().unwrap(), b';');
+        let q = f.query();
+        assert_eq!(q[0], b'?');
+        assert_eq!(*q.last().unwrap(), b':');
+        assert!((2..=3).contains(&f.key.len()));
+        assert!((3..=4).contains(&f.val.len()));
+        assert!(f.key.iter().all(|&b| (b'a'..=b'z').contains(&b)));
+    }
+
+    #[test]
+    fn context_contains_facts_near_positions() {
+        let mut r = Rng::new(2);
+        let facts = vec![KvFact::random(&mut r), KvFact::random(&mut r)];
+        let ctx = context_with_facts(&mut r, 1000, &facts, &[0.2, 0.8]);
+        assert_eq!(ctx.len(), 1000);
+        for f in &facts {
+            let plant = f.plant();
+            let pos = ctx
+                .windows(plant.len())
+                .position(|w| w == plant.as_slice())
+                .expect("fact present");
+            assert!(pos < 990);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let gen = |seed| {
+            let mut r = Rng::new(seed);
+            let f = vec![KvFact::random(&mut r)];
+            context_with_facts(&mut r, 300, &f, &[0.5])
+        };
+        assert_eq!(gen(7), gen(7));
+        assert_ne!(gen(7), gen(8));
+    }
+}

@@ -1,0 +1,46 @@
+//! Synthetic workload generators for the evaluation suite.
+//!
+//! * [`corpus`]    — the byte-level generator grammar shared with
+//!   `python/compile/train.py` (kv pairs, span copies, filler): prompts
+//!   drawn from the training distribution so the tiny model's behaviour
+//!   is meaningful.
+//! * [`longbench`] — six-category LongBench-proxy task suite (Table 1).
+//! * [`ruler`]     — RULER-like task taxonomy at scaled context (Table 2,
+//!   Fig. 4): needle single/multi, multi-query, value tracking, CWE/FWE.
+//! * [`trace`]     — request-arrival traces for the serving benches
+//!   (Table 3, Fig. 5): open-loop Poisson-ish arrivals, mixed lengths.
+
+pub mod corpus;
+pub mod longbench;
+pub mod ruler;
+pub mod trace;
+
+/// A single evaluation item: feed `prompt`, generate
+/// `expected.len()` (+ slack) bytes greedily, score with `metric`.
+#[derive(Clone, Debug)]
+pub struct EvalItem {
+    pub prompt: Vec<u8>,
+    pub expected: Vec<u8>,
+    pub metric: Metric,
+    /// task label for aggregation ("NS1", "qasper-proxy", ...)
+    pub task: &'static str,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    ExactMatch,
+    Contains,
+    PrefixAccuracy,
+}
+
+impl EvalItem {
+    pub fn score(&self, generated: &[u8]) -> f64 {
+        match self.metric {
+            Metric::ExactMatch => crate::eval::exact_match(generated, &self.expected),
+            Metric::Contains => crate::eval::contains(generated, &self.expected),
+            Metric::PrefixAccuracy => {
+                crate::eval::prefix_accuracy(generated, &self.expected)
+            }
+        }
+    }
+}

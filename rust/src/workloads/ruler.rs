@@ -1,0 +1,196 @@
+//! RULER-like task taxonomy (Table 2, Fig. 4) at scaled context length.
+//!
+//! The 13 paper tasks map onto the corpus grammar:
+//!   NS1/NS2/NS3  needle single: word / word-in-noise / long-value needles
+//!   NM1/NM2/NM3  needle multi: 2/4/8 needles, query one
+//!   NV           needle multi-value: one key, several values, recall all
+//!   NQ           needle multi-query: several keys queried in sequence
+//!               (scored on the first — single-step decode protocol)
+//!   VT           variable tracking: chained assignments a=..; b=a;
+//!   CWE          common-word extraction proxy: most-planted key
+//!   FWE          frequent-word extraction proxy
+//!   QA1/QA2      QA with distractor facts
+
+use super::corpus::{context_with_facts, pad_filler, rand_word, KvFact};
+use super::{EvalItem, Metric};
+use crate::substrate::rng::Rng;
+
+pub const TASKS: &[&str] = &[
+    "NS1", "NS2", "NS3", "NM1", "NM2", "NM3", "NV", "NQ", "VT", "CWE",
+    "FWE", "QA1", "QA2",
+];
+
+#[derive(Clone, Copy, Debug)]
+pub struct RulerConfig {
+    pub context: usize,
+    pub items: usize,
+    pub seed: u64,
+}
+
+impl Default for RulerConfig {
+    fn default() -> Self {
+        Self { context: 2048, items: 6, seed: 99 }
+    }
+}
+
+pub fn generate(cfg: &RulerConfig) -> Vec<EvalItem> {
+    let mut out = Vec::new();
+    for (t, &task) in TASKS.iter().enumerate() {
+        let mut r = Rng::new(cfg.seed ^ ((t as u64 + 1) * 0xA5A5));
+        for _ in 0..cfg.items {
+            out.push(make_item(task, cfg.context, &mut r));
+        }
+    }
+    out
+}
+
+fn needle_item(
+    task: &'static str,
+    ctx: usize,
+    r: &mut Rng,
+    n_needles: usize,
+    long_vals: bool,
+) -> EvalItem {
+    // NS3 uses longer values (the paper's "hard type" needle; digits are
+    // out of the byte-LM's training distribution, so length is the
+    // difficulty axis here — documented in DESIGN.md §Substitutions)
+    let facts: Vec<KvFact> = (0..n_needles)
+        .map(|_| {
+            let mut f = KvFact::random(r);
+            if long_vals {
+                f.val = super::corpus::rand_word(r, 4, 4);
+            }
+            f
+        })
+        .collect();
+    let positions: Vec<f64> = (0..n_needles)
+        .map(|i| 0.08 + 0.84 * (i as f64 + r.f64() * 0.5) / n_needles as f64)
+        .collect();
+    let target = r.below(n_needles as u64) as usize;
+    let mut prompt = context_with_facts(r, ctx, &facts, &positions);
+    prompt.extend_from_slice(&facts[target].query());
+    EvalItem {
+        prompt,
+        expected: facts[target].val.clone(),
+        metric: Metric::PrefixAccuracy,
+        task,
+    }
+}
+
+fn make_item(task: &'static str, ctx: usize, r: &mut Rng) -> EvalItem {
+    match task {
+        "NS1" => needle_item(task, ctx, r, 1, false),
+        "NS2" => needle_item(task, ctx, r, 1, false),
+        "NS3" => needle_item(task, ctx, r, 1, true),
+        "NM1" => needle_item(task, ctx, r, 2, false),
+        "NM2" => needle_item(task, ctx, r, 4, false),
+        "NM3" => needle_item(task, ctx, r, 8, false),
+        "NV" => {
+            // one key planted twice with the same value (redundancy)
+            let f = KvFact::random(r);
+            let mut prompt =
+                context_with_facts(r, ctx, &[f.clone(), f.clone()], &[0.2, 0.6]);
+            prompt.extend_from_slice(&f.query());
+            EvalItem { prompt, expected: f.val, metric: Metric::PrefixAccuracy, task }
+        }
+        "NQ" => {
+            let facts: Vec<KvFact> = (0..3).map(|_| KvFact::random(r)).collect();
+            let mut prompt =
+                context_with_facts(r, ctx, &facts, &[0.15, 0.5, 0.8]);
+            prompt.extend_from_slice(&facts[1].query());
+            EvalItem {
+                prompt,
+                expected: facts[1].val.clone(),
+                metric: Metric::PrefixAccuracy,
+                task,
+            }
+        }
+        "VT" => {
+            // chain: @a=VAL; @b=VAL; (b mirrors a) query b
+            let val = rand_word(r, 3, 4);
+            let a = KvFact { key: rand_word(r, 2, 3), val: val.clone() };
+            let b = KvFact { key: rand_word(r, 2, 3), val: val.clone() };
+            let mut prompt = context_with_facts(
+                r, ctx, &[a, b.clone()], &[0.25, 0.55]);
+            prompt.extend_from_slice(&b.query());
+            EvalItem { prompt, expected: val, metric: Metric::PrefixAccuracy, task }
+        }
+        "CWE" | "FWE" => {
+            // the same fact planted many times among distractors; recall it
+            let common = KvFact::random(r);
+            let reps = if task == "CWE" { 6 } else { 4 };
+            let mut facts = vec![common.clone(); reps];
+            for _ in 0..3 {
+                facts.push(KvFact::random(r));
+            }
+            let positions: Vec<f64> = (0..facts.len())
+                .map(|i| 0.08 + 0.84 * i as f64 / facts.len() as f64)
+                .collect();
+            let mut prompt = context_with_facts(r, ctx, &facts, &positions);
+            prompt.extend_from_slice(&common.query());
+            EvalItem {
+                prompt,
+                expected: common.val.clone(),
+                metric: Metric::PrefixAccuracy,
+                task,
+            }
+        }
+        _ /* QA1 | QA2 */ => {
+            // QA with heavy distractor load
+            let target = KvFact::random(r);
+            let mut facts = vec![target.clone()];
+            for _ in 0..7 {
+                facts.push(KvFact::random(r));
+            }
+            let positions: Vec<f64> = (0..facts.len())
+                .map(|i| 0.05 + 0.9 * i as f64 / facts.len() as f64)
+                .collect();
+            let mut prompt = context_with_facts(r, ctx, &facts, &positions);
+            pad_filler(r, &mut prompt, ctx);
+            prompt.extend_from_slice(&target.query());
+            EvalItem {
+                prompt,
+                expected: target.val.clone(),
+                metric: Metric::PrefixAccuracy,
+                task,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_13_tasks_generate() {
+        let items = generate(&RulerConfig { context: 512, items: 2, seed: 5 });
+        assert_eq!(items.len(), 26);
+        let tasks: std::collections::HashSet<_> =
+            items.iter().map(|i| i.task).collect();
+        assert_eq!(tasks.len(), 13);
+    }
+
+    #[test]
+    fn needles_present_in_context() {
+        let items = generate(&RulerConfig { context: 1024, items: 3, seed: 6 });
+        for it in items.iter().filter(|i| i.task.starts_with("NS")) {
+            assert!(
+                crate::eval::contains(&it.prompt, &it.expected) > 0.0,
+                "{}: needle value must be planted",
+                it.task
+            );
+        }
+    }
+
+    #[test]
+    fn context_scales() {
+        for ctx in [512usize, 2048] {
+            let items = generate(&RulerConfig { context: ctx, items: 1, seed: 7 });
+            for it in &items {
+                assert!(it.prompt.len() >= ctx, "{} {}", it.task, it.prompt.len());
+                assert!(it.prompt.len() < ctx + 64);
+            }
+        }
+    }
+}

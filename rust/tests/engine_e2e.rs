@@ -1,0 +1,108 @@
+//! End-to-end engine tests: full serving loop over real artifacts.
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use std::path::Path;
+
+use selfindex_kv::config::EngineConfig;
+use selfindex_kv::coordinator::{Engine, MethodKind};
+use selfindex_kv::workloads::corpus::{context_with_facts, KvFact};
+use selfindex_kv::substrate::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts missing — run `make artifacts`; skipping");
+        None
+    }
+}
+
+fn needle_prompt(seed: u64, len: usize) -> (Vec<u8>, Vec<u8>) {
+    let mut r = Rng::new(seed);
+    let fact = KvFact::random(&mut r);
+    let mut p = context_with_facts(&mut r, len - 8, &[fact.clone()], &[0.4]);
+    p.extend_from_slice(&fact.query());
+    (p, fact.val)
+}
+
+#[test]
+fn serves_batched_requests_selfindex() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.max_batch = 4;
+    cfg.max_new_tokens = 6;
+    let mut engine = Engine::new(&dir, cfg, MethodKind::SelfIndex).unwrap();
+
+    for seed in 0..6 {
+        let (p, _) = needle_prompt(seed, 240);
+        engine.submit(p, 6).unwrap();
+    }
+    let results = engine.run_to_completion().unwrap();
+    assert_eq!(results.len(), 6);
+    for r in &results {
+        assert_eq!(r.generated.len(), 6);
+        assert!(r.ttft.as_nanos() > 0);
+        assert!(r.latency >= r.ttft);
+        assert!(r.decode_steps >= 6);
+    }
+    assert!(engine.idle());
+    assert_eq!(engine.metrics.counter("engine.prefills").get(), 6);
+}
+
+#[test]
+fn methods_agree_on_first_tokens() {
+    // The first generated token comes straight from prefill logits and is
+    // method-independent; later tokens should usually agree between the
+    // full cache and ours (identical model, near-lossless attention).
+    let Some(dir) = artifacts() else { return };
+    let (p, _) = needle_prompt(42, 240);
+
+    let mut generated = vec![];
+    for kind in [MethodKind::Full, MethodKind::SelfIndex] {
+        let mut cfg = EngineConfig::default();
+        cfg.max_batch = 1;
+        cfg.max_new_tokens = 4;
+        let mut engine = Engine::new(&dir, cfg, kind).unwrap();
+        engine.submit(p.clone(), 4).unwrap();
+        let results = engine.run_to_completion().unwrap();
+        generated.push(results[0].generated.clone());
+    }
+    assert_eq!(generated[0][0], generated[1][0], "prefill token must match");
+    let agree = generated[0]
+        .iter()
+        .zip(&generated[1])
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(agree >= 2, "full vs ours agreement too low: {generated:?}");
+}
+
+#[test]
+fn continuous_batching_interleaves() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.max_batch = 2;
+    cfg.max_new_tokens = 3;
+    let mut engine = Engine::new(&dir, cfg, MethodKind::SelfIndex).unwrap();
+    // more requests than batch slots: later ones admitted as slots free up
+    for seed in 0..5 {
+        let (p, _) = needle_prompt(100 + seed, 200);
+        engine.submit(p, 3).unwrap();
+    }
+    let results = engine.run_to_completion().unwrap();
+    assert_eq!(results.len(), 5);
+    // all prefills happened, none lost
+    assert_eq!(engine.metrics.counter("engine.prefills").get(), 5);
+}
+
+#[test]
+fn queue_backpressure_rejects() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.queue_limit = 2;
+    let mut engine = Engine::new(&dir, cfg, MethodKind::Full).unwrap();
+    let (p, _) = needle_prompt(7, 200);
+    engine.submit(p.clone(), 1).unwrap();
+    engine.submit(p.clone(), 1).unwrap();
+    assert!(engine.submit(p, 1).is_err(), "third submit must be rejected");
+}

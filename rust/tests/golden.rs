@@ -1,0 +1,182 @@
+//! Golden-vector parity: the Rust self-indexing pipeline must reproduce
+//! the Python reference (`python/compile/kernels/ref.py`) on the
+//! deterministic tensors exported by `python -m compile.golden`.
+//!
+//! codes/top-k compare bit-exact; floats within tolerance (the Rust path
+//! stores quant params in fp16, the Python oracle in f32 — quantized
+//! *values* still match because both round the same way; dequantized
+//! floats get a tolerance).
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use selfindex_kv::selfindex::codebook::CodebookBuilder;
+use selfindex_kv::selfindex::codes::encode_token;
+use selfindex_kv::selfindex::lut::Lut;
+use selfindex_kv::selfindex::score::{score_tokens, ByteLut};
+use selfindex_kv::selfindex::topk::top_k_indices;
+
+const L: usize = 256;
+const D: usize = 64;
+const G: usize = 16;
+const K_SEL: usize = 32;
+
+struct Golden(HashMap<String, (Vec<usize>, Vec<f32>)>);
+
+impl Golden {
+    fn load() -> Option<Self> {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden.bin");
+        if !path.exists() {
+            eprintln!("golden.bin missing — run `make artifacts`; skipping");
+            return None;
+        }
+        // same container as weights.bin
+        let store = selfindex_kv::model::WeightStore::load(&path).unwrap();
+        let mut map = HashMap::new();
+        for name in store.names() {
+            let (s, d) = store.get(name).unwrap();
+            map.insert(name.clone(), (s.to_vec(), d.to_vec()));
+        }
+        Some(Self(map))
+    }
+
+    fn get(&self, name: &str) -> &[f32] {
+        &self.0.get(name).unwrap_or_else(|| panic!("missing {name}")).1
+    }
+}
+
+#[test]
+fn golden_pipeline_parity() {
+    let Some(g) = Golden::load() else { return };
+
+    let k = g.get("k");
+    let kn_ref = g.get("kn");
+    let mu_ref = g.get("mu");
+
+    // --- normalization
+    let mu: Vec<f32> = (0..D)
+        .map(|j| k.iter().skip(j).step_by(D).sum::<f32>() / L as f32)
+        .collect();
+    for j in 0..D {
+        assert!((mu[j] - mu_ref[j]).abs() < 1e-4, "mu[{j}]");
+    }
+    let kn: Vec<f32> = k
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| v - mu[i % D])
+        .collect();
+    for i in 0..kn.len() {
+        assert!((kn[i] - kn_ref[i]).abs() < 1e-4, "kn[{i}]");
+    }
+
+    // --- sign codes: bit-exact
+    let codes_ref = g.get("codes");
+    for t in 0..L {
+        let codes = encode_token(&kn[t * D..(t + 1) * D]);
+        for gi in 0..G {
+            assert_eq!(
+                codes[gi] as f32, codes_ref[t * G + gi],
+                "codes[{t},{gi}]"
+            );
+        }
+    }
+
+    // --- codebook
+    let mut b = CodebookBuilder::new(G);
+    b.accumulate(&kn);
+    let cb = b.finalize();
+    let cb_ref = g.get("codebook");
+    for i in 0..cb.centroids.len() {
+        assert!(
+            (cb.centroids[i] - cb_ref[i]).abs() < 1e-4,
+            "codebook[{i}]: {} vs {}",
+            cb.centroids[i],
+            cb_ref[i]
+        );
+    }
+
+    // --- LUT + scores
+    let q = g.get("q");
+    let lut = Lut::build(q, &cb);
+    let lut_ref = g.get("lut");
+    for i in 0..lut.table.len() {
+        assert!((lut.table[i] - lut_ref[i]).abs() < 1e-3, "lut[{i}]");
+    }
+    let packed = selfindex_kv::selfindex::codes::encode_tokens_packed(&kn, D);
+    let mut scores = Vec::new();
+    score_tokens(&lut, &packed, L, &mut scores);
+    let scores_ref = g.get("scores");
+    for t in 0..L {
+        assert!(
+            (scores[t] - scores_ref[t]).abs() < 1e-2,
+            "scores[{t}]: {} vs {}",
+            scores[t],
+            scores_ref[t]
+        );
+    }
+    // byte-LUT path identical
+    let blut = ByteLut::from_lut(&lut);
+    let mut s2 = Vec::new();
+    selfindex_kv::selfindex::score::score_tokens_bytelut(&blut, &packed, L, &mut s2);
+    for t in 0..L {
+        assert!((scores[t] - s2[t]).abs() < 1e-4);
+    }
+
+    // --- top-k: bit-exact (same tie-break contract)
+    let topk_ref: Vec<u32> = g.get("topk").iter().map(|&x| x as u32).collect();
+    // use the reference scores so fp noise can't flip near-ties
+    let topk = top_k_indices(scores_ref, K_SEL);
+    assert_eq!(topk, topk_ref);
+
+    // --- quantized payloads: values bit-exact vs the oracle
+    let alpha_ref = g.get("alpha");
+    let alpha: Vec<f32> = (0..D)
+        .map(|j| {
+            let m = kn.iter().skip(j).step_by(D).fold(0.0f32, |a, &v| a.max(v.abs()));
+            if m > 0.0 {
+                m
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    for j in 0..D {
+        assert!((alpha[j] - alpha_ref[j]).abs() < 1e-4, "alpha[{j}]");
+    }
+    let khat: Vec<f32> = kn
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| v.abs() / alpha[i % D])
+        .collect();
+    let kq = selfindex_kv::quant::quantize_tokens(&khat, D, 32, 2);
+    let kq_ref = g.get("k_q");
+    let mut mismatches = 0;
+    for i in 0..kq.values.len() {
+        if kq.values[i] as f32 != kq_ref[i] {
+            mismatches += 1;
+        }
+    }
+    // fp16 param rounding can flip values sitting exactly on a rounding
+    // boundary; allow a tiny fraction
+    assert!(
+        mismatches * 1000 < kq.values.len(),
+        "{mismatches}/{} k_q mismatches",
+        kq.values.len()
+    );
+
+    // --- dense attention vs oracle
+    let v = g.get("v");
+    let dense_ref = g.get("dense_out");
+    let mut out = vec![0.0f32; D];
+    selfindex_kv::attention::dense::attend_dense(q, &kn, v, L, &mut out);
+    for j in 0..D {
+        assert!(
+            (out[j] - dense_ref[j]).abs() < 1e-3,
+            "dense_out[{j}]: {} vs {}",
+            out[j],
+            dense_ref[j]
+        );
+    }
+}

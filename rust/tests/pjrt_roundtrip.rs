@@ -1,0 +1,306 @@
+//! PJRT ↔ Rust numerics: load real artifacts, execute them, and check
+//! cross-program consistency and parity with the Rust-native kernels.
+//!
+//! Requires `make artifacts` (tests skip with a notice otherwise).
+
+use std::path::Path;
+
+use selfindex_kv::runtime::{HostTensor, PjrtRuntime};
+use selfindex_kv::substrate::rng::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts`; skipping");
+        return None;
+    }
+    Some(PjrtRuntime::load(&dir).expect("runtime load"))
+}
+
+#[test]
+fn quantize_block_matches_native() {
+    let Some(mut rt) = runtime() else { return };
+    let hd = rt.manifest.model.head_dim;
+    let t = 256usize;
+    let mut r = Rng::new(1);
+    let k: Vec<f32> = (0..t * hd).map(|_| r.normal_f32()).collect();
+    let v: Vec<f32> = (0..t * hd).map(|_| r.normal_f32()).collect();
+    let mu: Vec<f32> = (0..hd)
+        .map(|j| k.iter().skip(j).step_by(hd).sum::<f32>() / t as f32)
+        .collect();
+    let centered: Vec<f32> = k
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| x - mu[i % hd])
+        .collect();
+    let alpha: Vec<f32> = (0..hd)
+        .map(|j| {
+            centered
+                .iter()
+                .skip(j)
+                .step_by(hd)
+                .fold(0.0f32, |a, &x| a.max(x.abs()))
+                .max(1e-9)
+        })
+        .collect();
+
+    let outs = rt
+        .run(
+            "quantize_t256",
+            None,
+            &[
+                HostTensor::F32(k.clone(), vec![t, hd]),
+                HostTensor::F32(v.clone(), vec![t, hd]),
+                HostTensor::F32(mu.clone(), vec![hd]),
+                HostTensor::F32(alpha.clone(), vec![hd]),
+            ],
+        )
+        .expect("quantize_t256");
+    // outputs: codes, sums, counts, k_q, k_qs, k_zp, v_q, v_qs, v_zp
+    let codes = outs[0].as_i32();
+    let g = hd / 4;
+    for t_i in 0..t {
+        let native =
+            selfindex_kv::selfindex::codes::encode_token(&centered[t_i * hd..(t_i + 1) * hd]);
+        for gi in 0..g {
+            assert_eq!(
+                codes[t_i * g + gi], native[gi] as i32,
+                "codes[{t_i},{gi}]"
+            );
+        }
+    }
+    // value quantization parity (values u8 exactly; params f32 close)
+    let vq_native = selfindex_kv::quant::quantize_tokens(&v, hd, 32, 2);
+    let v_q = match &outs[6] {
+        HostTensor::U8(d, _) => d.clone(),
+        _ => panic!("v_q dtype"),
+    };
+    let mut mismatch = 0;
+    for i in 0..v_q.len() {
+        if v_q[i] != vq_native.values[i] {
+            mismatch += 1;
+        }
+    }
+    assert!(
+        mismatch * 500 < v_q.len(),
+        "v_q mismatches {mismatch}/{}",
+        v_q.len()
+    );
+}
+
+#[test]
+fn dense_attn_matches_native() {
+    let Some(mut rt) = runtime() else { return };
+    let m = rt.manifest.model.clone();
+    let (h, kvh, hd) = (m.n_heads, m.n_kv_heads, m.head_dim);
+    let r_ratio = m.gqa_ratio();
+    let l = 256usize;
+    let mut r = Rng::new(2);
+    let q: Vec<f32> = (0..h * hd).map(|_| r.normal_f32()).collect();
+    let k: Vec<f32> = (0..l * kvh * hd).map(|_| r.normal_f32()).collect();
+    let v: Vec<f32> = (0..l * kvh * hd).map(|_| r.normal_f32()).collect();
+    let n = 100usize; // true cache length
+
+    let outs = rt
+        .run(
+            "dense_attn_b1_l256",
+            None,
+            &[
+                HostTensor::F32(q.clone(), vec![1, h, hd]),
+                HostTensor::F32(k.clone(), vec![1, l, kvh, hd]),
+                HostTensor::F32(v.clone(), vec![1, l, kvh, hd]),
+                HostTensor::I32(vec![n as i32], vec![1]),
+            ],
+        )
+        .expect("dense_attn");
+    let o = outs[0].as_f32(); // (1, h, hd)
+
+    // native reference: per q-head attention over its kv head's rows
+    for qh in 0..h {
+        let kvh_idx = qh / r_ratio;
+        let mut keys = vec![0.0f32; n * hd];
+        let mut vals = vec![0.0f32; n * hd];
+        for t in 0..n {
+            let src = (t * kvh + kvh_idx) * hd;
+            keys[t * hd..(t + 1) * hd].copy_from_slice(&k[src..src + hd]);
+            vals[t * hd..(t + 1) * hd].copy_from_slice(&v[src..src + hd]);
+        }
+        let mut expect = vec![0.0f32; hd];
+        selfindex_kv::attention::dense::attend_dense(
+            &q[qh * hd..(qh + 1) * hd],
+            &keys,
+            &vals,
+            n,
+            &mut expect,
+        );
+        for j in 0..hd {
+            assert!(
+                (o[qh * hd + j] - expect[j]).abs() < 1e-4,
+                "head {qh} j {j}: {} vs {}",
+                o[qh * hd + j],
+                expect[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn decode_qkv_consistent_with_prefill_cache() {
+    // RoPE/cache coherence across programs: prefill's K row at position p
+    // must equal decode_qkv's k for the same input activations.
+    let Some(mut rt) = runtime() else { return };
+    let m = rt.manifest.model.clone();
+    let t = 48usize;
+    let mut r = Rng::new(3);
+    let mut tokens = vec![0i32; 256];
+    for tok in tokens.iter_mut().take(t) {
+        *tok = r.below(m.vocab_size as u64) as i32;
+    }
+    let outs = rt
+        .run(
+            "prefill_l256",
+            None,
+            &[
+                HostTensor::I32(tokens.clone(), vec![1, 256]),
+                HostTensor::scalar_i32(t as i32),
+            ],
+        )
+        .expect("prefill");
+    let k_cache = outs[0].as_f32(); // (layers, 256, kvh, hd)
+    let q_window = outs[3].as_f32(); // (layers, W, h, hd)
+    let w = rt.manifest.artifact("prefill_l256").unwrap().outputs[3].shape[1];
+
+    // embed token at position t-1, run decode_qkv layer 0, compare k
+    let last_tok = tokens[t - 1];
+    let x = rt
+        .run("embed_b1", None, &[HostTensor::I32(vec![last_tok], vec![1])])
+        .expect("embed")
+        .remove(0);
+    let qkv = rt
+        .run(
+            "decode_qkv_b1",
+            Some(0),
+            &[x, HostTensor::I32(vec![(t - 1) as i32], vec![1])],
+        )
+        .expect("decode_qkv");
+    let k_dec = qkv[1].as_f32(); // (1, kvh, hd)
+    let (kvh, hd, h) = (m.n_kv_heads, m.head_dim, m.n_heads);
+    for head in 0..kvh {
+        for j in 0..hd {
+            let cache_val = k_cache[((t - 1) * kvh + head) * hd + j]; // layer 0
+            let dec_val = k_dec[head * hd + j];
+            assert!(
+                (cache_val - dec_val).abs() < 1e-3,
+                "k mismatch head {head} j {j}: {cache_val} vs {dec_val}"
+            );
+        }
+    }
+    // q_window's last row equals decode q at position t-1
+    let q_dec = qkv[0].as_f32(); // (1, h, hd)
+    for qh in 0..h {
+        for j in 0..hd {
+            let win_val = q_window[((w - 1) * h + qh) * hd + j]; // layer 0, last w
+            let dec_val = q_dec[qh * hd + j];
+            assert!(
+                (win_val - dec_val).abs() < 1e-3,
+                "q mismatch head {qh} j {j}: {win_val} vs {dec_val}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_attn_program_matches_native_fused() {
+    // The PJRT fused sparse-attention program and the Rust-native fused
+    // kernel must agree on identical gathered inputs.
+    let Some(mut rt) = runtime() else { return };
+    let m = rt.manifest.model.clone();
+    let (h, kvh, hd) = (m.n_heads, m.n_kv_heads, m.head_dim);
+    let r_ratio = m.gqa_ratio();
+    let spec = rt.manifest.artifact("sparse_attn_b1").unwrap().clone();
+    let s = spec.inputs[1].shape[2]; // slots
+    let t_sink = spec.inputs[9].shape[2];
+    let g = hd / 4;
+    let ng = hd / 32;
+
+    let mut r = Rng::new(4);
+    let q: Vec<f32> = (0..h * hd).map(|_| r.normal_f32()).collect();
+    let codes: Vec<i32> = (0..kvh * s * g).map(|_| r.below(16) as i32).collect();
+    let k_q: Vec<u8> = (0..kvh * s * hd).map(|_| r.below(4) as u8).collect();
+    let v_q: Vec<u8> = (0..kvh * s * hd).map(|_| r.below(4) as u8).collect();
+    let k_qs: Vec<f32> = (0..kvh * s * ng).map(|_| r.uniform(0.1, 0.3)).collect();
+    let k_zp: Vec<f32> = (0..kvh * s * ng).map(|_| r.uniform(0.0, 0.1)).collect();
+    let v_qs: Vec<f32> = (0..kvh * s * ng).map(|_| r.uniform(0.1, 0.3)).collect();
+    let v_zp: Vec<f32> = (0..kvh * s * ng).map(|_| r.uniform(-0.4, 0.0)).collect();
+    let alpha: Vec<f32> = (0..kvh * hd).map(|_| r.uniform(0.5, 2.0)).collect();
+    let k_sink: Vec<f32> = (0..kvh * t_sink * hd).map(|_| r.normal_f32()).collect();
+    let v_sink: Vec<f32> = (0..kvh * t_sink * hd).map(|_| r.normal_f32()).collect();
+
+    let outs = rt
+        .run(
+            "sparse_attn_b1",
+            None,
+            &[
+                HostTensor::F32(q.clone(), vec![1, h, hd]),
+                HostTensor::I32(codes.clone(), vec![1, kvh, s, g]),
+                HostTensor::U8(k_q.clone(), vec![1, kvh, s, hd]),
+                HostTensor::F32(k_qs.clone(), vec![1, kvh, s, ng]),
+                HostTensor::F32(k_zp.clone(), vec![1, kvh, s, ng]),
+                HostTensor::U8(v_q.clone(), vec![1, kvh, s, hd]),
+                HostTensor::F32(v_qs.clone(), vec![1, kvh, s, ng]),
+                HostTensor::F32(v_zp.clone(), vec![1, kvh, s, ng]),
+                HostTensor::F32(alpha.clone(), vec![1, kvh, hd]),
+                HostTensor::F32(k_sink.clone(), vec![1, kvh, t_sink, hd]),
+                HostTensor::F32(v_sink.clone(), vec![1, kvh, t_sink, hd]),
+                HostTensor::F32(vec![0.0; kvh * s], vec![1, kvh, s]),
+                HostTensor::F32(vec![0.0; kvh * t_sink], vec![1, kvh, t_sink]),
+            ],
+        )
+        .expect("sparse_attn");
+    let o = outs[0].as_f32(); // (1, h, hd)
+
+    // native reference: dequantize, then dense attention over sinks+sel
+    let scale_bits = 2u32;
+    for qh in 0..h {
+        let head = qh / r_ratio;
+        let mut keys = Vec::with_capacity((t_sink + s) * hd);
+        let mut vals = Vec::with_capacity((t_sink + s) * hd);
+        for t in 0..t_sink {
+            let base = (head * t_sink + t) * hd;
+            keys.extend_from_slice(&k_sink[base..base + hd]);
+            vals.extend_from_slice(&v_sink[base..base + hd]);
+        }
+        for t in 0..s {
+            for j in 0..hd {
+                let pq = k_qs[(head * s + t) * ng + j / 32];
+                let pz = k_zp[(head * s + t) * ng + j / 32];
+                let mag = (pq * k_q[(head * s + t) * hd + j] as f32 + pz)
+                    * alpha[head * hd + j];
+                let code = codes[(head * s + t) * g + j / 4];
+                let bit = (code >> (3 - (j % 4))) & 1;
+                let sign = if bit == 1 { 1.0 } else { -1.0 };
+                keys.push(sign * mag);
+                let vq_ = v_qs[(head * s + t) * ng + j / 32];
+                let vz = v_zp[(head * s + t) * ng + j / 32];
+                vals.push(vq_ * v_q[(head * s + t) * hd + j] as f32 + vz);
+            }
+        }
+        let mut expect = vec![0.0f32; hd];
+        selfindex_kv::attention::dense::attend_dense(
+            &q[qh * hd..(qh + 1) * hd],
+            &keys,
+            &vals,
+            t_sink + s,
+            &mut expect,
+        );
+        for j in 0..hd {
+            assert!(
+                (o[qh * hd + j] - expect[j]).abs() < 1e-3,
+                "qh {qh} j {j}: {} vs {}",
+                o[qh * hd + j],
+                expect[j]
+            );
+        }
+    }
+    let _ = scale_bits;
+}
