@@ -6,6 +6,7 @@
 //! Requires artifacts. Run:
 //!   cargo run --release --example needle_retrieval -- [context_bytes]
 
+use selfindex_kv::substrate::error as anyhow;
 use std::path::Path;
 
 use selfindex_kv::config::EngineConfig;

@@ -8,6 +8,7 @@
 //! Requires artifacts: `make artifacts` first.
 //! Run: `cargo run --release --example serve_longcontext -- [method]`
 
+use selfindex_kv::substrate::error as anyhow;
 use std::path::Path;
 
 use selfindex_kv::config::EngineConfig;

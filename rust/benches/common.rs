@@ -1,6 +1,7 @@
 //! Shared helpers for the table/figure bench binaries.
 #![allow(dead_code)]
 
+use selfindex_kv::substrate::error as anyhow;
 use selfindex_kv::substrate::rng::Rng;
 
 /// Synthetic transformer-like key/value state: clustered directions with

@@ -1,0 +1,202 @@
+//! Decode-throughput trajectory bench: the fused one-pass retrieval
+//! (block-streaming score→select, DESIGN.md §Perf iteration 5) against
+//! the seed's three-pass sequence (flat `score_tokens_bytelut` vector →
+//! -inf masking → separate `top_k_indices` scan), plus end-to-end decode
+//! steps/sec single-head and fanned out across a worker pool.
+//!
+//! Emits `BENCH_decode.json` (see `SIKV_BENCH_OUT`) with tokens/sec and
+//! per-stage microseconds so future PRs have a machine-readable baseline
+//! to compare against. Paper context: Table 4 retrieval row + Fig. 5's
+//! "selection overhead is what separates sparse from fast-sparse".
+
+mod common;
+
+use std::time::Instant;
+
+use selfindex_kv::baselines::{AttentionMethod, SelfIndexing};
+use selfindex_kv::kvcache::layout::RecordLayout;
+use selfindex_kv::kvcache::pool::BlockPool;
+use selfindex_kv::kvcache::store::HeadCache;
+use selfindex_kv::selfindex::lut::Lut;
+use selfindex_kv::selfindex::score::ByteLut;
+use selfindex_kv::selfindex::topk::{top_k_indices, TopKStream};
+use selfindex_kv::selfindex::SelfIndexConfig;
+use selfindex_kv::substrate::benchkit::{
+    fmt_duration, write_bench_json, Bench, StageTimer, Table,
+};
+use selfindex_kv::substrate::exec::ThreadPool;
+use selfindex_kv::substrate::json::{num, obj, s};
+
+fn main() {
+    let tokens = if common::fast_mode() { 4096 } else { 65536 };
+    let dim = 64;
+    let budget = 96usize; // paper's LongBench budget
+    let sink_count = 64usize;
+    let recent_rows = 64usize;
+    let (keys, vals, query) = common::clustered_state(1234, tokens, dim);
+    let bench = Bench::from_env();
+
+    println!("== decode throughput @ {tokens} tokens, head_dim {dim}, k={budget} ==\n");
+
+    let si = SelfIndexConfig::default();
+    let mut pool = BlockPool::new(RecordLayout::new(dim, &si), 64, tokens / 64 + 2);
+    let mut hc = HeadCache::new(dim, si.clone());
+    hc.ingest_prefill(&mut pool, &keys, &vals).unwrap();
+    // sink ids spread over the context, ascending (as snapkv_select picks)
+    let sink_ids: Vec<u32> = (0..sink_count as u32).map(|i| i * 7).collect();
+    let end = tokens - recent_rows;
+
+    // ---- seed sequence: flat scores -> -inf masking -> heap top-k ------
+    let mut scores: Vec<f32> = Vec::new();
+    let mut seed_selected = Vec::new();
+    let s_seed = bench.run(|| {
+        let lut = Lut::build(std::hint::black_box(&query), hc.codebook());
+        let blut = ByteLut::from_lut(&lut);
+        hc.scores(&pool, &blut, &mut scores);
+        for &sk in &sink_ids {
+            scores[sk as usize] = f32::NEG_INFINITY;
+        }
+        for t in end..tokens {
+            scores[t] = f32::NEG_INFINITY;
+        }
+        seed_selected = top_k_indices(&scores, budget);
+        std::hint::black_box(&seed_selected);
+    });
+
+    // ---- fused one-pass: stream blocks into the threshold selector ----
+    let mut lut = Lut::empty(dim / 4);
+    let mut blut = ByteLut::empty();
+    let mut block_scores: Vec<f32> = Vec::new();
+    let mut selector = TopKStream::new(budget);
+    let mut fused_selected = Vec::new();
+    let mut stages = StageTimer::new();
+    let s_fused = bench.run(|| {
+        let t_lut = Instant::now();
+        lut.rebuild(std::hint::black_box(&query), hc.codebook());
+        blut.rebuild(&lut);
+        stages.add("lut_us", t_lut.elapsed());
+        let t_sel = Instant::now();
+        // the exact pipeline the serving path runs (shared implementation)
+        hc.stream_select(
+            &pool,
+            &blut,
+            end,
+            &sink_ids,
+            budget,
+            &mut block_scores,
+            &mut selector,
+            &mut fused_selected,
+        );
+        stages.add("score_select_us", t_sel.elapsed());
+        std::hint::black_box(&fused_selected);
+    });
+
+    // sanity: identical selections (masked entries excluded either way)
+    let seed_unmasked: Vec<u32> = seed_selected
+        .iter()
+        .copied()
+        .filter(|&i| scores[i as usize] != f32::NEG_INFINITY)
+        .collect();
+    assert_eq!(
+        fused_selected, seed_unmasked,
+        "fused selection must match the seed pipeline"
+    );
+
+    let retrieval_speedup = s_seed.mean.as_secs_f64() / s_fused.mean.as_secs_f64();
+    let mut table = Table::new(&["Retrieval pipeline", "Time", "vs fused"]);
+    table.row(vec![
+        "fused one-pass (stream+threshold)".into(),
+        fmt_duration(s_fused.mean),
+        "1.00x".into(),
+    ]);
+    table.row(vec![
+        "seed three-pass (score+mask+topk)".into(),
+        fmt_duration(s_seed.mean),
+        format!("{retrieval_speedup:.2}x"),
+    ]);
+    println!("{}", table.render());
+    println!("acceptance bar: fused >= 1.5x over seed — measured {retrieval_speedup:.2}x\n");
+
+    // ---- end-to-end decode step (single head, GQA group of 4) ---------
+    let r_heads = 4usize;
+    let mut ours = SelfIndexing::with_capacity(dim, si.clone(), tokens / 64 + 8);
+    ours.prefill(&keys, &vals, &[], 1);
+    let queries: Vec<f32> = (0..r_heads).flat_map(|_| query.clone()).collect();
+    let mut outs = vec![0.0f32; r_heads * dim];
+    let s_step = bench.run(|| {
+        let t_at = Instant::now();
+        ours.attend_group(
+            std::hint::black_box(&queries),
+            dim,
+            budget,
+            &mut outs,
+        );
+        stages.add("attend_group_us", t_at.elapsed());
+        std::hint::black_box(&outs);
+    });
+    let single_steps_per_sec = 1.0 / s_step.mean.as_secs_f64();
+    println!(
+        "single-head decode step (append-free attend_group, R={r_heads}): {} ({:.0} steps/s)\n",
+        fmt_duration(s_step.mean),
+        single_steps_per_sec
+    );
+
+    // ---- parallel decode fan-out (engine-shaped: one job per kv head) --
+    let n_heads = 8usize;
+    let workers = ThreadPool::default_size();
+    let mut heads: Vec<SelfIndexing> = (0..n_heads)
+        .map(|h| {
+            let (k, v, _) = common::clustered_state(4321 + h as u64, tokens, dim);
+            let mut m = SelfIndexing::with_capacity(dim, si.clone(), tokens / 64 + 8);
+            m.prefill(&k, &v, &[], 1);
+            m
+        })
+        .collect();
+    let mut head_outs = vec![0.0f32; n_heads * r_heads * dim];
+
+    let serial = bench.run(|| {
+        for (m, o) in heads.iter_mut().zip(head_outs.chunks_mut(r_heads * dim)) {
+            m.attend_group(std::hint::black_box(&queries), dim, budget, o);
+        }
+    });
+    let parallel = bench.run(|| {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = heads
+            .iter_mut()
+            .zip(head_outs.chunks_mut(r_heads * dim))
+            .map(|(m, o)| {
+                let q = &queries;
+                let job: Box<dyn FnOnce() + Send + '_> =
+                    Box::new(move || m.attend_group(q, dim, budget, o));
+                job
+            })
+            .collect();
+        workers.scoped(jobs);
+    });
+    let par_speedup = serial.mean.as_secs_f64() / parallel.mean.as_secs_f64();
+    println!(
+        "{n_heads}-head step: serial {} | parallel ({} workers) {} — {par_speedup:.2}x",
+        fmt_duration(serial.mean),
+        workers.workers(),
+        fmt_duration(parallel.mean)
+    );
+
+    let payload = obj(vec![
+        ("bench", s("decode_throughput")),
+        ("context_tokens", num(tokens as f64)),
+        ("budget", num(budget as f64)),
+        ("seed_retrieval_us", num(s_seed.mean.as_secs_f64() * 1e6)),
+        ("fused_retrieval_us", num(s_fused.mean.as_secs_f64() * 1e6)),
+        ("retrieval_speedup", num(retrieval_speedup)),
+        ("stage_us", stages.to_json()),
+        ("single_head_steps_per_sec", num(single_steps_per_sec)),
+        ("parallel_heads", num(n_heads as f64)),
+        ("parallel_workers", num(workers.workers() as f64)),
+        ("serial_8head_steps_per_sec", num(1.0 / serial.mean.as_secs_f64())),
+        ("parallel_8head_steps_per_sec", num(1.0 / parallel.mean.as_secs_f64())),
+        ("parallel_speedup", num(par_speedup)),
+    ]);
+    match write_bench_json("decode", payload) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_decode.json: {e}"),
+    }
+}

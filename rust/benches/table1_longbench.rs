@@ -11,6 +11,7 @@
 
 mod common;
 
+use selfindex_kv::substrate::error as anyhow;
 use selfindex_kv::baselines::{
     AttentionMethod, DoubleSparse, QuestCache, SelfIndexing, SnapKv,
 };

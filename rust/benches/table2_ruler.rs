@@ -7,6 +7,7 @@
 
 mod common;
 
+use selfindex_kv::substrate::error as anyhow;
 use selfindex_kv::config::EngineConfig;
 use selfindex_kv::coordinator::MethodKind;
 use selfindex_kv::substrate::benchkit::Table;

@@ -9,6 +9,7 @@
 
 mod common;
 
+use selfindex_kv::substrate::error as anyhow;
 use std::path::Path;
 use std::time::{Duration, Instant};
 

@@ -26,7 +26,8 @@ use selfindex_kv::selfindex::score::{exact_scores, score_tokens_bytelut, ByteLut
 use selfindex_kv::selfindex::SelfIndexConfig;
 use selfindex_kv::attention::dense::attend_dense;
 use selfindex_kv::attention::sparse::{attend_sparse_fused, SparseAttnScratch};
-use selfindex_kv::substrate::benchkit::{fmt_duration, Bench, Table};
+use selfindex_kv::selfindex::topk::{top_k_indices, TopKStream};
+use selfindex_kv::substrate::benchkit::{fmt_duration, Bench, StageTimer, Table};
 
 fn main() {
     let tokens = if common::fast_mode() { 2048 } else { 16384 };
@@ -108,7 +109,7 @@ fn main() {
     let blut = ByteLut::from_lut(&lut);
     let mut sc = Vec::new();
     hc.scores(&pool, &blut, &mut sc);
-    let selected = selfindex_kv::selfindex::topk::top_k_indices(&sc, budget);
+    let selected = top_k_indices(&sc, budget);
     let sinks = SinkStore::default();
     let mut scratch = SparseAttnScratch::new(dim);
     let mut out = vec![0.0f32; dim];
@@ -161,6 +162,65 @@ fn main() {
                 fmt_duration(s_nib.mean),
                 format!("{:.2}x", s_nib.mean.as_secs_f64() / s_byte.mean.as_secs_f64())]);
     println!("{}", at.render());
+
+    // ---------------- per-stage decode decomposition --------------------
+    // The fused pipeline has no standalone "select" stage: scoring and
+    // threshold top-k happen in the same block pass (so there is no flat
+    // score vector, no -inf sweep, no second O(L) scan to time). Stages
+    // shown per decode step; "score+select" is the fused pass.
+    println!("per-stage decode pipeline (seed three-pass vs fused one-pass):\n");
+    let mut seed_stages = StageTimer::new();
+    let mut fused_stages = StageTimer::new();
+    let mut flat = Vec::new();
+    let mut sel_out = Vec::new();
+    bench.run(|| {
+        let scored = seed_stages.time("score", || {
+            hc.scores(&pool, &blut, &mut flat);
+        });
+        std::hint::black_box(scored);
+        seed_stages.time("select", || {
+            sel_out = top_k_indices(&flat, budget);
+        });
+        std::hint::black_box(&sel_out);
+    });
+    let mut selector = TopKStream::new(budget);
+    let mut block_scores = Vec::new();
+    bench.run(|| {
+        fused_stages.time("score+select", || {
+            // the exact pipeline the serving path runs (shared impl)
+            hc.stream_select(
+                &pool, &blut, tokens, &[], budget,
+                &mut block_scores, &mut selector, &mut sel_out,
+            );
+        });
+        std::hint::black_box(&sel_out);
+    });
+    let attend_us = s_sparse.mean.as_secs_f64() * 1e6;
+    let mut st_tab = Table::new(&["stage", "seed", "fused"]);
+    st_tab.row(vec![
+        "score".into(),
+        format!("{:.1}µs", seed_stages.mean_us("score")),
+        "(fused)".into(),
+    ]);
+    st_tab.row(vec![
+        "select".into(),
+        format!("{:.1}µs", seed_stages.mean_us("select")),
+        "(fused)".into(),
+    ]);
+    st_tab.row(vec![
+        "score+select".into(),
+        format!(
+            "{:.1}µs",
+            seed_stages.mean_us("score") + seed_stages.mean_us("select")
+        ),
+        format!("{:.1}µs", fused_stages.mean_us("score+select")),
+    ]);
+    st_tab.row(vec![
+        "attend".into(),
+        format!("{attend_us:.1}µs"),
+        format!("{attend_us:.1}µs"),
+    ]);
+    println!("{}", st_tab.render());
 
     println!("cache block-size sweep (prefill ingest + one scoring pass):\n");
     let mut bt_tab = Table::new(&["block_tokens", "ingest", "score"]);

@@ -30,6 +30,12 @@ impl OnlineSoftmax {
 
     #[inline]
     pub fn push(&mut self, score: f32, value: &[f32]) {
+        // -inf score = zero weight. Without this guard the first pushed
+        // -inf hits `score - self.m` = `-inf - -inf` = NaN and poisons
+        // `l` (and `acc` via axpy) for every later push.
+        if score == f32::NEG_INFINITY {
+            return;
+        }
         if score <= self.m {
             let w = (score - self.m).exp();
             self.l += w;
@@ -49,6 +55,11 @@ impl OnlineSoftmax {
     /// into the denominator only.
     #[inline]
     pub fn push_score_only(&mut self, score: f32) {
+        // same NaN edge as `push`: exp(-inf - -inf) when nothing finite
+        // has been pushed yet
+        if score == f32::NEG_INFINITY {
+            return;
+        }
         if score <= self.m {
             self.l += (score - self.m).exp();
         } else {
@@ -193,6 +204,27 @@ mod tests {
         hc.ingest_prefill(&mut pool, &keys, &vals).unwrap();
         let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
         (hc, pool, keys, vals, q)
+    }
+
+    #[test]
+    fn neg_inf_first_score_does_not_poison_softmax() {
+        let dim = 4;
+        let mut sm = OnlineSoftmax::new(dim);
+        // the NaN edge: first score is -inf while m is still -inf
+        sm.push(f32::NEG_INFINITY, &[1.0; 4]);
+        assert!(sm.l.is_finite(), "l poisoned: {}", sm.l);
+        sm.push_score_only(f32::NEG_INFINITY);
+        assert!(sm.l.is_finite());
+        // a real score afterwards behaves as if the -inf never happened
+        sm.push(2.0, &[3.0, 1.0, 0.0, -1.0]);
+        let mut out = vec![0.0; dim];
+        sm.finish(&mut out);
+        assert_eq!(out, vec![3.0, 1.0, 0.0, -1.0]);
+        // only -inf pushes → empty distribution → zeros
+        let mut sm2 = OnlineSoftmax::new(dim);
+        sm2.push(f32::NEG_INFINITY, &[5.0; 4]);
+        sm2.finish(&mut out);
+        assert_eq!(out, vec![0.0; dim]);
     }
 
     #[test]

@@ -41,7 +41,11 @@ pub use snapkv::SnapKv;
 /// number of context tokens the method may involve in attention (methods
 /// with coarser granularity, e.g. page-based Quest, round up internally;
 /// static methods like SnapKV fix their budget at prefill).
-pub trait AttentionMethod {
+///
+/// `Send` so the engine can fan decode steps out across its worker pool
+/// at (sequence, kv-head) granularity — each head's method (and its
+/// scratch arenas) is owned by exactly one job per step.
+pub trait AttentionMethod: Send {
     fn name(&self) -> &'static str;
 
     /// Ingest the prompt: keys/vals (tokens × dim) f32 post-RoPE rows;

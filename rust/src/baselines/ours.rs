@@ -14,8 +14,33 @@ use crate::kvcache::sink::{snapkv_select, SinkStore};
 use crate::kvcache::store::HeadCache;
 use crate::selfindex::lut::Lut;
 use crate::selfindex::score::ByteLut;
-use crate::selfindex::topk::top_k_indices;
+use crate::selfindex::topk::TopKStream;
 use crate::selfindex::SelfIndexConfig;
+
+/// Per-head scratch arenas for the fused one-pass retrieval pipeline.
+/// Everything a decode step touches is preallocated here and reused, so
+/// the steady-state hot path performs zero heap allocations (asserted by
+/// `attend_is_allocation_free` below).
+struct RetrievalScratch {
+    lut: Lut,
+    blut: ByteLut,
+    /// one block's worth of scores (sized to the pool's block_tokens)
+    block_scores: Vec<f32>,
+    selector: TopKStream,
+    selected: Vec<u32>,
+}
+
+impl RetrievalScratch {
+    fn new(groups: usize) -> Self {
+        Self {
+            lut: Lut::empty(groups),
+            blut: ByteLut::empty(),
+            block_scores: vec![],
+            selector: TopKStream::new(0),
+            selected: vec![],
+        }
+    }
+}
 
 pub struct SelfIndexing {
     pub dim: usize,
@@ -23,8 +48,11 @@ pub struct SelfIndexing {
     pool: BlockPool,
     cache: HeadCache,
     sinks: SinkStore,
-    sink_set: std::collections::HashSet<u32>,
+    /// sink token indices, ascending — masking during selection is index
+    /// arithmetic over this list, not a -inf sweep of the score vector
+    sink_ids: Vec<u32>,
     scratch: SparseAttnScratch,
+    retrieval: RetrievalScratch,
     scores: Vec<f32>,
     /// decode-time fp rows that always attend ([k, v] interleaved)
     recent: Vec<f32>,
@@ -44,13 +72,53 @@ impl SelfIndexing {
             pool: BlockPool::new(layout, 64, capacity_blocks),
             cache: HeadCache::new(dim, cfg.clone()),
             sinks: SinkStore::default(),
-            sink_set: Default::default(),
+            sink_ids: vec![],
             scratch: SparseAttnScratch::new(dim),
+            retrieval: RetrievalScratch::new(dim / 4),
             scores: vec![],
             recent: vec![],
             recent_cap: 64,
             cfg,
         }
+    }
+
+    /// The fused one-pass decode retrieval (DESIGN.md §Perf iteration 5):
+    /// build the (summed, for GQA groups) LUT once, then stream packed
+    /// codes block-by-block out of the pool — scoring, sink/recent
+    /// masking, and threshold top-k selection all happen in the same pass
+    /// while each block's scores are L1-hot. No flat score vector, no
+    /// -inf masking sweep, no second O(L) selection scan.
+    ///
+    /// `queries` is one or more concatenated query heads (R × dim); the
+    /// selection is written to `self.retrieval.selected`.
+    fn fused_select(&mut self, queries: &[f32], k: usize) {
+        let dim = self.dim;
+        let cache = &self.cache;
+        let r = &mut self.retrieval;
+        r.lut.rebuild(&queries[..dim], cache.codebook());
+        for q in queries[dim..].chunks_exact(dim) {
+            r.lut.add_query(q, cache.codebook());
+        }
+        r.blut.rebuild(&r.lut);
+
+        // recent fp rows always attend: exclude them by scoring only the
+        // prefix (index arithmetic, pass 0 work)
+        let recent_rows = self.recent.len() / (2 * dim);
+        let end = cache.len().saturating_sub(recent_rows);
+
+        // sinks always attend via the fp sink store — stream_select skips
+        // them by index arithmetic over the sorted id list
+        let RetrievalScratch { blut, block_scores, selector, selected, .. } = r;
+        cache.stream_select(
+            &self.pool,
+            blut,
+            end,
+            &self.sink_ids,
+            k,
+            block_scores,
+            selector,
+            selected,
+        );
     }
 
     pub fn len(&self) -> usize {
@@ -74,13 +142,14 @@ impl SelfIndexing {
     }
 
     /// LUT-GEMV scores with sinks masked out (−inf), ready for top-k.
+    /// (Diagnostic path; the decode hot path is [`Self::fused_select`],
+    /// which never materializes this vector.)
     pub fn masked_scores(&mut self, query: &[f32]) -> &[f32] {
-        let mut lut = Lut::build(query, self.cache.codebook());
-        let _ = &mut lut;
+        let lut = Lut::build(query, self.cache.codebook());
         let blut = ByteLut::from_lut(&lut);
         let scores = &mut self.scores;
         self.cache.scores(&self.pool, &blut, scores);
-        for &s in &self.sink_set {
+        for &s in &self.sink_ids {
             if (s as usize) < scores.len() {
                 scores[s as usize] = f32::NEG_INFINITY;
             }
@@ -116,7 +185,9 @@ impl AttentionMethod for SelfIndexing {
                 }
             }
             self.sinks = SinkStore::build(self.dim, &sel, &centered, vals);
-            self.sink_set = sel.into_iter().collect();
+            let mut ids = sel;
+            ids.sort_unstable();
+            self.sink_ids = ids;
         }
     }
 
@@ -141,33 +212,14 @@ impl AttentionMethod for SelfIndexing {
     }
 
     fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]) {
-        let recent_rows = self.recent.len() / (2 * self.dim);
-        let compressed_recent = recent_rows; // these indices overlap `recent`
         let dyn_budget = budget.min(self.cache.len());
-        let scores = {
-            let mut lut = Lut::build(query, self.cache.codebook());
-            let _ = &mut lut;
-            let blut = ByteLut::from_lut(&lut);
-            self.cache.scores(&self.pool, &blut, &mut self.scores);
-            // mask sinks and the fp recent tail (they always attend)
-            for &s in &self.sink_set {
-                if (s as usize) < self.scores.len() {
-                    self.scores[s as usize] = f32::NEG_INFINITY;
-                }
-            }
-            let n = self.scores.len();
-            for t in n.saturating_sub(compressed_recent)..n {
-                self.scores[t] = f32::NEG_INFINITY;
-            }
-            &self.scores
-        };
-        let selected = top_k_indices(scores, dyn_budget);
+        self.fused_select(query, dyn_budget);
         let recent = std::mem::take(&mut self.recent);
         attend_sparse_fused(
             query,
             &self.cache,
             &self.pool,
-            &selected,
+            &self.retrieval.selected,
             &self.sinks,
             &recent,
             &mut self.scratch,
@@ -191,30 +243,13 @@ impl AttentionMethod for SelfIndexing {
         Some(out)
     }
 
-    /// GQA aggregation (paper): sum the R query heads' LUTs — one
-    /// LUT-GEMV pass and ONE top-k for the whole group — then attend each
-    /// head over the shared selection.
+    /// GQA aggregation (paper): sum the R query heads' LUTs — one fused
+    /// score→select pass and ONE top-k for the whole group — then attend
+    /// each head over the shared selection.
     fn attend_group(&mut self, queries: &[f32], dim: usize, budget: usize, outs: &mut [f32]) {
         assert_eq!(dim, self.dim);
         let r = queries.len() / dim;
-        // summed LUT over the group's queries
-        let mut lut = Lut::build(&queries[..dim], self.cache.codebook());
-        for i in 1..r {
-            lut.add_query(&queries[i * dim..(i + 1) * dim], self.cache.codebook());
-        }
-        let blut = ByteLut::from_lut(&lut);
-        self.cache.scores(&self.pool, &blut, &mut self.scores);
-        for &s in &self.sink_set {
-            if (s as usize) < self.scores.len() {
-                self.scores[s as usize] = f32::NEG_INFINITY;
-            }
-        }
-        let recent_rows = self.recent.len() / (2 * self.dim);
-        let n = self.scores.len();
-        for t in n.saturating_sub(recent_rows)..n {
-            self.scores[t] = f32::NEG_INFINITY;
-        }
-        let selected = top_k_indices(&self.scores, budget.min(self.cache.len()));
+        self.fused_select(queries, budget.min(self.cache.len()));
         let recent = std::mem::take(&mut self.recent);
         for i in 0..r {
             let q = &queries[i * dim..(i + 1) * dim];
@@ -223,7 +258,7 @@ impl AttentionMethod for SelfIndexing {
                 q,
                 &self.cache,
                 &self.pool,
-                &selected,
+                &self.retrieval.selected,
                 &self.sinks,
                 &recent,
                 &mut self.scratch,
@@ -327,6 +362,73 @@ mod tests {
         let mut out = vec![0.0; dim];
         ours.attend(&query, 32, &mut out);
         assert!(out.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn fused_select_matches_masked_scores_plus_topk() {
+        // the one-pass pipeline must select exactly what the seed's
+        // three-pass path (flat scores → -inf sweep → heap top-k) selects
+        let dim = 64;
+        let (keys, vals, query) = clustered(7, 777, dim, 4.0); // ragged last block
+        let mut ours = SelfIndexing::new(dim, SelfIndexConfig::default());
+        ours.prefill(&keys, &vals, &[], 1);
+        for i in 0..5 {
+            let k = &keys[i * dim..(i + 1) * dim];
+            ours.append(k, k); // nonzero fp recent tail to mask
+        }
+        for budget in [1usize, 17, 96, 512, 10_000] {
+            let reference = {
+                let scores = ours.masked_scores(&query).to_vec();
+                // reference masks the compressed copies of the recent tail
+                let recent_rows = 5;
+                let mut s = scores;
+                let n = s.len();
+                for t in n - recent_rows..n {
+                    s[t] = f32::NEG_INFINITY;
+                }
+                crate::selfindex::topk::top_k_indices(&s, budget.min(n))
+            };
+            let dyn_budget = budget.min(ours.cache().len());
+            ours.fused_select(&query, dyn_budget);
+            let fused = ours.retrieval.selected.clone();
+            // the fused path never emits masked entries; the reference
+            // includes them (ranked last, at -inf) when k exceeds the
+            // unmasked count — compare the meaningful prefix
+            assert_eq!(fused[..], reference[..fused.len()], "budget {budget}");
+            let masked = ours.sink_ids.len() + 5;
+            assert_eq!(
+                fused.len(),
+                dyn_budget.min(ours.cache().len() - masked),
+                "budget {budget}"
+            );
+        }
+    }
+
+    #[test]
+    fn attend_is_allocation_free() {
+        use crate::substrate::metrics::thread_allocations;
+        let dim = 64;
+        let (keys, vals, query) = clustered(8, 2048, dim, 4.0);
+        let mut ours = SelfIndexing::new(dim, SelfIndexConfig::default());
+        ours.prefill(&keys, &vals, &[], 1);
+        let r = 4; // GQA group
+        let queries: Vec<f32> = (0..r).flat_map(|_| query.clone()).collect();
+        let mut outs = vec![0.0f32; r * dim];
+        let mut out = vec![0.0f32; dim];
+        // warmup sizes every scratch arena (selector heap, block buffer,
+        // LUTs, softmax score list)
+        for _ in 0..2 {
+            ours.attend_group(&queries, dim, 96, &mut outs);
+            ours.attend(&query, 96, &mut out);
+        }
+        let before = thread_allocations();
+        for _ in 0..8 {
+            ours.attend_group(&queries, dim, 96, &mut outs);
+            ours.attend(&query, 96, &mut out);
+        }
+        let delta = thread_allocations() - before;
+        assert_eq!(delta, 0, "fused decode path allocated {delta} times");
+        assert!(outs.iter().any(|&x| x != 0.0));
     }
 
     #[test]

@@ -80,6 +80,9 @@ pub struct EngineConfig {
     pub queue_limit: usize,
     /// max new tokens per request default
     pub max_new_tokens: usize,
+    /// worker threads for the per-(sequence, kv-head) decode fan-out
+    /// (0 = one per available core)
+    pub decode_workers: usize,
     pub selfindex: SelfIndexConfig,
 }
 
@@ -92,6 +95,7 @@ impl Default for EngineConfig {
             pool_tokens: 1 << 16,
             queue_limit: 256,
             max_new_tokens: 32,
+            decode_workers: 0,
             selfindex: SelfIndexConfig::default(),
         }
     }
@@ -125,6 +129,9 @@ impl EngineConfig {
         }
         if let Some(x) = v.get("max_new_tokens").and_then(Json::as_usize) {
             cfg.max_new_tokens = x;
+        }
+        if let Some(x) = v.get("decode_workers").and_then(Json::as_usize) {
+            cfg.decode_workers = x;
         }
         let si = &mut cfg.selfindex;
         if let Some(x) = v.path("selfindex.sink_tokens").and_then(Json::as_usize) {

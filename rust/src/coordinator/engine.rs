@@ -7,6 +7,7 @@
 //! the configured [`AttentionMethod`] → `decode_out` → `logits` → greedy
 //! sample). The KV cache never crosses the PJRT boundary.
 
+use crate::substrate::error as anyhow;
 use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
@@ -21,6 +22,7 @@ use crate::baselines::{
 use crate::config::{EngineConfig, ModelConfig};
 use crate::runtime::{HostTensor, PjrtRuntime};
 use crate::selfindex::SelfIndexConfig;
+use crate::substrate::exec::ThreadPool;
 use crate::substrate::metrics::Registry;
 
 /// Which attention/cache method the engine serves with.
@@ -83,6 +85,8 @@ pub struct Engine {
     stash: Vec<Request>,
     /// total cached tokens across sequences (pool pressure heuristic)
     cached_tokens: usize,
+    /// decode fan-out workers: one scoped job per (sequence, kv head)
+    workers: ThreadPool,
 }
 
 impl Engine {
@@ -101,6 +105,11 @@ impl Engine {
             seqs: HashMap::new(),
             stash: vec![],
             cached_tokens: 0,
+            workers: if cfg.decode_workers == 0 {
+                ThreadPool::default_size()
+            } else {
+                ThreadPool::new(cfg.decode_workers)
+            },
             rt,
             model,
             cfg,
@@ -264,9 +273,12 @@ impl Engine {
         Ok(())
     }
 
-    fn do_decode(&mut self, ids: &[RequestId]) -> anyhow::Result<Vec<RequestResult>> {
-        let t0 = Instant::now();
-        let b = ids.len();
+    /// One decode step over `states`: embed → per-layer qkv → parallel
+    /// native attention (one scoped job per (sequence, kv-head), each
+    /// owning its method's scratch arenas and its disjoint slice of the
+    /// output buffer) → output projection → logits → greedy sample.
+    fn decode_batch(&mut self, states: &mut [SeqState]) -> anyhow::Result<()> {
+        let b = states.len();
         let m = self.model.clone();
         let (nl, kvh, hd, h, d) = (m.n_layers, m.n_kv_heads, m.head_dim, m.n_heads, m.d_model);
         let r = m.gqa_ratio();
@@ -283,8 +295,7 @@ impl Engine {
         // stage last tokens + positions (padded to bucket)
         let mut toks = vec![0i32; bb];
         let mut pos = vec![0i32; bb];
-        for (i, id) in ids.iter().enumerate() {
-            let s = &self.seqs[id];
+        for (i, s) in states.iter().enumerate() {
             toks[i] = *s.tokens.last().unwrap() as i32;
             pos[i] = (s.tokens.len() - 1) as i32;
         }
@@ -295,9 +306,9 @@ impl Engine {
         )?;
         let mut x = outs.into_iter().next().unwrap();
 
-        let budgets: Vec<usize> = ids
+        let budgets: Vec<usize> = states
             .iter()
-            .map(|id| self.cfg.budget_for(self.seqs[id].tokens.len()))
+            .map(|s| self.cfg.budget_for(s.tokens.len()))
             .collect();
 
         for l in 0..nl {
@@ -311,29 +322,35 @@ impl Engine {
             let kf = k.as_f32(); // (bb, kvh, hd)
             let vf = v.as_f32();
 
-            // native attention per (seq, kv head), GQA-grouped
+            // native attention per (seq, kv head), GQA-grouped, fanned
+            // out over the worker pool: heads are independent (their
+            // caches, pools, and scratch arenas are per-method state),
+            // and each job writes a disjoint r·hd chunk of `o`
             let mut o = vec![0.0f32; bb * h * hd];
-            for (i, id) in ids.iter().enumerate() {
-                let budget = budgets[i];
-                let seq = self.seqs.get_mut(id).unwrap();
-                for head in 0..kvh {
-                    let midx = l * kvh + head;
-                    let krow = &kf[(i * kvh + head) * hd..][..hd];
-                    let vrow = &vf[(i * kvh + head) * hd..][..hd];
-                    seq.heads[midx].append(krow, vrow);
-                    // group queries (r heads) contiguous in q layout
-                    let qbase = (i * h + head * r) * hd;
-                    let queries = &qf[qbase..qbase + r * hd];
-                    let obase = (i * h + head * r) * hd;
-                    seq.heads[midx].attend_group(
-                        queries,
-                        hd,
-                        budget,
-                        &mut o[obase..obase + r * hd],
-                    );
+            {
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(b * kvh);
+                let mut o_chunks = o.chunks_mut(r * hd);
+                for (i, seq) in states.iter_mut().enumerate() {
+                    let budget = budgets[i];
+                    let heads_l = &mut seq.heads[l * kvh..(l + 1) * kvh];
+                    for (head, method) in heads_l.iter_mut().enumerate() {
+                        // chunk (i*kvh + head) starts at (i*h + head*r)*hd
+                        let oslice = o_chunks.next().unwrap();
+                        let krow = &kf[(i * kvh + head) * hd..][..hd];
+                        let vrow = &vf[(i * kvh + head) * hd..][..hd];
+                        // group queries (r heads) contiguous in q layout
+                        let qbase = (i * h + head * r) * hd;
+                        let queries = &qf[qbase..qbase + r * hd];
+                        jobs.push(Box::new(move || {
+                            method.append(krow, vrow);
+                            method.attend_group(queries, hd, budget, oslice);
+                        }));
+                    }
                 }
+                self.workers.scoped(jobs);
             }
-            self.cached_tokens += ids.len() * kvh;
+            self.cached_tokens += b * kvh;
 
             let next = self.rt.run(
                 &format!("decode_out_b{bb}"),
@@ -352,14 +369,52 @@ impl Engine {
             .unwrap();
         let lf = logits.as_f32(); // (bb, vocab)
         let vocab = self.model.vocab_size;
-
-        let mut done = vec![];
-        for (i, id) in ids.iter().enumerate() {
+        for (i, seq) in states.iter_mut().enumerate() {
             let tok = argmax(&lf[i * vocab..(i + 1) * vocab]) as u8;
-            let seq = self.seqs.get_mut(id).unwrap();
             seq.tokens.push(tok);
             seq.generated.push(tok);
             seq.decode_steps += 1;
+        }
+        Ok(())
+    }
+
+    fn do_decode(&mut self, ids: &[RequestId]) -> anyhow::Result<Vec<RequestResult>> {
+        let t0 = Instant::now();
+        // Pull the batch's states out of the map once: the parallel
+        // per-(sequence, kv-head) fan-out needs disjoint `&mut` access,
+        // which a HashMap cannot hand out. States are always reinserted —
+        // on success, on error, AND on a re-raised fan-out panic — so a
+        // caller that catches the panic still sees a consistent map.
+        let mut states: Vec<SeqState> = Vec::with_capacity(ids.len());
+        for id in ids {
+            match self.seqs.remove(id) {
+                Some(st) => states.push(st),
+                None => {
+                    // put back what was already taken before reporting the
+                    // scheduler bug — the map must never lose live states
+                    for (id2, st) in ids.iter().zip(states.drain(..)) {
+                        self.seqs.insert(*id2, st);
+                    }
+                    panic!("decode of unknown/duplicate seq {id}");
+                }
+            }
+        }
+        let step = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.decode_batch(&mut states)
+        }));
+        for (id, st) in ids.iter().zip(states) {
+            self.seqs.insert(*id, st);
+        }
+        match step {
+            Ok(res) => res?,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+
+        let nl = self.model.n_layers;
+        let kvh = self.model.n_kv_heads;
+        let mut done = vec![];
+        for id in ids {
+            let seq = &self.seqs[id];
             if seq.generated.len() >= seq.req.max_new_tokens {
                 done.push(*id);
             }

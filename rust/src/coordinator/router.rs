@@ -6,15 +6,26 @@ use std::time::Instant;
 use super::request::{Request, RequestId};
 use crate::substrate::metrics::Registry;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum AdmitError {
-    #[error("queue full ({0} waiting)")]
     QueueFull(usize),
-    #[error("prompt too long: {0} > {1}")]
     PromptTooLong(usize, usize),
-    #[error("empty prompt")]
     EmptyPrompt,
 }
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull(n) => write!(f, "queue full ({n} waiting)"),
+            AdmitError::PromptTooLong(got, max) => {
+                write!(f, "prompt too long: {got} > {max}")
+            }
+            AdmitError::EmptyPrompt => write!(f, "empty prompt"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
 
 pub struct Router {
     queue: VecDeque<Request>,

@@ -10,6 +10,10 @@ pub type BlockId = u32;
 /// field sizes derive from [`RecordLayout`].
 #[derive(Clone, Debug)]
 pub struct Block {
+    /// packed sign codes, block-major contiguous — the streaming scorer
+    /// (`selfindex::score::score_block_bytelut`) reads this as one
+    /// sequential byte streak per block, which is what keeps the fused
+    /// score→select pass prefetch-friendly (DESIGN.md §Perf iteration 5)
     pub codes: Vec<u8>,
     pub k_mag: Vec<u8>,
     pub k_prm: Vec<QuantParams>,

@@ -18,7 +18,10 @@ pub struct BlockPool {
 
 impl BlockPool {
     pub fn new(layout: RecordLayout, block_tokens: usize, capacity_blocks: usize) -> Self {
-        assert!(block_tokens.is_multiple_of(4), "block_tokens % 4 == 0 (scorer unroll)");
+        assert!(
+            block_tokens.is_multiple_of(8),
+            "block_tokens % 8 == 0 (block scorer 8-token unroll)"
+        );
         let blocks = (0..capacity_blocks)
             .map(|_| Block::new(&layout, block_tokens))
             .collect();

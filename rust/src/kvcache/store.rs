@@ -15,6 +15,7 @@ use crate::selfindex::codebook::{Codebook, CodebookBuilder};
 use crate::selfindex::codes::code_signs;
 use crate::selfindex::normalize::ChannelStats;
 use crate::selfindex::score::{score_tokens_bytelut, ByteLut};
+use crate::selfindex::topk::TopKStream;
 use crate::selfindex::SelfIndexConfig;
 
 /// One attention head's compressed cache.
@@ -224,6 +225,89 @@ impl HeadCache {
                 break;
             }
         }
+    }
+
+    /// Stream LUT-GEMV scores block by block — the fused one-pass decode
+    /// pipeline (DESIGN.md §Perf iteration 5). Scores tokens `0..end`
+    /// straight out of each pool block (block-major contiguous reads, no
+    /// flat per-sequence score vector) and hands every block to `f` as
+    /// `(base_index, scores, block_max)` while it is still L1-hot, so the
+    /// caller's selector consumes it in the same pass. `scratch` is a
+    /// reusable per-block arena (resized once to `block_tokens`).
+    pub fn stream_scores<F: FnMut(usize, &[f32], f32)>(
+        &self,
+        pool: &BlockPool,
+        blut: &ByteLut,
+        end: usize,
+        scratch: &mut Vec<f32>,
+        mut f: F,
+    ) {
+        let bt = pool.block_tokens;
+        if scratch.len() < bt {
+            scratch.resize(bt, 0.0);
+        }
+        let end = end.min(self.len);
+        let mut base = 0usize;
+        for &id in &self.blocks {
+            if base >= end {
+                break;
+            }
+            let n = (end - base).min(bt);
+            let block = pool.get(id);
+            let bmax =
+                crate::selfindex::score::score_block_bytelut(blut, &block.codes, n, &mut scratch[..n]);
+            f(base, &scratch[..n], bmax);
+            base += n;
+        }
+    }
+
+    /// The fused one-pass score→select (DESIGN.md §Perf iteration 5):
+    /// stream blocks through [`Self::stream_scores`] into a threshold
+    /// [`TopKStream`], skipping the ascending `sink_ids` by walking a
+    /// cursor alongside the stream (index arithmetic, no -inf writes) and
+    /// rejecting whole blocks whose max cannot enter the kept set. The
+    /// top-`k` selection lands in `selected` (descending score). This is
+    /// the single implementation both the serving path
+    /// (`baselines::ours`) and the benches measure — they cannot drift.
+    /// All buffers are caller-owned arenas: zero allocations at steady
+    /// state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stream_select(
+        &self,
+        pool: &BlockPool,
+        blut: &ByteLut,
+        end: usize,
+        sink_ids: &[u32],
+        k: usize,
+        block_scores: &mut Vec<f32>,
+        selector: &mut TopKStream,
+        selected: &mut Vec<u32>,
+    ) {
+        selector.reset(k);
+        let mut si = 0usize; // cursor into the ascending sink list
+        self.stream_scores(pool, blut, end, block_scores, |base, scores, bmax| {
+            while si < sink_ids.len() && (sink_ids[si] as usize) < base {
+                si += 1;
+            }
+            // whole-block rejection: nothing in this block can enter the
+            // kept set (safe for ascending index streams — equal scores
+            // with larger indices never displace kept entries)
+            if selector.is_full() && bmax <= selector.threshold() {
+                return;
+            }
+            let mut next_sink = sink_ids.get(si).map_or(usize::MAX, |&s| s as usize);
+            for (o, &s) in scores.iter().enumerate() {
+                let idx = base + o;
+                if idx == next_sink {
+                    si += 1;
+                    next_sink =
+                        sink_ids.get(si).map_or(usize::MAX, |&s| s as usize);
+                    continue;
+                }
+                selector.push(idx as u32, s);
+            }
+        });
+        selector.finish_into(selected);
     }
 
     /// Dequantize token `idx`'s key (K') and value rows into `k_out`/`v_out`.
@@ -498,9 +582,16 @@ impl HeadCache {
 }
 
 /// Pool exhausted — scheduler must backpressure or preempt.
-#[derive(Debug, Clone, Copy, thiserror::Error)]
-#[error("kv cache pool exhausted")]
+#[derive(Debug, Clone, Copy)]
 pub struct CacheFull;
+
+impl std::fmt::Display for CacheFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("kv cache pool exhausted")
+    }
+}
+
+impl std::error::Error for CacheFull {}
 
 /// ±1 signs of each 4-bit code, MSB-first (code_signs as a flat table).
 static SIGN_TABLE: [[f32; 4]; 16] = {
@@ -593,6 +684,39 @@ mod tests {
         let mut scores = Vec::new();
         hc.scores(&pool, &blut, &mut scores);
         assert_eq!(scores.len(), 50);
+    }
+
+    #[test]
+    fn stream_scores_matches_flat_scores() {
+        let mut r = Rng::new(9);
+        let mut pool = mk_pool(64);
+        let mut hc = HeadCache::new(64, SelfIndexConfig::default());
+        // 100 tokens over 16-token blocks: full blocks + a ragged tail
+        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 100, 64),
+                          &rand_rows(&mut r, 100, 64)).unwrap();
+        let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
+        let blut = ByteLut::from_lut(&Lut::build(&q, hc.codebook()));
+        let mut flat = Vec::new();
+        hc.scores(&pool, &blut, &mut flat);
+
+        for end in [100usize, 90, 16, 1, 0] {
+            let mut streamed = vec![f32::NAN; end];
+            let mut scratch = Vec::new();
+            let mut blocks_seen = 0;
+            hc.stream_scores(&pool, &blut, end, &mut scratch, |base, s, bmax| {
+                let mut emax = f32::NEG_INFINITY;
+                for (o, &v) in s.iter().enumerate() {
+                    streamed[base + o] = v;
+                    emax = emax.max(v);
+                }
+                assert_eq!(bmax, emax);
+                blocks_seen += 1;
+            });
+            assert_eq!(blocks_seen, end.div_ceil(16));
+            for (a, b) in streamed.iter().zip(&flat[..end]) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -33,6 +33,17 @@ pub mod substrate;
 pub mod tensor;
 pub mod workloads;
 
+/// Allocation-counting allocator (see
+/// [`substrate::metrics::thread_allocations`]): zero-allocation
+/// guarantees on the decode hot path are enforced by tests, not
+/// comments. Installed only in the crate's own test builds so release
+/// binaries pay nothing and downstream crates keep their own choice of
+/// `#[global_allocator]`.
+#[cfg(test)]
+#[global_allocator]
+static GLOBAL_ALLOC: substrate::metrics::CountingAllocator =
+    substrate::metrics::CountingAllocator;
+
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
 }

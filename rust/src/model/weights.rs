@@ -16,15 +16,30 @@ use std::path::Path;
 
 pub const MAGIC: u32 = 0x53494B56;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WeightsError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad magic/version: {0:#x} v{1}")]
+    Io(std::io::Error),
     BadHeader(u32, u32),
-    #[error("malformed tensor entry: {0}")]
     Malformed(String),
 }
+
+impl From<std::io::Error> for WeightsError {
+    fn from(e: std::io::Error) -> Self {
+        WeightsError::Io(e)
+    }
+}
+
+impl std::fmt::Display for WeightsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WeightsError::Io(e) => write!(f, "io: {e}"),
+            WeightsError::BadHeader(m, v) => write!(f, "bad magic/version: {m:#x} v{v}"),
+            WeightsError::Malformed(m) => write!(f, "malformed tensor entry: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WeightsError {}
 
 /// Named f32 tensors in insertion order.
 pub struct WeightStore {

@@ -10,12 +10,21 @@
 //! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT bridge needs the vendored `xla` crate, which only resolves in
+//! environments that ship it. It is therefore gated behind the `pjrt`
+//! feature; the default build substitutes a stub whose `load` reports the
+//! missing backend, so every native-path test, bench, and example builds
+//! and runs with zero external dependencies (artifact-driven tests skip,
+//! exactly as they do when `make artifacts` has not been run).
 
-use std::collections::HashMap;
+#[cfg(not(feature = "pjrt"))]
 use std::path::Path;
 
+#[cfg(not(feature = "pjrt"))]
 use crate::model::manifest::Manifest;
-use crate::model::weights::WeightStore;
+#[cfg(not(feature = "pjrt"))]
+use crate::substrate::error as anyhow;
 
 /// Host-side tensor for staging PJRT inputs/outputs.
 #[derive(Clone, Debug)]
@@ -51,155 +60,210 @@ impl HostTensor {
     }
 }
 
+/// Stub runtime (default build, no `pjrt` feature): carries the manifest
+/// type so the engine API is identical, but `load` always fails with a
+/// clear message. Artifact-driven tests check for `manifest.json` first
+/// and skip, so the stub is never constructed in practice.
+#[cfg(not(feature = "pjrt"))]
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// uploaded weight buffers by parameter name ("emb", "l0.wq", ...)
-    weights: HashMap<String, xla::PjRtBuffer>,
     pub manifest: Manifest,
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl PjrtRuntime {
-    /// Create the CPU client, load the manifest, upload weights.
     pub fn load(artifact_dir: &Path) -> anyhow::Result<Self> {
-        let manifest =
-            Manifest::load(artifact_dir).map_err(anyhow::Error::msg)?;
-        let client = xla::PjRtClient::cpu()?;
-        let store = WeightStore::load(&artifact_dir.join("weights.bin"))?;
-        let mut weights = HashMap::new();
-        for name in store.names() {
-            let (shape, data) = store.get(name).unwrap();
-            let buf = client.buffer_from_host_buffer::<f32>(data, shape, None)?;
-            weights.insert(name.clone(), buf);
-        }
-        log::info!(
-            "pjrt: platform={} weights={} params",
-            client.platform_name(),
-            store.total_params()
-        );
-        Ok(Self { client, executables: HashMap::new(), weights, manifest })
+        // Parse the manifest anyway so configuration errors surface first.
+        let _ = Manifest::load(artifact_dir).map_err(anyhow::Error::msg)?;
+        Err(anyhow::anyhow!(
+            "built without the `pjrt` feature: PJRT artifacts in {} cannot \
+             be executed (rebuild with `--features pjrt` in an environment \
+             that vendors the xla crate)",
+            artifact_dir.display()
+        ))
     }
 
-    /// Compile (or fetch) an artifact by name.
-    pub fn executable(&mut self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
-        if !self.executables.contains_key(name) {
-            let spec = self.manifest.artifact(name).map_err(anyhow::Error::msg)?;
-            let t = std::time::Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.file.to_str().expect("utf8 path"),
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            log::info!("pjrt: compiled {name} in {:?}", t.elapsed());
-            self.executables.insert(name.to_string(), exe);
-        }
-        Ok(&self.executables[name])
+    pub fn warmup(&mut self, _names: &[&str]) -> anyhow::Result<()> {
+        Err(anyhow::anyhow!("pjrt feature disabled"))
     }
 
-    /// Eagerly compile a set of artifacts (startup warmup).
-    pub fn warmup(&mut self, names: &[&str]) -> anyhow::Result<()> {
-        for n in names {
-            self.executable(n)?;
-        }
-        Ok(())
-    }
-
-    fn upload(&self, t: &HostTensor) -> anyhow::Result<xla::PjRtBuffer> {
-        Ok(match t {
-            HostTensor::F32(d, s) => {
-                self.client.buffer_from_host_buffer::<f32>(d, s, None)?
-            }
-            HostTensor::I32(d, s) => {
-                self.client.buffer_from_host_buffer::<i32>(d, s, None)?
-            }
-            HostTensor::U8(d, s) => {
-                self.client.buffer_from_host_buffer::<u8>(d, s, None)?
-            }
-        })
-    }
-
-    /// Execute an artifact. `inputs` supplies the non-weight args in spec
-    /// order; args named `param:<name>` are taken from the weight buffers
-    /// (`layer:<field>` args are supplied by the caller via `layer_params`,
-    /// mapped as `l{layer}.{field}`).
     pub fn run(
         &mut self,
         name: &str,
-        layer: Option<usize>,
-        inputs: &[HostTensor],
+        _layer: Option<usize>,
+        _inputs: &[HostTensor],
     ) -> anyhow::Result<Vec<HostTensor>> {
-        // compile first (needs &mut self), then stage buffers
-        self.executable(name)?;
-        let spec = self
-            .manifest
-            .artifact(name)
-            .map_err(anyhow::Error::msg)?
-            .clone();
-        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(spec.inputs.len());
-        let mut staged: Vec<xla::PjRtBuffer> = Vec::new();
-        let mut next_input = 0usize;
-
-        // two passes: first create all staged buffers, then collect refs
-        let mut plan: Vec<Result<String, usize>> = Vec::with_capacity(spec.inputs.len());
-        for io in &spec.inputs {
-            if let Some(pname) = io.name.strip_prefix("param:") {
-                plan.push(Ok(pname.to_string()));
-            } else if let Some(field) = io.name.strip_prefix("layer:") {
-                let l = layer.expect("layer-parameterized artifact needs layer idx");
-                plan.push(Ok(format!("l{l}.{field}")));
-            } else {
-                let t = inputs
-                    .get(next_input)
-                    .unwrap_or_else(|| panic!("{name}: missing input '{}'", io.name));
-                debug_assert_eq!(
-                    t.shape(),
-                    &io.shape[..],
-                    "{name}: shape mismatch on '{}'",
-                    io.name
-                );
-                staged.push(self.upload(t)?);
-                plan.push(Err(staged.len() - 1));
-                next_input += 1;
-            }
-        }
-        assert_eq!(next_input, inputs.len(), "{name}: unused inputs");
-        for p in &plan {
-            match p {
-                Ok(wname) => bufs.push(
-                    self.weights
-                        .get(wname)
-                        .unwrap_or_else(|| panic!("weight '{wname}' missing")),
-                ),
-                Err(i) => bufs.push(&staged[*i]),
-            }
-        }
-
-        let exe = &self.executables[name];
-        let result = exe.execute_b(&bufs)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        assert_eq!(
-            parts.len(),
-            spec.outputs.len(),
-            "{name}: output arity mismatch"
-        );
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, ospec) in parts.into_iter().zip(&spec.outputs) {
-            out.push(literal_to_host(&lit, ospec)?);
-        }
-        Ok(out)
+        Err(anyhow::anyhow!("pjrt feature disabled: cannot execute {name}"))
     }
 }
 
-fn literal_to_host(
-    lit: &xla::Literal,
-    spec: &crate::model::manifest::IoSpec,
-) -> anyhow::Result<HostTensor> {
-    let shape = spec.shape.clone();
-    Ok(match spec.dtype.as_str() {
-        "float32" => HostTensor::F32(lit.to_vec::<f32>()?, shape),
-        "int32" => HostTensor::I32(lit.to_vec::<i32>()?, shape),
-        "uint8" => HostTensor::U8(lit.to_vec::<u8>()?, shape),
-        other => anyhow::bail!("unsupported output dtype {other}"),
-    })
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::PjrtRuntime;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use super::HostTensor;
+    use crate::model::manifest::Manifest;
+    use crate::model::weights::WeightStore;
+    use crate::substrate::error as anyhow;
+
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+        /// uploaded weight buffers by parameter name ("emb", "l0.wq", ...)
+        weights: HashMap<String, xla::PjRtBuffer>,
+        pub manifest: Manifest,
+    }
+
+    impl PjrtRuntime {
+        /// Create the CPU client, load the manifest, upload weights.
+        pub fn load(artifact_dir: &Path) -> anyhow::Result<Self> {
+            let manifest =
+                Manifest::load(artifact_dir).map_err(anyhow::Error::msg)?;
+            let client = xla::PjRtClient::cpu()?;
+            let store = WeightStore::load(&artifact_dir.join("weights.bin"))?;
+            let mut weights = HashMap::new();
+            for name in store.names() {
+                let (shape, data) = store.get(name).unwrap();
+                let buf = client.buffer_from_host_buffer::<f32>(data, shape, None)?;
+                weights.insert(name.clone(), buf);
+            }
+            eprintln!(
+                "pjrt: platform={} weights={} params",
+                client.platform_name(),
+                store.total_params()
+            );
+            Ok(Self { client, executables: HashMap::new(), weights, manifest })
+        }
+
+        /// Compile (or fetch) an artifact by name.
+        pub fn executable(
+            &mut self,
+            name: &str,
+        ) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+            if !self.executables.contains_key(name) {
+                let spec = self.manifest.artifact(name).map_err(anyhow::Error::msg)?;
+                let t = std::time::Instant::now();
+                let proto = xla::HloModuleProto::from_text_file(
+                    spec.file.to_str().expect("utf8 path"),
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp)?;
+                eprintln!("pjrt: compiled {name} in {:?}", t.elapsed());
+                self.executables.insert(name.to_string(), exe);
+            }
+            Ok(&self.executables[name])
+        }
+
+        /// Eagerly compile a set of artifacts (startup warmup).
+        pub fn warmup(&mut self, names: &[&str]) -> anyhow::Result<()> {
+            for n in names {
+                self.executable(n)?;
+            }
+            Ok(())
+        }
+
+        fn upload(&self, t: &HostTensor) -> anyhow::Result<xla::PjRtBuffer> {
+            Ok(match t {
+                HostTensor::F32(d, s) => {
+                    self.client.buffer_from_host_buffer::<f32>(d, s, None)?
+                }
+                HostTensor::I32(d, s) => {
+                    self.client.buffer_from_host_buffer::<i32>(d, s, None)?
+                }
+                HostTensor::U8(d, s) => {
+                    self.client.buffer_from_host_buffer::<u8>(d, s, None)?
+                }
+            })
+        }
+
+        /// Execute an artifact. `inputs` supplies the non-weight args in spec
+        /// order; args named `param:<name>` are taken from the weight buffers
+        /// (`layer:<field>` args are supplied by the caller via `layer_params`,
+        /// mapped as `l{layer}.{field}`).
+        pub fn run(
+            &mut self,
+            name: &str,
+            layer: Option<usize>,
+            inputs: &[HostTensor],
+        ) -> anyhow::Result<Vec<HostTensor>> {
+            // compile first (needs &mut self), then stage buffers
+            self.executable(name)?;
+            let spec = self
+                .manifest
+                .artifact(name)
+                .map_err(anyhow::Error::msg)?
+                .clone();
+            let mut bufs: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(spec.inputs.len());
+            let mut staged: Vec<xla::PjRtBuffer> = Vec::new();
+            let mut next_input = 0usize;
+
+            // two passes: first create all staged buffers, then collect refs
+            let mut plan: Vec<Result<String, usize>> =
+                Vec::with_capacity(spec.inputs.len());
+            for io in &spec.inputs {
+                if let Some(pname) = io.name.strip_prefix("param:") {
+                    plan.push(Ok(pname.to_string()));
+                } else if let Some(field) = io.name.strip_prefix("layer:") {
+                    let l = layer.expect("layer-parameterized artifact needs layer idx");
+                    plan.push(Ok(format!("l{l}.{field}")));
+                } else {
+                    let t = inputs
+                        .get(next_input)
+                        .unwrap_or_else(|| panic!("{name}: missing input '{}'", io.name));
+                    debug_assert_eq!(
+                        t.shape(),
+                        &io.shape[..],
+                        "{name}: shape mismatch on '{}'",
+                        io.name
+                    );
+                    staged.push(self.upload(t)?);
+                    plan.push(Err(staged.len() - 1));
+                    next_input += 1;
+                }
+            }
+            assert_eq!(next_input, inputs.len(), "{name}: unused inputs");
+            for p in &plan {
+                match p {
+                    Ok(wname) => bufs.push(
+                        self.weights
+                            .get(wname)
+                            .unwrap_or_else(|| panic!("weight '{wname}' missing")),
+                    ),
+                    Err(i) => bufs.push(&staged[*i]),
+                }
+            }
+
+            let exe = &self.executables[name];
+            let result = exe.execute_b(&bufs)?;
+            let tuple = result[0][0].to_literal_sync()?;
+            let parts = tuple.to_tuple()?;
+            assert_eq!(
+                parts.len(),
+                spec.outputs.len(),
+                "{name}: output arity mismatch"
+            );
+            let mut out = Vec::with_capacity(parts.len());
+            for (lit, ospec) in parts.into_iter().zip(&spec.outputs) {
+                out.push(literal_to_host(&lit, ospec)?);
+            }
+            Ok(out)
+        }
+    }
+
+    fn literal_to_host(
+        lit: &xla::Literal,
+        spec: &crate::model::manifest::IoSpec,
+    ) -> anyhow::Result<HostTensor> {
+        let shape = spec.shape.clone();
+        Ok(match spec.dtype.as_str() {
+            "float32" => HostTensor::F32(lit.to_vec::<f32>()?, shape),
+            "int32" => HostTensor::I32(lit.to_vec::<i32>()?, shape),
+            "uint8" => HostTensor::U8(lit.to_vec::<u8>()?, shape),
+            other => anyhow::bail!("unsupported output dtype {other}"),
+        })
+    }
 }

@@ -13,30 +13,56 @@ pub struct Lut {
 }
 
 impl Lut {
+    /// Empty (zeroed) table — a reusable arena for [`Lut::rebuild`].
+    pub fn empty(groups: usize) -> Self {
+        Self { groups, table: vec![0.0f32; groups * 16] }
+    }
+
     /// Build from a (rotated, *not* centered) query — centering keys does
     /// not require centering queries (Eq. 7); the LUT absorbs everything.
     pub fn build(query: &[f32], codebook: &Codebook) -> Self {
+        let mut lut = Lut::empty(codebook.groups);
+        lut.rebuild(query, codebook);
+        lut
+    }
+
+    /// Rebuild in place (decode hot path: no per-step allocation once the
+    /// table has its capacity, and no redundant zero-fill — the loop
+    /// below overwrites every slot).
+    pub fn rebuild(&mut self, query: &[f32], codebook: &Codebook) {
         assert_eq!(query.len(), codebook.groups * 4);
-        let mut table = vec![0.0f32; codebook.groups * 16];
+        self.groups = codebook.groups;
+        let needed = codebook.groups * 16;
+        if self.table.len() != needed {
+            self.table.clear();
+            self.table.resize(needed, 0.0);
+        }
         for (g, qsub) in query.chunks_exact(4).enumerate() {
             for c in 0..16 {
                 let cent = codebook.centroid(g, c);
-                table[g * 16 + c] = qsub[0] * cent[0]
+                self.table[g * 16 + c] = qsub[0] * cent[0]
                     + qsub[1] * cent[1]
                     + qsub[2] * cent[2]
                     + qsub[3] * cent[3];
             }
         }
-        Self { groups: codebook.groups, table }
     }
 
     /// Accumulate another query's table into this one (GQA: the R query
     /// heads sharing a KV head sum their tables, equivalent to scoring
-    /// with the summed query — one LUT-GEMV pass instead of R).
+    /// with the summed query — one LUT-GEMV pass instead of R). In-place:
+    /// no temporary table.
     pub fn add_query(&mut self, query: &[f32], codebook: &Codebook) {
-        let other = Lut::build(query, codebook);
-        for (a, b) in self.table.iter_mut().zip(&other.table) {
-            *a += b;
+        assert_eq!(query.len(), codebook.groups * 4);
+        assert_eq!(self.groups, codebook.groups);
+        for (g, qsub) in query.chunks_exact(4).enumerate() {
+            for c in 0..16 {
+                let cent = codebook.centroid(g, c);
+                self.table[g * 16 + c] += qsub[0] * cent[0]
+                    + qsub[1] * cent[1]
+                    + qsub[2] * cent[2]
+                    + qsub[3] * cent[3];
+            }
         }
     }
 

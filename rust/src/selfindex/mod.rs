@@ -30,8 +30,8 @@ pub use codebook::{Codebook, CodebookBuilder};
 pub use codes::{encode_token, encode_tokens_packed, sign_code};
 pub use lut::Lut;
 pub use normalize::ChannelStats;
-pub use score::{score_tokens, score_tokens_bytelut, ByteLut};
-pub use topk::top_k_indices;
+pub use score::{score_block_bytelut, score_tokens, score_tokens_bytelut, ByteLut};
+pub use topk::{top_k_indices, TopKStream};
 
 /// Paper hyper-parameters + ablation switches.
 #[derive(Clone, Debug)]

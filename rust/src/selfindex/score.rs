@@ -40,18 +40,36 @@ pub struct ByteLut {
 }
 
 impl ByteLut {
+    /// Empty table — a reusable arena for [`ByteLut::rebuild`].
+    pub fn empty() -> Self {
+        Self { bytes_per_token: 0, table: vec![] }
+    }
+
     pub fn from_lut(lut: &Lut) -> Self {
+        let mut blut = Self::empty();
+        blut.rebuild(lut);
+        blut
+    }
+
+    /// Rebuild in place (decode hot path: no per-step allocation once the
+    /// table has its capacity, and no redundant zero-fill — the loop
+    /// below overwrites every slot).
+    pub fn rebuild(&mut self, lut: &Lut) {
         let bpt = lut.groups / 2;
-        let mut table = vec![0.0f32; bpt * 256];
+        self.bytes_per_token = bpt;
+        let needed = bpt * 256;
+        if self.table.len() != needed {
+            self.table.clear();
+            self.table.resize(needed, 0.0);
+        }
         for j in 0..bpt {
             let lo = &lut.table[(2 * j) * 16..(2 * j) * 16 + 16];
             let hi = &lut.table[(2 * j + 1) * 16..(2 * j + 1) * 16 + 16];
-            let dst = &mut table[j * 256..(j + 1) * 256];
+            let dst = &mut self.table[j * 256..(j + 1) * 256];
             for b in 0..256 {
                 dst[b] = lo[b & 0x0f] + hi[b >> 4];
             }
         }
-        Self { bytes_per_token: bpt, table }
     }
 }
 
@@ -95,6 +113,54 @@ pub fn score_tokens_bytelut(
     }
 }
 
+/// Block scorer for the fused streaming pipeline (§Perf iteration 5):
+/// scores `n_tokens` packed codes straight out of one cache block into a
+/// caller-owned slice (no allocation, no Vec bookkeeping) and returns the
+/// block maximum so the streaming selector can reject whole blocks below
+/// its running k-th threshold. 8-token unroll: blocks are block-major
+/// contiguous, so eight rows span 8·bpt consecutive bytes — enough
+/// independent accumulator chains to hide the L1 load latency of the
+/// table lookups.
+pub fn score_block_bytelut(
+    blut: &ByteLut,
+    packed: &[u8],
+    n_tokens: usize,
+    out: &mut [f32],
+) -> f32 {
+    let bpt = blut.bytes_per_token;
+    assert!(packed.len() >= n_tokens * bpt);
+    assert!(out.len() >= n_tokens);
+    let table = &blut.table;
+    let mut bmax = f32::NEG_INFINITY;
+
+    let chunks = n_tokens / 8;
+    for c in 0..chunks {
+        let t0 = c * 8;
+        let base = t0 * bpt;
+        let mut acc = [0.0f32; 8];
+        for j in 0..bpt {
+            let tj = &table[j * 256..(j + 1) * 256];
+            for (u, a) in acc.iter_mut().enumerate() {
+                *a += tj[packed[base + u * bpt + j] as usize];
+            }
+        }
+        for (u, &a) in acc.iter().enumerate() {
+            out[t0 + u] = a;
+            bmax = bmax.max(a);
+        }
+    }
+    for t in chunks * 8..n_tokens {
+        let row = &packed[t * bpt..(t + 1) * bpt];
+        let mut a = 0.0f32;
+        for j in 0..bpt {
+            a += table[j * 256 + row[j] as usize];
+        }
+        out[t] = a;
+        bmax = bmax.max(a);
+    }
+    bmax
+}
+
 /// Full-precision scores q·K'ᵀ — the baseline LUT-GEMV replaces
 /// (paper Table 4 "Full K·qᵀ" row).
 pub fn exact_scores(query: &[f32], keys: &[f32], dim: usize, out: &mut Vec<f32>) {
@@ -136,6 +202,49 @@ mod tests {
             for (x, y) in a.iter().zip(&b) {
                 assert!((x - y).abs() < 1e-4, "{x} vs {y}");
             }
+        }
+    }
+
+    #[test]
+    fn block_scorer_matches_reference_and_max() {
+        // covers: multiple-of-8, ragged tails, tiny blocks
+        for (seed, tokens, dim) in [(1, 128, 64), (2, 7, 64), (3, 1000, 32), (4, 8, 8), (9, 1, 64)] {
+            let (lut, packed, _, _) = setup(seed, tokens, dim);
+            let mut expect = Vec::new();
+            score_tokens(&lut, &packed, tokens, &mut expect);
+            let blut = ByteLut::from_lut(&lut);
+            let mut out = vec![0.0f32; tokens];
+            let bmax = score_block_bytelut(&blut, &packed, tokens, &mut out);
+            let mut emax = f32::NEG_INFINITY;
+            for (x, y) in expect.iter().zip(&out) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+                emax = emax.max(*y);
+            }
+            assert_eq!(bmax, emax);
+        }
+        // n == 0: max is -inf, nothing written
+        let (lut, packed, _, _) = setup(5, 8, 64);
+        let blut = ByteLut::from_lut(&lut);
+        let mut out = [0.0f32; 0];
+        assert_eq!(
+            score_block_bytelut(&blut, &packed, 0, &mut out),
+            f32::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn bytelut_rebuild_reuses_capacity() {
+        let (lut, packed, _, _) = setup(6, 64, 64);
+        let mut blut = ByteLut::from_lut(&lut);
+        let cap = blut.table.capacity();
+        blut.rebuild(&lut);
+        assert_eq!(blut.table.capacity(), cap, "rebuild must not reallocate");
+        let mut a = Vec::new();
+        score_tokens(&lut, &packed, 64, &mut a);
+        let mut b = vec![0.0f32; 64];
+        score_block_bytelut(&blut, &packed, 64, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4);
         }
     }
 

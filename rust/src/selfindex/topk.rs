@@ -28,64 +28,157 @@ impl Entry {
     }
 }
 
-/// Top-k indices of `scores`, descending; ties -> smaller index first.
-/// NaN scores rank last (never selected unless k exceeds finite count).
-pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<u32> {
-    let k = k.min(scores.len());
-    if k == 0 {
-        return vec![];
+/// `a` ranks worse-or-equal than `b` (min-heap order: root = worst kept).
+#[inline(always)]
+fn worse(a: &Entry, b: &Entry) -> bool {
+    !a.beats(b)
+}
+
+/// Streaming threshold-aware top-k selector — the selection stage of the
+/// fused block pipeline (DESIGN.md §Perf iteration 5).
+///
+/// Scores are pushed as they are produced (block by block, straight out
+/// of the compressed cache); a running k-th-score bar rejects most pushes
+/// with a single `f32` compare before any heap work, and
+/// [`TopKStream::threshold`] lets callers skip *entire blocks* whose
+/// maximum score cannot enter the kept set. Same contract as
+/// [`top_k_indices`] (descending scores, ties → smaller index, NaN ranks
+/// last), verified by an equivalence property test.
+///
+/// All state is reusable: `reset` + `finish_into` keep the heap and the
+/// output vector at capacity, so a decode step performs zero allocations.
+pub struct TopKStream {
+    k: usize,
+    heap: Vec<Entry>,
+    /// k-th (worst kept) score once the heap is full; -inf before that.
+    bar: f32,
+}
+
+impl TopKStream {
+    pub fn new(k: usize) -> Self {
+        Self { k, heap: Vec::with_capacity(k), bar: f32::NEG_INFINITY }
     }
-    // min-heap of the current best k: root = worst of the kept set
-    let mut heap: Vec<Entry> = Vec::with_capacity(k);
 
-    let worse = |a: &Entry, b: &Entry| !a.beats(b); // a ranks worse-or-equal
+    /// Clear and re-arm for a new pass (keeps the heap's capacity).
+    pub fn reset(&mut self, k: usize) {
+        self.heap.clear();
+        self.heap.reserve(k);
+        self.k = k;
+        self.bar = f32::NEG_INFINITY;
+    }
 
-    for (i, &s) in scores.iter().enumerate() {
-        let s = if s.is_nan() { f32::NEG_INFINITY } else { s };
-        let e = Entry { score: s, index: i as u32 };
-        if heap.len() < k {
-            heap.push(e);
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.heap.len() == self.k
+    }
+
+    /// Current admission bar: a block whose max score is *below* this can
+    /// be skipped wholesale (for ascending index streams, `<=` is also
+    /// safe: an equal score with a larger index never displaces the kept
+    /// set). +inf when k == 0, -inf while the heap is filling.
+    #[inline(always)]
+    pub fn threshold(&self) -> f32 {
+        if self.k == 0 {
+            f32::INFINITY
+        } else if self.is_full() {
+            self.bar
+        } else {
+            f32::NEG_INFINITY
+        }
+    }
+
+    /// Offer one (index, score). NaN is treated as -inf (ranks last).
+    #[inline]
+    pub fn push(&mut self, index: u32, score: f32) {
+        let s = if score.is_nan() { f32::NEG_INFINITY } else { score };
+        if self.heap.len() < self.k {
+            self.heap.push(Entry { score: s, index });
             // sift up
-            let mut c = heap.len() - 1;
+            let mut c = self.heap.len() - 1;
             while c > 0 {
                 let p = (c - 1) / 2;
-                if worse(&heap[c], &heap[p]) {
-                    heap.swap(c, p);
+                if worse(&self.heap[c], &self.heap[p]) {
+                    self.heap.swap(c, p);
                     c = p;
                 } else {
                     break;
                 }
             }
-        } else if e.beats(&heap[0]) {
-            heap[0] = e;
-            // sift down
-            let mut p = 0;
-            loop {
-                let (l, r) = (2 * p + 1, 2 * p + 2);
-                let mut worst = p;
-                if l < k && worse(&heap[l], &heap[worst]) {
-                    worst = l;
-                }
-                if r < k && worse(&heap[r], &heap[worst]) {
-                    worst = r;
-                }
-                if worst == p {
-                    break;
-                }
-                heap.swap(p, worst);
-                p = worst;
+            if self.heap.len() == self.k {
+                self.bar = self.heap[0].score;
             }
+            return;
         }
+        // fast reject: strictly below the k-th score (the common case on
+        // long contexts) costs one compare and no heap traversal
+        if self.k == 0 || s < self.bar {
+            return;
+        }
+        let e = Entry { score: s, index };
+        if !e.beats(&self.heap[0]) {
+            return;
+        }
+        self.heap[0] = e;
+        // sift down
+        let k = self.k;
+        let mut p = 0;
+        loop {
+            let (l, r) = (2 * p + 1, 2 * p + 2);
+            let mut worst = p;
+            if l < k && worse(&self.heap[l], &self.heap[worst]) {
+                worst = l;
+            }
+            if r < k && worse(&self.heap[r], &self.heap[worst]) {
+                worst = r;
+            }
+            if worst == p {
+                break;
+            }
+            self.heap.swap(p, worst);
+            p = worst;
+        }
+        self.bar = self.heap[0].score;
     }
 
-    let mut entries = heap;
-    entries.sort_unstable_by(|a, b| {
-        b.score
-            .partial_cmp(&a.score)
-            .unwrap_or(Ordering::Equal)
-            .then(a.index.cmp(&b.index))
-    });
-    entries.into_iter().map(|e| e.index).collect()
+    /// Drain the kept set into `out` (cleared first): indices in
+    /// descending score order, ties by smaller index. Leaves the selector
+    /// empty (call `reset` before the next pass).
+    pub fn finish_into(&mut self, out: &mut Vec<u32>) {
+        self.heap.sort_unstable_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(Ordering::Equal)
+                .then(a.index.cmp(&b.index))
+        });
+        out.clear();
+        out.extend(self.heap.iter().map(|e| e.index));
+        self.heap.clear();
+        self.bar = f32::NEG_INFINITY;
+    }
+}
+
+/// Top-k indices of `scores`, descending; ties -> smaller index first.
+/// NaN scores rank last (never selected unless k exceeds finite count).
+/// One-shot wrapper over [`TopKStream`] (same heap, same contract).
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return vec![];
+    }
+    let mut sel = TopKStream::new(k);
+    for (i, &s) in scores.iter().enumerate() {
+        sel.push(i as u32, s);
+    }
+    let mut out = Vec::with_capacity(k);
+    sel.finish_into(&mut out);
+    out
 }
 
 /// Reference implementation (full sort) for property tests.
@@ -121,6 +214,149 @@ mod tests {
         let s = [f32::NAN, 1.0, 2.0];
         assert_eq!(top_k_indices(&s, 2), vec![2, 1]);
         assert_eq!(top_k_indices(&s, 3), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn edge_cases_k_zero_and_k_past_len() {
+        assert_eq!(top_k_indices(&[], 0), Vec::<u32>::new());
+        assert_eq!(top_k_indices(&[], 5), Vec::<u32>::new());
+        assert_eq!(top_k_indices(&[3.0], 0), Vec::<u32>::new());
+        // k >= L returns every index, still fully ordered
+        let s = [2.0, -1.0, 2.0, 0.5];
+        assert_eq!(top_k_indices(&s, 4), vec![0, 2, 3, 1]);
+        assert_eq!(top_k_indices(&s, 100), vec![0, 2, 3, 1]);
+        // all-NaN input: ties at -inf break by index
+        let nans = [f32::NAN; 3];
+        assert_eq!(top_k_indices(&nans, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn all_equal_ties_prefer_small_indices() {
+        let s = [7.0f32; 10];
+        assert_eq!(top_k_indices(&s, 3), vec![0, 1, 2]);
+        let mut sel = TopKStream::new(3);
+        for (i, &v) in s.iter().enumerate() {
+            sel.push(i as u32, v);
+        }
+        let mut out = Vec::new();
+        sel.finish_into(&mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn stream_threshold_tracks_kth_score() {
+        let mut sel = TopKStream::new(2);
+        assert_eq!(sel.threshold(), f32::NEG_INFINITY);
+        sel.push(0, 1.0);
+        assert!(!sel.is_full());
+        sel.push(1, 5.0);
+        assert!(sel.is_full());
+        assert_eq!(sel.threshold(), 1.0);
+        sel.push(2, 0.5); // below the bar: rejected, bar unchanged
+        assert_eq!(sel.threshold(), 1.0);
+        sel.push(3, 3.0); // displaces the 1.0
+        assert_eq!(sel.threshold(), 3.0);
+        let mut out = Vec::new();
+        sel.finish_into(&mut out);
+        assert_eq!(out, vec![1, 3]);
+        // k == 0: always "full", +inf bar (blocks skip wholesale)
+        sel.reset(0);
+        assert_eq!(sel.threshold(), f32::INFINITY);
+        sel.push(9, 100.0);
+        sel.finish_into(&mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn stream_reset_and_finish_do_not_reallocate() {
+        let mut sel = TopKStream::new(16);
+        let mut out = Vec::with_capacity(16);
+        for round in 0..4u32 {
+            sel.reset(16);
+            for i in 0..500u32 {
+                sel.push(i, ((i * 7919 + round) % 1000) as f32);
+            }
+            let cap = out.capacity();
+            sel.finish_into(&mut out);
+            assert_eq!(out.len(), 16);
+            assert_eq!(out.capacity(), cap, "finish_into must reuse out");
+        }
+    }
+
+    #[test]
+    fn prop_stream_matches_heap_selector() {
+        // streaming selector == one-shot heap selector == sort reference,
+        // under NaN injections and heavy ties, any k (incl. 0 and > L)
+        check(
+            23,
+            400,
+            |r| {
+                let n = r.below(300) as usize;
+                let k = r.below(80) as usize;
+                let v: Vec<f32> = (0..n)
+                    .map(|_| match r.below(10) {
+                        0 => f32::NAN,
+                        1 => f32::NEG_INFINITY,
+                        _ => (r.below(25) as f32) - 12.0, // coarse: many ties
+                    })
+                    .collect();
+                (v, k)
+            },
+            |(v, k)| {
+                let heap = top_k_indices(v, *k);
+                let sorted = top_k_indices_sort(v, *k);
+                let mut sel = TopKStream::new(k.min(v.len()));
+                for (i, &s) in v.iter().enumerate() {
+                    sel.push(i as u32, s);
+                }
+                let mut stream = Vec::new();
+                sel.finish_into(&mut stream);
+                if heap != sorted {
+                    return Err(format!("heap {heap:?} != sort {sorted:?}"));
+                }
+                if stream != sorted {
+                    return Err(format!("stream {stream:?} != sort {sorted:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_stream_block_skip_is_lossless() {
+        // feeding scores block-wise and skipping blocks whose max is
+        // below the running threshold must select the same set (ascending
+        // index streams)
+        check(
+            24,
+            300,
+            |r| {
+                let n = r.below(400) as usize;
+                let k = 1 + r.below(48) as usize;
+                let bs = 1 + r.below(64) as usize;
+                let v: Vec<f32> = (0..n).map(|_| (r.below(30) as f32) - 15.0).collect();
+                ((v, k), bs)
+            },
+            |((v, k), bs)| {
+                let expect = top_k_indices(v, *k);
+                let mut sel = TopKStream::new((*k).min(v.len()));
+                for (bi, block) in v.chunks(*bs).enumerate() {
+                    let bmax = block.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    if sel.is_full() && bmax <= sel.threshold() {
+                        continue; // whole-block skip
+                    }
+                    for (o, &s) in block.iter().enumerate() {
+                        sel.push((bi * bs + o) as u32, s);
+                    }
+                }
+                let mut got = Vec::new();
+                sel.finish_into(&mut got);
+                if got != expect {
+                    return Err(format!("skip {got:?} != full {expect:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -114,6 +114,91 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Per-stage wall-clock accumulator: names the phases of a pipeline
+/// (score / select / attend) and reports each stage's mean over all the
+/// iterations it was timed in. The per-stage rows of `table4_modules` and
+/// the `BENCH_decode.json` trajectory come from this.
+#[derive(Default)]
+pub struct StageTimer {
+    stages: Vec<(String, Duration, u64)>, // (name, total, count)
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time one execution of `f` under `stage` (accumulates).
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(stage, t.elapsed());
+        out
+    }
+
+    /// Accumulate an externally measured duration.
+    pub fn add(&mut self, stage: &str, d: Duration) {
+        if let Some(e) = self.stages.iter_mut().find(|(n, _, _)| n == stage) {
+            e.1 += d;
+            e.2 += 1;
+        } else {
+            self.stages.push((stage.to_string(), d, 1));
+        }
+    }
+
+    /// Mean microseconds per timed call of `stage` (0.0 if never timed).
+    pub fn mean_us(&self, stage: &str) -> f64 {
+        self.stages
+            .iter()
+            .find(|(n, _, _)| n == stage)
+            .map(|(_, total, count)| total.as_secs_f64() * 1e6 / *count as f64)
+            .unwrap_or(0.0)
+    }
+
+    /// (name, mean) pairs in first-use order.
+    pub fn means(&self) -> Vec<(String, Duration)> {
+        self.stages
+            .iter()
+            .map(|(n, total, count)| (n.clone(), *total / (*count).max(1) as u32))
+            .collect()
+    }
+
+    /// `{"stage_us": {name: mean_us, ...}}`-shaped JSON fragment.
+    pub fn to_json(&self) -> crate::substrate::json::Json {
+        use crate::substrate::json::{num, obj};
+        obj(self
+            .stages
+            .iter()
+            .map(|(n, _, _)| (n.as_str(), num(self.mean_us(n))))
+            .collect())
+    }
+}
+
+/// Write a machine-readable bench result next to the human-readable
+/// table: `BENCH_<name>.json` in `SIKV_BENCH_OUT` (default: cwd). Every
+/// bench that emits one gives future PRs a perf trajectory to compare
+/// against. Returns the path written.
+pub fn write_bench_json(
+    name: &str,
+    payload: crate::substrate::json::Json,
+) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::env::var("SIKV_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    write_bench_json_in(std::path::Path::new(&dir), name, payload)
+}
+
+/// [`write_bench_json`] with an explicit directory (the env read happens
+/// only in the wrapper — callers and tests stay free of process-global
+/// state).
+pub fn write_bench_json_in(
+    dir: &std::path::Path,
+    name: &str,
+    payload: crate::substrate::json::Json,
+) -> std::io::Result<std::path::PathBuf> {
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, format!("{payload}\n"))?;
+    Ok(path)
+}
+
 pub fn fmt_duration(d: Duration) -> String {
     let ns = d.as_nanos();
     if ns < 1_000 {
@@ -231,6 +316,38 @@ mod tests {
         assert!(out.contains("method"));
         let lines: Vec<&str> = out.lines().collect();
         assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn stage_timer_accumulates_means() {
+        let mut st = StageTimer::new();
+        for _ in 0..4 {
+            st.add("score", Duration::from_micros(10));
+        }
+        st.add("select", Duration::from_micros(100));
+        assert!((st.mean_us("score") - 10.0).abs() < 1e-6);
+        assert!((st.mean_us("select") - 100.0).abs() < 1e-6);
+        assert_eq!(st.mean_us("missing"), 0.0);
+        let means = st.means();
+        assert_eq!(means[0].0, "score"); // first-use order
+        let j = st.to_json();
+        assert!(j.get("score").and_then(|v| v.as_f64()).unwrap() > 9.0);
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        use crate::substrate::json::{num, obj, s, Json};
+        let dir = std::env::temp_dir().join("sikv_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let payload = obj(vec![
+            ("bench", s("decode")),
+            ("tokens_per_sec", num(1234.5)),
+        ]);
+        let path = write_bench_json_in(&dir, "unit_test", payload).unwrap();
+        assert!(path.ends_with("BENCH_unit_test.json"));
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.path("tokens_per_sec").and_then(Json::as_f64), Some(1234.5));
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

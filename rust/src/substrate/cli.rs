@@ -5,17 +5,26 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option '{0}' (see --help)")]
     Unknown(String),
-    #[error("option '--{0}' expects a value")]
     MissingValue(String),
-    #[error("invalid value for '--{0}': {1}")]
     Invalid(String, String),
-    #[error("missing required option '--{0}'")]
     MissingRequired(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(o) => write!(f, "unknown option '{o}' (see --help)"),
+            CliError::MissingValue(o) => write!(f, "option '--{o}' expects a value"),
+            CliError::Invalid(o, v) => write!(f, "invalid value for '--{o}': {v}"),
+            CliError::MissingRequired(o) => write!(f, "missing required option '--{o}'"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 #[derive(Clone)]
 struct OptSpec {

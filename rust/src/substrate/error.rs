@@ -1,0 +1,112 @@
+//! Minimal error type (offline substitute for `anyhow`).
+//!
+//! The build environment resolves no external crates, so the crate carries
+//! its own catch-all error: a message string with `From` conversions for
+//! every `std::error::Error`. Files that used `anyhow` alias this module
+//! (`use crate::substrate::error as anyhow;`) — call sites are unchanged.
+
+use std::fmt;
+
+/// Catch-all error: an owned message, convertible from any std error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from anything displayable (the `anyhow::Error::msg` shape).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Prefix with context, keeping the original message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Self { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// keeps this blanket conversion coherent (no overlap with `From<T> for T`).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error { msg: s.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!`-shaped constructor macro (re-exported below as `anyhow`).
+#[macro_export]
+macro_rules! sikv_anyhow {
+    ($($t:tt)*) => {
+        $crate::substrate::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// `bail!`-shaped early return (re-exported below as `bail`).
+#[macro_export]
+macro_rules! sikv_bail {
+    ($($t:tt)*) => {
+        return Err($crate::substrate::error::Error::msg(format!($($t)*)).into())
+    };
+}
+
+pub use crate::sikv_anyhow as anyhow;
+pub use crate::sikv_bail as bail;
+
+#[cfg(test)]
+mod tests {
+    use crate::substrate::error as anyhow;
+
+    fn fails() -> anyhow::Result<()> {
+        anyhow::bail!("broke at {}", 42)
+    }
+
+    fn io_propagates() -> anyhow::Result<Vec<u8>> {
+        let data = std::fs::read("/definitely/not/a/real/path/sikv")?;
+        Ok(data)
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow::anyhow!("bad {}", "state");
+        assert_eq!(e.to_string(), "bad state");
+        assert_eq!(format!("{e:?}"), "bad state");
+        assert_eq!(fails().unwrap_err().message(), "broke at 42");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let e = io_propagates().unwrap_err();
+        assert!(!e.message().is_empty());
+        let e2: super::Error = "plain".into();
+        assert_eq!(e2.context("ctx").message(), "ctx: plain");
+    }
+}

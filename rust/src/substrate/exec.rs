@@ -87,6 +87,88 @@ impl ThreadPool {
     pub fn workers(&self) -> usize {
         self.workers.len()
     }
+
+    /// Run a batch of borrowing jobs to completion on the pool (a scoped
+    /// join: jobs may capture references into the caller's stack frame).
+    /// Returns only after every job has finished; if a job panicked, the
+    /// first panic payload is re-raised in the caller (no partial results
+    /// are silently accepted).
+    ///
+    /// This is the engine's decode fan-out primitive: one job per
+    /// (sequence, kv-head group), each owning disjoint `&mut` state, all
+    /// joined before the layer's output projection runs.
+    ///
+    /// **Do not call from inside a job running on the same pool**: the
+    /// caller blocks a worker while its child jobs queue behind it —
+    /// with enough concurrent nested calls (or a 1-worker pool) that is
+    /// a permanent deadlock. Fan out at one level only, or use a second
+    /// pool for nested parallelism.
+    pub fn scoped<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        type Payload = Option<Box<dyn std::any::Any + Send>>;
+
+        /// Join guard: blocks until every enqueued job has reported —
+        /// on the normal path below AND in Drop during an unwind — so a
+        /// panic between enqueue and join can never let a detached job
+        /// outlive the caller's borrowed frame. Owns the original sender
+        /// and drops it before receiving, so the receive loop always
+        /// terminates (a job dropped unrun just drops its own sender).
+        struct Join {
+            tx: Option<mpsc::Sender<Payload>>,
+            rx: mpsc::Receiver<Payload>,
+            pending: usize,
+            first_panic: Payload,
+        }
+
+        impl Join {
+            fn join(&mut self) {
+                self.tx.take(); // job senders are now the only ones left
+                while self.pending > 0 {
+                    match self.rx.recv() {
+                        Ok(p) => {
+                            self.pending -= 1;
+                            if self.first_panic.is_none() {
+                                self.first_panic = p;
+                            }
+                        }
+                        // all senders gone: remaining jobs were dropped
+                        // unrun (pool shutdown) — nothing left to wait for
+                        Err(_) => break,
+                    }
+                }
+            }
+        }
+
+        impl Drop for Join {
+            fn drop(&mut self) {
+                self.join();
+            }
+        }
+
+        let (tx, rx) = mpsc::channel::<Payload>();
+        let mut join = Join { tx: Some(tx), rx, pending: 0, first_panic: None };
+        for job in jobs {
+            // SAFETY: `join` blocks until every enqueued job has sent its
+            // receipt (the job's own catch_unwind guarantees a send after
+            // it ran or unwound; a job dropped unrun drops its sender).
+            // That join happens before this frame is torn down even when
+            // this loop unwinds (Join::drop), so no job outlives 'env.
+            let job: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(job) };
+            let tx = join.tx.as_ref().expect("sender live while enqueuing").clone();
+            join.pending += 1;
+            self.spawn(move || {
+                let result = panic::catch_unwind(AssertUnwindSafe(job));
+                let _ = tx.send(result.err());
+            });
+        }
+        join.join();
+        if let Some(payload) = join.first_panic.take() {
+            panic::resume_unwind(payload);
+        }
+    }
 }
 
 impl Drop for ThreadPool {
@@ -219,6 +301,39 @@ mod tests {
         });
         pool.wait_idle();
         assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scoped_jobs_borrow_stack_data() {
+        let pool = ThreadPool::new(4);
+        let mut slots = vec![0u64; 64];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| {
+                let job: Box<dyn FnOnce() + Send + '_> =
+                    Box::new(move || *s = (i * i) as u64);
+                job
+            })
+            .collect();
+        pool.scoped(jobs);
+        for (i, &s) in slots.iter().enumerate() {
+            assert_eq!(s, (i * i) as u64);
+        }
+        // empty batch is a no-op
+        pool.scoped(vec![]);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn scoped_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() + Send + 'static>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("boom")),
+            Box::new(|| {}),
+        ];
+        pool.scoped(jobs);
     }
 
     #[test]

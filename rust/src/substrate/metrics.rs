@@ -3,10 +3,58 @@
 //! Cheap enough for the hot path (relaxed atomics), with a registry that
 //! snapshots everything for the `/stats`-style dump the CLI prints.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Heap-allocation-counting wrapper around the system allocator,
+/// installed as the global allocator in the crate's own test builds
+/// (`lib.rs`). One thread-local increment per alloc/realloc; it makes
+/// "this hot path allocates nothing" a *testable* invariant (see
+/// `baselines::ours::tests::attend_is_allocation_free`) instead of a
+/// comment. Outside test builds [`thread_allocations`] reads a counter
+/// nothing bumps (always 0) and the allocator is not installed.
+pub struct CountingAllocator;
+
+thread_local! {
+    // const-init + no Drop: safe to touch from inside the allocator
+    // (no lazy initialization, no TLS destructor recursion)
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn bump() {
+    TL_ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+/// Allocations made by the *current thread* since it started.
+pub fn thread_allocations() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
 
 #[derive(Default)]
 pub struct Counter(AtomicU64);
@@ -221,6 +269,23 @@ mod tests {
         let snap = r.snapshot();
         assert!(snap.contains("counter a = 1"));
         assert!(snap.contains("hist    lat"));
+    }
+
+    #[test]
+    fn allocation_counter_counts_this_thread() {
+        let before = thread_allocations();
+        let v: Vec<u64> = Vec::with_capacity(32);
+        let after = thread_allocations();
+        assert!(after > before, "Vec::with_capacity must be counted");
+        drop(v);
+        // pure arithmetic does not allocate
+        let base = thread_allocations();
+        let mut acc = 0u64;
+        for i in 0..1000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        assert_eq!(thread_allocations(), base);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! proptest / rand). Per the reproduction mandate — *build every substrate
 //! the system depends on* — this module provides the equivalents:
 //!
+//! * [`error`]    — catch-all error + `anyhow!`/`bail!` macros
 //! * [`rng`]      — SplitMix64 / Xoshiro256** PRNGs + distributions
 //! * [`json`]     — JSON parser/serializer (configs, manifest)
 //! * [`cli`]      — declarative argument parser
@@ -15,6 +16,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod error;
 pub mod exec;
 pub mod json;
 pub mod metrics;
