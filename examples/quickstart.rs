@@ -75,8 +75,10 @@ fn main() {
         .collect();
     selfindex_kv::selfindex::score::exact_scores(&query, &centered, dim, &mut exact);
 
-    println!("retrieval recall@{budget} vs exact scores : {:.3}",
-             recall_at_k(&approx, &exact, budget));
+    println!(
+        "retrieval recall@{budget} vs exact scores : {:.3}",
+        recall_at_k(&approx, &exact, budget)
+    );
     let topk = selfindex_kv::selfindex::topk::top_k_indices(&approx, budget);
     let found = needles.iter().filter(|&&n| topk.contains(&(n as u32))).count();
     println!("needles found in top-{budget}              : {found}/{}", needles.len());

@@ -9,12 +9,29 @@
 
 mod common;
 
-use selfindex_kv::baselines::{
-    AttentionMethod, DoubleSparse, FullCache, QuestCache, SelfIndexing, SnapKv,
-};
+use selfindex_kv::baselines::{AttentionMethod, FullCache};
 use selfindex_kv::eval::{cosine, mean, recall_at_k};
+use selfindex_kv::method::registry::{lookup, BuildCtx};
 use selfindex_kv::selfindex::SelfIndexConfig;
 use selfindex_kv::substrate::benchkit::Table;
+use selfindex_kv::substrate::json::Json;
+
+/// Registry-built per-head leaf (the same construction path the engine
+/// uses), with a per-method knob overlay.
+fn build(name: &str, overlay: &[(String, Json)], budget_hint: usize) -> Box<dyn AttentionMethod> {
+    let si = SelfIndexConfig::default();
+    let ctx = BuildCtx {
+        dim: 64,
+        n_layers: 1,
+        kv_heads: 1,
+        gqa_ratio: 1,
+        budget_hint,
+        pool_tokens: 1 << 14,
+        selfindex: &si,
+        overlay,
+    };
+    lookup(name).expect("registered").build_head(&ctx)
+}
 
 fn main() {
     let (tokens, dim) = if common::fast_mode() { (1024, 64) } else { (4096, 64) };
@@ -22,25 +39,26 @@ fn main() {
     let ratios = [0.025, 0.05, 0.075, 0.10, 0.15, 0.20];
 
     println!("== Fig. 4: attention fidelity vs sparsity ratio ==");
-    println!("({tokens}-token contexts, {trials} heads per point; series = output cosine vs full attention)\n");
+    println!(
+        "({tokens}-token contexts, {trials} heads per point; series = output \
+         cosine vs full attention)\n"
+    );
 
-    let mut table = Table::new(&[
-        "method", "2.5%", "5%", "7.5%", "10%", "15%", "20%",
-    ]);
+    let mut table = Table::new(&["method", "2.5%", "5%", "7.5%", "10%", "15%", "20%"]);
 
-    type Factory = Box<dyn Fn() -> Box<dyn AttentionMethod>>;
+    type Factory = Box<dyn Fn(usize) -> Box<dyn AttentionMethod>>;
     let methods: Vec<(&str, Factory)> = vec![
-        ("ours(2bit)", Box::new(|| {
-            Box::new(SelfIndexing::new(64, SelfIndexConfig::default()))
-        })),
-        ("ours(16bit)", Box::new(|| {
-            let mut c = SelfIndexConfig::default();
-            c.quant_bits = 8; // highest payload precision in this impl
-            Box::new(SelfIndexing::new(64, c))
-        })),
-        ("quest", Box::new(|| Box::new(QuestCache::new(64)))),
-        ("doublesparse", Box::new(|| Box::new(DoubleSparse::new(64)))),
-        ("snapkv", Box::new(|| Box::new(SnapKv::new(64, 0)))), // keep set per ratio
+        ("ours(2bit)", Box::new(|_| build("ours", &[], 0))),
+        // highest payload precision in this impl
+        (
+            "ours(16bit)",
+            Box::new(|_| build("ours", &[("quant_bits".to_string(), Json::Num(8.0))], 0)),
+        ),
+        ("quest", Box::new(|_| build("quest", &[], 0))),
+        ("doublesparse", Box::new(|_| build("ds", &[], 0))),
+        ("kmeans", Box::new(|_| build("kmeans", &[], 0))),
+        // snapkv's keep set is its budget: rebuild per ratio
+        ("snapkv", Box::new(|budget| build("snapkv", &[], budget))),
     ];
 
     for (name, factory) in &methods {
@@ -55,11 +73,7 @@ fn main() {
                 let mut b = vec![0.0; dim];
                 full.attend(&query, usize::MAX, &mut b);
 
-                let mut m: Box<dyn AttentionMethod> = if *name == "snapkv" {
-                    Box::new(SnapKv::new(dim, budget))
-                } else {
-                    factory()
-                };
+                let mut m: Box<dyn AttentionMethod> = factory(budget);
                 // observation window: queries from a DIFFERENT part of the
                 // distribution than the test query — the paper's RULER
                 // setting where the relevant tokens are unknown at prefill
@@ -81,18 +95,19 @@ fn main() {
     // companion series: raw top-k recall of each retrieval index
     println!("retrieval recall@k vs exact scores (same sweep):\n");
     let mut rt = Table::new(&["method", "2.5%", "5%", "7.5%", "10%", "15%", "20%"]);
-    for name in ["ours(2bit)", "quest", "doublesparse"] {
+    for (name, reg) in [
+        ("ours(2bit)", "ours"),
+        ("quest", "quest"),
+        ("doublesparse", "ds"),
+        ("kmeans", "kmeans"),
+    ] {
         let mut row = vec![name.to_string()];
         for &ratio in &ratios {
             let budget = ((tokens as f64 * ratio) as usize).max(1);
             let mut rs = vec![];
             for seed in 0..trials {
                 let (keys, vals, query) = common::clustered_state(7 + seed, tokens, dim);
-                let mut m: Box<dyn AttentionMethod> = match name {
-                    "ours(2bit)" => Box::new(SelfIndexing::new(dim, SelfIndexConfig::default())),
-                    "quest" => Box::new(QuestCache::new(dim)),
-                    _ => Box::new(DoubleSparse::new(dim)),
-                };
+                let mut m: Box<dyn AttentionMethod> = build(reg, &[], 0);
                 m.prefill(&keys, &vals, &[], 1);
                 let approx = m.retrieval_scores(&query).unwrap();
                 // exact over centered keys (retrieval target)
@@ -118,15 +133,18 @@ fn main() {
     let (keys, vals, _) = common::clustered_state(7, tokens, dim);
     let mut mt = Table::new(&["method", "cache bytes @ this ctx"]);
     let mems: Vec<(&str, Box<dyn AttentionMethod>)> = vec![
-        ("ours(2bit)", Box::new(SelfIndexing::new(dim, SelfIndexConfig::default()))),
-        ("quest", Box::new(QuestCache::new(dim))),
-        ("doublesparse", Box::new(DoubleSparse::new(dim))),
-        ("full fp32", Box::new(FullCache::new(dim))),
+        ("ours(2bit)", build("ours", &[], 0)),
+        ("quest", build("quest", &[], 0)),
+        ("doublesparse", build("ds", &[], 0)),
+        ("kmeans", build("kmeans", &[], 0)),
+        ("full fp32", build("full", &[], 0)),
     ];
     for (name, mut m) in mems {
         m.prefill(&keys, &vals, &[], 1);
-        mt.row(vec![name.to_string(),
-                    selfindex_kv::substrate::benchkit::fmt_bytes(m.memory_bytes())]);
+        mt.row(vec![
+            name.to_string(),
+            selfindex_kv::substrate::benchkit::fmt_bytes(m.memory_bytes()),
+        ]);
     }
     println!("{}", mt.render());
     println!("paper shape: ours stays near-flat past 7.5% and delivers its\n\

@@ -141,7 +141,7 @@ fn main() {
         single_steps_per_sec
     );
 
-    // ---- parallel decode fan-out (engine-shaped: one job per kv head) --
+    // ---- parallel decode fan-out (engine-shaped: one unit per kv head) --
     let n_heads = 8usize;
     let workers = ThreadPool::default_size();
     let mut heads: Vec<SelfIndexing> = (0..n_heads)
@@ -159,7 +159,8 @@ fn main() {
             m.attend_group(std::hint::black_box(&queries), dim, budget, o);
         }
     });
-    let parallel = bench.run(|| {
+    // the seed fan-out: one boxed closure per head over `scoped`
+    let par_boxed = bench.run(|| {
         let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = heads
             .iter_mut()
             .zip(head_outs.chunks_mut(r_heads * dim))
@@ -172,12 +173,27 @@ fn main() {
             .collect();
         workers.scoped(jobs);
     });
-    let par_speedup = serial.mean.as_secs_f64() / parallel.mean.as_secs_f64();
+    // the engine's work queue: an atomic cursor over a pre-built task
+    // slice (`for_each_task`), no per-job boxing
+    let par_queue = bench.run(|| {
+        let mut tasks: Vec<(&mut SelfIndexing, &mut [f32])> = heads
+            .iter_mut()
+            .zip(head_outs.chunks_mut(r_heads * dim))
+            .collect();
+        let q = &queries;
+        workers.for_each_task(&mut tasks, |(m, o)| {
+            m.attend_group(std::hint::black_box(q), dim, budget, &mut **o)
+        });
+    });
+    let par_speedup = serial.mean.as_secs_f64() / par_queue.mean.as_secs_f64();
+    let queue_vs_boxed = par_boxed.mean.as_secs_f64() / par_queue.mean.as_secs_f64();
     println!(
-        "{n_heads}-head step: serial {} | parallel ({} workers) {} — {par_speedup:.2}x",
+        "{n_heads}-head step: serial {} | scoped ({} workers) {} | work queue {} — \
+         {par_speedup:.2}x vs serial, {queue_vs_boxed:.2}x vs boxed scoped",
         fmt_duration(serial.mean),
         workers.workers(),
-        fmt_duration(parallel.mean)
+        fmt_duration(par_boxed.mean),
+        fmt_duration(par_queue.mean)
     );
 
     let payload = obj(vec![
@@ -192,8 +208,10 @@ fn main() {
         ("parallel_heads", num(n_heads as f64)),
         ("parallel_workers", num(workers.workers() as f64)),
         ("serial_8head_steps_per_sec", num(1.0 / serial.mean.as_secs_f64())),
-        ("parallel_8head_steps_per_sec", num(1.0 / parallel.mean.as_secs_f64())),
+        ("parallel_8head_steps_per_sec", num(1.0 / par_queue.mean.as_secs_f64())),
+        ("boxed_8head_steps_per_sec", num(1.0 / par_boxed.mean.as_secs_f64())),
         ("parallel_speedup", num(par_speedup)),
+        ("taskqueue_vs_boxed", num(queue_vs_boxed)),
     ]);
     match write_bench_json("decode", payload) {
         Ok(p) => println!("\nwrote {}", p.display()),

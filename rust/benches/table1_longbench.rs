@@ -37,8 +37,10 @@ fn main() -> anyhow::Result<()> {
         seed: 1234,
     };
 
-    println!("== Table 1: LongBench-proxy ({} items/task, ctx {}B) ==\n",
-             cfg.items, cfg.context);
+    println!(
+        "== Table 1: LongBench-proxy ({} items/task, ctx {}B) ==\n",
+        cfg.items, cfg.context
+    );
 
     if common::artifacts_available() {
         let items = longbench::generate(&cfg);
@@ -76,8 +78,10 @@ fn main() -> anyhow::Result<()> {
     // ---- mechanism table (always) ----
     let trials = if fast { 3 } else { 8 };
     let tokens = if fast { 1024 } else { 2048 };
-    println!("\nmechanism: fidelity on identical states ({} heads × {} tokens, budget 160):\n",
-             trials, tokens);
+    println!(
+        "\nmechanism: fidelity on identical states ({} heads × {} tokens, budget 160):\n",
+        trials, tokens
+    );
     type Factory = Box<dyn Fn() -> Box<dyn AttentionMethod>>;
     let factories: Vec<(&str, Factory)> = vec![
         ("SnapKV", Box::new(|| Box::new(SnapKv::new(64, 160)))),

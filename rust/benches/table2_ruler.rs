@@ -28,8 +28,10 @@ fn main() -> anyhow::Result<()> {
         items: if fast { 1 } else { 2 },
         seed: 99,
     };
-    println!("== Table 2: RULER-proxy @ 7.5% sparsity (ctx {}B, {} items/task) ==\n",
-             cfg.context, cfg.items);
+    println!(
+        "== Table 2: RULER-proxy @ 7.5% sparsity (ctx {}B, {} items/task) ==\n",
+        cfg.context, cfg.items
+    );
 
     if !common::artifacts_available() {
         println!("(artifacts missing — run `make artifacts`)");

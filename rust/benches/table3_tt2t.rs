@@ -43,8 +43,15 @@ fn main() -> anyhow::Result<()> {
     let iters = if fast { 1 } else { 3 };
 
     println!("== Table 3: TT2T (prefill + 1 decode) ==\n");
-    let mut table = Table::new(&["Prompt Length", "Ours", "KIVI", "Flash Attention2",
-                                 "Ours cache", "KIVI cache", "Full cache"]);
+    let mut table = Table::new(&[
+        "Prompt Length",
+        "Ours",
+        "KIVI",
+        "Flash Attention2",
+        "Ours cache",
+        "KIVI cache",
+        "Full cache",
+    ]);
     let mut engines: Vec<Engine> = METHODS
         .iter()
         .map(|&(_, kind)| {

@@ -63,11 +63,18 @@ fn main() {
             std::hint::black_box(&centered), dim, 20, 7,
         ));
     });
-    table.row(vec!["Clustering".into(), "Ours (one-pass)".into(),
-                   fmt_duration(s_ours.mean), "1.0x".into()]);
-    table.row(vec!["Clustering".into(), "KMeans (20 iters)".into(),
-                   fmt_duration(s_km.mean),
-                   format!("{:.1}x", s_km.mean.as_secs_f64() / s_ours.mean.as_secs_f64())]);
+    table.row(vec![
+        "Clustering".into(),
+        "Ours (one-pass)".into(),
+        fmt_duration(s_ours.mean),
+        "1.0x".into(),
+    ]);
+    table.row(vec![
+        "Clustering".into(),
+        "KMeans (20 iters)".into(),
+        fmt_duration(s_km.mean),
+        format!("{:.1}x", s_km.mean.as_secs_f64() / s_ours.mean.as_secs_f64()),
+    ]);
 
     // ---------------- Retrieval ----------------
     let mut builder = CodebookBuilder::new(dim / 4);
@@ -91,14 +98,24 @@ fn main() {
         exact_scores(std::hint::black_box(&query), &centered, dim, &mut scores);
         std::hint::black_box(&scores);
     });
-    table.row(vec!["Retrieval".into(), "Ours (LUT-GEMV)".into(),
-                   fmt_duration(s_lut.mean), "1.0x".into()]);
-    table.row(vec!["Retrieval".into(), "Quest (page=16)".into(),
-                   fmt_duration(s_quest.mean),
-                   format!("{:.2}x", s_quest.mean.as_secs_f64() / s_lut.mean.as_secs_f64())]);
-    table.row(vec!["Retrieval".into(), "Full K·qT".into(),
-                   fmt_duration(s_full.mean),
-                   format!("{:.2}x", s_full.mean.as_secs_f64() / s_lut.mean.as_secs_f64())]);
+    table.row(vec![
+        "Retrieval".into(),
+        "Ours (LUT-GEMV)".into(),
+        fmt_duration(s_lut.mean),
+        "1.0x".into(),
+    ]);
+    table.row(vec![
+        "Retrieval".into(),
+        "Quest (page=16)".into(),
+        fmt_duration(s_quest.mean),
+        format!("{:.2}x", s_quest.mean.as_secs_f64() / s_lut.mean.as_secs_f64()),
+    ]);
+    table.row(vec![
+        "Retrieval".into(),
+        "Full K·qT".into(),
+        fmt_duration(s_full.mean),
+        format!("{:.2}x", s_full.mean.as_secs_f64() / s_lut.mean.as_secs_f64()),
+    ]);
 
     // ---------------- Attention ----------------
     let si = SelfIndexConfig::default();
@@ -130,14 +147,24 @@ fn main() {
         attend_dense(std::hint::black_box(&query), &keys, &vals, tokens, &mut out);
         std::hint::black_box(&out);
     });
-    table.row(vec!["Attention".into(), format!("Ours ({:.1}%)", sparsity * 100.0),
-                   fmt_duration(s_sparse.mean), "1.0x".into()]);
-    table.row(vec!["Attention".into(), format!("Page Attention ({:.1}%)", sparsity * 100.0),
-                   fmt_duration(s_page.mean),
-                   format!("{:.2}x", s_page.mean.as_secs_f64() / s_sparse.mean.as_secs_f64())]);
-    table.row(vec!["Attention".into(), "Flash Attention2 (Full)".into(),
-                   fmt_duration(s_dense.mean),
-                   format!("{:.2}x", s_dense.mean.as_secs_f64() / s_sparse.mean.as_secs_f64())]);
+    table.row(vec![
+        "Attention".into(),
+        format!("Ours ({:.1}%)", sparsity * 100.0),
+        fmt_duration(s_sparse.mean),
+        "1.0x".into(),
+    ]);
+    table.row(vec![
+        "Attention".into(),
+        format!("Page Attention ({:.1}%)", sparsity * 100.0),
+        fmt_duration(s_page.mean),
+        format!("{:.2}x", s_page.mean.as_secs_f64() / s_sparse.mean.as_secs_f64()),
+    ]);
+    table.row(vec![
+        "Attention".into(),
+        "Flash Attention2 (Full)".into(),
+        fmt_duration(s_dense.mean),
+        format!("{:.2}x", s_dense.mean.as_secs_f64() / s_sparse.mean.as_secs_f64()),
+    ]);
 
     println!("{}", table.render());
     println!("paper shape: clustering >10x, retrieval >4x vs full, attention >5x vs full");

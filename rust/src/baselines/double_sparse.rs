@@ -183,6 +183,6 @@ mod tests {
         let mut out = vec![0.0; dim];
         ds.attend(&query, 10, &mut out);
         assert!(out.iter().any(|&x| x != 0.0));
-        assert_eq!(ds.scratch_k.capacity() >= 10 * dim, true);
+        assert!(ds.scratch_k.capacity() >= 10 * dim);
     }
 }

@@ -80,7 +80,7 @@ impl KiviCache {
                     hi = hi.max(v);
                 }
                 let mut qs = (hi - lo) / qmax as f32;
-                if !(qs > 0.0) {
+                if qs.is_nan() || qs <= 0.0 {
                     qs = 1.0;
                 }
                 let qs = f16_to_f32(f32_to_f16(qs));

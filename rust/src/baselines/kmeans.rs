@@ -6,8 +6,19 @@
 //! over the group's subvectors. Lloyd's algorithm with k-means++-lite
 //! seeding (random distinct points), fixed iteration count as in prior KV
 //! clustering work (PQCache uses 20-50).
+//!
+//! [`KMeansCache`] serves the codebook behind [`AttentionMethod`]
+//! (PQCache-style): prefill builds the k-means codebook over centered
+//! keys and assigns every token a packed 4-bit centroid id per group;
+//! decode retrieves by LUT-GEMV over those ids (same scorer as ours) and
+//! attends densely over the top-k in full precision.
 
+use super::AttentionMethod;
+use crate::attention::dense::attend_dense;
 use crate::selfindex::codebook::Codebook;
+use crate::selfindex::lut::Lut;
+use crate::selfindex::score::{score_tokens_bytelut, ByteLut};
+use crate::selfindex::topk::top_k_indices;
 use crate::substrate::rng::Rng;
 
 /// Run k-means over each group's subvectors; returns a [`Codebook`]
@@ -106,6 +117,186 @@ pub fn quantization_mse(codebook: &Codebook, centered_keys: &[f32], dim: usize) 
     total / (tokens * groups * 4) as f64
 }
 
+/// Default Lloyd iterations for the serving-path codebook (PQCache-range,
+/// low end: the comparison point is construction cost, Table 4).
+pub const KMEANS_ITERS: usize = 8;
+
+/// The k-means clustering baseline behind [`AttentionMethod`]: f32 K/V
+/// store (fp16-accounted) + per-token packed centroid ids as the
+/// retrieval index, scored with the same byte-LUT GEMV as Self-Indexing.
+pub struct KMeansCache {
+    pub dim: usize,
+    pub iters: usize,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    /// frozen per-channel means (retrieval operates on centered keys)
+    mu: Vec<f32>,
+    codebook: Option<Codebook>,
+    /// packed 4-bit centroid assignments, token-major (dim/4 nibbles/token)
+    codes: Vec<u8>,
+    code_scratch: Vec<u8>,
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl KMeansCache {
+    pub fn new(dim: usize) -> Self {
+        Self::with_iters(dim, KMEANS_ITERS)
+    }
+
+    pub fn with_iters(dim: usize, iters: usize) -> Self {
+        assert_eq!(dim % 4, 0);
+        Self {
+            dim,
+            iters: iters.max(1),
+            keys: vec![],
+            vals: vec![],
+            mu: vec![],
+            codebook: None,
+            codes: vec![],
+            code_scratch: vec![],
+            scratch_k: vec![],
+            scratch_v: vec![],
+            scores: vec![],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub fn codebook(&self) -> &Codebook {
+        self.codebook.as_ref().expect("prefill not ingested")
+    }
+
+    /// Assign one centered key row to its nearest centroid per group and
+    /// append the packed nibble codes.
+    fn encode_row(&mut self, centered_row: &[f32]) {
+        let groups = self.dim / 4;
+        let cb = self.codebook.as_ref().expect("prefill first");
+        self.code_scratch.clear();
+        for g in 0..groups {
+            let sub = &centered_row[g * 4..(g + 1) * 4];
+            let mut best = 0u8;
+            let mut best_d = f32::INFINITY;
+            for c in 0..16 {
+                let cent = cb.centroid(g, c);
+                let mut d = 0.0;
+                for i in 0..4 {
+                    let x = sub[i] - cent[i];
+                    d += x * x;
+                }
+                if d < best_d {
+                    best_d = d;
+                    best = c as u8;
+                }
+            }
+            self.code_scratch.push(best);
+        }
+        let start = self.codes.len();
+        self.codes.resize(start + groups.div_ceil(2), 0);
+        for (i, &c) in self.code_scratch.iter().enumerate() {
+            self.codes[start + i / 2] |= (c & 0x0f) << ((i % 2) * 4);
+        }
+    }
+
+    /// LUT-GEMV scores of every cached token over the centroid ids.
+    pub fn approx_scores(&self, query: &[f32], out: &mut Vec<f32>) {
+        let lut = Lut::build(query, self.codebook());
+        let blut = ByteLut::from_lut(&lut);
+        score_tokens_bytelut(&blut, &self.codes, self.len(), out);
+    }
+}
+
+impl AttentionMethod for KMeansCache {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn prefill(&mut self, keys: &[f32], vals: &[f32], _q: &[f32], _r: usize) {
+        assert_eq!(keys.len() % self.dim, 0);
+        let dim = self.dim;
+        let tokens = keys.len() / dim;
+        if tokens == 0 {
+            return;
+        }
+        // center like the compressed cache: retrieval targets K' = K - mu
+        self.mu = vec![0.0; dim];
+        for row in keys.chunks_exact(dim) {
+            for (j, &v) in row.iter().enumerate() {
+                self.mu[j] += v;
+            }
+        }
+        for m in self.mu.iter_mut() {
+            *m /= tokens as f32;
+        }
+        let mut centered = keys.to_vec();
+        for row in centered.chunks_exact_mut(dim) {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v -= self.mu[j];
+            }
+        }
+        self.codebook = Some(kmeans_codebook(&centered, dim, self.iters, 0x5EED));
+        self.keys.extend_from_slice(keys);
+        self.vals.extend_from_slice(vals);
+        for t in 0..tokens {
+            self.encode_row(&centered[t * dim..(t + 1) * dim]);
+        }
+    }
+
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        // frozen codebook + mu, like the paper's decode-time reuse
+        let centered: Vec<f32> = k_row
+            .iter()
+            .zip(&self.mu)
+            .map(|(&v, &m)| v - m)
+            .collect();
+        self.keys.extend_from_slice(k_row);
+        self.vals.extend_from_slice(v_row);
+        self.encode_row(&centered);
+    }
+
+    fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]) {
+        let dim = self.dim;
+        let mut scores = std::mem::take(&mut self.scores);
+        self.approx_scores(query, &mut scores);
+        let sel = top_k_indices(&scores, budget.min(self.len()));
+        self.scores = scores;
+        self.scratch_k.clear();
+        self.scratch_v.clear();
+        for &t in &sel {
+            let t = t as usize;
+            self.scratch_k
+                .extend_from_slice(&self.keys[t * dim..(t + 1) * dim]);
+            self.scratch_v
+                .extend_from_slice(&self.vals[t * dim..(t + 1) * dim]);
+        }
+        let sk = std::mem::take(&mut self.scratch_k);
+        let sv = std::mem::take(&mut self.scratch_v);
+        attend_dense(query, &sk, &sv, sel.len(), out);
+        self.scratch_k = sk;
+        self.scratch_v = sv;
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // fp16 K/V + packed 4-bit ids + the codebook (fixed overhead)
+        (self.keys.len() + self.vals.len()) * 2
+            + self.codes.len()
+            + self.codebook.as_ref().map(|c| c.bytes()).unwrap_or(0)
+    }
+
+    fn retrieval_scores(&mut self, query: &[f32]) -> Option<Vec<f32>> {
+        let mut out = Vec::new();
+        self.approx_scores(query, &mut out);
+        Some(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +317,45 @@ mod tests {
         let e1 = quantization_mse(&cb1, &k, dim);
         let e10 = quantization_mse(&cb10, &k, dim);
         assert!(e10 <= e1 + 1e-9, "{e10} vs {e1}");
+    }
+
+    #[test]
+    fn kmeans_cache_retrieves_and_attends() {
+        use crate::baselines::testutil::clustered;
+        let dim = 64;
+        let (keys, vals, query) = clustered(5, 512, dim, 4.0);
+        let mut m = KMeansCache::new(dim);
+        m.prefill(&keys, &vals, &[], 1);
+        assert_eq!(m.len(), 512);
+        for i in 0..8 {
+            let k = &keys[i * dim..(i + 1) * dim];
+            m.append(k, k);
+        }
+        assert_eq!(m.len(), 520);
+        // approximate top-k overlaps exact top-k on clustered keys
+        let approx = m.retrieval_scores(&query).unwrap();
+        assert_eq!(approx.len(), 520);
+        let mu = m.mu.clone();
+        let centered: Vec<f32> = m
+            .keys
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v - mu[i % dim])
+            .collect();
+        let mut exact = Vec::new();
+        crate::selfindex::score::exact_scores(&query, &centered, dim, &mut exact);
+        let k = 64;
+        let sa: std::collections::HashSet<u32> =
+            top_k_indices(&approx, k).into_iter().collect();
+        let se: std::collections::HashSet<u32> =
+            top_k_indices(&exact, k).into_iter().collect();
+        let recall = sa.intersection(&se).count() as f32 / k as f32;
+        assert!(recall > 0.3, "recall {recall}");
+        let mut out = vec![0.0; dim];
+        m.attend(&query, 96, &mut out);
+        assert!(out.iter().any(|&x| x != 0.0));
+        // fp16 K/V + 4-bit ids: well under the fp32 full cache
+        assert!(m.memory_bytes() < 520 * dim * 2 * 4);
     }
 
     #[test]

@@ -11,12 +11,16 @@
 //! * [`double_sparse`]— heavy-channel (16) token-level approximate top-k
 //!   (Table 1/2).
 //! * [`kmeans`]       — iterative k-means codebook construction, the
-//!   clustering baseline of Table 4.
+//!   clustering baseline of Table 4, served as [`KMeansCache`] (PQCache-
+//!   style codebook retrieval behind the same trait).
 //! * [`ours`]         — the Self-Indexing method behind the same trait.
 //!
-//! All methods implement [`AttentionMethod`]: per-head prefill →
+//! All seven methods implement [`AttentionMethod`]: per-head prefill →
 //! (optional) decode appends → budgeted attention, plus byte-exact memory
-//! accounting — which is precisely the protocol the benches drive.
+//! accounting — which is precisely the protocol the benches drive. The
+//! engine consumes them through the sequence-level [`crate::method`] API
+//! (`CacheMethod` registry → `SequenceCache`), with the per-head trait as
+//! the leaf implementation.
 
 pub mod double_sparse;
 pub mod full;
@@ -29,6 +33,7 @@ pub mod snapkv;
 pub use double_sparse::DoubleSparse;
 pub use full::FullCache;
 pub use kivi::KiviCache;
+pub use kmeans::KMeansCache;
 pub use ours::SelfIndexing;
 pub use quest::QuestCache;
 pub use snapkv::SnapKv;
@@ -70,21 +75,50 @@ pub trait AttentionMethod: Send {
 
     /// GQA group attention: R query heads sharing this kv head attend in
     /// one call. `queries`/`outs` are (R × dim). Default: R independent
-    /// `attend` calls; Self-Indexing overrides with the paper's
-    /// aggregated-LUT retrieval (one top-k for the group).
+    /// `attend` calls straight into the disjoint `outs` chunks (no temp
+    /// buffer); Self-Indexing overrides with the paper's aggregated-LUT
+    /// retrieval (one top-k for the group).
     fn attend_group(&mut self, queries: &[f32], dim: usize, budget: usize, outs: &mut [f32]) {
         assert_eq!(queries.len(), outs.len());
         assert_eq!(queries.len() % dim, 0);
-        let r = queries.len() / dim;
-        for i in 0..r {
-            let q = &queries[i * dim..(i + 1) * dim];
-            // split_at_mut dance to get a &mut slice per head
-            let out = &mut outs[i * dim..(i + 1) * dim];
-            // SAFETY-free copy approach: attend into a temp then write
-            let mut tmp = vec![0.0f32; dim];
-            self.attend(q, budget, &mut tmp);
-            out.copy_from_slice(&tmp);
+        for (q, out) in queries.chunks_exact(dim).zip(outs.chunks_exact_mut(dim)) {
+            self.attend(q, budget, out);
         }
+    }
+}
+
+/// Forwarding impl so registry-built leaves (`Box<dyn AttentionMethod>`)
+/// slot into generic adapters like `method::PerHeadSeqCache<M>` without a
+/// second code path. Every method forwards — including the overridable
+/// `attend_group`/`retrieval_scores`, so concrete overrides (e.g.
+/// Self-Indexing's one-top-k GQA group) are preserved through the box.
+impl AttentionMethod for Box<dyn AttentionMethod> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn prefill(&mut self, keys: &[f32], vals: &[f32], q_window: &[f32], r_heads: usize) {
+        (**self).prefill(keys, vals, q_window, r_heads)
+    }
+
+    fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        (**self).append(k_row, v_row)
+    }
+
+    fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]) {
+        (**self).attend(query, budget, out)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (**self).memory_bytes()
+    }
+
+    fn retrieval_scores(&mut self, query: &[f32]) -> Option<Vec<f32>> {
+        (**self).retrieval_scores(query)
+    }
+
+    fn attend_group(&mut self, queries: &[f32], dim: usize, budget: usize, outs: &mut [f32]) {
+        (**self).attend_group(queries, dim, budget, outs)
     }
 }
 

@@ -83,6 +83,12 @@ pub struct EngineConfig {
     /// worker threads for the per-(sequence, kv-head) decode fan-out
     /// (0 = one per available core)
     pub decode_workers: usize,
+    /// attention/cache method served, validated against the method
+    /// registry (canonical name or alias, case-insensitive)
+    pub method: String,
+    /// per-method knob overlay `(knob, value)`, validated against the
+    /// selected method's declared knobs (see `method::registry`)
+    pub method_overlay: Vec<(String, Json)>,
     pub selfindex: SelfIndexConfig,
 }
 
@@ -96,6 +102,8 @@ impl Default for EngineConfig {
             queue_limit: 256,
             max_new_tokens: 32,
             decode_workers: 0,
+            method: "selfindex".to_string(),
+            method_overlay: vec![],
             selfindex: SelfIndexConfig::default(),
         }
     }
@@ -133,6 +141,21 @@ impl EngineConfig {
         if let Some(x) = v.get("decode_workers").and_then(Json::as_usize) {
             cfg.decode_workers = x;
         }
+        if let Some(x) = v.get("method").and_then(Json::as_str) {
+            // canonicalize through the registry so aliases and case
+            // differences collapse to one name
+            let entry = crate::method::lookup(x).map_err(|e| e.to_string())?;
+            cfg.method = entry.name().to_string();
+        }
+        if let Some(x) = v.get("method_overlay") {
+            let obj = x
+                .as_obj()
+                .ok_or_else(|| "method_overlay must be an object".to_string())?;
+            cfg.method_overlay = obj
+                .iter()
+                .map(|(k, val)| (k.clone(), val.clone()))
+                .collect();
+        }
         let si = &mut cfg.selfindex;
         if let Some(x) = v.path("selfindex.sink_tokens").and_then(Json::as_usize) {
             si.sink_tokens = x;
@@ -160,6 +183,7 @@ impl EngineConfig {
         if self.queue_limit == 0 {
             return Err("queue_limit == 0".into());
         }
+        crate::method::registry::validate_overlay(&self.method, &self.method_overlay)?;
         Ok(())
     }
 }
@@ -220,5 +244,29 @@ mod tests {
         assert_eq!(e.sparse_k, None);
         assert_eq!(e.selfindex.sink_tokens, 32);
         assert!(!e.selfindex.use_sinks);
+    }
+
+    #[test]
+    fn method_string_is_validated_and_canonicalized() {
+        let j = Json::parse(r#"{"method":"OURS"}"#).unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.method, "selfindex", "alias canonicalized");
+
+        let j = Json::parse(r#"{"method":"h2o"}"#).unwrap();
+        let err = EngineConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("unknown method 'h2o'"), "{err}");
+        assert!(err.contains("selfindex"), "error must list known: {err}");
+    }
+
+    #[test]
+    fn method_overlay_is_validated_against_knobs() {
+        let j = Json::parse(r#"{"method":"kivi","method_overlay":{"bits":4}}"#).unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.method, "kivi");
+        assert_eq!(e.method_overlay.len(), 1);
+
+        let j = Json::parse(r#"{"method":"kivi","method_overlay":{"pages":4}}"#).unwrap();
+        let err = EngineConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("no knob 'pages'"), "{err}");
     }
 }

@@ -1,11 +1,23 @@
 //! The serving engine: PJRT compute + compressed caches + retrieval.
 //!
 //! Per engine step ([`Engine::step`]): the scheduler either prefixes a
-//! queued request (PJRT `prefill_l{N}` → per-(layer, kv-head) method
-//! prefill with SnapKV windows) or decodes the running batch
-//! (`embed` → per-layer `decode_qkv` → native GQA-grouped attention via
-//! the configured [`AttentionMethod`] → `decode_out` → `logits` → greedy
-//! sample). The KV cache never crosses the PJRT boundary.
+//! queued request (PJRT `prefill_l{N}` → per-layer
+//! [`SequenceCache::prefill_layer`] with SnapKV windows) or decodes the
+//! running batch (`embed` → per-layer `decode_qkv` → native GQA-grouped
+//! attention through the sequence-level [`SequenceCache`] API →
+//! `decode_out` → `logits` → greedy sample). The KV cache never crosses
+//! the PJRT boundary.
+//!
+//! Decode fan-out: each layer builds one [`DecodePlan`] per sequence,
+//! every sequence's cache expands it into [`HeadTask`]s
+//! ([`SequenceCache::push_tasks`]), and the pre-built task slice runs
+//! over `ThreadPool::for_each_task` — an atomic cursor, no per-job
+//! closure boxing, and (the task arena being recycled by
+//! [`DecodeWorkQueue`]) zero steady-state heap allocations in the engine
+//! layer. Methods are built by the [`crate::method::registry`] rather
+//! than a hardcoded match.
+//!
+//! [`HeadTask`]: crate::method::HeadTask
 
 use crate::substrate::error as anyhow;
 use std::collections::HashMap;
@@ -15,56 +27,20 @@ use std::time::Instant;
 use super::request::{Request, RequestId, RequestResult};
 use super::router::{AdmitError, Router};
 use super::scheduler::{Scheduler, StepPlan};
-use crate::baselines::{
-    AttentionMethod, DoubleSparse, FullCache, KiviCache, QuestCache, SelfIndexing,
-    SnapKv,
-};
 use crate::config::{EngineConfig, ModelConfig};
+use crate::method::registry::{self, BuildCtx, CacheMethod};
+use crate::method::{DecodePlan, DecodeWorkQueue, SequenceCache};
 use crate::runtime::{HostTensor, PjrtRuntime};
-use crate::selfindex::SelfIndexConfig;
 use crate::substrate::exec::ThreadPool;
 use crate::substrate::metrics::Registry;
 
-/// Which attention/cache method the engine serves with.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum MethodKind {
-    SelfIndex,
-    Full,
-    Kivi,
-    SnapKv,
-    Quest,
-    DoubleSparse,
-}
-
-impl MethodKind {
-    pub fn parse(s: &str) -> Option<Self> {
-        Some(match s {
-            "selfindex" | "ours" => Self::SelfIndex,
-            "full" | "fa2" => Self::Full,
-            "kivi" => Self::Kivi,
-            "snapkv" => Self::SnapKv,
-            "quest" => Self::Quest,
-            "doublesparse" | "ds" => Self::DoubleSparse,
-            _ => return None,
-        })
-    }
-
-    pub fn make(&self, dim: usize, si: &SelfIndexConfig, budget_hint: usize) -> Box<dyn AttentionMethod> {
-        match self {
-            Self::SelfIndex => Box::new(SelfIndexing::new(dim, si.clone())),
-            Self::Full => Box::new(FullCache::new(dim)),
-            Self::Kivi => Box::new(KiviCache::new(dim, si.quant_bits)),
-            Self::SnapKv => Box::new(SnapKv::new(dim, budget_hint)),
-            Self::Quest => Box::new(QuestCache::new(dim)),
-            Self::DoubleSparse => Box::new(DoubleSparse::new(dim)),
-        }
-    }
-}
+pub use crate::method::MethodKind;
 
 struct SeqState {
     req: Request,
-    /// per (layer × kv-head) attention method, layer-major
-    heads: Vec<Box<dyn AttentionMethod>>,
+    /// the whole sequence's cache — every (layer, kv-head)'s state,
+    /// layer-major, behind the sequence-level method API
+    cache: Box<dyn SequenceCache>,
     /// prompt + generated tokens so far
     tokens: Vec<u8>,
     generated: Vec<u8>,
@@ -78,6 +54,8 @@ pub struct Engine {
     pub cfg: EngineConfig,
     pub method: MethodKind,
     pub metrics: Registry,
+    /// the registry entry building each admitted sequence's cache
+    builder: &'static dyn CacheMethod,
     router: Router,
     scheduler: Scheduler,
     seqs: HashMap<RequestId, SeqState>,
@@ -85,16 +63,19 @@ pub struct Engine {
     stash: Vec<Request>,
     /// total cached tokens across sequences (pool pressure heuristic)
     cached_tokens: usize,
-    /// decode fan-out workers: one scoped job per (sequence, kv head)
+    /// decode fan-out workers (one task per (sequence, kv head))
     workers: ThreadPool,
+    /// recycled task arena for the per-layer decode fan-out
+    decode_tasks: DecodeWorkQueue,
 }
 
 impl Engine {
-    pub fn new(
-        artifact_dir: &Path,
-        cfg: EngineConfig,
-        method: MethodKind,
-    ) -> anyhow::Result<Self> {
+    pub fn new(artifact_dir: &Path, cfg: EngineConfig, method: MethodKind) -> anyhow::Result<Self> {
+        let mut cfg = cfg;
+        cfg.method = method.name().to_string();
+        registry::validate_overlay(&cfg.method, &cfg.method_overlay)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let builder = method.entry();
         let rt = PjrtRuntime::load(artifact_dir)?;
         let model = rt.manifest.model.clone();
         let metrics = Registry::default();
@@ -110,12 +91,21 @@ impl Engine {
             } else {
                 ThreadPool::new(cfg.decode_workers)
             },
+            decode_tasks: DecodeWorkQueue::new(),
+            builder,
             rt,
             model,
             cfg,
             method,
             metrics,
         })
+    }
+
+    /// Build from the config's validated `method` string (the CLI path:
+    /// `--method Quest` and `"method": "quest"` behave identically).
+    pub fn from_config(artifact_dir: &Path, cfg: EngineConfig) -> anyhow::Result<Self> {
+        let kind = MethodKind::parse(&cfg.method).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::new(artifact_dir, cfg, kind)
     }
 
     pub fn submit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<RequestId, AdmitError> {
@@ -130,20 +120,15 @@ impl Engine {
         self.scheduler.running().len()
     }
 
-    /// KV bytes currently held across sequences/heads (Fig. 5 metric).
+    /// KV bytes currently held across sequences (Fig. 5 metric).
     pub fn cache_bytes(&self) -> usize {
-        self.seqs
-            .values()
-            .flat_map(|s| s.heads.iter())
-            .map(|h| h.memory_bytes())
-            .sum()
+        self.seqs.values().map(|s| s.cache.memory_bytes()).sum()
     }
 
     fn pool_can_admit(&self, prompt_len: usize) -> bool {
         let per_head = prompt_len + self.cfg.max_new_tokens;
         let heads = self.model.n_layers * self.model.n_kv_heads;
-        self.cached_tokens + per_head * heads
-            <= self.cfg.pool_tokens * heads
+        self.cached_tokens + per_head * heads <= self.cfg.pool_tokens * heads
     }
 
     /// Drive one scheduler step; returns requests completed in this step.
@@ -188,11 +173,7 @@ impl Engine {
             .ok_or_else(|| anyhow::anyhow!("prompt {} exceeds buckets", prompt_len))?
             .name
             .clone();
-        let padded: usize = bucket
-            .strip_prefix("prefill_l")
-            .unwrap()
-            .parse()
-            .unwrap();
+        let padded: usize = bucket.strip_prefix("prefill_l").unwrap().parse().unwrap();
 
         let mut tokens = vec![0i32; padded];
         for (i, &b) in req.prompt.iter().enumerate() {
@@ -206,8 +187,7 @@ impl Engine {
                 HostTensor::scalar_i32(prompt_len as i32),
             ],
         )?;
-        let (k_cache, v_cache, last_logits, q_window) =
-            (&outs[0], &outs[1], &outs[2], &outs[3]);
+        let (k_cache, v_cache, last_logits, q_window) = (&outs[0], &outs[1], &outs[2], &outs[3]);
 
         let m = &self.model;
         let (nl, kvh, hd, h) = (m.n_layers, m.n_kv_heads, m.head_dim, m.n_heads);
@@ -217,37 +197,44 @@ impl Engine {
         let vc = v_cache.as_f32();
         let qw = q_window.as_f32();
 
-        // build per-(layer, kv-head) methods
+        // build the sequence's cache via the registry, then feed it one
+        // layer at a time (kv-head-major staging buffers)
         let budget_hint = self.cfg.budget_for(prompt_len) + self.cfg.selfindex.sink_tokens;
-        let mut heads: Vec<Box<dyn AttentionMethod>> =
-            Vec::with_capacity(nl * kvh);
-        let mut keys_buf = vec![0.0f32; prompt_len * hd];
-        let mut vals_buf = vec![0.0f32; prompt_len * hd];
-        let mut qw_buf = vec![0.0f32; w * r * hd];
+        let ctx = BuildCtx {
+            dim: hd,
+            n_layers: nl,
+            kv_heads: kvh,
+            gqa_ratio: r,
+            budget_hint,
+            pool_tokens: self.cfg.pool_tokens,
+            selfindex: &self.cfg.selfindex,
+            overlay: &self.cfg.method_overlay,
+        };
+        let mut cache = self.builder.build_seq(&ctx);
+        let mut keys_buf = vec![0.0f32; kvh * prompt_len * hd];
+        let mut vals_buf = vec![0.0f32; kvh * prompt_len * hd];
+        let mut qw_buf = vec![0.0f32; kvh * w * r * hd];
         for l in 0..nl {
             for head in 0..kvh {
                 // k_cache layout: (layers, padded, kvh, hd)
                 for t in 0..prompt_len {
                     let src = ((l * padded + t) * kvh + head) * hd;
-                    keys_buf[t * hd..(t + 1) * hd]
-                        .copy_from_slice(&kc[src..src + hd]);
-                    vals_buf[t * hd..(t + 1) * hd]
-                        .copy_from_slice(&vc[src..src + hd]);
+                    let dst = (head * prompt_len + t) * hd;
+                    keys_buf[dst..dst + hd].copy_from_slice(&kc[src..src + hd]);
+                    vals_buf[dst..dst + hd].copy_from_slice(&vc[src..src + hd]);
                 }
-                // q_window layout: (layers, w, h, hd); group heads
+                // q_window layout: (layers, w, h, hd); group query heads
+                // under their kv head, head-major
                 for wi in 0..w {
                     for ri in 0..r {
                         let qh = head * r + ri;
                         let src = ((l * w + wi) * h + qh) * hd;
-                        let dst = (wi * r + ri) * hd;
+                        let dst = ((head * w + wi) * r + ri) * hd;
                         qw_buf[dst..dst + hd].copy_from_slice(&qw[src..src + hd]);
                     }
                 }
-                let mut method =
-                    self.method.make(hd, &self.cfg.selfindex, budget_hint);
-                method.prefill(&keys_buf, &vals_buf, &qw_buf, r);
-                heads.push(method);
             }
+            cache.prefill_layer(l, &keys_buf, &vals_buf, &qw_buf);
         }
         self.cached_tokens += prompt_len * nl * kvh;
 
@@ -258,7 +245,7 @@ impl Engine {
         let id = req.id;
         let st = SeqState {
             req,
-            heads,
+            cache,
             tokens: tokens_all,
             generated: vec![first],
             first_token_at: Some(Instant::now()),
@@ -274,8 +261,9 @@ impl Engine {
     }
 
     /// One decode step over `states`: embed → per-layer qkv → parallel
-    /// native attention (one scoped job per (sequence, kv-head), each
-    /// owning its method's scratch arenas and its disjoint slice of the
+    /// native attention (one [`crate::method::HeadTask`] per (sequence,
+    /// kv-head), executed over the pool's atomic-cursor work queue; each
+    /// task owns its leaf's scratch arenas and a disjoint slice of the
     /// output buffer) → output projection → logits → greedy sample.
     fn decode_batch(&mut self, states: &mut [SeqState]) -> anyhow::Result<()> {
         let b = states.len();
@@ -299,11 +287,9 @@ impl Engine {
             toks[i] = *s.tokens.last().unwrap() as i32;
             pos[i] = (s.tokens.len() - 1) as i32;
         }
-        let outs = self.rt.run(
-            &format!("embed_b{bb}"),
-            None,
-            &[HostTensor::I32(toks, vec![bb])],
-        )?;
+        let outs = self
+            .rt
+            .run(&format!("embed_b{bb}"), None, &[HostTensor::I32(toks, vec![bb])])?;
         let mut x = outs.into_iter().next().unwrap();
 
         let budgets: Vec<usize> = states
@@ -323,32 +309,32 @@ impl Engine {
             let vf = v.as_f32();
 
             // native attention per (seq, kv head), GQA-grouped, fanned
-            // out over the worker pool: heads are independent (their
-            // caches, pools, and scratch arenas are per-method state),
-            // and each job writes a disjoint r·hd chunk of `o`
+            // out over the slice-based work queue: every sequence's cache
+            // expands its DecodePlan into HeadTasks (disjoint &mut leaf +
+            // disjoint r·hd output chunk), and the pre-built task slice
+            // runs under one atomic cursor — no per-job boxing
             let mut o = vec![0.0f32; bb * h * hd];
             {
-                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                    Vec::with_capacity(b * kvh);
-                let mut o_chunks = o.chunks_mut(r * hd);
+                let mut tasks = self.decode_tasks.take();
+                let mut o_chunks = o.chunks_mut(h * hd);
                 for (i, seq) in states.iter_mut().enumerate() {
-                    let budget = budgets[i];
-                    let heads_l = &mut seq.heads[l * kvh..(l + 1) * kvh];
-                    for (head, method) in heads_l.iter_mut().enumerate() {
-                        // chunk (i*kvh + head) starts at (i*h + head*r)*hd
-                        let oslice = o_chunks.next().unwrap();
-                        let krow = &kf[(i * kvh + head) * hd..][..hd];
-                        let vrow = &vf[(i * kvh + head) * hd..][..hd];
-                        // group queries (r heads) contiguous in q layout
-                        let qbase = (i * h + head * r) * hd;
-                        let queries = &qf[qbase..qbase + r * hd];
-                        jobs.push(Box::new(move || {
-                            method.append(krow, vrow);
-                            method.attend_group(queries, hd, budget, oslice);
-                        }));
-                    }
+                    let plan = DecodePlan {
+                        layer: l,
+                        dim: hd,
+                        kv_heads: kvh,
+                        gqa_ratio: r,
+                        budget: budgets[i],
+                        k_rows: &kf[i * kvh * hd..(i + 1) * kvh * hd],
+                        v_rows: &vf[i * kvh * hd..(i + 1) * kvh * hd],
+                        // group queries (r heads per kv head) are
+                        // contiguous in the (h, hd) layout
+                        queries: &qf[i * h * hd..(i + 1) * h * hd],
+                    };
+                    // chunk (i) is this sequence's (kvh × r × hd) output
+                    let oslice = o_chunks.next().unwrap();
+                    seq.cache.push_tasks(&plan, oslice, &mut tasks);
                 }
-                self.workers.scoped(jobs);
+                self.decode_tasks.dispatch(&self.workers, tasks);
             }
             self.cached_tokens += b * kvh;
 
@@ -432,9 +418,9 @@ impl Engine {
         for id in done {
             let seq = self.seqs.remove(&id).unwrap();
             self.scheduler.remove(id);
-            self.cached_tokens = self.cached_tokens.saturating_sub(
-                seq.tokens.len() * nl * kvh,
-            );
+            self.cached_tokens = self
+                .cached_tokens
+                .saturating_sub(seq.tokens.len() * nl * kvh);
             results.push(RequestResult {
                 id,
                 prompt_len: seq.req.prompt.len(),

@@ -29,6 +29,27 @@ pub struct HeadCache {
     len: usize,
     /// scratch for centering a token during append
     scratch: Vec<f32>,
+    /// scratch for the normalized magnitudes |K'|/alpha during append
+    khat: Vec<f32>,
+    /// single-token quantization arenas (decode append reuses them so the
+    /// steady-state append performs zero heap allocations)
+    kq_scratch: TokenQuant,
+    vq_scratch: TokenQuant,
+    /// encode arenas shared by prefill + append record writes
+    enc_codes: Vec<u8>,
+    enc_packed_codes: Vec<u8>,
+    enc_packed_k: Vec<u8>,
+    enc_packed_v: Vec<u8>,
+}
+
+fn empty_token_quant(dim: usize, group: usize, bits: u32) -> TokenQuant {
+    TokenQuant {
+        values: vec![],
+        params: vec![],
+        dim,
+        group,
+        bits,
+    }
 }
 
 /// Raw quantized fields for a gathered token set, shaped for the PJRT
@@ -55,6 +76,13 @@ impl HeadCache {
             blocks: vec![],
             len: 0,
             scratch: vec![0.0; dim],
+            khat: vec![0.0; dim],
+            kq_scratch: empty_token_quant(dim, cfg.quant_group, cfg.quant_bits),
+            vq_scratch: empty_token_quant(dim, cfg.quant_group, cfg.quant_bits),
+            enc_codes: vec![],
+            enc_packed_codes: vec![],
+            enc_packed_k: vec![],
+            enc_packed_v: vec![],
             cfg,
         }
     }
@@ -123,19 +151,29 @@ impl HeadCache {
             }
         }
         let kq = crate::quant::int2::quantize_tokens(
-            &khat, self.dim, self.cfg.quant_group, self.cfg.quant_bits);
+            &khat,
+            self.dim,
+            self.cfg.quant_group,
+            self.cfg.quant_bits,
+        );
         let vq = crate::quant::int2::quantize_tokens(
-            vals, self.dim, self.cfg.quant_group, self.cfg.quant_bits);
+            vals,
+            self.dim,
+            self.cfg.quant_group,
+            self.cfg.quant_bits,
+        );
 
         for t in 0..tokens {
-            self.push_record(pool, &centered[t * self.dim..(t + 1) * self.dim],
-                             &kq, &vq, t)?;
+            self.push_record(pool, &centered[t * self.dim..(t + 1) * self.dim], &kq, &vq, t)?;
         }
         Ok(tokens)
     }
 
     /// Append one decode-time token (k/v rows, dim each), reusing frozen
-    /// mu/alpha and the prefill codebook.
+    /// mu/alpha and the prefill codebook. Every buffer the encode touches
+    /// is a reusable arena on `self`, so the steady-state decode append
+    /// performs zero heap allocations (asserted by
+    /// `baselines::ours::tests::decode_step_is_allocation_free`).
     pub fn append(
         &mut self,
         pool: &mut BlockPool,
@@ -143,21 +181,42 @@ impl HeadCache {
         v_row: &[f32],
     ) -> Result<(), CacheFull> {
         assert_eq!(k_row.len(), self.dim);
-        let frozen = self.stats.frozen().expect("prefill first");
-        let (mu, alpha) = (frozen.mu.clone(), frozen.alpha.clone());
-        for j in 0..self.dim {
-            self.scratch[j] = k_row[j] - mu[j];
+        let dim = self.dim;
+        {
+            let frozen = self.stats.frozen().expect("prefill first");
+            self.scratch.resize(dim, 0.0);
+            self.khat.resize(dim, 0.0);
+            for j in 0..dim {
+                let c = k_row[j] - frozen.mu[j];
+                self.scratch[j] = c;
+                self.khat[j] = c.abs() / frozen.alpha[j];
+            }
         }
-        let centered = self.scratch.clone();
-        let mut khat = centered.clone();
-        for j in 0..self.dim {
-            khat[j] = khat[j].abs() / alpha[j];
-        }
-        let kq = crate::quant::int2::quantize_tokens(
-            &khat, self.dim, self.cfg.quant_group, self.cfg.quant_bits);
-        let vq = crate::quant::int2::quantize_tokens(
-            v_row, self.dim, self.cfg.quant_group, self.cfg.quant_bits);
-        self.push_record(pool, &centered, &kq, &vq, 0)
+        let khat = std::mem::take(&mut self.khat);
+        let placeholder = || empty_token_quant(dim, self.cfg.quant_group, self.cfg.quant_bits);
+        let mut kq = std::mem::replace(&mut self.kq_scratch, placeholder());
+        let mut vq = std::mem::replace(&mut self.vq_scratch, placeholder());
+        crate::quant::int2::quantize_tokens_into(
+            &khat,
+            dim,
+            self.cfg.quant_group,
+            self.cfg.quant_bits,
+            &mut kq,
+        );
+        crate::quant::int2::quantize_tokens_into(
+            v_row,
+            dim,
+            self.cfg.quant_group,
+            self.cfg.quant_bits,
+            &mut vq,
+        );
+        let centered = std::mem::take(&mut self.scratch);
+        let res = self.push_record(pool, &centered, &kq, &vq, 0);
+        self.scratch = centered;
+        self.khat = khat;
+        self.kq_scratch = kq;
+        self.vq_scratch = vq;
+        res
     }
 
     /// Write token `t` of the (already quantized) batch into the cache.
@@ -182,22 +241,25 @@ impl HeadCache {
 
         // encode codes from the centered key (with or without the sign
         // plane doubling as quant signs — the storage is the same; the
-        // ablation switch changes reconstruction, not encoding)
-        let codes: Vec<u8> = centered_key
-            .chunks_exact(4)
-            .map(crate::selfindex::codes::sign_code)
-            .collect();
-        let packed_codes = pack::pack_codes(&codes);
+        // ablation switch changes reconstruction, not encoding) — all
+        // through reusable arenas, so per-token encode never allocates
+        self.enc_codes.clear();
+        self.enc_codes.extend(
+            centered_key
+                .chunks_exact(4)
+                .map(crate::selfindex::codes::sign_code),
+        );
+        pack::pack_codes_into(&self.enc_codes, &mut self.enc_packed_codes);
         let bits = self.cfg.quant_bits;
-        let packed_kmag = pack::pack_bits(&kq.values[t * dim..(t + 1) * dim], bits);
-        let packed_vval = pack::pack_bits(&vq.values[t * dim..(t + 1) * dim], bits);
+        pack::pack_bits_into(&kq.values[t * dim..(t + 1) * dim], bits, &mut self.enc_packed_k);
+        pack::pack_bits_into(&vq.values[t * dim..(t + 1) * dim], bits, &mut self.enc_packed_v);
 
         let block = pool.get_mut(block_id);
         let cb = layout.codes_bytes;
-        block.codes[slot * cb..(slot + 1) * cb].copy_from_slice(&packed_codes);
+        block.codes[slot * cb..(slot + 1) * cb].copy_from_slice(&self.enc_packed_codes);
         let pb = layout.payload_bytes;
-        block.k_mag[slot * pb..(slot + 1) * pb].copy_from_slice(&packed_kmag);
-        block.v_val[slot * pb..(slot + 1) * pb].copy_from_slice(&packed_vval);
+        block.k_mag[slot * pb..(slot + 1) * pb].copy_from_slice(&self.enc_packed_k);
+        block.v_val[slot * pb..(slot + 1) * pb].copy_from_slice(&self.enc_packed_v);
         block.k_prm[slot * ng..(slot + 1) * ng]
             .copy_from_slice(&kq.params[t * ng..(t + 1) * ng]);
         block.v_prm[slot * ng..(slot + 1) * ng]
@@ -254,8 +316,12 @@ impl HeadCache {
             }
             let n = (end - base).min(bt);
             let block = pool.get(id);
-            let bmax =
-                crate::selfindex::score::score_block_bytelut(blut, &block.codes, n, &mut scratch[..n]);
+            let bmax = crate::selfindex::score::score_block_bytelut(
+                blut,
+                &block.codes,
+                n,
+                &mut scratch[..n],
+            );
             f(base, &scratch[..n], bmax);
             base += n;
         }
@@ -671,8 +737,8 @@ mod tests {
         let mut r = Rng::new(2);
         let mut pool = mk_pool(64);
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 40, 64),
-                          &rand_rows(&mut r, 40, 64)).unwrap();
+        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 40, 64), &rand_rows(&mut r, 40, 64))
+            .unwrap();
         for _ in 0..10 {
             let k: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
             let v: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
@@ -692,8 +758,8 @@ mod tests {
         let mut pool = mk_pool(64);
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
         // 100 tokens over 16-token blocks: full blocks + a ragged tail
-        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 100, 64),
-                          &rand_rows(&mut r, 100, 64)).unwrap();
+        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64))
+            .unwrap();
         let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
         let blut = ByteLut::from_lut(&Lut::build(&q, hc.codebook()));
         let mut flat = Vec::new();
@@ -724,8 +790,8 @@ mod tests {
         let mut r = Rng::new(3);
         let mut pool = mk_pool(64);
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 50, 64),
-                          &rand_rows(&mut r, 50, 64)).unwrap();
+        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 50, 64), &rand_rows(&mut r, 50, 64))
+            .unwrap();
         let mut gq = GatheredQuant::default();
         hc.gather_quant(&pool, &[0, 17, 49, 3], &mut gq);
         assert_eq!(gq.codes_i32.len(), 4 * 16);
@@ -740,8 +806,8 @@ mod tests {
         let mut r = Rng::new(4);
         let mut pool = mk_pool(2); // 32 tokens max
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        let res = hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 100, 64),
-                                    &rand_rows(&mut r, 100, 64));
+        let res =
+            hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64));
         assert!(res.is_err());
     }
 
@@ -750,8 +816,8 @@ mod tests {
         let mut r = Rng::new(5);
         let mut pool = mk_pool(8);
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 64, 64),
-                          &rand_rows(&mut r, 64, 64)).unwrap();
+        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 64, 64), &rand_rows(&mut r, 64, 64))
+            .unwrap();
         assert_eq!(pool.used_blocks(), 4);
         hc.free(&mut pool);
         assert_eq!(pool.used_blocks(), 0);
@@ -763,8 +829,8 @@ mod tests {
         let mut r = Rng::new(6);
         let mut pool = mk_pool(16);
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 64, 64),
-                          &rand_rows(&mut r, 64, 64)).unwrap();
+        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 64, 64), &rand_rows(&mut r, 64, 64))
+            .unwrap();
         let expect = 4 * 16 * RecordLayout::new(64, &hc.cfg).bytes_per_token();
         assert_eq!(hc.payload_bytes(&pool), expect);
         assert!(hc.fixed_overhead_bytes() > 0);

@@ -17,7 +17,14 @@
 //!
 //! Entry points: [`coordinator::engine::Engine`] for serving,
 //! [`selfindex`] for the paper's algorithm as a standalone library,
-//! [`baselines`] for SnapKV / Quest / DoubleSparse / KIVI comparators.
+//! [`method`] for the engine↔method boundary (the `CacheMethod` registry
+//! + sequence-level caches), [`baselines`] for SnapKV / Quest /
+//! DoubleSparse / KIVI / k-means comparators.
+
+// Numeric-kernel style: indexed loops over parallel buffers are the
+// idiom here (they mirror the math and the paper's pseudocode); clippy's
+// iterator rewrites would obscure the addressing the kernels are about.
+#![allow(clippy::needless_range_loop)]
 
 pub mod attention;
 pub mod baselines;
@@ -25,6 +32,7 @@ pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod kvcache;
+pub mod method;
 pub mod model;
 pub mod quant;
 pub mod runtime;

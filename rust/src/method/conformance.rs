@@ -1,0 +1,415 @@
+//! Shared trait-conformance suite, run over all seven methods through the
+//! sequence-level [`SequenceCache`] API (see `tests/conformance.rs`).
+//!
+//! Per method it asserts:
+//! * the registry-built [`SequenceCache`] is **bit-exact** with driving
+//!   the same per-head leaves by hand, both through the serial
+//!   `attend_step` entry and through the parallel
+//!   `DecodeWorkQueue`/`ThreadPool::for_each_task` fan-out (the adapter
+//!   and work queue add no arithmetic of their own);
+//! * `memory_bytes` is monotone under decode appends at quant-group
+//!   granularity (64-append windows — methods like KIVI transiently
+//!   shrink when a residual group compresses);
+//! * `attend` with budget ≥ len matches dense full attention within a
+//!   per-method tolerance (lossless methods ≈ exactly, quantized ones
+//!   within their quant-error bar);
+//! * where appends are contractually equivalent to a longer prefill
+//!   (full / quest / kivi), prefill(T)+append(m) equals prefill(T+m).
+
+use super::plan::{DecodePlan, DecodeWorkQueue, HeadTask};
+use super::registry::{self, BuildCtx};
+use super::SequenceCache;
+use crate::baselines::AttentionMethod;
+use crate::eval::cosine;
+use crate::selfindex::SelfIndexConfig;
+use crate::substrate::exec::ThreadPool;
+use crate::substrate::rng::Rng;
+
+const DIM: usize = 64;
+const LAYERS: usize = 2;
+const KVH: usize = 2;
+const R: usize = 2;
+/// prefill tokens per head
+const T: usize = 192;
+/// decode steps for the memory-monotonicity window check
+const MEM_STEPS: usize = 96;
+/// window at which memory must be monotone (≥ KIVI's 2× token group)
+const MEM_WINDOW: usize = 64;
+
+/// One method's conformance expectations.
+pub struct Conformance {
+    pub method: &'static str,
+    /// cosine bar for budget ≥ len attention vs dense full attention
+    pub dense_cosine: f64,
+    /// prefill(T)+append(m) must equal prefill(T+m) exactly
+    pub append_equiv_prefill: bool,
+}
+
+/// All seven methods.
+pub const SUITE: &[Conformance] = &[
+    Conformance {
+        method: "selfindex",
+        dense_cosine: 0.80,
+        append_equiv_prefill: false, // mu/alpha/codebook freeze at prefill
+    },
+    Conformance {
+        method: "full",
+        dense_cosine: 0.999,
+        append_equiv_prefill: true,
+    },
+    Conformance {
+        method: "kivi",
+        dense_cosine: 0.90,
+        append_equiv_prefill: true, // identical token-group boundaries
+    },
+    Conformance {
+        method: "snapkv",
+        dense_cosine: 0.999, // suite builds with keep = prompt length
+        append_equiv_prefill: false, // pruning is a prefill-time decision
+    },
+    Conformance {
+        method: "quest",
+        dense_cosine: 0.999,
+        append_equiv_prefill: true, // incremental min/max == rebuilt index
+    },
+    Conformance {
+        method: "doublesparse",
+        dense_cosine: 0.999,
+        append_equiv_prefill: false, // heavy channels freeze at prefill
+    },
+    Conformance {
+        method: "kmeans",
+        dense_cosine: 0.999,
+        append_equiv_prefill: false, // codebook freezes at prefill
+    },
+];
+
+/// Run the full suite for one method by registry name.
+pub fn run_named(name: &str) {
+    let case = SUITE
+        .iter()
+        .find(|c| c.method == name)
+        .unwrap_or_else(|| panic!("no conformance case for '{name}'"));
+    run(case);
+}
+
+/// Run every check for one method.
+pub fn run(case: &Conformance) {
+    adapter_is_exact(case);
+    memory_monotone_under_append(case);
+    full_budget_matches_dense(case);
+    if case.append_equiv_prefill {
+        append_equals_longer_prefill(case);
+    }
+}
+
+fn ctx<'a>(
+    si: &'a SelfIndexConfig,
+    overlay: &'a [(String, crate::substrate::json::Json)],
+) -> BuildCtx<'a> {
+    BuildCtx {
+        dim: DIM,
+        n_layers: LAYERS,
+        kv_heads: KVH,
+        gqa_ratio: R,
+        budget_hint: T,
+        pool_tokens: 2048,
+        selfindex: si,
+        overlay,
+    }
+}
+
+/// Clustered keys with three query-aligned needle rows (peaked attention,
+/// so output-space comparisons are stable) and strong needle values.
+fn head_state(seed: u64, tokens: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut r = Rng::new(seed);
+    let n_dir = 8;
+    let mag = 4.0f32;
+    let mut dirs = vec![0.0f32; n_dir * DIM];
+    for d in dirs.chunks_exact_mut(DIM) {
+        let mut norm = 0.0;
+        for x in d.iter_mut() {
+            *x = r.normal_f32();
+            norm += *x * *x;
+        }
+        let inv = 1.0 / norm.sqrt();
+        for x in d.iter_mut() {
+            *x *= inv;
+        }
+    }
+    let mut keys = vec![0.0f32; tokens * DIM];
+    for t in 0..tokens {
+        let c = r.below(n_dir as u64) as usize;
+        for j in 0..DIM {
+            keys[t * DIM + j] = mag * dirs[c * DIM + j] + 0.5 * r.normal_f32();
+        }
+    }
+    let mut vals: Vec<f32> = (0..tokens * DIM).map(|_| r.normal_f32()).collect();
+    let query: Vec<f32> = (0..DIM)
+        .map(|j| mag * dirs[j] + 0.3 * r.normal_f32())
+        .collect();
+    for needle in [tokens / 4, tokens / 2, 3 * tokens / 4] {
+        for j in 0..DIM {
+            keys[needle * DIM + j] = 2.5 * query[j];
+            // strong structured values so 2-bit V quantization error stays
+            // small relative to the signal
+            vals[needle * DIM + j] = if j % 2 == 0 { 3.0 } else { -3.0 };
+        }
+    }
+    (keys, vals, query)
+}
+
+/// kv-head-major prefill buffers for one layer + the per-head queries.
+fn layer_state(layer: usize, tokens: usize) -> (Vec<f32>, Vec<f32>, Vec<Vec<f32>>) {
+    let mut keys = Vec::with_capacity(KVH * tokens * DIM);
+    let mut vals = Vec::with_capacity(KVH * tokens * DIM);
+    let mut queries = Vec::with_capacity(KVH);
+    for head in 0..KVH {
+        let (k, v, q) = head_state(1000 + (layer * KVH + head) as u64, tokens);
+        keys.extend_from_slice(&k);
+        vals.extend_from_slice(&v);
+        queries.push(q);
+    }
+    (keys, vals, queries)
+}
+
+/// One decode step's staged inputs for one layer: new K/V rows per head
+/// and the GQA query groups (needle-aligned per head).
+struct StepState {
+    k_rows: Vec<f32>,
+    v_rows: Vec<f32>,
+    queries: Vec<f32>,
+}
+
+fn step_state(step: usize, layer: usize, head_queries: &[Vec<f32>]) -> StepState {
+    let mut r = Rng::new(7000 + (step * LAYERS + layer) as u64);
+    let k_rows: Vec<f32> = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
+    let v_rows: Vec<f32> = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
+    let mut queries = Vec::with_capacity(KVH * R * DIM);
+    for q in head_queries.iter().take(KVH) {
+        for _ in 0..R {
+            queries.extend_from_slice(q);
+        }
+    }
+    StepState {
+        k_rows,
+        v_rows,
+        queries,
+    }
+}
+
+fn plan<'a>(layer: usize, budget: usize, st: &'a StepState) -> DecodePlan<'a> {
+    DecodePlan {
+        layer,
+        dim: DIM,
+        kv_heads: KVH,
+        gqa_ratio: R,
+        budget,
+        k_rows: &st.k_rows,
+        v_rows: &st.v_rows,
+        queries: &st.queries,
+    }
+}
+
+/// Build a registry seq cache + hand-driven leaves over identical data;
+/// prefill both.
+fn build_pair(
+    name: &str,
+) -> (Box<dyn SequenceCache>, Vec<Box<dyn AttentionMethod>>, Vec<Vec<f32>>) {
+    let si = SelfIndexConfig::default();
+    let overlay = vec![];
+    let entry = registry::lookup(name).expect("registered");
+    let c = ctx(&si, &overlay);
+    let mut seq = entry.build_seq(&c);
+    assert_eq!(seq.method_name(), name);
+    assert_eq!(seq.n_layers(), LAYERS);
+    assert_eq!(seq.kv_heads(), KVH);
+
+    let mut leaves: Vec<Box<dyn AttentionMethod>> = Vec::new();
+    let mut all_queries = Vec::new();
+    for layer in 0..LAYERS {
+        let (keys, vals, queries) = layer_state(layer, T);
+        seq.prefill_layer(layer, &keys, &vals, &[]);
+        for head in 0..KVH {
+            let mut leaf = entry.build_head(&c);
+            leaf.prefill(
+                &keys[head * T * DIM..(head + 1) * T * DIM],
+                &vals[head * T * DIM..(head + 1) * T * DIM],
+                &[],
+                R,
+            );
+            leaves.push(leaf);
+        }
+        all_queries.extend(queries);
+    }
+    (seq, leaves, all_queries)
+}
+
+/// The adapter and the parallel work queue are bit-exact with driving the
+/// per-head leaves by hand.
+fn adapter_is_exact(case: &Conformance) {
+    let (mut seq, mut leaves, queries) = build_pair(case.method);
+    let (mut par_seq, _, _) = build_pair(case.method);
+    let pool = ThreadPool::new(3);
+    let mut wq = DecodeWorkQueue::new();
+    let budget = 96;
+
+    let mut seq_out = vec![0.0f32; KVH * R * DIM];
+    let mut par_out = vec![0.0f32; KVH * R * DIM];
+    let mut leaf_out = vec![0.0f32; KVH * R * DIM];
+    for step in 0..4 {
+        for layer in 0..LAYERS {
+            let head_queries = &queries[layer * KVH..(layer + 1) * KVH];
+            let st = step_state(step, layer, head_queries);
+
+            seq_out.fill(0.0);
+            seq.attend_step(&plan(layer, budget, &st), &mut seq_out);
+
+            par_out.fill(0.0);
+            let mut tasks: Vec<HeadTask<'_>> = wq.take();
+            par_seq.push_tasks(&plan(layer, budget, &st), &mut par_out, &mut tasks);
+            assert_eq!(tasks.len(), KVH, "one task per kv head");
+            wq.dispatch(&pool, tasks);
+
+            leaf_out.fill(0.0);
+            for head in 0..KVH {
+                let m = &mut leaves[layer * KVH + head];
+                m.append(
+                    &st.k_rows[head * DIM..(head + 1) * DIM],
+                    &st.v_rows[head * DIM..(head + 1) * DIM],
+                );
+                m.attend_group(
+                    &st.queries[head * R * DIM..(head + 1) * R * DIM],
+                    DIM,
+                    budget,
+                    &mut leaf_out[head * R * DIM..(head + 1) * R * DIM],
+                );
+            }
+
+            assert_eq!(
+                seq_out, leaf_out,
+                "[{}] attend_step must be bit-exact with hand-driven leaves \
+                 (step {step}, layer {layer})",
+                case.method
+            );
+            assert_eq!(
+                par_out, leaf_out,
+                "[{}] work-queue fan-out must be bit-exact with hand-driven \
+                 leaves (step {step}, layer {layer})",
+                case.method
+            );
+        }
+    }
+    let leaf_bytes: usize = leaves.iter().map(|m| m.memory_bytes()).sum();
+    assert_eq!(seq.memory_bytes(), leaf_bytes, "[{}] memory", case.method);
+}
+
+/// `memory_bytes` is monotone under appends at 64-append windows (and
+/// strictly grows end to end).
+fn memory_monotone_under_append(case: &Conformance) {
+    let (mut seq, _, queries) = build_pair(case.method);
+    let mut out = vec![0.0f32; KVH * R * DIM];
+    let mut mem = Vec::with_capacity(MEM_STEPS + 1);
+    mem.push(seq.memory_bytes());
+    assert!(mem[0] > 0, "[{}] empty accounting", case.method);
+    for step in 0..MEM_STEPS {
+        for layer in 0..LAYERS {
+            let head_queries = &queries[layer * KVH..(layer + 1) * KVH];
+            let st = step_state(step, layer, head_queries);
+            seq.attend_step(&plan(layer, 96, &st), &mut out);
+        }
+        mem.push(seq.memory_bytes());
+    }
+    for i in 0..mem.len() - MEM_WINDOW {
+        assert!(
+            mem[i + MEM_WINDOW] >= mem[i],
+            "[{}] memory shrank over a {MEM_WINDOW}-append window: \
+             {} -> {} at step {i}",
+            case.method,
+            mem[i],
+            mem[i + MEM_WINDOW]
+        );
+    }
+    let last = *mem.last().unwrap();
+    assert!(
+        last > mem[0],
+        "[{}] {MEM_STEPS} appends did not grow memory: {} -> {last}",
+        case.method,
+        mem[0]
+    );
+}
+
+/// With budget ≥ context length, one decode step's attention matches
+/// dense full attention within the method's tolerance.
+fn full_budget_matches_dense(case: &Conformance) {
+    let (mut seq, _, queries) = build_pair(case.method);
+    let mut out = vec![0.0f32; KVH * R * DIM];
+    for layer in 0..LAYERS {
+        let head_queries = &queries[layer * KVH..(layer + 1) * KVH];
+        let st = step_state(0, layer, head_queries);
+        out.fill(0.0);
+        seq.attend_step(&plan(layer, usize::MAX, &st), &mut out);
+
+        // dense reference per head over the identical token stream
+        let (keys, vals, _) = layer_state(layer, T);
+        for head in 0..KVH {
+            let mut full = crate::baselines::FullCache::new(DIM);
+            full.prefill(
+                &keys[head * T * DIM..(head + 1) * T * DIM],
+                &vals[head * T * DIM..(head + 1) * T * DIM],
+                &[],
+                R,
+            );
+            full.append(
+                &st.k_rows[head * DIM..(head + 1) * DIM],
+                &st.v_rows[head * DIM..(head + 1) * DIM],
+            );
+            let mut reference = vec![0.0f32; DIM];
+            for ri in 0..R {
+                let q = &st.queries[(head * R + ri) * DIM..(head * R + ri + 1) * DIM];
+                full.attend(q, usize::MAX, &mut reference);
+                let got = &out[(head * R + ri) * DIM..(head * R + ri + 1) * DIM];
+                let c = cosine(got, &reference);
+                assert!(
+                    c >= case.dense_cosine,
+                    "[{}] budget≥len cosine {c:.4} < {:.4} \
+                     (layer {layer}, head {head}, r {ri})",
+                    case.method,
+                    case.dense_cosine
+                );
+            }
+        }
+    }
+}
+
+/// prefill(T) + m appends ≡ prefill(T+m), for methods whose append is
+/// contractually a longer prefill.
+fn append_equals_longer_prefill(case: &Conformance) {
+    let si = SelfIndexConfig::default();
+    let overlay = vec![];
+    let entry = registry::lookup(case.method).expect("registered");
+    let c = ctx(&si, &overlay);
+    let m = 24;
+    let (keys, vals, query) = head_state(42, T + m);
+
+    let mut a = entry.build_head(&c);
+    a.prefill(&keys[..T * DIM], &vals[..T * DIM], &[], R);
+    for t in T..T + m {
+        a.append(&keys[t * DIM..(t + 1) * DIM], &vals[t * DIM..(t + 1) * DIM]);
+    }
+    let mut b = entry.build_head(&c);
+    b.prefill(&keys, &vals, &[], R);
+
+    assert_eq!(a.memory_bytes(), b.memory_bytes(), "[{}]", case.method);
+    let mut out_a = vec![0.0f32; DIM];
+    let mut out_b = vec![0.0f32; DIM];
+    a.attend(&query, 96, &mut out_a);
+    b.attend(&query, 96, &mut out_b);
+    for (x, y) in out_a.iter().zip(&out_b) {
+        assert!(
+            (x - y).abs() <= 1e-5,
+            "[{}] append≠re-prefill: {x} vs {y}",
+            case.method
+        );
+    }
+}

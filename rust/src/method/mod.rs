@@ -1,0 +1,184 @@
+//! The engine↔method boundary: sequence-level caches built by a method
+//! registry, driven through a slice-based decode work queue.
+//!
+//! Two levels:
+//!
+//! * [`CacheMethod`] (registry, [`registry`]) — a method's identity
+//!   (name + aliases), its config knobs, and its builders. The registry
+//!   replaces the old hardcoded `MethodKind::make` match: lookup is
+//!   case-insensitive and unknown names error with the known list.
+//! * [`SequenceCache`] — owns **all** (layer, kv-head) cache state for
+//!   one sequence. The engine talks only to this trait: `prefill_layer`
+//!   per layer at admission, then per decode step a [`DecodePlan`] per
+//!   sequence that `push_tasks` expands into [`HeadTask`]s executed over
+//!   `ThreadPool::for_each_task` — an atomic cursor over the pre-built
+//!   task slice, no per-job closure boxing, zero steady-state heap
+//!   allocations in the engine layer (see [`DecodeWorkQueue`]).
+//!
+//! The per-head [`AttentionMethod`] trait stays as the leaf
+//! implementation: all seven baselines migrate mechanically through
+//! [`PerHeadSeqCache`], while methods that want cross-head state (shared
+//! page metadata, shared codebooks — cf. Quest/DoubleSparse variants)
+//! implement [`SequenceCache`] directly.
+//!
+//! [`AttentionMethod`]: crate::baselines::AttentionMethod
+
+pub mod conformance;
+pub mod per_head;
+pub mod plan;
+pub mod registry;
+
+pub use per_head::PerHeadSeqCache;
+pub use plan::{DecodePlan, DecodeWorkQueue, HeadTask};
+pub use registry::{entries, lookup, BuildCtx, CacheMethod, Knob, UnknownMethod};
+
+/// One sequence's whole cache: every (layer, kv-head)'s state behind one
+/// object, stored layer-major. `Send` so the engine can move sequences
+/// across steps while decode tasks fan out over the worker pool.
+pub trait SequenceCache: Send {
+    /// Canonical method name (matches the registry entry).
+    fn method_name(&self) -> &'static str;
+
+    fn n_layers(&self) -> usize;
+
+    fn kv_heads(&self) -> usize;
+
+    /// Ingest one layer of the prompt. `keys`/`vals` are kv-head-major
+    /// `(kv_heads × tokens × dim)` post-RoPE rows; `q_window` is the
+    /// head-major SnapKV observation window
+    /// `(kv_heads × W·gqa_ratio × dim)` (may be empty).
+    fn prefill_layer(&mut self, layer: usize, keys: &[f32], vals: &[f32], q_window: &[f32]);
+
+    /// Expand one decode step's plan for one layer into per-head tasks
+    /// (append + budgeted GQA attention into disjoint chunks of `out`,
+    /// which is `(kv_heads × gqa_ratio × dim)`).
+    fn push_tasks<'t>(
+        &'t mut self,
+        plan: &DecodePlan<'t>,
+        out: &'t mut [f32],
+        tasks: &mut Vec<HeadTask<'t>>,
+    );
+
+    /// Context-size-dependent cache bytes across every (layer, kv head).
+    fn memory_bytes(&self) -> usize;
+
+    /// Run one decode step's layer inline (the serial entry point used by
+    /// tests and single-threaded callers; the engine fans the same tasks
+    /// out over its worker pool instead).
+    fn attend_step(&mut self, plan: &DecodePlan<'_>, out: &mut [f32]) {
+        let mut tasks = Vec::new();
+        self.push_tasks(plan, out, &mut tasks);
+        for t in &mut tasks {
+            t.run();
+        }
+    }
+}
+
+/// Which attention/cache method the engine serves with. The closed enum
+/// the benches/tests name directly; the open set lives in [`registry`] —
+/// `parse` goes through it, so aliases and case-insensitivity (and the
+/// helpful unknown-name error) come from one place.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    SelfIndex,
+    Full,
+    Kivi,
+    SnapKv,
+    Quest,
+    DoubleSparse,
+    KMeans,
+}
+
+impl MethodKind {
+    pub const ALL: [MethodKind; 7] = [
+        MethodKind::SelfIndex,
+        MethodKind::Full,
+        MethodKind::Kivi,
+        MethodKind::SnapKv,
+        MethodKind::Quest,
+        MethodKind::DoubleSparse,
+        MethodKind::KMeans,
+    ];
+
+    /// Canonical registry name.
+    pub fn name(self) -> &'static str {
+        match self {
+            MethodKind::SelfIndex => "selfindex",
+            MethodKind::Full => "full",
+            MethodKind::Kivi => "kivi",
+            MethodKind::SnapKv => "snapkv",
+            MethodKind::Quest => "quest",
+            MethodKind::DoubleSparse => "doublesparse",
+            MethodKind::KMeans => "kmeans",
+        }
+    }
+
+    /// Case-insensitive parse by name or alias; unknown names report the
+    /// full known list. A method registered without a `MethodKind`
+    /// variant (an out-of-enum `CacheMethod`) errors rather than panics —
+    /// such methods are reachable through the registry API directly.
+    pub fn parse(s: &str) -> Result<Self, UnknownMethod> {
+        let entry = registry::lookup(s)?;
+        Self::ALL
+            .into_iter()
+            .find(|k| k.name() == entry.name())
+            .ok_or_else(|| UnknownMethod {
+                query: format!("{} (registered, but not exposed as a MethodKind)", entry.name()),
+            })
+    }
+
+    /// This kind's registry entry.
+    pub fn entry(self) -> &'static dyn CacheMethod {
+        registry::lookup(self.name()).expect("built-in method is registered")
+    }
+}
+
+impl std::fmt::Display for MethodKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_kind() {
+        for kind in MethodKind::ALL {
+            assert_eq!(MethodKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(kind.entry().name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn every_registry_entry_has_a_kind() {
+        // guards the enum↔registry correspondence: adding a CacheMethod
+        // without a MethodKind variant must be a conscious decision (the
+        // method stays registry-only), not an accident that breaks parse
+        for entry in registry::entries() {
+            assert_eq!(
+                MethodKind::parse(entry.name()).unwrap().name(),
+                entry.name(),
+                "registry entry '{}' has no MethodKind variant",
+                entry.name()
+            );
+        }
+    }
+
+    #[test]
+    fn parse_accepts_aliases_and_mixed_case() {
+        assert_eq!(MethodKind::parse("Ours").unwrap(), MethodKind::SelfIndex);
+        assert_eq!(MethodKind::parse("FA2").unwrap(), MethodKind::Full);
+        assert_eq!(MethodKind::parse("ds").unwrap(), MethodKind::DoubleSparse);
+        assert_eq!(MethodKind::parse("KMeans").unwrap(), MethodKind::KMeans);
+    }
+
+    #[test]
+    fn parse_unknown_reports_known_list() {
+        let err = MethodKind::parse("h2o").unwrap_err().to_string();
+        assert!(err.contains("unknown method 'h2o'"), "{err}");
+        assert!(err.contains("selfindex"), "{err}");
+        assert!(err.contains("doublesparse"), "{err}");
+    }
+}

@@ -1,0 +1,127 @@
+//! [`PerHeadSeqCache`]: the mechanical migration path from the per-head
+//! [`AttentionMethod`] trait to the sequence-level [`SequenceCache`] API.
+//! Owns every (layer, kv-head) leaf in one layer-major arena and expands
+//! decode plans into one [`HeadTask`] per kv head.
+
+use super::plan::{DecodePlan, HeadTask};
+use super::registry::BuildCtx;
+use super::SequenceCache;
+use crate::baselines::AttentionMethod;
+
+/// All of one sequence's cache state for a per-head method: a layer-major
+/// arena `heads[layer * kv_heads + head]` of independent leaves. Methods
+/// that need cross-head state (shared page metadata, shared codebooks)
+/// implement [`SequenceCache`] directly instead.
+pub struct PerHeadSeqCache<M: AttentionMethod> {
+    name: &'static str,
+    dim: usize,
+    n_layers: usize,
+    kv_heads: usize,
+    gqa_ratio: usize,
+    heads: Vec<M>,
+}
+
+impl<M: AttentionMethod> PerHeadSeqCache<M> {
+    /// Build one leaf per (layer, kv head) from `leaf`. `name` is the
+    /// registry's canonical method name (leaves may report historical
+    /// spellings, e.g. KIVI's "kivi2").
+    pub fn build(name: &'static str, ctx: &BuildCtx, mut leaf: impl FnMut() -> M) -> Self {
+        let n = ctx.n_layers * ctx.kv_heads;
+        assert!(n > 0, "degenerate geometry: {n} heads");
+        let mut heads = Vec::with_capacity(n);
+        for _ in 0..n {
+            heads.push(leaf());
+        }
+        Self {
+            name,
+            dim: ctx.dim,
+            n_layers: ctx.n_layers,
+            kv_heads: ctx.kv_heads,
+            gqa_ratio: ctx.gqa_ratio,
+            heads,
+        }
+    }
+
+    pub fn head(&self, layer: usize, head: usize) -> &M {
+        &self.heads[layer * self.kv_heads + head]
+    }
+
+    pub fn head_mut(&mut self, layer: usize, head: usize) -> &mut M {
+        &mut self.heads[layer * self.kv_heads + head]
+    }
+
+    pub fn heads(&self) -> &[M] {
+        &self.heads
+    }
+}
+
+impl<M: AttentionMethod> SequenceCache for PerHeadSeqCache<M> {
+    fn method_name(&self) -> &'static str {
+        self.name
+    }
+
+    fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    fn kv_heads(&self) -> usize {
+        self.kv_heads
+    }
+
+    fn prefill_layer(&mut self, layer: usize, keys: &[f32], vals: &[f32], q_window: &[f32]) {
+        let kvh = self.kv_heads;
+        let r = self.gqa_ratio;
+        assert_eq!(keys.len(), vals.len());
+        assert_eq!(keys.len() % (kvh * self.dim), 0, "keys not (kvh × T × dim)");
+        assert_eq!(q_window.len() % kvh, 0, "q_window not head-major");
+        let per_head = keys.len() / kvh;
+        let qw_per_head = q_window.len() / kvh;
+        for (head, m) in self.heads[layer * kvh..(layer + 1) * kvh]
+            .iter_mut()
+            .enumerate()
+        {
+            m.prefill(
+                &keys[head * per_head..(head + 1) * per_head],
+                &vals[head * per_head..(head + 1) * per_head],
+                &q_window[head * qw_per_head..(head + 1) * qw_per_head],
+                r,
+            );
+        }
+    }
+
+    fn push_tasks<'t>(
+        &'t mut self,
+        plan: &DecodePlan<'t>,
+        out: &'t mut [f32],
+        tasks: &mut Vec<HeadTask<'t>>,
+    ) {
+        let dim = self.dim;
+        let kvh = self.kv_heads;
+        let r = plan.gqa_ratio;
+        debug_assert_eq!(kvh, plan.kv_heads);
+        debug_assert_eq!(r, self.gqa_ratio);
+        assert_eq!(out.len(), kvh * r * dim, "out not (kvh × R × dim)");
+        assert_eq!(plan.k_rows.len(), kvh * dim);
+        assert_eq!(plan.queries.len(), kvh * r * dim);
+        let heads_l = &mut self.heads[plan.layer * kvh..(plan.layer + 1) * kvh];
+        for ((head, m), o) in heads_l
+            .iter_mut()
+            .enumerate()
+            .zip(out.chunks_exact_mut(r * dim))
+        {
+            tasks.push(HeadTask {
+                method: m,
+                k_row: &plan.k_rows[head * dim..(head + 1) * dim],
+                v_row: &plan.v_rows[head * dim..(head + 1) * dim],
+                queries: &plan.queries[head * r * dim..(head + 1) * r * dim],
+                dim,
+                budget: plan.budget,
+                out: o,
+            });
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.heads.iter().map(|m| m.memory_bytes()).sum()
+    }
+}

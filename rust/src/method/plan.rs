@@ -1,0 +1,146 @@
+//! The slice-based decode work queue: [`DecodePlan`] describes one
+//! sequence's share of a decode step for one layer, a [`SequenceCache`]
+//! expands it into [`HeadTask`]s, and [`DecodeWorkQueue`] executes the
+//! pre-built task slice over `ThreadPool::for_each_task` — an atomic
+//! cursor over the slice, no per-job closure boxing, and (via a recycled
+//! task arena) zero steady-state heap allocations in the engine layer.
+//!
+//! [`SequenceCache`]: super::SequenceCache
+
+use crate::baselines::AttentionMethod;
+use crate::substrate::exec::ThreadPool;
+
+/// One sequence's slice of a decode step for one layer: the freshly
+/// projected K/V rows to append, the grouped queries, and the retrieval
+/// budget. All slices borrow the engine's staging buffers for the layer.
+pub struct DecodePlan<'a> {
+    pub layer: usize,
+    pub dim: usize,
+    pub kv_heads: usize,
+    pub gqa_ratio: usize,
+    /// dynamic token budget for this sequence at this step
+    pub budget: usize,
+    /// the step's new key rows, kv-head-major: (kv_heads × dim)
+    pub k_rows: &'a [f32],
+    /// the step's new value rows, kv-head-major: (kv_heads × dim)
+    pub v_rows: &'a [f32],
+    /// query heads, kv-head-major: (kv_heads × gqa_ratio × dim)
+    pub queries: &'a [f32],
+}
+
+/// One unit of decode work: append this head's K/V row, then GQA-grouped
+/// budgeted attention into a disjoint output chunk. Tasks are plain data
+/// over borrowed state — the work queue hands each one out exactly once,
+/// so the `&mut` leaf never aliases.
+pub struct HeadTask<'a> {
+    pub method: &'a mut (dyn AttentionMethod + 'a),
+    pub k_row: &'a [f32],
+    pub v_row: &'a [f32],
+    /// this kv head's query group: (gqa_ratio × dim)
+    pub queries: &'a [f32],
+    pub dim: usize,
+    pub budget: usize,
+    /// this head's output chunk: (gqa_ratio × dim)
+    pub out: &'a mut [f32],
+}
+
+impl HeadTask<'_> {
+    pub fn run(&mut self) {
+        self.method.append(self.k_row, self.v_row);
+        self.method
+            .attend_group(self.queries, self.dim, self.budget, self.out);
+    }
+}
+
+/// Reuse an **empty** `Vec`'s allocation for a same-layout element type
+/// (here: `HeadTask` under different lifetimes, so the engine can bank
+/// the task arena across decode steps without a per-step allocation).
+fn recycle<A, B>(mut v: Vec<A>) -> Vec<B> {
+    assert!(v.is_empty(), "recycle of a non-empty vec");
+    assert_eq!(std::mem::size_of::<A>(), std::mem::size_of::<B>());
+    assert_eq!(std::mem::align_of::<A>(), std::mem::align_of::<B>());
+    let cap = v.capacity();
+    let ptr = v.as_mut_ptr() as *mut B;
+    std::mem::forget(v);
+    // SAFETY: the vec is empty, so no values are reinterpreted; A and B
+    // have identical size and alignment (asserted above), so the raw
+    // allocation is valid for `cap` elements of B and its eventual
+    // deallocation uses the same layout it was allocated with.
+    unsafe { Vec::from_raw_parts(ptr, 0, cap) }
+}
+
+/// The engine's per-step task arena: `take` an empty task vec (reusing
+/// the banked capacity), fill it via `SequenceCache::push_tasks`, then
+/// `dispatch` it across the pool and bank the capacity back. At steady
+/// state the whole cycle performs zero heap allocations (asserted by
+/// `tests/engine_fanout_alloc.rs` under the counting global allocator).
+#[derive(Default)]
+pub struct DecodeWorkQueue {
+    arena: Vec<HeadTask<'static>>,
+}
+
+impl DecodeWorkQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow the banked arena as an empty task list for this step.
+    pub fn take<'t>(&mut self) -> Vec<HeadTask<'t>> {
+        recycle(std::mem::take(&mut self.arena))
+    }
+
+    /// Run every task on the pool (atomic-cursor fan-out; the caller
+    /// participates) and bank the task list's capacity for the next step.
+    pub fn dispatch(&mut self, workers: &ThreadPool, mut tasks: Vec<HeadTask<'_>>) {
+        workers.for_each_task(&mut tasks, |t| t.run());
+        tasks.clear();
+        self.arena = recycle(tasks);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::FullCache;
+
+    #[test]
+    fn work_queue_banks_capacity_across_steps() {
+        let pool = ThreadPool::new(2);
+        let mut queue = DecodeWorkQueue::new();
+        let dim = 16;
+        let mut heads: Vec<FullCache> = (0..8).map(|_| FullCache::new(dim)).collect();
+        let keys = vec![0.5f32; 4 * dim];
+        for h in heads.iter_mut() {
+            h.prefill(&keys, &keys.clone(), &[], 1);
+        }
+        let k = vec![0.25f32; dim];
+        let q = vec![1.0f32; dim];
+        let mut outs = vec![0.0f32; 8 * dim];
+
+        let mut cap_after_first = 0;
+        for step in 0..3 {
+            let mut tasks = queue.take();
+            for (h, o) in heads.iter_mut().zip(outs.chunks_mut(dim)) {
+                tasks.push(HeadTask {
+                    method: h,
+                    k_row: &k,
+                    v_row: &k,
+                    queries: &q,
+                    dim,
+                    budget: usize::MAX,
+                    out: o,
+                });
+            }
+            let cap = tasks.capacity();
+            if step == 1 {
+                cap_after_first = cap;
+            }
+            if step == 2 {
+                assert_eq!(cap, cap_after_first, "capacity must be banked");
+            }
+            queue.dispatch(&pool, tasks);
+        }
+        assert!(outs.iter().all(|&x| x != 0.0));
+        assert_eq!(heads[0].len(), 4 + 3);
+    }
+}

@@ -1,0 +1,476 @@
+//! The [`CacheMethod`] registry: methods register a canonical name,
+//! aliases, and their config knobs, and build whole-sequence caches —
+//! replacing the old hardcoded `MethodKind::make` match. Lookup is
+//! case-insensitive and unknown names error with the full known list, so
+//! a CLI typo tells the operator what exists instead of failing silently.
+
+use std::fmt;
+
+use super::per_head::PerHeadSeqCache;
+use super::SequenceCache;
+use crate::baselines::{
+    AttentionMethod, DoubleSparse, FullCache, KMeansCache, KiviCache, QuestCache, SelfIndexing,
+    SnapKv,
+};
+use crate::selfindex::SelfIndexConfig;
+use crate::substrate::json::Json;
+
+/// One tunable a method exposes through the per-method config overlay
+/// (`EngineConfig::method_overlay`).
+pub struct Knob {
+    pub name: &'static str,
+    pub doc: &'static str,
+    pub default: &'static str,
+    pub kind: KnobKind,
+}
+
+/// What values a knob accepts — checked by [`validate_overlay`] so a
+/// wrong-typed or out-of-range overlay value errors at config time
+/// instead of silently falling back to the default.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KnobKind {
+    Usize,
+    Bool,
+    /// a quantization bit width the packers support
+    Bits,
+}
+
+impl KnobKind {
+    fn check(self, v: &Json) -> Result<(), String> {
+        match self {
+            KnobKind::Usize => v
+                .as_usize()
+                .map(|_| ())
+                .ok_or_else(|| "expects a non-negative integer".to_string()),
+            KnobKind::Bool => v
+                .as_bool()
+                .map(|_| ())
+                .ok_or_else(|| "expects true/false".to_string()),
+            KnobKind::Bits => match v.as_usize() {
+                Some(2) | Some(4) | Some(8) => Ok(()),
+                _ => Err("expects a bit width of 2, 4, or 8".to_string()),
+            },
+        }
+    }
+}
+
+/// Everything a method needs to build one sequence's cache: the model
+/// geometry, the engine's budget hint, the selfindex paper knobs, and the
+/// validated per-method overlay.
+pub struct BuildCtx<'a> {
+    pub dim: usize,
+    pub n_layers: usize,
+    pub kv_heads: usize,
+    pub gqa_ratio: usize,
+    /// engine budget hint at prefill time (e.g. SnapKV's static keep set)
+    pub budget_hint: usize,
+    /// kv pool capacity in tokens per (layer, kv head) — sizes paged
+    /// caches up front so decode never reallocates
+    pub pool_tokens: usize,
+    pub selfindex: &'a SelfIndexConfig,
+    /// validated `(knob, value)` overlay for the selected method
+    pub overlay: &'a [(String, Json)],
+}
+
+impl BuildCtx<'_> {
+    fn overlay_get(&self, name: &str) -> Option<&Json> {
+        self.overlay
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v)
+    }
+
+    pub fn knob_usize(&self, name: &str, default: usize) -> usize {
+        self.overlay_get(name)
+            .and_then(Json::as_usize)
+            .unwrap_or(default)
+    }
+
+    pub fn knob_bool(&self, name: &str, default: bool) -> bool {
+        self.overlay_get(name)
+            .and_then(Json::as_bool)
+            .unwrap_or(default)
+    }
+}
+
+/// A registered cache method: identity + knobs + builders. `build_head`
+/// is the per-head leaf (the mechanical migration path for all seven
+/// baselines, wrapped by [`PerHeadSeqCache`]); methods with cross-head
+/// state override `build_seq` and own the whole sequence directly.
+pub trait CacheMethod: Sync {
+    fn name(&self) -> &'static str;
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    fn knobs(&self) -> &'static [Knob] {
+        &[]
+    }
+
+    /// Build one per-head leaf.
+    fn build_head(&self, ctx: &BuildCtx) -> Box<dyn AttentionMethod>;
+
+    /// Build one whole sequence's cache (default: per-head leaves in a
+    /// layer-major [`PerHeadSeqCache`] arena).
+    fn build_seq(&self, ctx: &BuildCtx) -> Box<dyn SequenceCache> {
+        Box::new(PerHeadSeqCache::build(self.name(), ctx, || {
+            self.build_head(ctx)
+        }))
+    }
+}
+
+/// Unknown method name, with the full known list in the message.
+#[derive(Debug, Clone)]
+pub struct UnknownMethod {
+    pub query: String,
+}
+
+impl fmt::Display for UnknownMethod {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown method '{}' (known: {})",
+            self.query,
+            known_methods()
+        )
+    }
+}
+
+impl std::error::Error for UnknownMethod {}
+
+// ---- the built-in methods -------------------------------------------------
+
+struct SelfIndexMethod;
+struct FullMethod;
+struct KiviMethod;
+struct SnapKvMethod;
+struct QuestMethod;
+struct DoubleSparseMethod;
+struct KMeansMethod;
+
+static SELFINDEX: SelfIndexMethod = SelfIndexMethod;
+static FULL: FullMethod = FullMethod;
+static KIVI: KiviMethod = KiviMethod;
+static SNAPKV: SnapKvMethod = SnapKvMethod;
+static QUEST: QuestMethod = QuestMethod;
+static DOUBLESPARSE: DoubleSparseMethod = DoubleSparseMethod;
+static KMEANS: KMeansMethod = KMeansMethod;
+
+impl CacheMethod for SelfIndexMethod {
+    fn name(&self) -> &'static str {
+        "selfindex"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["ours", "si"]
+    }
+
+    fn knobs(&self) -> &'static [Knob] {
+        &[
+            Knob {
+                name: "quant_bits",
+                doc: "bits per quantized magnitude/value element",
+                default: "2",
+                kind: KnobKind::Bits,
+            },
+            Knob {
+                name: "sink_tokens",
+                doc: "full-precision sink tokens kept from prefill",
+                default: "64",
+                kind: KnobKind::Usize,
+            },
+            Knob {
+                name: "use_sinks",
+                doc: "keep SnapKV-selected sink tokens",
+                default: "true",
+                kind: KnobKind::Bool,
+            },
+            Knob {
+                name: "sparse_k",
+                doc: "dynamically retrieved tokens per decode step",
+                default: "96",
+                kind: KnobKind::Usize,
+            },
+        ]
+    }
+
+    fn build_head(&self, ctx: &BuildCtx) -> Box<dyn AttentionMethod> {
+        let mut si = ctx.selfindex.clone();
+        si.quant_bits = ctx.knob_usize("quant_bits", si.quant_bits as usize) as u32;
+        si.sink_tokens = ctx.knob_usize("sink_tokens", si.sink_tokens);
+        si.use_sinks = ctx.knob_bool("use_sinks", si.use_sinks);
+        si.sparse_k = ctx.knob_usize("sparse_k", si.sparse_k);
+        Box::new(SelfIndexing::with_capacity(
+            ctx.dim,
+            si,
+            ctx.pool_tokens / 64 + 2,
+        ))
+    }
+}
+
+impl CacheMethod for FullMethod {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["fa2", "dense"]
+    }
+
+    fn build_head(&self, ctx: &BuildCtx) -> Box<dyn AttentionMethod> {
+        Box::new(FullCache::new(ctx.dim))
+    }
+}
+
+impl CacheMethod for KiviMethod {
+    fn name(&self) -> &'static str {
+        "kivi"
+    }
+
+    fn knobs(&self) -> &'static [Knob] {
+        &[Knob {
+            name: "bits",
+            doc: "quantization bits for K and V payloads",
+            default: "selfindex.quant_bits",
+            kind: KnobKind::Bits,
+        }]
+    }
+
+    fn build_head(&self, ctx: &BuildCtx) -> Box<dyn AttentionMethod> {
+        let bits = ctx.knob_usize("bits", ctx.selfindex.quant_bits as usize) as u32;
+        Box::new(KiviCache::new(ctx.dim, bits))
+    }
+}
+
+impl CacheMethod for SnapKvMethod {
+    fn name(&self) -> &'static str {
+        "snapkv"
+    }
+
+    fn knobs(&self) -> &'static [Knob] {
+        &[Knob {
+            name: "keep",
+            doc: "tokens kept at prefill (the static budget)",
+            default: "engine budget hint",
+            kind: KnobKind::Usize,
+        }]
+    }
+
+    fn build_head(&self, ctx: &BuildCtx) -> Box<dyn AttentionMethod> {
+        let keep = ctx.knob_usize("keep", ctx.budget_hint);
+        Box::new(SnapKv::new(ctx.dim, keep))
+    }
+}
+
+impl CacheMethod for QuestMethod {
+    fn name(&self) -> &'static str {
+        "quest"
+    }
+
+    fn build_head(&self, ctx: &BuildCtx) -> Box<dyn AttentionMethod> {
+        Box::new(QuestCache::new(ctx.dim))
+    }
+}
+
+impl CacheMethod for DoubleSparseMethod {
+    fn name(&self) -> &'static str {
+        "doublesparse"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["ds"]
+    }
+
+    fn build_head(&self, ctx: &BuildCtx) -> Box<dyn AttentionMethod> {
+        Box::new(DoubleSparse::new(ctx.dim))
+    }
+}
+
+impl CacheMethod for KMeansMethod {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["pq"]
+    }
+
+    fn knobs(&self) -> &'static [Knob] {
+        &[Knob {
+            name: "iters",
+            doc: "Lloyd iterations for the prefill codebook",
+            default: "8",
+            kind: KnobKind::Usize,
+        }]
+    }
+
+    fn build_head(&self, ctx: &BuildCtx) -> Box<dyn AttentionMethod> {
+        let iters = ctx.knob_usize("iters", crate::baselines::kmeans::KMEANS_ITERS);
+        Box::new(KMeansCache::with_iters(ctx.dim, iters))
+    }
+}
+
+// ---- lookup ---------------------------------------------------------------
+
+/// Every registered method.
+pub fn entries() -> [&'static dyn CacheMethod; 7] {
+    [
+        &SELFINDEX,
+        &FULL,
+        &KIVI,
+        &SNAPKV,
+        &QUEST,
+        &DOUBLESPARSE,
+        &KMEANS,
+    ]
+}
+
+/// Case-insensitive lookup by canonical name or alias.
+pub fn lookup(name: &str) -> Result<&'static dyn CacheMethod, UnknownMethod> {
+    let q = name.trim().to_ascii_lowercase();
+    entries()
+        .into_iter()
+        .find(|m| m.name() == q || m.aliases().contains(&q.as_str()))
+        .ok_or_else(|| UnknownMethod {
+            query: name.to_string(),
+        })
+}
+
+/// Human-readable list of every method (+aliases) for error messages,
+/// `--help`, and config validation failures.
+pub fn known_methods() -> String {
+    let mut out = String::new();
+    for (i, m) in entries().into_iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(m.name());
+        if !m.aliases().is_empty() {
+            out.push_str(&format!(" (aliases: {})", m.aliases().join("|")));
+        }
+    }
+    out
+}
+
+/// Validate a per-method overlay: the method must exist, every key must
+/// be one of its declared knobs, and every value must satisfy the knob's
+/// [`KnobKind`] — a wrong-typed or out-of-range value errors here instead
+/// of silently building with the default.
+pub fn validate_overlay(method: &str, overlay: &[(String, Json)]) -> Result<(), String> {
+    let m = lookup(method).map_err(|e| e.to_string())?;
+    for (k, v) in overlay {
+        let Some(knob) = m.knobs().iter().find(|kn| kn.name == k) else {
+            let known: Vec<&str> = m.knobs().iter().map(|kn| kn.name).collect();
+            return Err(format!(
+                "method '{}' has no knob '{k}' (knobs: {})",
+                m.name(),
+                if known.is_empty() {
+                    "none".to_string()
+                } else {
+                    known.join(", ")
+                }
+            ));
+        };
+        knob.kind
+            .check(v)
+            .map_err(|e| format!("method '{}' knob '{k}': {e}", m.name()))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(si: &'a SelfIndexConfig, overlay: &'a [(String, Json)]) -> BuildCtx<'a> {
+        BuildCtx {
+            dim: 64,
+            n_layers: 2,
+            kv_heads: 2,
+            gqa_ratio: 2,
+            budget_hint: 128,
+            pool_tokens: 4096,
+            selfindex: si,
+            overlay,
+        }
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive_and_alias_aware() {
+        for name in ["selfindex", "SelfIndex", "OURS", "si", " ours "] {
+            assert_eq!(lookup(name).unwrap().name(), "selfindex", "{name}");
+        }
+        assert_eq!(lookup("DS").unwrap().name(), "doublesparse");
+        assert_eq!(lookup("FA2").unwrap().name(), "full");
+        assert_eq!(lookup("pq").unwrap().name(), "kmeans");
+    }
+
+    #[test]
+    fn unknown_method_error_lists_known_names() {
+        let err = lookup("flashinfer").unwrap_err().to_string();
+        assert!(err.contains("unknown method 'flashinfer'"), "{err}");
+        for m in entries() {
+            assert!(err.contains(m.name()), "{err} missing {}", m.name());
+        }
+    }
+
+    #[test]
+    fn every_entry_builds_a_seq_cache() {
+        let si = SelfIndexConfig::default();
+        let overlay = vec![];
+        for m in entries() {
+            let cache = m.build_seq(&ctx(&si, &overlay));
+            assert_eq!(cache.method_name(), m.name(), "name mismatch");
+            assert_eq!(cache.n_layers(), 2);
+            assert_eq!(cache.kv_heads(), 2);
+        }
+    }
+
+    #[test]
+    fn overlay_knobs_flow_into_builds() {
+        let si = SelfIndexConfig::default();
+        let overlay = vec![("quant_bits".to_string(), Json::Num(8.0))];
+        let head = lookup("ours").unwrap().build_head(&ctx(&si, &overlay));
+        assert_eq!(head.name(), "selfindex");
+        let overlay = vec![("keep".to_string(), Json::Num(7.0))];
+        let mut head = lookup("snapkv").unwrap().build_head(&ctx(&si, &overlay));
+        let keys = vec![0.5f32; 32 * 64];
+        head.prefill(&keys, &keys.clone(), &[], 1);
+        assert_eq!(head.memory_bytes(), 7 * 64 * 2 * 4, "keep knob applied");
+    }
+
+    #[test]
+    fn overlay_validation_rejects_unknown_knobs() {
+        assert!(validate_overlay("quest", &[]).is_ok());
+        let bad = vec![("page".to_string(), Json::Num(32.0))];
+        let err = validate_overlay("quest", &bad).unwrap_err();
+        assert!(err.contains("no knob 'page'"), "{err}");
+        let good = vec![("iters".to_string(), Json::Num(4.0))];
+        assert!(validate_overlay("KMEANS", &good).is_ok());
+        assert!(validate_overlay("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn overlay_validation_rejects_wrong_typed_values() {
+        // string where a bit width is expected
+        let bad = vec![("bits".to_string(), Json::Str("4".to_string()))];
+        let err = validate_overlay("kivi", &bad).unwrap_err();
+        assert!(err.contains("knob 'bits'"), "{err}");
+        // unsupported bit width (packers handle 2/4/8 only)
+        let bad = vec![("quant_bits".to_string(), Json::Num(3.0))];
+        let err = validate_overlay("ours", &bad).unwrap_err();
+        assert!(err.contains("2, 4, or 8"), "{err}");
+        // bool knob given a number
+        let bad = vec![("use_sinks".to_string(), Json::Num(1.0))];
+        assert!(validate_overlay("ours", &bad).is_err());
+        // well-typed values pass
+        let good = vec![("bits".to_string(), Json::Num(4.0))];
+        assert!(validate_overlay("kivi", &good).is_ok());
+        let good = vec![
+            ("use_sinks".to_string(), Json::Bool(false)),
+            ("quant_bits".to_string(), Json::Num(8.0)),
+        ];
+        assert!(validate_overlay("ours", &good).is_ok());
+    }
+}

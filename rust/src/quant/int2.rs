@@ -41,13 +41,35 @@ pub struct TokenQuant {
 /// qs = (max-min)/(2^B-1) (clamped to >0), zp = min; both rounded to fp16
 /// *before* quantizing so the stored params reproduce the encoder exactly.
 pub fn quantize_tokens(x: &[f32], dim: usize, group: usize, bits: u32) -> TokenQuant {
+    let mut out = TokenQuant {
+        values: vec![],
+        params: vec![],
+        dim,
+        group,
+        bits,
+    };
+    quantize_tokens_into(x, dim, group, bits, &mut out);
+    out
+}
+
+/// [`quantize_tokens`] into a caller-owned [`TokenQuant`] arena: clears
+/// and refills `out`, reusing its buffers — the decode-append hot path
+/// (one token per call, every step) stays allocation-free once warm.
+pub fn quantize_tokens_into(x: &[f32], dim: usize, group: usize, bits: u32, out: &mut TokenQuant) {
     assert!(dim % group == 0, "dim {dim} % group {group} != 0");
     assert!(x.len() % dim == 0);
     let tokens = x.len() / dim;
     let ng = dim / group;
     let qmax = (1u32 << bits) - 1;
-    let mut values = vec![0u8; x.len()];
-    let mut params = Vec::with_capacity(tokens * ng);
+    out.dim = dim;
+    out.group = group;
+    out.bits = bits;
+    out.values.clear();
+    out.values.resize(x.len(), 0);
+    out.params.clear();
+    out.params.reserve(tokens * ng);
+    let values = &mut out.values;
+    let params = &mut out.params;
 
     for t in 0..tokens {
         let row = &x[t * dim..(t + 1) * dim];
@@ -60,7 +82,7 @@ pub fn quantize_tokens(x: &[f32], dim: usize, group: usize, bits: u32) -> TokenQ
                 hi = hi.max(v);
             }
             let mut qs = (hi - lo) / qmax as f32;
-            if !(qs > 0.0) {
+            if qs.is_nan() || qs <= 0.0 {
                 qs = 1.0; // constant group guard (matches ref.py)
             }
             // round params through fp16 so encode/decode agree bit-exactly
@@ -76,7 +98,6 @@ pub fn quantize_tokens(x: &[f32], dim: usize, group: usize, bits: u32) -> TokenQ
             params.push(QuantParams { scale: qs16, zero: zp16 });
         }
     }
-    TokenQuant { values, params, dim, group, bits }
 }
 
 /// Dequantize one token's group segment into `out`.

@@ -32,14 +32,22 @@ pub fn get_u2(bytes: &[u8], i: usize) -> u8 {
 
 /// Pack `bits`-wide values (bits ∈ {2, 4, 8}), little-endian in a byte.
 pub fn pack_bits(vals: &[u8], bits: u32) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_bits_into(vals, bits, &mut out);
+    out
+}
+
+/// [`pack_bits`] into a caller-owned arena (cleared + refilled): the
+/// decode-append path packs one token per step without allocating.
+pub fn pack_bits_into(vals: &[u8], bits: u32, out: &mut Vec<u8>) {
     let per = (8 / bits) as usize;
-    let mut out = vec![0u8; vals.len().div_ceil(per)];
+    out.clear();
+    out.resize(vals.len().div_ceil(per), 0);
     let mask = ((1u16 << bits) - 1) as u8;
     for (i, &v) in vals.iter().enumerate() {
         debug_assert!(v <= mask, "{bits}-bit value out of range: {v}");
         out[i / per] |= (v & mask) << ((i % per) as u32 * bits);
     }
-    out
 }
 
 /// Read one `bits`-wide element.
@@ -59,12 +67,19 @@ pub struct PackedCodes {
 
 /// Pack 4-bit codes (0..=15), 2 per byte (even index in low nibble).
 pub fn pack_codes(codes: &[u8]) -> Vec<u8> {
-    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    let mut out = Vec::new();
+    pack_codes_into(codes, &mut out);
+    out
+}
+
+/// [`pack_codes`] into a caller-owned arena (cleared + refilled).
+pub fn pack_codes_into(codes: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    out.resize(codes.len().div_ceil(2), 0);
     for (i, &c) in codes.iter().enumerate() {
         debug_assert!(c < 16, "4-bit code out of range: {c}");
         out[i / 2] |= (c & 0x0f) << ((i % 2) * 4);
     }
-    out
 }
 
 pub fn unpack_codes(bytes: &[u8], n: usize) -> Vec<u8> {

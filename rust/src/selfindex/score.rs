@@ -208,7 +208,8 @@ mod tests {
     #[test]
     fn block_scorer_matches_reference_and_max() {
         // covers: multiple-of-8, ragged tails, tiny blocks
-        for (seed, tokens, dim) in [(1, 128, 64), (2, 7, 64), (3, 1000, 32), (4, 8, 8), (9, 1, 64)] {
+        let cases = [(1, 128, 64), (2, 7, 64), (3, 1000, 32), (4, 8, 8), (9, 1, 64)];
+        for (seed, tokens, dim) in cases {
             let (lut, packed, _, _) = setup(seed, tokens, dim);
             let mut expect = Vec::new();
             score_tokens(&lut, &packed, tokens, &mut expect);

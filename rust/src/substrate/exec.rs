@@ -5,8 +5,13 @@
 //! PJRT executions synchronously (PJRT CPU calls are blocking anyway).
 //! What we need from a runtime is (a) a worker pool for parallelizable
 //! work (per-head scoring, workload generation), (b) graceful shutdown,
-//! (c) scoped joins. This module provides exactly that on std primitives.
+//! (c) scoped joins, and (d) an allocation-free fan-out primitive for the
+//! decode hot loop ([`ThreadPool::for_each_task`]: an atomic cursor over a
+//! pre-built task slice — no per-job closure boxing). This module provides
+//! exactly that on std primitives.
 
+use std::any::Any;
+use std::collections::VecDeque;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -14,9 +19,75 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Type-erased view of one `for_each_task` batch, published to the
+/// workers through the shared queue state. Every pointer targets the
+/// *caller's* stack frame; the caller blocks until `remaining` reaches
+/// zero before returning, so the frame outlives all worker accesses
+/// (the same safety argument `scoped` makes, without per-job boxing).
+#[derive(Clone, Copy)]
+struct Batch {
+    /// `&mut [T]` data pointer; workers index it through the cursor, so
+    /// each element is handed out exactly once (disjoint `&mut T`).
+    tasks: *mut (),
+    len: usize,
+    /// `&F`, the shared `Fn(&mut T)`
+    ctx: *const (),
+    run: unsafe fn(*mut (), usize, *const ()),
+    cursor: *const AtomicUsize,
+    remaining: *const AtomicUsize,
+    panic_slot: *const Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+// SAFETY: the raw pointers are only dereferenced while the publishing
+// `for_each_task` frame is alive (it waits for `remaining == 0`), and the
+// referenced task/context types are constrained `T: Send` / `F: Sync` at
+// the only construction site.
+unsafe impl Send for Batch {}
+
+struct State {
+    jobs: VecDeque<Job>,
+    batch: Option<Batch>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers wait here for jobs / batches
+    work_cv: Condvar,
+    /// `for_each_task` callers wait here for batch completion
+    done_cv: Condvar,
+}
+
+enum Work {
+    Task(Batch, usize),
+    Job(Job),
+}
+
+/// Run one claimed batch task, recording the first panic and signalling
+/// completion (the final decrement wakes the waiting caller under the
+/// state lock so the wakeup cannot be missed).
+fn run_batch_task(shared: &Shared, b: Batch, i: usize) {
+    let result = panic::catch_unwind(AssertUnwindSafe(|| unsafe { (b.run)(b.tasks, i, b.ctx) }));
+    if let Err(p) = result {
+        // SAFETY: the slot lives on the caller's frame, which is pinned
+        // until `remaining` (decremented below) reaches zero.
+        let slot = unsafe { &*b.panic_slot };
+        let mut s = slot.lock().unwrap();
+        if s.is_none() {
+            *s = Some(p);
+        }
+    }
+    // SAFETY: as above — the counter outlives the batch.
+    let prev = unsafe { (*b.remaining).fetch_sub(1, Ordering::Release) };
+    if prev == 1 {
+        let _guard = shared.state.lock().unwrap();
+        shared.done_cv.notify_all();
+    }
+}
+
 /// Fixed-size worker pool. Dropping the pool joins all workers.
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    shared: Arc<Shared>,
     workers: Vec<thread::JoinHandle<()>>,
     in_flight: Arc<(Mutex<usize>, Condvar)>,
 }
@@ -24,55 +95,86 @@ pub struct ThreadPool {
 impl ThreadPool {
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                jobs: VecDeque::new(),
+                batch: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
         let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
         let workers = (0..size)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
                 let inf = Arc::clone(&in_flight);
                 thread::Builder::new()
                     .name(format!("sikv-worker-{i}"))
                     .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
+                        let work = {
+                            let mut st = shared.state.lock().unwrap();
+                            loop {
+                                if let Some(b) = st.batch {
+                                    // SAFETY: a published batch's caller
+                                    // frame is alive (see `Batch`).
+                                    let i = unsafe {
+                                        (*b.cursor).fetch_add(1, Ordering::Relaxed)
+                                    };
+                                    if i < b.len {
+                                        break Some(Work::Task(b, i));
+                                    }
+                                    // cursor exhausted: retire the batch
+                                    // so idle workers stop re-checking it
+                                    st.batch = None;
+                                    continue;
+                                }
+                                if let Some(j) = st.jobs.pop_front() {
+                                    break Some(Work::Job(j));
+                                }
+                                if st.shutdown {
+                                    break None;
+                                }
+                                st = shared.work_cv.wait(st).unwrap();
+                            }
                         };
-                        match job {
-                            Ok(job) => {
+                        match work {
+                            None => break,
+                            Some(Work::Task(b, i)) => run_batch_task(&shared, b, i),
+                            Some(Work::Job(job)) => {
                                 // swallow panics so one bad job doesn't
                                 // poison the pool; surfaced via JoinSet.
-                                let _ = panic::catch_unwind(
-                                    AssertUnwindSafe(job));
+                                let _ = panic::catch_unwind(AssertUnwindSafe(job));
                                 let (lock, cv) = &*inf;
                                 let mut n = lock.lock().unwrap();
                                 *n -= 1;
                                 cv.notify_all();
                             }
-                            Err(_) => break,
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        Self { tx: Some(tx), workers, in_flight }
+        Self {
+            shared,
+            workers,
+            in_flight,
+        }
     }
 
     /// Pool sized to the machine (min 1).
     pub fn default_size() -> Self {
-        Self::new(
-            thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-        )
+        Self::new(thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
     }
 
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
         let (lock, _) = &*self.in_flight;
         *lock.lock().unwrap() += 1;
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker pool hung up");
+        let mut st = self.shared.state.lock().unwrap();
+        assert!(!st.shutdown, "pool shut down");
+        st.jobs.push_back(Box::new(f));
+        drop(st);
+        self.shared.work_cv.notify_one();
     }
 
     /// Block until every spawned job has finished.
@@ -88,15 +190,96 @@ impl ThreadPool {
         self.workers.len()
     }
 
+    /// Run `f` over every element of `tasks`, fanned out across the pool
+    /// via an atomic cursor over the pre-built slice — the engine's
+    /// decode work-queue primitive.
+    ///
+    /// Unlike [`ThreadPool::scoped`] there is **no per-job boxing and no
+    /// allocation at all**: the batch descriptor, cursor, and completion
+    /// counter live on this call's stack, and workers claim indices with
+    /// one `fetch_add` each. The caller participates in draining the
+    /// cursor, then blocks until every claimed task has finished, so the
+    /// borrowed slice and closure never outlive the call. If any task
+    /// panicked, the first panic payload is re-raised here.
+    ///
+    /// Each index is claimed exactly once, so tasks receive disjoint
+    /// `&mut T`. **Do not call from inside a pool job** (same nesting
+    /// caveat as `scoped`); concurrent calls from *different* threads are
+    /// safe — the loser of the publish race simply drains its own batch
+    /// inline.
+    pub fn for_each_task<T, F>(&self, tasks: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(&mut T) + Sync,
+    {
+        if tasks.is_empty() {
+            return;
+        }
+
+        /// SAFETY (caller): `tasks` is the data pointer of a live
+        /// `&mut [T]` with `i` in bounds and claimed exactly once, and
+        /// `ctx` points to a live `F`.
+        unsafe fn run_one<T, F: Fn(&mut T)>(tasks: *mut (), i: usize, ctx: *const ()) {
+            let f: &F = &*(ctx as *const F);
+            f(&mut *(tasks as *mut T).add(i))
+        }
+
+        let len = tasks.len();
+        let cursor = AtomicUsize::new(0);
+        let remaining = AtomicUsize::new(len);
+        let panic_slot: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
+        let batch = Batch {
+            tasks: tasks.as_mut_ptr() as *mut (),
+            len,
+            ctx: &f as *const F as *const (),
+            run: run_one::<T, F>,
+            cursor: &cursor,
+            remaining: &remaining,
+            panic_slot: &panic_slot,
+        };
+        // publish (one active batch at a time; a contended second caller
+        // just drains its whole batch inline below)
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.batch.is_none() {
+                st.batch = Some(batch);
+                self.shared.work_cv.notify_all();
+            }
+        }
+        // the caller drains the cursor alongside the workers
+        loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= len {
+                break;
+            }
+            run_batch_task(&self.shared, batch, i);
+        }
+        // retire the batch if still published, then wait out any tasks
+        // other workers claimed but have not finished
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if let Some(b) = st.batch {
+                if std::ptr::eq(b.cursor, &cursor) {
+                    st.batch = None;
+                }
+            }
+            while remaining.load(Ordering::Acquire) != 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+        }
+        if let Some(p) = panic_slot.lock().unwrap().take() {
+            panic::resume_unwind(p);
+        }
+    }
+
     /// Run a batch of borrowing jobs to completion on the pool (a scoped
     /// join: jobs may capture references into the caller's stack frame).
     /// Returns only after every job has finished; if a job panicked, the
     /// first panic payload is re-raised in the caller (no partial results
     /// are silently accepted).
     ///
-    /// This is the engine's decode fan-out primitive: one job per
-    /// (sequence, kv-head group), each owning disjoint `&mut` state, all
-    /// joined before the layer's output projection runs.
+    /// Boxes one closure per job — prefer [`ThreadPool::for_each_task`]
+    /// on hot paths where the jobs share one shape over a task slice.
     ///
     /// **Do not call from inside a job running on the same pool**: the
     /// caller blocks a worker while its child jobs queue behind it —
@@ -107,7 +290,7 @@ impl ThreadPool {
         if jobs.is_empty() {
             return;
         }
-        type Payload = Option<Box<dyn std::any::Any + Send>>;
+        type Payload = Option<Box<dyn Any + Send>>;
 
         /// Join guard: blocks until every enqueued job has reported —
         /// on the normal path below AND in Drop during an unwind — so a
@@ -148,15 +331,19 @@ impl ThreadPool {
         }
 
         let (tx, rx) = mpsc::channel::<Payload>();
-        let mut join = Join { tx: Some(tx), rx, pending: 0, first_panic: None };
+        let mut join = Join {
+            tx: Some(tx),
+            rx,
+            pending: 0,
+            first_panic: None,
+        };
         for job in jobs {
             // SAFETY: `join` blocks until every enqueued job has sent its
             // receipt (the job's own catch_unwind guarantees a send after
             // it ran or unwound; a job dropped unrun drops its sender).
             // That join happens before this frame is torn down even when
             // this loop unwinds (Join::drop), so no job outlives 'env.
-            let job: Box<dyn FnOnce() + Send + 'static> =
-                unsafe { std::mem::transmute(job) };
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
             let tx = join.tx.as_ref().expect("sender live while enqueuing").clone();
             join.pending += 1;
             self.spawn(move || {
@@ -173,7 +360,11 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.tx.take(); // close channel -> workers exit
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -311,8 +502,7 @@ mod tests {
             .iter_mut()
             .enumerate()
             .map(|(i, s)| {
-                let job: Box<dyn FnOnce() + Send + '_> =
-                    Box::new(move || *s = (i * i) as u64);
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || *s = (i * i) as u64);
                 job
             })
             .collect();
@@ -334,6 +524,68 @@ mod tests {
             Box::new(|| {}),
         ];
         pool.scoped(jobs);
+    }
+
+    #[test]
+    fn for_each_task_runs_every_task_with_disjoint_mut() {
+        let pool = ThreadPool::new(4);
+        let mut tasks: Vec<(usize, u64)> = (0..257).map(|i| (i, 0)).collect();
+        pool.for_each_task(&mut tasks, |t| t.1 = (t.0 * t.0) as u64);
+        for (i, v) in &tasks {
+            assert_eq!(*v, (i * i) as u64);
+        }
+        // empty slice is a no-op
+        pool.for_each_task(&mut Vec::<u64>::new(), |_| {});
+    }
+
+    #[test]
+    fn for_each_task_works_on_one_worker_pool() {
+        // the caller participates, so even a saturated 1-worker pool
+        // makes progress
+        let pool = ThreadPool::new(1);
+        let mut tasks = vec![0u64; 100];
+        pool.for_each_task(&mut tasks, |t| *t += 7);
+        assert!(tasks.iter().all(|&t| t == 7));
+    }
+
+    #[test]
+    fn for_each_task_borrows_stack_context() {
+        let pool = ThreadPool::new(3);
+        let bias = 11u64;
+        let mut tasks = vec![0u64; 64];
+        pool.for_each_task(&mut tasks, |t| *t = bias);
+        assert!(tasks.iter().all(|&t| t == bias));
+    }
+
+    #[test]
+    #[should_panic(expected = "task boom")]
+    fn for_each_task_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let mut tasks: Vec<usize> = (0..16).collect();
+        pool.for_each_task(&mut tasks, |t| {
+            if *t == 9 {
+                panic!("task boom");
+            }
+        });
+    }
+
+    #[test]
+    fn for_each_task_then_spawn_interleave() {
+        // batches and boxed jobs share the queue without starving each
+        // other across repeated rounds
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+            let mut tasks = vec![1u64; 32];
+            pool.for_each_task(&mut tasks, |t| *t *= 3);
+            assert!(tasks.iter().all(|&t| t == 3));
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
     }
 
     #[test]

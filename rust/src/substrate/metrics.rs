@@ -14,7 +14,7 @@ use std::time::Duration;
 /// installed as the global allocator in the crate's own test builds
 /// (`lib.rs`). One thread-local increment per alloc/realloc; it makes
 /// "this hot path allocates nothing" a *testable* invariant (see
-/// `baselines::ours::tests::attend_is_allocation_free`) instead of a
+/// `baselines::ours::tests::decode_step_is_allocation_free`) instead of a
 /// comment. Outside test builds [`thread_allocations`] reads a counter
 /// nothing bumps (always 0) and the allocator is not installed.
 pub struct CountingAllocator;
@@ -25,14 +25,26 @@ thread_local! {
     static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
 }
 
+/// Process-wide allocation count (all threads). Lets tests assert that a
+/// multi-threaded hot path — e.g. the engine's decode fan-out across the
+/// worker pool — allocates nowhere, not just on the driving thread.
+static GLOBAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
 #[inline]
 fn bump() {
     TL_ALLOCS.with(|c| c.set(c.get() + 1));
+    GLOBAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Allocations made by the *current thread* since it started.
 pub fn thread_allocations() -> u64 {
     TL_ALLOCS.with(|c| c.get())
+}
+
+/// Allocations made by *any* thread since process start (0 unless the
+/// [`CountingAllocator`] is installed as the global allocator).
+pub fn global_allocations() -> u64 {
+    GLOBAL_ALLOCS.load(Ordering::Relaxed)
 }
 
 unsafe impl GlobalAlloc for CountingAllocator {

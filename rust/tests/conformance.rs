@@ -1,0 +1,56 @@
+//! Trait-conformance suite over all seven methods through the
+//! sequence-level `SequenceCache` API (the shared checks live in
+//! `method::conformance`): registry-built caches are bit-exact with
+//! hand-driven per-head leaves (serial AND work-queue fan-out), memory is
+//! monotone under appends, budget ≥ len matches dense attention, and
+//! append ≡ longer prefill where that is the method's contract.
+
+use selfindex_kv::method::conformance::run_named;
+
+#[test]
+fn conformance_selfindex() {
+    run_named("selfindex");
+}
+
+#[test]
+fn conformance_full() {
+    run_named("full");
+}
+
+#[test]
+fn conformance_kivi() {
+    run_named("kivi");
+}
+
+#[test]
+fn conformance_snapkv() {
+    run_named("snapkv");
+}
+
+#[test]
+fn conformance_quest() {
+    run_named("quest");
+}
+
+#[test]
+fn conformance_doublesparse() {
+    run_named("doublesparse");
+}
+
+#[test]
+fn conformance_kmeans() {
+    run_named("kmeans");
+}
+
+#[test]
+fn suite_covers_every_registry_entry() {
+    for entry in selfindex_kv::method::entries() {
+        assert!(
+            selfindex_kv::method::conformance::SUITE
+                .iter()
+                .any(|c| c.method == entry.name()),
+            "no conformance case for registry method '{}'",
+            entry.name()
+        );
+    }
+}
