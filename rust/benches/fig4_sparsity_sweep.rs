@@ -9,9 +9,12 @@
 
 mod common;
 
+use std::sync::Arc;
+
 use selfindex_kv::baselines::{AttentionMethod, FullCache};
 use selfindex_kv::eval::{cosine, mean, recall_at_k};
-use selfindex_kv::method::registry::{lookup, BuildCtx};
+use selfindex_kv::kvcache::manager::KvManager;
+use selfindex_kv::method::registry::{lookup, selfindex_overlayed, BuildCtx};
 use selfindex_kv::selfindex::SelfIndexConfig;
 use selfindex_kv::substrate::benchkit::Table;
 use selfindex_kv::substrate::json::Json;
@@ -20,13 +23,16 @@ use selfindex_kv::substrate::json::Json;
 /// uses), with a per-method knob overlay.
 fn build(name: &str, overlay: &[(String, Json)], budget_hint: usize) -> Box<dyn AttentionMethod> {
     let si = SelfIndexConfig::default();
+    // layout from the *resolved* config, as the engine sizes its pool
+    let eff = selfindex_overlayed(&si, overlay);
+    let mgr = Arc::new(KvManager::for_head(64, &eff, 64, (1 << 14) / 64));
     let ctx = BuildCtx {
         dim: 64,
         n_layers: 1,
         kv_heads: 1,
         gqa_ratio: 1,
         budget_hint,
-        pool_tokens: 1 << 14,
+        mgr: &mgr,
         selfindex: &si,
         overlay,
     };

@@ -14,8 +14,7 @@ mod common;
 use std::time::Instant;
 
 use selfindex_kv::baselines::{AttentionMethod, SelfIndexing};
-use selfindex_kv::kvcache::layout::RecordLayout;
-use selfindex_kv::kvcache::pool::BlockPool;
+use selfindex_kv::kvcache::manager::KvManager;
 use selfindex_kv::kvcache::store::HeadCache;
 use selfindex_kv::selfindex::lut::Lut;
 use selfindex_kv::selfindex::score::ByteLut;
@@ -39,9 +38,10 @@ fn main() {
     println!("== decode throughput @ {tokens} tokens, head_dim {dim}, k={budget} ==\n");
 
     let si = SelfIndexConfig::default();
-    let mut pool = BlockPool::new(RecordLayout::new(dim, &si), 64, tokens / 64 + 2);
+    let mgr = KvManager::for_head(dim, &si, 64, tokens / 64 + 2);
+    let pool = mgr.pool();
     let mut hc = HeadCache::new(dim, si.clone());
-    hc.ingest_prefill(&mut pool, &keys, &vals).unwrap();
+    hc.ingest_prefill(&mgr, &keys, &vals).unwrap();
     // sink ids spread over the context, ascending (as snapkv_select picks)
     let sink_ids: Vec<u32> = (0..sink_count as u32).map(|i| i * 7).collect();
     let end = tokens - recent_rows;
@@ -52,7 +52,7 @@ fn main() {
     let s_seed = bench.run(|| {
         let lut = Lut::build(std::hint::black_box(&query), hc.codebook());
         let blut = ByteLut::from_lut(&lut);
-        hc.scores(&pool, &blut, &mut scores);
+        hc.scores(pool, &blut, &mut scores);
         for &sk in &sink_ids {
             scores[sk as usize] = f32::NEG_INFINITY;
         }
@@ -78,7 +78,7 @@ fn main() {
         let t_sel = Instant::now();
         // the exact pipeline the serving path runs (shared implementation)
         hc.stream_select(
-            &pool,
+            pool,
             &blut,
             end,
             &sink_ids,

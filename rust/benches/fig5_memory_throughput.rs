@@ -4,18 +4,33 @@
 //! For each length: prefill a batch of sequences, then time a fixed
 //! number of decode steps; report (a) cache bytes after prefill and
 //! (b) decode tokens/second.
+//!
+//! Since the memory-manager PR this bench also drives an **oversubscribed
+//! trace** over the engine-wide shared block pool (no PJRT artifacts
+//! needed — the serving policy runs at the method/scheduler layer):
+//! admission on exact free-block accounting, preemption when a decode
+//! step cannot fit, prefix-block adoption across identical prompts. It
+//! reports pool occupancy, preemption and prefix-hit counts, and emits
+//! `BENCH_memory.json` (uploaded as a CI artifact next to
+//! `BENCH_decode.json`).
 
 mod common;
 
 use selfindex_kv::substrate::error as anyhow;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use selfindex_kv::config::EngineConfig;
-use selfindex_kv::coordinator::{Engine, MethodKind};
-use selfindex_kv::substrate::benchkit::{fmt_bytes, Table};
-use selfindex_kv::workloads::corpus::{context_with_facts, KvFact};
+use selfindex_kv::coordinator::{Engine, MethodKind, PoolPressure, Scheduler, StepPlan};
+use selfindex_kv::kvcache::manager::KvManager;
+use selfindex_kv::method::registry::{lookup, BuildCtx, CacheMethod};
+use selfindex_kv::method::{DecodePlan, SequenceCache};
+use selfindex_kv::selfindex::SelfIndexConfig;
+use selfindex_kv::substrate::benchkit::{fmt_bytes, write_bench_json, Table};
+use selfindex_kv::substrate::json::{num, obj, s};
 use selfindex_kv::substrate::rng::Rng;
+use selfindex_kv::workloads::corpus::{context_with_facts, KvFact};
 
 const METHODS: &[(&str, MethodKind)] = &[
     ("Ours(7.5%)", MethodKind::SelfIndex),
@@ -23,12 +38,255 @@ const METHODS: &[(&str, MethodKind)] = &[
     ("Full(FA2)", MethodKind::Full),
 ];
 
+// --- the oversubscribed memory-manager trace (artifact-free) ----------
+
+const DIM: usize = 64;
+const LAYERS: usize = 2;
+const KVH: usize = 2;
+const R: usize = 2;
+const BT: usize = 64;
+const BUDGET: usize = 48;
+
+/// Deterministic kv-head-major prompt K/V for one layer of one request.
+/// `prompt_id` (not request id) seeds the data, so requests sharing a
+/// prompt id produce byte-identical blocks and adopt through the prefix
+/// registry.
+fn prompt_kv(prompt_id: u64, layer: usize, tokens: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut r = Rng::new(0xF16_5000 + prompt_id * 31 + layer as u64);
+    let keys = (0..KVH * tokens * DIM).map(|_| r.normal_f32()).collect();
+    let vals = (0..KVH * tokens * DIM).map(|_| r.normal_f32()).collect();
+    (keys, vals)
+}
+
+/// Deterministic decode inputs per (request, step): a preempted request
+/// replays the identical stream on recomputation.
+fn step_rows(id: u64, step: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut r = Rng::new(id * 7919 + step as u64 + 1);
+    let k = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
+    let v = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
+    let q = (0..KVH * R * DIM).map(|_| r.normal_f32()).collect();
+    (k, v, q)
+}
+
+struct TraceStats {
+    completed: usize,
+    preemptions: usize,
+    peak_used_blocks: usize,
+    steps: usize,
+}
+
+struct Running {
+    cache: Box<dyn SequenceCache>,
+    steps_done: usize,
+    out: Vec<f32>,
+}
+
+/// The engine's serving policy at the method/scheduler layer: admit from
+/// the FIFO stash (then the queue) when the prompt fits on top of the
+/// running set's next decode step, preempt the youngest when a step
+/// cannot fit, decode otherwise. `prompts[i]` is request i's prompt id —
+/// duplicates share prefix blocks.
+fn run_trace(
+    mgr: &Arc<KvManager>,
+    prompts: &[u64],
+    prompt_tokens: usize,
+    max_new: usize,
+    max_batch: usize,
+) -> TraceStats {
+    let si = SelfIndexConfig::default();
+    let overlay = vec![];
+    let entry = lookup("selfindex").unwrap();
+    let ctx = BuildCtx {
+        dim: DIM,
+        n_layers: LAYERS,
+        kv_heads: KVH,
+        gqa_ratio: R,
+        budget_hint: prompt_tokens,
+        mgr,
+        selfindex: &si,
+        overlay: &overlay,
+    };
+    let admit_blocks = entry.head_blocks_for_prompt(prompt_tokens, BT) * LAYERS * KVH;
+
+    let mut scheduler = Scheduler::new(max_batch);
+    let mut queue: std::collections::VecDeque<u64> = (0..prompts.len() as u64).collect();
+    let mut stash: std::collections::VecDeque<u64> = Default::default();
+    let mut running: std::collections::HashMap<u64, Running> = Default::default();
+    let mut stats = TraceStats { completed: 0, preemptions: 0, peak_used_blocks: 0, steps: 0 };
+
+    for _ in 0..200_000 {
+        if queue.is_empty() && stash.is_empty() && running.is_empty() {
+            return stats;
+        }
+        stats.steps += 1;
+        let candidate = stash.front().or_else(|| queue.front()).copied();
+        let pressure = PoolPressure {
+            free_blocks: mgr.pool().free_blocks(),
+            admit_blocks: candidate.map(|_| admit_blocks),
+            step_blocks: scheduler
+                .running()
+                .iter()
+                .map(|id| running[id].cache.step_blocks())
+                .sum(),
+        };
+        match scheduler.plan(&pressure) {
+            StepPlan::Prefill => {
+                let id = stash.pop_front().or_else(|| queue.pop_front()).unwrap();
+                let mut cache = entry.build_seq(&ctx);
+                for l in 0..LAYERS {
+                    let (keys, vals) = prompt_kv(prompts[id as usize], l, prompt_tokens);
+                    cache.prefill_layer(l, &keys, &vals, &[]);
+                }
+                running
+                    .insert(id, Running { cache, steps_done: 0, out: vec![0.0; KVH * R * DIM] });
+                scheduler.add_running(id);
+            }
+            StepPlan::Decode(ids) => {
+                for id in ids {
+                    let st = running.get_mut(&id).unwrap();
+                    let (k, v, q) = step_rows(id, st.steps_done);
+                    for l in 0..LAYERS {
+                        let plan = DecodePlan {
+                            layer: l,
+                            dim: DIM,
+                            kv_heads: KVH,
+                            gqa_ratio: R,
+                            budget: BUDGET,
+                            k_rows: &k,
+                            v_rows: &v,
+                            queries: &q,
+                        };
+                        st.out.fill(0.0);
+                        st.cache.attend_step(&plan, &mut st.out);
+                    }
+                    st.steps_done += 1;
+                    if st.steps_done == max_new {
+                        running.remove(&id); // drop releases pool blocks
+                        scheduler.remove(id);
+                        stats.completed += 1;
+                    }
+                }
+            }
+            StepPlan::Preempt(id) => {
+                running.remove(&id); // drop releases pool blocks
+                scheduler.remove(id);
+                stash.push_back(id);
+                stats.preemptions += 1;
+            }
+            StepPlan::Idle => {}
+        }
+        stats.peak_used_blocks = stats.peak_used_blocks.max(mgr.pool().used_blocks());
+    }
+    panic!("oversubscribed trace did not converge");
+}
+
+/// Pool bytes for one prefilled sequence vs a second identical one on the
+/// same manager: the prefix registry counts shared blocks once, so the
+/// pair lands strictly below 2x.
+fn prefix_sharing_ratio(prompt_tokens: usize) -> (usize, usize, f64) {
+    let si = SelfIndexConfig::default();
+    let overlay = vec![];
+    let entry = lookup("selfindex").unwrap();
+    let mgr = Arc::new(KvManager::for_head(DIM, &si, BT, 256));
+    let ctx = BuildCtx {
+        dim: DIM,
+        n_layers: LAYERS,
+        kv_heads: KVH,
+        gqa_ratio: R,
+        budget_hint: prompt_tokens,
+        mgr: &mgr,
+        selfindex: &si,
+        overlay: &overlay,
+    };
+    let mut build = || {
+        let mut c = entry.build_seq(&ctx);
+        for l in 0..LAYERS {
+            let (keys, vals) = prompt_kv(0, l, prompt_tokens);
+            c.prefill_layer(l, &keys, &vals, &[]);
+        }
+        c
+    };
+    let a = build();
+    let single = mgr.pool().used_bytes();
+    let b = build();
+    let pair = mgr.pool().used_bytes();
+    drop((a, b));
+    (single, pair, pair as f64 / single as f64)
+}
+
 fn main() -> anyhow::Result<()> {
+    let fast = common::fast_mode();
+
+    // ---- oversubscribed shared-pool trace (runs everywhere) ----
+    let prompt_tokens = 128;
+    let max_new = if fast { 48 } else { 96 };
+    // 8 requests over 4 distinct prompts (two copies each): adoption
+    // halves the prefill footprint, and the pool is still far too small
+    // for the full set — the run finishes via preemption, not panic
+    let prompts: [u64; 8] = [0, 1, 2, 3, 0, 1, 2, 3];
+    let capacity_blocks = 40;
+    let si = SelfIndexConfig::default();
+    let mgr = Arc::new(KvManager::for_head(DIM, &si, BT, capacity_blocks));
+
+    println!(
+        "== memory manager: oversubscribed trace ({} reqs, {} distinct prompts, \
+         pool {capacity_blocks} blocks) ==\n",
+        prompts.len(),
+        4
+    );
+    let t0 = Instant::now();
+    let tr = run_trace(&mgr, &prompts, prompt_tokens, max_new, 6);
+    let secs = t0.elapsed().as_secs_f64();
+    let leak_free = mgr.pool().free_blocks() == mgr.pool().capacity_blocks();
+    let (single_bytes, pair_bytes, sharing_ratio) = prefix_sharing_ratio(prompt_tokens);
+
+    let mut mm_tab = Table::new(&["metric", "value"]);
+    mm_tab.row(vec!["completed".into(), format!("{}/{}", tr.completed, prompts.len())]);
+    mm_tab.row(vec!["scheduler steps".into(), tr.steps.to_string()]);
+    mm_tab.row(vec!["preemptions".into(), tr.preemptions.to_string()]);
+    mm_tab.row(vec![
+        "peak pool occupancy".into(),
+        format!("{}/{} blocks", tr.peak_used_blocks, capacity_blocks),
+    ]);
+    mm_tab.row(vec!["prefix hits".into(), mgr.prefix_hits().to_string()]);
+    mm_tab.row(vec!["prefix misses".into(), mgr.prefix_misses().to_string()]);
+    mm_tab.row(vec!["leak-free after drain".into(), leak_free.to_string()]);
+    mm_tab.row(vec![
+        "2 identical seqs vs 1".into(),
+        format!("{} vs {} ({sharing_ratio:.2}x)", fmt_bytes(pair_bytes), fmt_bytes(single_bytes)),
+    ]);
+    println!("{}", mm_tab.render());
+    assert_eq!(tr.completed, prompts.len(), "oversubscribed trace must finish");
+    assert!(leak_free, "pool must drain to capacity after the trace");
+
+    let payload = obj(vec![
+        ("bench", s("memory")),
+        ("prompt_tokens", num(prompt_tokens as f64)),
+        ("max_new_tokens", num(max_new as f64)),
+        ("requests", num(prompts.len() as f64)),
+        ("distinct_prompts", num(4.0)),
+        ("pool_capacity_blocks", num(capacity_blocks as f64)),
+        ("peak_used_blocks", num(tr.peak_used_blocks as f64)),
+        ("peak_occupancy", num(tr.peak_used_blocks as f64 / capacity_blocks as f64)),
+        ("preemptions", num(tr.preemptions as f64)),
+        ("prefix_hits", num(mgr.prefix_hits() as f64)),
+        ("prefix_misses", num(mgr.prefix_misses() as f64)),
+        ("scheduler_steps", num(tr.steps as f64)),
+        ("trace_secs", num(secs)),
+        ("single_seq_pool_bytes", num(single_bytes as f64)),
+        ("two_shared_seq_pool_bytes", num(pair_bytes as f64)),
+        ("sharing_ratio", num(sharing_ratio)),
+    ]);
+    match write_bench_json("memory", payload) {
+        Ok(p) => println!("wrote {}\n", p.display()),
+        Err(e) => eprintln!("failed to write BENCH_memory.json: {e}\n"),
+    }
+
+    // ---- engine-level footprint/throughput sweep (needs artifacts) ----
     if !common::artifacts_available() {
-        println!("(artifacts missing — run `make artifacts`)");
+        println!("(artifacts missing — engine sweep skipped; run `make artifacts`)");
         return Ok(());
     }
-    let fast = common::fast_mode();
     let lengths: &[usize] = if fast { &[256, 1024] } else { &[256, 1024, 4096] };
     let batch = 4usize;
     let decode_tokens = if fast { 8 } else { 24 };
@@ -43,8 +301,7 @@ fn main() -> anyhow::Result<()> {
             ecfg.max_new_tokens = decode_tokens;
             ecfg.sparse_k = None;
             ecfg.sparsity = 0.075;
-            let mut engine =
-                Engine::new(Path::new(&common::artifact_dir()), ecfg, kind)?;
+            let mut engine = Engine::new(Path::new(&common::artifact_dir()), ecfg, kind)?;
 
             let mut r = Rng::new(len as u64);
             for _ in 0..batch {
@@ -62,8 +319,7 @@ fn main() -> anyhow::Result<()> {
             let t0 = Instant::now();
             let before = engine.metrics.counter("engine.decoded_tokens").get();
             engine.run_to_completion()?;
-            let decoded =
-                engine.metrics.counter("engine.decoded_tokens").get() - before;
+            let decoded = engine.metrics.counter("engine.decoded_tokens").get() - before;
             let tps = decoded as f64 / t0.elapsed().as_secs_f64();
             table.row(vec![
                 len.to_string(),
@@ -75,7 +331,9 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("{}", table.render());
-    println!("paper shape: ours ~5x smaller than full, throughput above full;\n\
-              KIVI matches memory but decode lags (decompress-then-compute)");
+    println!(
+        "paper shape: ours ~5x smaller than full, throughput above full;\n\
+         KIVI matches memory but decode lags (decompress-then-compute)"
+    );
     Ok(())
 }

@@ -16,8 +16,7 @@ mod common;
 use selfindex_kv::baselines::kmeans::kmeans_codebook;
 use selfindex_kv::baselines::quest::QuestCache;
 use selfindex_kv::baselines::AttentionMethod;
-use selfindex_kv::kvcache::layout::RecordLayout;
-use selfindex_kv::kvcache::pool::BlockPool;
+use selfindex_kv::kvcache::manager::KvManager;
 use selfindex_kv::kvcache::sink::SinkStore;
 use selfindex_kv::kvcache::store::HeadCache;
 use selfindex_kv::selfindex::codebook::CodebookBuilder;
@@ -119,13 +118,14 @@ fn main() {
 
     // ---------------- Attention ----------------
     let si = SelfIndexConfig::default();
-    let mut pool = BlockPool::new(RecordLayout::new(dim, &si), 64, tokens / 64 + 2);
+    let mgr = KvManager::for_head(dim, &si, 64, tokens / 64 + 2);
+    let pool = mgr.pool();
     let mut hc = HeadCache::new(dim, si.clone());
-    hc.ingest_prefill(&mut pool, &keys, &vals).unwrap();
+    hc.ingest_prefill(&mgr, &keys, &vals).unwrap();
     let lut = Lut::build(&query, hc.codebook());
     let blut = ByteLut::from_lut(&lut);
     let mut sc = Vec::new();
-    hc.scores(&pool, &blut, &mut sc);
+    hc.scores(pool, &blut, &mut sc);
     let selected = top_k_indices(&sc, budget);
     let sinks = SinkStore::default();
     let mut scratch = SparseAttnScratch::new(dim);
@@ -133,7 +133,7 @@ fn main() {
 
     let s_sparse = bench.run(|| {
         attend_sparse_fused(
-            std::hint::black_box(&query), &hc, &pool, &selected, &sinks, &[],
+            std::hint::black_box(&query), &hc, pool, &selected, &sinks, &[],
             &mut scratch, &mut out,
         );
         std::hint::black_box(&out);
@@ -202,7 +202,7 @@ fn main() {
     let mut sel_out = Vec::new();
     bench.run(|| {
         let scored = seed_stages.time("score", || {
-            hc.scores(&pool, &blut, &mut flat);
+            hc.scores(pool, &blut, &mut flat);
         });
         std::hint::black_box(scored);
         seed_stages.time("select", || {
@@ -216,7 +216,7 @@ fn main() {
         fused_stages.time("score+select", || {
             // the exact pipeline the serving path runs (shared impl)
             hc.stream_select(
-                &pool, &blut, tokens, &[], budget,
+                pool, &blut, tokens, &[], budget,
                 &mut block_scores, &mut selector, &mut sel_out,
             );
         });
@@ -252,15 +252,15 @@ fn main() {
     println!("cache block-size sweep (prefill ingest + one scoring pass):\n");
     let mut bt_tab = Table::new(&["block_tokens", "ingest", "score"]);
     for &bt in &[16usize, 64, 256] {
-        let mut pool2 = BlockPool::new(
-            RecordLayout::new(dim, &si), bt, tokens / bt + 2);
+        let mgr2 = KvManager::for_head(dim, &si, bt, tokens / bt + 2);
+        let pool2 = mgr2.pool();
         let mut hc2 = HeadCache::new(dim, si.clone());
         let t0 = std::time::Instant::now();
-        hc2.ingest_prefill(&mut pool2, &keys, &vals).unwrap();
+        hc2.ingest_prefill(&mgr2, &keys, &vals).unwrap();
         let ingest = t0.elapsed();
         let mut sc2 = Vec::new();
         let s = bench.run(|| {
-            hc2.scores(&pool2, &blut2, &mut sc2);
+            hc2.scores(pool2, &blut2, &mut sc2);
             std::hint::black_box(&sc2);
         });
         bt_tab.row(vec![bt.to_string(), fmt_duration(ingest),

@@ -65,7 +65,7 @@ pub fn gather_padded(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::layout::RecordLayout;
+    use crate::kvcache::manager::KvManager;
     use crate::selfindex::SelfIndexConfig;
     use crate::substrate::rng::Rng;
 
@@ -73,15 +73,15 @@ mod tests {
     fn pads_and_masks() {
         let mut r = Rng::new(1);
         let cfg = SelfIndexConfig::default();
-        let mut pool = BlockPool::new(RecordLayout::new(64, &cfg), 16, 32);
+        let mgr = KvManager::for_head(64, &cfg, 16, 32);
         let mut hc = HeadCache::new(64, cfg);
         let keys: Vec<f32> = (0..20 * 64).map(|_| r.normal_f32()).collect();
         let vals: Vec<f32> = (0..20 * 64).map(|_| r.normal_f32()).collect();
-        hc.ingest_prefill(&mut pool, &keys, &vals).unwrap();
+        hc.ingest_prefill(&mgr, &keys, &vals).unwrap();
         let sinks = SinkStore::build(64, &[0, 3], &keys, &vals);
 
         let mut pg = PaddedGather::default();
-        gather_padded(&hc, &pool, &[5, 7, 9], 8, &sinks, 4, &mut pg);
+        gather_padded(&hc, mgr.pool(), &[5, 7, 9], 8, &sinks, 4, &mut pg);
         assert_eq!(pg.quant.codes_i32.len(), 8 * 16);
         assert_eq!(pg.sel_mask[..3], [0.0, 0.0, 0.0]);
         assert!(pg.sel_mask[3..].iter().all(|&m| m == NEG_INF));

@@ -188,22 +188,22 @@ pub fn attend_sparse_fused(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::layout::RecordLayout;
+    use crate::kvcache::manager::KvManager;
     use crate::selfindex::SelfIndexConfig;
     use crate::substrate::rng::Rng;
 
     fn setup(
         tokens: usize,
-    ) -> (HeadCache, BlockPool, Vec<f32>, Vec<f32>, Vec<f32>) {
+    ) -> (HeadCache, KvManager, Vec<f32>, Vec<f32>, Vec<f32>) {
         let mut r = Rng::new(7);
         let cfg = SelfIndexConfig::default();
-        let mut pool = BlockPool::new(RecordLayout::new(64, &cfg), 16, 128);
+        let mgr = KvManager::for_head(64, &cfg, 16, 128);
         let mut hc = HeadCache::new(64, cfg);
         let keys: Vec<f32> = (0..tokens * 64).map(|_| r.normal_f32()).collect();
         let vals: Vec<f32> = (0..tokens * 64).map(|_| r.normal_f32()).collect();
-        hc.ingest_prefill(&mut pool, &keys, &vals).unwrap();
+        hc.ingest_prefill(&mgr, &keys, &vals).unwrap();
         let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
-        (hc, pool, keys, vals, q)
+        (hc, mgr, keys, vals, q)
     }
 
     #[test]
@@ -229,7 +229,8 @@ mod tests {
 
     #[test]
     fn fused_matches_dequant_then_dense() {
-        let (hc, pool, _, _, q) = setup(64);
+        let (hc, mgr, _, _, q) = setup(64);
+        let pool = mgr.pool();
         let sel: Vec<u32> = vec![3, 17, 40, 63, 9];
         // reference: materialize dequantized rows, run dense attention
         let dim = 64;
@@ -238,7 +239,7 @@ mod tests {
         let mut kr = vec![0.0; dim];
         let mut vr = vec![0.0; dim];
         for &i in &sel {
-            hc.dequant_token(&pool, i as usize, &mut kr, &mut vr);
+            hc.dequant_token(pool, i as usize, &mut kr, &mut vr);
             ks.extend_from_slice(&kr);
             vs.extend_from_slice(&vr);
         }
@@ -248,7 +249,7 @@ mod tests {
         let sinks = SinkStore::default();
         let mut scratch = SparseAttnScratch::new(dim);
         let mut out = vec![0.0; dim];
-        attend_sparse_fused(&q, &hc, &pool, &sel, &sinks, &[], &mut scratch, &mut out);
+        attend_sparse_fused(&q, &hc, pool, &sel, &sinks, &[], &mut scratch, &mut out);
         for (a, b) in out.iter().zip(&expect) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
@@ -256,7 +257,8 @@ mod tests {
 
     #[test]
     fn sinks_and_recent_participate() {
-        let (hc, pool, keys, vals, q) = setup(32);
+        let (hc, mgr, keys, vals, q) = setup(32);
+        let pool = mgr.pool();
         let dim = 64;
         // centered keys for the sink store
         let mu = hc.mu().to_vec();
@@ -270,10 +272,10 @@ mod tests {
 
         let mut scratch = SparseAttnScratch::new(dim);
         let mut with = vec![0.0; dim];
-        attend_sparse_fused(&q, &hc, &pool, &[10, 20], &sinks, &recent,
+        attend_sparse_fused(&q, &hc, pool, &[10, 20], &sinks, &recent,
                             &mut scratch, &mut with);
         let mut without = vec![0.0; dim];
-        attend_sparse_fused(&q, &hc, &pool, &[10, 20], &SinkStore::default(),
+        attend_sparse_fused(&q, &hc, pool, &[10, 20], &SinkStore::default(),
                             &[], &mut scratch, &mut without);
         let diff: f32 = with.iter().zip(&without).map(|(a, b)| (a - b).abs()).sum();
         assert!(diff > 1e-3, "sinks/recent must change the output");
@@ -281,7 +283,8 @@ mod tests {
 
     #[test]
     fn empty_selection_with_sinks_only() {
-        let (hc, pool, keys, vals, q) = setup(16);
+        let (hc, mgr, keys, vals, q) = setup(16);
+        let pool = mgr.pool();
         let dim = 64;
         let mu = hc.mu().to_vec();
         let centered: Vec<f32> = keys
@@ -292,7 +295,7 @@ mod tests {
         let sinks = SinkStore::build(dim, &[1], &centered, &vals);
         let mut scratch = SparseAttnScratch::new(dim);
         let mut out = vec![0.0; dim];
-        attend_sparse_fused(&q, &hc, &pool, &[], &sinks, &[], &mut scratch, &mut out);
+        attend_sparse_fused(&q, &hc, pool, &[], &sinks, &[], &mut scratch, &mut out);
         // attention over a single token == that token's value (fp16 slop)
         for j in 0..dim {
             assert!((out[j] - vals[dim + j]).abs() < 2e-3);

@@ -18,7 +18,7 @@ use crate::attention::dense::attend_dense;
 use crate::selfindex::codebook::Codebook;
 use crate::selfindex::lut::Lut;
 use crate::selfindex::score::{score_tokens_bytelut, ByteLut};
-use crate::selfindex::topk::top_k_indices;
+use crate::selfindex::topk::{top_k_indices, TopKStream};
 use crate::substrate::rng::Rng;
 
 /// Run k-means over each group's subvectors; returns a [`Codebook`]
@@ -138,6 +138,13 @@ pub struct KMeansCache {
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
     scores: Vec<f32>,
+    /// retrieval arenas mirroring `SelfIndexing`'s `RetrievalScratch`:
+    /// the LUT pair rebuilds in place and selection streams through a
+    /// reusable heap, so a steady-state attend allocates nothing
+    lut: Lut,
+    blut: ByteLut,
+    selector: TopKStream,
+    selected: Vec<u32>,
 }
 
 impl KMeansCache {
@@ -159,6 +166,10 @@ impl KMeansCache {
             scratch_k: vec![],
             scratch_v: vec![],
             scores: vec![],
+            lut: Lut::empty(dim / 4),
+            blut: ByteLut::empty(),
+            selector: TopKStream::new(0),
+            selected: vec![],
         }
     }
 
@@ -263,10 +274,19 @@ impl AttentionMethod for KMeansCache {
 
     fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]) {
         let dim = self.dim;
-        let mut scores = std::mem::take(&mut self.scores);
-        self.approx_scores(query, &mut scores);
-        let sel = top_k_indices(&scores, budget.min(self.len()));
-        self.scores = scores;
+        // in-place LUT rebuild + reusable score/selection arenas (the
+        // ROADMAP open item: no per-call Lut/ByteLut construction)
+        let cb = self.codebook.as_ref().expect("prefill not ingested");
+        self.lut.rebuild(query, cb);
+        self.blut.rebuild(&self.lut);
+        let scores = &mut self.scores;
+        score_tokens_bytelut(&self.blut, &self.codes, self.keys.len() / dim, scores);
+        self.selector.reset(budget.min(scores.len()));
+        for (t, &s) in scores.iter().enumerate() {
+            self.selector.push(t as u32, s);
+        }
+        let mut sel = std::mem::take(&mut self.selected);
+        self.selector.finish_into(&mut sel);
         self.scratch_k.clear();
         self.scratch_v.clear();
         for &t in &sel {
@@ -276,11 +296,8 @@ impl AttentionMethod for KMeansCache {
             self.scratch_v
                 .extend_from_slice(&self.vals[t * dim..(t + 1) * dim]);
         }
-        let sk = std::mem::take(&mut self.scratch_k);
-        let sv = std::mem::take(&mut self.scratch_v);
-        attend_dense(query, &sk, &sv, sel.len(), out);
-        self.scratch_k = sk;
-        self.scratch_v = sv;
+        attend_dense(query, &self.scratch_k, &self.scratch_v, sel.len(), out);
+        self.selected = sel;
     }
 
     fn memory_bytes(&self) -> usize {
@@ -356,6 +373,43 @@ mod tests {
         assert!(out.iter().any(|&x| x != 0.0));
         // fp16 K/V + 4-bit ids: well under the fp32 full cache
         assert!(m.memory_bytes() < 520 * dim * 2 * 4);
+    }
+
+    #[test]
+    fn attend_is_allocation_free_once_warm() {
+        // the scratch-arena satellite: LUT pair, score vector, selector
+        // heap, gather buffers — all reused, so a steady-state attend
+        // (the conformance-suite shape) performs zero heap allocations
+        use crate::baselines::testutil::clustered;
+        use crate::substrate::metrics::thread_allocations;
+        let dim = 64;
+        let (keys, vals, query) = clustered(6, 512, dim, 4.0);
+        let mut m = KMeansCache::new(dim);
+        m.prefill(&keys, &vals, &[], 1);
+        let mut out = vec![0.0; dim];
+        for _ in 0..4 {
+            m.attend(&query, 96, &mut out); // warm every arena
+        }
+        let before = thread_allocations();
+        for _ in 0..8 {
+            m.attend(&query, 96, &mut out);
+        }
+        let delta = thread_allocations() - before;
+        assert_eq!(delta, 0, "kmeans attend allocated {delta} times");
+        assert!(out.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn arena_selection_matches_top_k_indices() {
+        use crate::baselines::testutil::clustered;
+        let dim = 64;
+        let (keys, vals, query) = clustered(9, 300, dim, 4.0);
+        let mut m = KMeansCache::new(dim);
+        m.prefill(&keys, &vals, &[], 1);
+        let mut out = vec![0.0; dim];
+        m.attend(&query, 64, &mut out);
+        let scores = m.retrieval_scores(&query).unwrap();
+        assert_eq!(m.selected, top_k_indices(&scores, 64));
     }
 
     #[test]

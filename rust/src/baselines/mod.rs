@@ -30,6 +30,8 @@ pub mod ours;
 pub mod quest;
 pub mod snapkv;
 
+use crate::kvcache::store::CacheFull;
+
 pub use double_sparse::DoubleSparse;
 pub use full::FullCache;
 pub use kivi::KiviCache;
@@ -59,6 +61,31 @@ pub trait AttentionMethod: Send {
 
     /// Append one decode-time token.
     fn append(&mut self, k_row: &[f32], v_row: &[f32]);
+
+    /// Fallible decode append — the engine's entry point. Methods backed
+    /// by the shared block pool report [`CacheFull`] (the scheduler's
+    /// preemption signal) instead of panicking; everything else appends
+    /// infallibly. A failed append must leave the cache unchanged so a
+    /// preempted sequence can be recomputed from its prompt cleanly.
+    fn try_append(&mut self, k_row: &[f32], v_row: &[f32]) -> Result<(), CacheFull> {
+        self.append(k_row, v_row);
+        Ok(())
+    }
+
+    /// Shared-pool blocks the next append will allocate (0 for methods
+    /// that don't store into the engine pool) — the exact-occupancy input
+    /// to the scheduler's admission/preemption accounting.
+    fn blocks_for_append(&self) -> usize {
+        0
+    }
+
+    /// Bytes of [`Self::memory_bytes`] that live in the engine's shared
+    /// block pool, counted per holder. The engine subtracts these and adds
+    /// `pool.used_bytes()` instead, so blocks shared across sequences via
+    /// the prefix registry are counted once.
+    fn pool_payload_bytes(&self) -> usize {
+        0
+    }
 
     /// Single-query attention with a dynamic-token budget.
     fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]);
@@ -103,6 +130,18 @@ impl AttentionMethod for Box<dyn AttentionMethod> {
 
     fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
         (**self).append(k_row, v_row)
+    }
+
+    fn try_append(&mut self, k_row: &[f32], v_row: &[f32]) -> Result<(), CacheFull> {
+        (**self).try_append(k_row, v_row)
+    }
+
+    fn blocks_for_append(&self) -> usize {
+        (**self).blocks_for_append()
+    }
+
+    fn pool_payload_bytes(&self) -> usize {
+        (**self).pool_payload_bytes()
     }
 
     fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]) {

@@ -6,12 +6,15 @@
 //! switches of [`SelfIndexConfig`] (sign plane, magnitude centroids,
 //! sinks) flow straight through — Table 5 is a config sweep.
 
+use std::sync::Arc;
+
 use super::AttentionMethod;
 use crate::attention::sparse::{attend_sparse_fused, SparseAttnScratch};
 use crate::kvcache::layout::RecordLayout;
+use crate::kvcache::manager::KvManager;
 use crate::kvcache::pool::BlockPool;
 use crate::kvcache::sink::{snapkv_select, SinkStore};
-use crate::kvcache::store::HeadCache;
+use crate::kvcache::store::{CacheFull, HeadCache};
 use crate::selfindex::lut::Lut;
 use crate::selfindex::score::ByteLut;
 use crate::selfindex::topk::TopKStream;
@@ -45,7 +48,10 @@ impl RetrievalScratch {
 pub struct SelfIndexing {
     pub dim: usize,
     pub cfg: SelfIndexConfig,
-    pool: BlockPool,
+    /// the engine-wide memory manager this head borrows blocks from —
+    /// every head of every sequence holds the same `Arc` when built
+    /// through the registry, so exactly one `BlockPool` exists per engine
+    mgr: Arc<KvManager>,
     cache: HeadCache,
     sinks: SinkStore,
     /// sink token indices, ascending — masking during selection is index
@@ -65,11 +71,26 @@ impl SelfIndexing {
         Self::with_capacity(dim, cfg, 4096)
     }
 
+    /// Standalone (single-head / bench / test) constructor: builds a
+    /// private manager of `capacity_blocks`. Serving goes through
+    /// [`Self::with_manager`] with the engine's shared manager instead.
     pub fn with_capacity(dim: usize, cfg: SelfIndexConfig, capacity_blocks: usize) -> Self {
-        let layout = RecordLayout::new(dim, &cfg);
+        let mgr = Arc::new(KvManager::for_head(dim, &cfg, 64, capacity_blocks));
+        Self::with_manager(dim, cfg, mgr)
+    }
+
+    /// Build over a shared memory manager (the engine path). The manager's
+    /// record layout must match this head's `(dim, cfg)` — one engine-wide
+    /// layout serves every sequence, layer, and kv head.
+    pub fn with_manager(dim: usize, cfg: SelfIndexConfig, mgr: Arc<KvManager>) -> Self {
+        assert_eq!(
+            mgr.pool().layout,
+            RecordLayout::new(dim, &cfg),
+            "shared pool layout does not match this head's record layout"
+        );
         Self {
             dim,
-            pool: BlockPool::new(layout, 64, capacity_blocks),
+            mgr,
             cache: HeadCache::new(dim, cfg.clone()),
             sinks: SinkStore::default(),
             sink_ids: vec![],
@@ -93,6 +114,7 @@ impl SelfIndexing {
     /// selection is written to `self.retrieval.selected`.
     fn fused_select(&mut self, queries: &[f32], k: usize) {
         let dim = self.dim;
+        let pool = self.mgr.pool();
         let cache = &self.cache;
         let r = &mut self.retrieval;
         r.lut.rebuild(&queries[..dim], cache.codebook());
@@ -110,7 +132,7 @@ impl SelfIndexing {
         // them by index arithmetic over the sorted id list
         let RetrievalScratch { blut, block_scores, selector, selected, .. } = r;
         cache.stream_select(
-            &self.pool,
+            pool,
             blut,
             end,
             &self.sink_ids,
@@ -134,7 +156,11 @@ impl SelfIndexing {
     }
 
     pub fn pool(&self) -> &BlockPool {
-        &self.pool
+        self.mgr.pool()
+    }
+
+    pub fn manager(&self) -> &Arc<KvManager> {
+        &self.mgr
     }
 
     pub fn sinks(&self) -> &SinkStore {
@@ -148,7 +174,7 @@ impl SelfIndexing {
         let lut = Lut::build(query, self.cache.codebook());
         let blut = ByteLut::from_lut(&lut);
         let scores = &mut self.scores;
-        self.cache.scores(&self.pool, &blut, scores);
+        self.cache.scores(self.mgr.pool(), &blut, scores);
         for &s in &self.sink_ids {
             if (s as usize) < scores.len() {
                 scores[s as usize] = f32::NEG_INFINITY;
@@ -165,8 +191,8 @@ impl AttentionMethod for SelfIndexing {
 
     fn prefill(&mut self, keys: &[f32], vals: &[f32], q_window: &[f32], r_heads: usize) {
         self.cache
-            .ingest_prefill(&mut self.pool, keys, vals)
-            .expect("pool sized for prefill");
+            .ingest_prefill(&self.mgr, keys, vals)
+            .expect("shared kv pool exhausted at prefill (admission must check free blocks first)");
         if self.cfg.use_sinks && self.cfg.sink_tokens > 0 {
             let sel = if q_window.is_empty() {
                 // degenerate: first tokens (StreamingLLM-style)
@@ -192,10 +218,18 @@ impl AttentionMethod for SelfIndexing {
     }
 
     fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        self.try_append(k_row, v_row)
+            .expect("shared kv pool exhausted mid-decode (scheduler must preempt first)");
+    }
+
+    /// Fallible append — the engine's entry point: a `CacheFull` here is
+    /// the scheduler's signal to preempt instead of panicking. Nothing is
+    /// recorded on failure (the compressed record never lands and the fp
+    /// recent window is untouched), so a preempted sequence can be
+    /// recomputed from its prompt with no residue.
+    fn try_append(&mut self, k_row: &[f32], v_row: &[f32]) -> Result<(), CacheFull> {
         // compressed append (future retrievability) + fp recent window
-        self.cache
-            .append(&mut self.pool, k_row, v_row)
-            .expect("pool sized for decode");
+        self.cache.append(self.mgr.pool(), k_row, v_row)?;
         let mu = self.cache.mu();
         let dim = self.dim;
         let start = self.recent.len();
@@ -209,6 +243,15 @@ impl AttentionMethod for SelfIndexing {
         if rows > self.recent_cap {
             self.recent.drain(..(rows - self.recent_cap) * 2 * dim);
         }
+        Ok(())
+    }
+
+    fn blocks_for_append(&self) -> usize {
+        self.cache.blocks_for_next_append(self.mgr.pool())
+    }
+
+    fn pool_payload_bytes(&self) -> usize {
+        self.cache.payload_bytes(self.mgr.pool())
     }
 
     fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]) {
@@ -218,7 +261,7 @@ impl AttentionMethod for SelfIndexing {
         attend_sparse_fused(
             query,
             &self.cache,
-            &self.pool,
+            self.mgr.pool(),
             &self.retrieval.selected,
             &self.sinks,
             &recent,
@@ -229,7 +272,7 @@ impl AttentionMethod for SelfIndexing {
     }
 
     fn memory_bytes(&self) -> usize {
-        self.cache.payload_bytes(&self.pool)
+        self.cache.payload_bytes(self.mgr.pool())
             + self.cache.fixed_overhead_bytes()
             + self.sinks.bytes()
             + self.recent.len() * 4
@@ -239,7 +282,7 @@ impl AttentionMethod for SelfIndexing {
         let lut = Lut::build(query, self.cache.codebook());
         let blut = ByteLut::from_lut(&lut);
         let mut out = Vec::new();
-        self.cache.scores(&self.pool, &blut, &mut out);
+        self.cache.scores(self.mgr.pool(), &blut, &mut out);
         Some(out)
     }
 
@@ -257,7 +300,7 @@ impl AttentionMethod for SelfIndexing {
             attend_sparse_fused(
                 q,
                 &self.cache,
-                &self.pool,
+                self.mgr.pool(),
                 &self.retrieval.selected,
                 &self.sinks,
                 &recent,
@@ -266,6 +309,17 @@ impl AttentionMethod for SelfIndexing {
             );
         }
         self.recent = recent;
+    }
+}
+
+/// Every exit path — completion, preemption, panic unwind — returns this
+/// head's block references to the shared pool; with the prefix registry
+/// holding no refcounts, all sequences finishing means
+/// `free_blocks == capacity_blocks` (leak-checked in
+/// `tests/memory_manager.rs`).
+impl Drop for SelfIndexing {
+    fn drop(&mut self) {
+        self.cache.free(self.mgr.pool());
     }
 }
 

@@ -74,8 +74,14 @@ pub struct EngineConfig {
     /// (paper Fig. 4/5: 7.5%); fixed-k mode when `sparse_k` is Some
     pub sparsity: f64,
     pub sparse_k: Option<usize>,
-    /// kv pool capacity in tokens per (layer, kv head)
+    /// ENGINE-WIDE kv pool budget in tokens: one shared block pool backs
+    /// every sequence, layer, and kv head (capacity_blocks =
+    /// pool_tokens / block_tokens); admission and preemption run on its
+    /// exact free-block accounting
     pub pool_tokens: usize,
+    /// tokens per pool block (paged-allocation granularity; must be a
+    /// multiple of 8 for the block scorer's unroll)
+    pub block_tokens: usize,
     /// admission queue bound (backpressure)
     pub queue_limit: usize,
     /// max new tokens per request default
@@ -98,7 +104,8 @@ impl Default for EngineConfig {
             max_batch: 8,
             sparsity: 0.075,
             sparse_k: Some(96),
-            pool_tokens: 1 << 16,
+            pool_tokens: 1 << 20,
+            block_tokens: 64,
             queue_limit: 256,
             max_new_tokens: 32,
             decode_workers: 0,
@@ -131,6 +138,9 @@ impl EngineConfig {
         }
         if let Some(x) = v.get("pool_tokens").and_then(Json::as_usize) {
             cfg.pool_tokens = x;
+        }
+        if let Some(x) = v.get("block_tokens").and_then(Json::as_usize) {
+            cfg.block_tokens = x;
         }
         if let Some(x) = v.get("queue_limit").and_then(Json::as_usize) {
             cfg.queue_limit = x;
@@ -182,6 +192,18 @@ impl EngineConfig {
         }
         if self.queue_limit == 0 {
             return Err("queue_limit == 0".into());
+        }
+        if self.block_tokens == 0 || self.block_tokens % 8 != 0 {
+            return Err(format!(
+                "block_tokens {} must be a positive multiple of 8",
+                self.block_tokens
+            ));
+        }
+        if self.pool_tokens < self.block_tokens {
+            return Err(format!(
+                "pool_tokens {} below one block ({})",
+                self.pool_tokens, self.block_tokens
+            ));
         }
         crate::method::registry::validate_overlay(&self.method, &self.method_overlay)?;
         Ok(())
@@ -244,6 +266,20 @@ mod tests {
         assert_eq!(e.sparse_k, None);
         assert_eq!(e.selfindex.sink_tokens, 32);
         assert!(!e.selfindex.use_sinks);
+    }
+
+    #[test]
+    fn block_tokens_is_validated() {
+        let j = Json::parse(r#"{"block_tokens":60}"#).unwrap();
+        let err = EngineConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("multiple of 8"), "{err}");
+        let j = Json::parse(r#"{"block_tokens":32,"pool_tokens":16}"#).unwrap();
+        let err = EngineConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("below one block"), "{err}");
+        let j = Json::parse(r#"{"block_tokens":32,"pool_tokens":4096}"#).unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.block_tokens, 32);
+        assert_eq!(e.pool_tokens, 4096);
     }
 
     #[test]

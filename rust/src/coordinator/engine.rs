@@ -17,17 +17,29 @@
 //! layer. Methods are built by the [`crate::method::registry`] rather
 //! than a hardcoded match.
 //!
+//! Memory: ONE engine-wide [`KvManager`] (shared refcounted block pool +
+//! prefix-block registry) backs every sequence, layer, and kv head.
+//! Admission and preemption run on **exact** free-block accounting
+//! ([`PoolPressure`] → `Scheduler::plan`): the head of the queue admits
+//! only when its prompt fits on top of the running set's next step, and
+//! when a decode step cannot fit the youngest running sequence is
+//! preempted — blocks released, request re-stashed FIFO for deterministic
+//! recomputation (DESIGN.md §Memory manager).
+//!
 //! [`HeadTask`]: crate::method::HeadTask
 
 use crate::substrate::error as anyhow;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::request::{Request, RequestId, RequestResult};
 use super::router::{AdmitError, Router};
-use super::scheduler::{Scheduler, StepPlan};
+use super::scheduler::{PoolPressure, Scheduler, StepPlan};
 use crate::config::{EngineConfig, ModelConfig};
+use crate::kvcache::layout::RecordLayout;
+use crate::kvcache::manager::KvManager;
 use crate::method::registry::{self, BuildCtx, CacheMethod};
 use crate::method::{DecodePlan, DecodeWorkQueue, SequenceCache};
 use crate::runtime::{HostTensor, PjrtRuntime};
@@ -56,13 +68,17 @@ pub struct Engine {
     pub metrics: Registry,
     /// the registry entry building each admitted sequence's cache
     builder: &'static dyn CacheMethod,
+    /// the engine-wide memory manager: ONE shared block pool + the
+    /// prefix-block registry, cloned into every pool-backed leaf — the
+    /// ownership inversion that replaced per-head pools (DESIGN.md
+    /// §Memory manager)
+    mgr: Arc<KvManager>,
     router: Router,
     scheduler: Scheduler,
     seqs: HashMap<RequestId, SeqState>,
-    /// requests deferred by pool pressure (retried before the queue)
-    stash: Vec<Request>,
-    /// total cached tokens across sequences (pool pressure heuristic)
-    cached_tokens: usize,
+    /// preempted requests awaiting recomputation, FIFO (`pop_front`) and
+    /// retried before the router queue
+    stash: VecDeque<Request>,
     /// decode fan-out workers (one task per (sequence, kv head))
     workers: ThreadPool,
     /// recycled task arena for the per-layer decode fan-out
@@ -79,13 +95,42 @@ impl Engine {
         let rt = PjrtRuntime::load(artifact_dir)?;
         let model = rt.manifest.model.clone();
         let metrics = Registry::default();
-        let max_prompt = model.max_seq;
+        // one pool for the whole engine, sized in blocks from the token
+        // budget; its record layout comes from the *resolved* selfindex
+        // config (a quant_bits overlay changes record widths). Methods
+        // that never store into the pool get a 1-block stub instead of
+        // megabytes of untouched buffers.
+        let si_eff = if method == MethodKind::SelfIndex {
+            registry::selfindex_overlayed(&cfg.selfindex, &cfg.method_overlay)
+        } else {
+            cfg.selfindex.clone()
+        };
+        let uses_pool = builder.head_blocks_for_prompt(cfg.block_tokens, cfg.block_tokens) > 0;
+        let capacity_blocks = if uses_pool {
+            (cfg.pool_tokens / cfg.block_tokens).max(1)
+        } else {
+            1
+        };
+        let mgr = Arc::new(KvManager::new(
+            RecordLayout::new(model.head_dim, &si_eff),
+            cfg.block_tokens,
+            capacity_blocks,
+        ));
+        // reject prompts the pool could never host at SUBMIT time (a
+        // per-request AdmitError) instead of letting step() abort the
+        // whole run after the request is already queued
+        let max_prompt = if uses_pool {
+            let heads = (model.n_layers * model.n_kv_heads).max(1);
+            model.max_seq.min((capacity_blocks / heads) * cfg.block_tokens)
+        } else {
+            model.max_seq
+        };
         Ok(Self {
+            mgr,
             router: Router::new(cfg.queue_limit, max_prompt, metrics.clone()),
             scheduler: Scheduler::new(cfg.max_batch),
             seqs: HashMap::new(),
-            stash: vec![],
-            cached_tokens: 0,
+            stash: VecDeque::new(),
             workers: if cfg.decode_workers == 0 {
                 ThreadPool::default_size()
             } else {
@@ -120,38 +165,122 @@ impl Engine {
         self.scheduler.running().len()
     }
 
-    /// KV bytes currently held across sequences (Fig. 5 metric).
-    pub fn cache_bytes(&self) -> usize {
-        self.seqs.values().map(|s| s.cache.memory_bytes()).sum()
+    /// The engine-wide memory manager (shared pool + prefix registry).
+    pub fn manager(&self) -> &Arc<KvManager> {
+        &self.mgr
     }
 
-    fn pool_can_admit(&self, prompt_len: usize) -> bool {
-        let per_head = prompt_len + self.cfg.max_new_tokens;
+    /// KV bytes currently held across sequences (Fig. 5 metric): the
+    /// shared pool's allocated blocks — each counted **once**, however
+    /// many sequences share it through the prefix registry — plus every
+    /// sequence's off-pool state (sinks, recent windows, fixed overhead,
+    /// and the storage of non-pool methods).
+    pub fn cache_bytes(&self) -> usize {
+        let off_pool: usize = self
+            .seqs
+            .values()
+            .map(|s| s.cache.memory_bytes() - s.cache.pool_payload_bytes())
+            .sum();
+        self.mgr.pool().used_bytes() + off_pool
+    }
+
+    /// Exact shared-pool blocks needed to admit a `prompt_len` prompt.
+    fn admit_blocks_for(&self, prompt_len: usize) -> usize {
         let heads = self.model.n_layers * self.model.n_kv_heads;
-        self.cached_tokens + per_head * heads <= self.cfg.pool_tokens * heads
+        self.builder
+            .head_blocks_for_prompt(prompt_len, self.mgr.pool().block_tokens)
+            * heads
+    }
+
+    /// Blocks the running set will allocate on its next decode step.
+    fn step_blocks(&self) -> usize {
+        self.scheduler
+            .running()
+            .iter()
+            .map(|id| self.seqs[id].cache.step_blocks())
+            .sum()
+    }
+
+    /// Evict a running sequence: release its pool blocks (the cache's
+    /// `Drop` returns every reference) and re-stash the request for
+    /// recomputation. Greedy decode is deterministic, so the recomputed
+    /// request finishes with bit-identical output.
+    fn preempt(&mut self, id: RequestId) {
+        let st = self
+            .seqs
+            .remove(&id)
+            .expect("preempt of unknown sequence");
+        self.scheduler.remove(id);
+        drop(st.cache); // releases shared-pool block references
+        self.stash.push_back(st.req);
+        self.metrics.counter("engine.preemptions").inc();
+    }
+
+    fn refresh_pool_gauges(&self) {
+        let pool = self.mgr.pool();
+        self.metrics
+            .gauge("pool.free_blocks")
+            .set(pool.free_blocks() as i64);
+        self.metrics
+            .gauge("pool.prefix_hits")
+            .set(self.mgr.prefix_hits() as i64);
     }
 
     /// Drive one scheduler step; returns requests completed in this step.
     ///
-    /// Policy: prefill-prioritized continuous batching — admit one queued
-    /// request per step while batch capacity and pool pressure allow,
-    /// otherwise run one decode step over the whole running set.
+    /// Policy: prefill-prioritized continuous batching over exact pool
+    /// occupancy — admit the head of the deferred/router queue while batch
+    /// capacity and free blocks allow, preempt the youngest running
+    /// sequence when the next decode step cannot fit, otherwise run one
+    /// decode step over the whole running set. Preempted requests retry
+    /// FIFO from the stash, ahead of the router queue.
     pub fn step(&mut self) -> anyhow::Result<Vec<RequestResult>> {
-        if self.scheduler.has_capacity() {
-            if let Some(req) = self.stash.pop().or_else(|| self.router.pop()) {
-                // force-admit when nothing is running (deadlock guard)
-                if self.pool_can_admit(req.prompt.len()) || self.seqs.is_empty() {
-                    self.do_prefill(req)?;
-                    return Ok(vec![]);
+        let candidate = self
+            .stash
+            .front()
+            .map(|r| r.prompt.len())
+            .or_else(|| self.router.peek().map(|r| r.prompt.len()));
+        let pressure = PoolPressure {
+            free_blocks: self.mgr.pool().free_blocks(),
+            admit_blocks: candidate.map(|len| self.admit_blocks_for(len)),
+            step_blocks: self.step_blocks(),
+        };
+        let plan = self.scheduler.plan(&pressure);
+        // deferred = batch capacity existed but pool pressure refused the
+        // admission (a batch-full engine decoding normally is not deferral)
+        if candidate.is_some()
+            && self.scheduler.has_capacity()
+            && !matches!(plan, StepPlan::Prefill)
+        {
+            self.metrics.counter("engine.deferred_admissions").inc();
+        }
+        let out = match plan {
+            StepPlan::Prefill => {
+                let req = self
+                    .stash
+                    .pop_front()
+                    .or_else(|| self.router.pop())
+                    .expect("plan admitted an empty queue");
+                let need = self.admit_blocks_for(req.prompt.len());
+                if need > self.mgr.pool().capacity_blocks() {
+                    return Err(anyhow::anyhow!(
+                        "prompt needs {need} pool blocks but the pool holds {} — \
+                         raise pool_tokens",
+                        self.mgr.pool().capacity_blocks()
+                    ));
                 }
-                self.metrics.counter("engine.deferred_admissions").inc();
-                self.stash.push(req);
+                self.do_prefill(req)?;
+                Ok(vec![])
             }
-        }
-        match self.scheduler.plan(None, false) {
+            StepPlan::Preempt(id) => {
+                self.preempt(id);
+                Ok(vec![])
+            }
             StepPlan::Decode(ids) => self.do_decode(&ids),
-            _ => Ok(vec![]),
-        }
+            StepPlan::Idle => Ok(vec![]),
+        };
+        self.refresh_pool_gauges();
+        out
     }
 
     /// Run until all submitted work completes; returns all results.
@@ -206,7 +335,7 @@ impl Engine {
             kv_heads: kvh,
             gqa_ratio: r,
             budget_hint,
-            pool_tokens: self.cfg.pool_tokens,
+            mgr: &self.mgr,
             selfindex: &self.cfg.selfindex,
             overlay: &self.cfg.method_overlay,
         };
@@ -236,7 +365,6 @@ impl Engine {
             }
             cache.prefill_layer(l, &keys_buf, &vals_buf, &qw_buf);
         }
-        self.cached_tokens += prompt_len * nl * kvh;
 
         // first token from prefill logits
         let first = argmax(last_logits.as_f32()) as u8;
@@ -265,7 +393,13 @@ impl Engine {
     /// kv-head), executed over the pool's atomic-cursor work queue; each
     /// task owns its leaf's scratch arenas and a disjoint slice of the
     /// output buffer) → output projection → logits → greedy sample.
-    fn decode_batch(&mut self, states: &mut [SeqState]) -> anyhow::Result<()> {
+    ///
+    /// Returns the indices of sequences whose append hit pool exhaustion
+    /// mid-step (normally none — the scheduler's exact pre-step accounting
+    /// preempts first). A failed sequence skips its remaining layers and
+    /// its token sample; the caller preempts it, which discards the
+    /// partial step entirely (recompute-from-prompt semantics).
+    fn decode_batch(&mut self, states: &mut [SeqState]) -> anyhow::Result<Vec<usize>> {
         let b = states.len();
         let m = self.model.clone();
         let (nl, kvh, hd, h, d) = (m.n_layers, m.n_kv_heads, m.head_dim, m.n_heads, m.d_model);
@@ -296,6 +430,9 @@ impl Engine {
             .iter()
             .map(|s| self.cfg.budget_for(s.tokens.len()))
             .collect();
+        let mut failed = vec![false; b];
+        // (start, end) of each sequence's tasks in this layer's arena
+        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(b);
 
         for l in 0..nl {
             let qkv = self.rt.run(
@@ -316,27 +453,39 @@ impl Engine {
             let mut o = vec![0.0f32; bb * h * hd];
             {
                 let mut tasks = self.decode_tasks.take();
+                ranges.clear();
                 let mut o_chunks = o.chunks_mut(h * hd);
                 for (i, seq) in states.iter_mut().enumerate() {
-                    let plan = DecodePlan {
-                        layer: l,
-                        dim: hd,
-                        kv_heads: kvh,
-                        gqa_ratio: r,
-                        budget: budgets[i],
-                        k_rows: &kf[i * kvh * hd..(i + 1) * kvh * hd],
-                        v_rows: &vf[i * kvh * hd..(i + 1) * kvh * hd],
-                        // group queries (r heads per kv head) are
-                        // contiguous in the (h, hd) layout
-                        queries: &qf[i * h * hd..(i + 1) * h * hd],
-                    };
-                    // chunk (i) is this sequence's (kvh × r × hd) output
                     let oslice = o_chunks.next().unwrap();
-                    seq.cache.push_tasks(&plan, oslice, &mut tasks);
+                    let start = tasks.len();
+                    // a sequence that failed at an earlier layer appends
+                    // nothing further — it is preempted after this step
+                    if !failed[i] {
+                        let plan = DecodePlan {
+                            layer: l,
+                            dim: hd,
+                            kv_heads: kvh,
+                            gqa_ratio: r,
+                            budget: budgets[i],
+                            k_rows: &kf[i * kvh * hd..(i + 1) * kvh * hd],
+                            v_rows: &vf[i * kvh * hd..(i + 1) * kvh * hd],
+                            // group queries (r heads per kv head) are
+                            // contiguous in the (h, hd) layout
+                            queries: &qf[i * h * hd..(i + 1) * h * hd],
+                        };
+                        // chunk (i) is this sequence's (kvh × r × hd) output
+                        seq.cache.push_tasks(&plan, oslice, &mut tasks);
+                    }
+                    ranges.push((start, tasks.len()));
                 }
-                self.decode_tasks.dispatch(&self.workers, tasks);
+                self.workers.for_each_task(&mut tasks, |t| t.run());
+                for (i, &(start, end)) in ranges.iter().enumerate() {
+                    if tasks[start..end].iter().any(|t| t.failed) {
+                        failed[i] = true;
+                    }
+                }
+                self.decode_tasks.bank(tasks);
             }
-            self.cached_tokens += b * kvh;
 
             let next = self.rt.run(
                 &format!("decode_out_b{bb}"),
@@ -356,12 +505,15 @@ impl Engine {
         let lf = logits.as_f32(); // (bb, vocab)
         let vocab = self.model.vocab_size;
         for (i, seq) in states.iter_mut().enumerate() {
+            if failed[i] {
+                continue; // partial step: discarded by preemption
+            }
             let tok = argmax(&lf[i * vocab..(i + 1) * vocab]) as u8;
             seq.tokens.push(tok);
             seq.generated.push(tok);
             seq.decode_steps += 1;
         }
-        Ok(())
+        Ok((0..b).filter(|&i| failed[i]).collect())
     }
 
     fn do_decode(&mut self, ids: &[RequestId]) -> anyhow::Result<Vec<RequestResult>> {
@@ -391,16 +543,32 @@ impl Engine {
         for (id, st) in ids.iter().zip(states) {
             self.seqs.insert(*id, st);
         }
-        match step {
+        let failed_idx = match step {
             Ok(res) => res?,
             Err(payload) => std::panic::resume_unwind(payload),
+        };
+        // mid-step pool exhaustion (the reservation check normally makes
+        // this unreachable): preempt the starved sequences so the freed
+        // blocks let the survivors (and FIFO re-stash) make progress. A
+        // sequence that fails while running ALONE is fatal — the whole
+        // pool was its to use, so eviction could not free anything and
+        // retrying would loop forever. (`ids.len()`, not the post-preempt
+        // running count: preempting several failures from one batch must
+        // not be mistaken for that lone-runner dead end.)
+        if !failed_idx.is_empty() && ids.len() == 1 {
+            return Err(anyhow::anyhow!(
+                "kv pool exhausted with a single running sequence — \
+                 raise pool_tokens"
+            ));
+        }
+        for &i in &failed_idx {
+            self.preempt(ids[i]);
         }
 
-        let nl = self.model.n_layers;
-        let kvh = self.model.n_kv_heads;
         let mut done = vec![];
         for id in ids {
-            let seq = &self.seqs[id];
+            // preempted sequences left the map; they recompute later
+            let Some(seq) = self.seqs.get(id) else { continue };
             if seq.generated.len() >= seq.req.max_new_tokens {
                 done.push(*id);
             }
@@ -412,15 +580,12 @@ impl Engine {
         self.metrics.counter("engine.decode_steps").inc();
         self.metrics
             .counter("engine.decoded_tokens")
-            .add(ids.len() as u64);
+            .add((ids.len() - failed_idx.len()) as u64);
 
         let mut results = vec![];
         for id in done {
             let seq = self.seqs.remove(&id).unwrap();
             self.scheduler.remove(id);
-            self.cached_tokens = self
-                .cached_tokens
-                .saturating_sub(seq.tokens.len() * nl * kvh);
             results.push(RequestResult {
                 id,
                 prompt_len: seq.req.prompt.len(),

@@ -17,4 +17,4 @@ pub mod scheduler;
 pub use engine::{Engine, MethodKind};
 pub use request::{Request, RequestId, RequestResult, RequestState};
 pub use router::Router;
-pub use scheduler::{Scheduler, StepPlan};
+pub use scheduler::{PoolPressure, Scheduler, StepPlan};

@@ -70,6 +70,12 @@ impl Router {
         Ok(id)
     }
 
+    /// Head of the queue without dequeueing — the engine sizes its exact
+    /// admission check (prompt blocks) against this before popping.
+    pub fn peek(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
     /// Next request if the caller has capacity.
     pub fn pop(&mut self) -> Option<Request> {
         let r = self.queue.pop_front();

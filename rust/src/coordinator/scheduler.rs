@@ -1,21 +1,48 @@
-//! Step planning: continuous batching with prefill/decode interleaving.
+//! Step planning: continuous batching with prefill/decode interleaving
+//! and pool-pressure preemption.
 //!
-//! Policy (vLLM-flavored, prefill-prioritized): if a queued request exists
-//! and the running set is below `max_batch` (and the kv pool heuristic
-//! admits it), the next step is that request's prefill; otherwise decode
-//! the whole running set. Decode batches are padded up to the nearest AOT
-//! batch bucket by the engine.
+//! Policy (vLLM-flavored, prefill-prioritized): if a request waits at the
+//! head of the queue and the running set is below `max_batch` — and the
+//! shared block pool has room for its prompt *plus* the running set's
+//! next decode step — the next step admits it; otherwise decode the whole
+//! running set. When even the decode step cannot fit (`free_blocks <
+//! step_blocks`), the plan preempts the **youngest** running sequence:
+//! the engine releases its blocks and re-stashes the request for
+//! recomputation (greedy decode is deterministic, so a preempted request
+//! finishes with bit-identical output, just later).
+//!
+//! All pool inputs arrive as **exact block counts** ([`PoolPressure`]) —
+//! the engine measures them from the shared pool and the sequence caches,
+//! so the admission decision that used to be a token-counting guess is
+//! one testable code path here.
 
 use super::request::RequestId;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum StepPlan {
-    /// run one prompt's prefill (then it joins the running set)
-    Prefill(RequestId),
+    /// admit the request at the head of the deferred/router queue
+    /// (the engine pops it and runs its prefill)
+    Prefill,
     /// one decode step over these running sequences
     Decode(Vec<RequestId>),
+    /// evict this (youngest) running sequence: release its blocks and
+    /// re-stash its request, then re-plan
+    Preempt(RequestId),
     /// nothing to do
     Idle,
+}
+
+/// Exact shared-pool occupancy inputs for one planning decision.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolPressure {
+    /// free blocks in the engine's shared pool right now
+    pub free_blocks: usize,
+    /// blocks the head-of-queue prompt needs to admit (`None` = nothing
+    /// queued); prefix reuse can only lower the real cost, so this is a
+    /// safe upper bound
+    pub admit_blocks: Option<usize>,
+    /// blocks the running set will allocate on its next decode step
+    pub step_blocks: usize,
 }
 
 pub struct Scheduler {
@@ -43,24 +70,39 @@ impl Scheduler {
         self.running.push(id);
     }
 
-    /// Called when a sequence finishes (or is evicted).
+    /// Called when a sequence finishes (or is preempted).
     pub fn remove(&mut self, id: RequestId) {
         self.running.retain(|&r| r != id);
     }
 
-    /// Plan the next step. `queued_head` = next queued request (if any),
-    /// `pool_can_admit` = kv-pool pressure heuristic from the engine.
-    pub fn plan(&self, queued_head: Option<RequestId>, pool_can_admit: bool) -> StepPlan {
-        if let Some(id) = queued_head {
-            if self.has_capacity() && pool_can_admit {
-                return StepPlan::Prefill(id);
+    /// Plan the next step from exact pool pressure.
+    ///
+    /// * Admission requires batch capacity AND enough free blocks for the
+    ///   prompt *on top of* the running set's next step — admitting must
+    ///   never trigger an immediate preemption. When nothing is running
+    ///   the head request is force-admitted (deadlock guard; a prompt
+    ///   larger than the whole pool is rejected by the engine instead).
+    /// * Preemption picks the youngest (most recently admitted) running
+    ///   sequence — it has the least sunk decode work to recompute. The
+    ///   last running sequence is never preempted: with the pool entirely
+    ///   its own, eviction could not free anything another step needs.
+    pub fn plan(&self, pressure: &PoolPressure) -> StepPlan {
+        if let Some(need) = pressure.admit_blocks {
+            let fits = pressure
+                .free_blocks
+                .checked_sub(pressure.step_blocks)
+                .is_some_and(|headroom| headroom >= need);
+            if self.has_capacity() && (self.running.is_empty() || fits) {
+                return StepPlan::Prefill;
             }
         }
         if self.running.is_empty() {
-            StepPlan::Idle
-        } else {
-            StepPlan::Decode(self.running.clone())
+            return StepPlan::Idle;
         }
+        if pressure.free_blocks < pressure.step_blocks && self.running.len() > 1 {
+            return StepPlan::Preempt(*self.running.last().unwrap());
+        }
+        StepPlan::Decode(self.running.clone())
     }
 }
 
@@ -68,28 +110,73 @@ impl Scheduler {
 mod tests {
     use super::*;
 
+    fn pressure(
+        free_blocks: usize,
+        admit_blocks: Option<usize>,
+        step_blocks: usize,
+    ) -> PoolPressure {
+        PoolPressure { free_blocks, admit_blocks, step_blocks }
+    }
+
     #[test]
     fn prefill_prioritized_under_capacity() {
         let mut s = Scheduler::new(2);
-        assert_eq!(s.plan(Some(1), true), StepPlan::Prefill(1));
+        assert_eq!(s.plan(&pressure(100, Some(4), 0)), StepPlan::Prefill);
         s.add_running(1);
-        assert_eq!(s.plan(Some(2), true), StepPlan::Prefill(2));
+        assert_eq!(s.plan(&pressure(100, Some(4), 1)), StepPlan::Prefill);
         s.add_running(2);
-        // full: decode
-        assert_eq!(s.plan(Some(3), true), StepPlan::Decode(vec![1, 2]));
+        // batch full: decode
+        assert_eq!(
+            s.plan(&pressure(100, Some(4), 2)),
+            StepPlan::Decode(vec![1, 2])
+        );
     }
 
     #[test]
     fn pool_pressure_blocks_admission() {
         let mut s = Scheduler::new(4);
         s.add_running(1);
-        assert_eq!(s.plan(Some(2), false), StepPlan::Decode(vec![1]));
+        // 5 free, step needs 2 → only 3 of the 4 admit blocks remain
+        assert_eq!(
+            s.plan(&pressure(5, Some(4), 2)),
+            StepPlan::Decode(vec![1])
+        );
+        // exactly enough on top of the step: admit
+        assert_eq!(s.plan(&pressure(6, Some(4), 2)), StepPlan::Prefill);
+    }
+
+    #[test]
+    fn force_admit_when_nothing_running() {
+        let s = Scheduler::new(2);
+        // deadlock guard: an empty engine admits regardless of the guess
+        assert_eq!(s.plan(&pressure(0, Some(64), 0)), StepPlan::Prefill);
+    }
+
+    #[test]
+    fn preempts_youngest_when_step_cannot_fit() {
+        let mut s = Scheduler::new(4);
+        s.add_running(1);
+        s.add_running(2);
+        s.add_running(3);
+        assert_eq!(s.plan(&pressure(1, None, 3)), StepPlan::Preempt(3));
+        s.remove(3);
+        // after eviction frees blocks, the survivors decode
+        assert_eq!(s.plan(&pressure(9, None, 2)), StepPlan::Decode(vec![1, 2]));
+    }
+
+    #[test]
+    fn lone_sequence_is_never_preempted() {
+        let mut s = Scheduler::new(4);
+        s.add_running(1);
+        // nothing to evict that would help — decode and let the engine
+        // surface exhaustion as an error if it truly cannot proceed
+        assert_eq!(s.plan(&pressure(0, None, 1)), StepPlan::Decode(vec![1]));
     }
 
     #[test]
     fn idle_when_nothing() {
         let s = Scheduler::new(2);
-        assert_eq!(s.plan(None, true), StepPlan::Idle);
+        assert_eq!(s.plan(&pressure(100, None, 0)), StepPlan::Idle);
     }
 
     #[test]
@@ -99,7 +186,7 @@ mod tests {
         assert!(!s.has_capacity());
         s.remove(7);
         assert!(s.has_capacity());
-        assert_eq!(s.plan(None, true), StepPlan::Idle);
+        assert_eq!(s.plan(&pressure(10, None, 0)), StepPlan::Idle);
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! The engine-wide KV memory manager: one shared [`BlockPool`] plus the
+//! prefix-block registry that deduplicates identical compressed blocks
+//! across sequences (DESIGN.md §Memory manager).
+//!
+//! ## Prefix reuse, content-addressed
+//!
+//! A compressed record depends only on (a) the raw K/V rows of its token
+//! and (b) the head's frozen encode parameters (mu, alpha, quant geometry)
+//! — the paper freezes those after prefill, so a *full* block's bytes are
+//! a pure function of its inputs. The registry therefore keys blocks by a
+//! 128-bit FNV hash over `(params signature ‖ raw K rows ‖ raw V rows)`:
+//! two sequences prefilled with an identical prompt produce identical
+//! keys and share the physical blocks (`retain`d per holder), which is
+//! strictly more general than positional prefix matching — identical
+//! content dedups across heads and across block positions too. Sequences
+//! whose prompts share only a *proper* prefix freeze different stats, get
+//! different params signatures, and correctly do **not** share: the
+//! soundness boundary is the paper's whole-prompt normalization.
+//!
+//! Partially-filled tail blocks are never registered (decode appends
+//! mutate them), so every shared block is full and frozen — the
+//! copy-on-write of the tail degenerates to "the tail is always private".
+//!
+//! ## Trust boundary
+//!
+//! Adoption trusts the 128-bit key: the raw K/V rows are not kept after
+//! encoding, so a colliding pair of inputs would silently share a block.
+//! FNV-1a-128 is non-cryptographic — accidental collisions are
+//! negligible (~2^-64 birthday bound at the entry cap), but an adversary
+//! who controls prompt bytes AND knows another tenant's exact prompt
+//! could in principle construct one. Single-tenant / trusted-prompt
+//! serving (this engine's scope) is fine; a multi-tenant deployment
+//! should swap `fnv128_*` for a keyed or cryptographic hash — the
+//! registry only needs the 128-bit key type to stay fixed.
+//!
+//! ## Staleness without leaks
+//!
+//! The registry holds **no** refcounts: entries record `(block, epoch)`
+//! and adoption goes through [`BlockPool::try_retain_at_epoch`], so a
+//! block freed (and possibly reallocated) after its last holder finished
+//! simply fails validation and is lazily re-registered. When every
+//! sequence is gone, `free_blocks == capacity_blocks` by construction.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::block::BlockId;
+use super::layout::RecordLayout;
+use super::pool::BlockPool;
+use crate::selfindex::SelfIndexConfig;
+
+/// 128-bit content key of one full prefix block (FNV-1a).
+pub type PrefixKey = u128;
+
+const FNV128_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV128_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+/// Fold raw bytes into a running FNV-1a-128 state.
+#[inline]
+pub fn fnv128_bytes(mut h: u128, bytes: &[u8]) -> u128 {
+    for &b in bytes {
+        h ^= b as u128;
+        h = h.wrapping_mul(FNV128_PRIME);
+    }
+    h
+}
+
+/// Fold an `f32` slice (bit patterns, so -0.0 and 0.0 stay distinct
+/// encodings of distinct inputs — hashing must follow the bits the
+/// encoder sees, not float equality).
+///
+/// This is the prefill hot path — every full block's raw K/V rows pass
+/// through it — so it folds 8 bytes (two f32s) per multiply instead of
+/// FNV's canonical byte-at-a-time schedule: ~8x fewer serial u128
+/// multiplies, same 128-bit key type, and single-word differences still
+/// always produce distinct keys (xor-then-multiply by an odd constant is
+/// injective per step). Not byte-compatible with [`fnv128_bytes`].
+#[inline]
+pub fn fnv128_f32s(mut h: u128, xs: &[f32]) -> u128 {
+    let mut it = xs.chunks_exact(2);
+    for pair in it.by_ref() {
+        let w = pair[0].to_bits() as u64 | ((pair[1].to_bits() as u64) << 32);
+        h ^= w as u128;
+        h = h.wrapping_mul(FNV128_PRIME);
+    }
+    if let [x] = it.remainder() {
+        h ^= x.to_bits() as u128;
+        h = h.wrapping_mul(FNV128_PRIME);
+    }
+    h
+}
+
+#[inline]
+pub fn fnv128_u64(h: u128, x: u64) -> u128 {
+    fnv128_bytes(h, &x.to_le_bytes())
+}
+
+/// Start a hash chain.
+#[inline]
+pub fn fnv128_seed() -> u128 {
+    FNV128_OFFSET
+}
+
+struct PrefixEntry {
+    block: BlockId,
+    epoch: u64,
+}
+
+/// Bound on registered entries; past it the map is cleared outright
+/// (safe: entries are revalidated at adoption, so dropping them only
+/// costs future hits, never correctness).
+const PREFIX_ENTRY_CAP: usize = 1 << 14;
+
+pub struct KvManager {
+    pool: BlockPool,
+    prefix: Mutex<HashMap<PrefixKey, PrefixEntry>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl KvManager {
+    pub fn new(layout: RecordLayout, block_tokens: usize, capacity_blocks: usize) -> Self {
+        Self {
+            pool: BlockPool::new(layout, block_tokens, capacity_blocks),
+            prefix: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Convenience constructor for standalone (single-head / bench / test)
+    /// use: derives the record layout from `(dim, cfg)`.
+    pub fn for_head(
+        dim: usize,
+        cfg: &SelfIndexConfig,
+        block_tokens: usize,
+        capacity_blocks: usize,
+    ) -> Self {
+        Self::new(RecordLayout::new(dim, cfg), block_tokens, capacity_blocks)
+    }
+
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    /// Adopt the registered block for `key`, taking a reference on it.
+    /// Returns `None` (and prunes the entry) when nothing is registered or
+    /// the registration went stale — freed, or freed-and-reallocated.
+    pub fn adopt(&self, key: PrefixKey) -> Option<BlockId> {
+        let mut map = self.prefix.lock().unwrap();
+        if let Some(e) = map.get(&key) {
+            if self.pool.try_retain_at_epoch(e.block, e.epoch) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(e.block);
+            }
+            map.remove(&key);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Register a **full, henceforth frozen** block under its content key.
+    /// Takes no reference — liveness is revalidated at adoption time.
+    pub fn register(&self, key: PrefixKey, block: BlockId) {
+        let epoch = self.pool.epoch_of(block);
+        let mut map = self.prefix.lock().unwrap();
+        if map.len() >= PREFIX_ENTRY_CAP {
+            map.clear();
+        }
+        map.insert(key, PrefixEntry { block, epoch });
+    }
+
+    /// Prefix-block adoptions served so far (`pool.prefix_hits` gauge).
+    pub fn prefix_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Prefix lookups that fell through to a fresh encode.
+    pub fn prefix_misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Registered (not necessarily still live) prefix entries.
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(cap: usize) -> KvManager {
+        KvManager::for_head(64, &SelfIndexConfig::default(), 16, cap)
+    }
+
+    #[test]
+    fn adopt_hits_then_survives_donor_release() {
+        let m = mgr(4);
+        let id = m.pool().alloc().unwrap();
+        let key = fnv128_f32s(fnv128_seed(), &[1.0, 2.0]);
+        m.register(key, id);
+        let adopted = m.adopt(key).expect("registered block adopts");
+        assert_eq!(adopted, id);
+        assert_eq!(m.prefix_hits(), 1);
+        // donor releases; the adopter's reference keeps the block live
+        m.pool().release(id);
+        assert_eq!(m.pool().used_blocks(), 1);
+        m.pool().release(id);
+        assert_eq!(m.pool().free_blocks(), 4, "no registry leak");
+    }
+
+    #[test]
+    fn stale_entries_fail_and_prune() {
+        let m = mgr(2);
+        let id = m.pool().alloc().unwrap();
+        let key = fnv128_u64(fnv128_seed(), 7);
+        m.register(key, id);
+        m.pool().release(id); // freed: entry is now stale
+        assert!(m.adopt(key).is_none(), "freed block must not adopt");
+        // slot reused by unrelated content: still must not adopt
+        let id2 = m.pool().alloc().unwrap();
+        assert_eq!(id2, id);
+        m.register(key, id2);
+        m.pool().release(id2);
+        let id3 = m.pool().alloc().unwrap();
+        assert!(m.adopt(key).is_none(), "reallocated epoch must not adopt");
+        m.pool().release(id3);
+        assert_eq!(m.pool().free_blocks(), 2);
+    }
+
+    #[test]
+    fn fnv128_distinguishes_inputs() {
+        let a = fnv128_f32s(fnv128_seed(), &[1.0, 2.0, 3.0]);
+        let b = fnv128_f32s(fnv128_seed(), &[1.0, 2.0, 3.0000002]);
+        let c = fnv128_f32s(fnv128_seed(), &[1.0, 2.0, 3.0]);
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+        assert_ne!(
+            fnv128_f32s(fnv128_seed(), &[0.0]),
+            fnv128_f32s(fnv128_seed(), &[-0.0]),
+            "bit-pattern hashing, not float equality"
+        );
+    }
+}

@@ -14,21 +14,28 @@
 //! * [`layout`] — the byte-level record layout + the paper's §Overhead
 //!   memory accounting (the 78%-savings derivation, re-derived in tests).
 //! * [`block`]/[`pool`] — vLLM-style paged allocation: fixed-token blocks,
-//!   refcounted, O(1) alloc/free; sequences hold block lists, enabling
-//!   preemption and (future) prefix sharing.
+//!   refcounted, O(1) alloc/free. **One pool per engine**: sequences hold
+//!   block tables over the shared pool, enabling exact-occupancy
+//!   admission, preemption, and prefix sharing.
+//! * [`manager`] — the engine-wide memory manager: the shared pool plus
+//!   the content-addressed prefix-block registry that dedups identical
+//!   compressed blocks across sequences.
 //! * [`store`] — per-(layer, kv-head) [`store::HeadCache`]: streaming
 //!   prefill compression (stats → freeze → encode), decode-time append,
-//!   LUT-GEMV scoring over the packed blocks, gather + dequantize.
+//!   LUT-GEMV scoring over the packed blocks, gather + dequantize — a
+//!   *view* over borrowed pool blocks, not a pool owner.
 //! * [`sink`] — SnapKV-style sink-token selection + full-precision store.
 
 pub mod block;
 pub mod layout;
+pub mod manager;
 pub mod pool;
 pub mod sink;
 pub mod store;
 
 pub use block::BlockId;
 pub use layout::RecordLayout;
+pub use manager::{KvManager, PrefixKey};
 pub use pool::BlockPool;
 pub use sink::{snapkv_select, SinkStore};
-pub use store::{GatheredQuant, HeadCache};
+pub use store::{CacheFull, GatheredQuant, HeadCache};

@@ -1,20 +1,55 @@
-//! Refcounted paged block allocator (vLLM-style).
+//! Refcounted paged block allocator (vLLM-style) — **one per engine**.
 //!
-//! Blocks are preallocated up to `capacity_blocks`; `alloc` returns `None`
-//! under pressure, which the scheduler turns into admission backpressure
-//! or preemption. Refcounts make sequence forking / prefix sharing
-//! possible; `release` returns a block to the free list only at zero.
+//! Since the memory-manager inversion (DESIGN.md §Memory manager) the pool
+//! is no longer owned by a per-head cache: every sequence's every
+//! (layer, kv-head) [`super::store::HeadCache`] borrows blocks from one
+//! engine-wide pool and holds only a block table (`Vec<BlockId>`). That
+//! makes the refcounts load-bearing — prefix blocks are shared across
+//! sequences (`retain`/`release`), and exact free-block accounting drives
+//! admission and preemption in the scheduler.
+//!
+//! Concurrency model (the decode fan-out appends from worker threads):
+//!
+//! * allocation metadata — free list, refcounts, epochs — lives behind a
+//!   `Mutex`, taken once per `alloc`/`retain`/`release` (an append locks
+//!   it once every `block_tokens` tokens; scoring never locks);
+//! * block payloads live in `UnsafeCell` slots. A block is written only
+//!   through [`BlockPool::block_mut`] by its **exclusive owner** — the
+//!   one head cache holding it as its partially-filled tail. Shared
+//!   (prefix-registered) blocks are always full and therefore frozen:
+//!   readers never race a writer. The work queue's completion barrier
+//!   publishes writes between steps.
+//!
+//! `alloc` returns `None` under pressure, which the scheduler turns into
+//! admission backpressure or preemption. Each (re)allocation bumps the
+//! block's *epoch*; the prefix registry stores the epoch it observed, so
+//! a stale entry (block freed and reused) can never be adopted.
+
+use std::cell::UnsafeCell;
+use std::sync::Mutex;
 
 use super::block::{Block, BlockId};
 use super::layout::RecordLayout;
 
+struct PoolMeta {
+    refs: Vec<u32>,
+    /// bumped on every (re)allocation — validates prefix-registry entries
+    epochs: Vec<u64>,
+    free: Vec<BlockId>,
+}
+
 pub struct BlockPool {
     pub layout: RecordLayout,
     pub block_tokens: usize,
-    blocks: Vec<Block>,
-    refs: Vec<u32>,
-    free: Vec<BlockId>,
+    blocks: Vec<UnsafeCell<Block>>,
+    meta: Mutex<PoolMeta>,
 }
+
+// SAFETY: all mutation of shared state goes through the meta Mutex except
+// block payloads, whose aliasing discipline is documented on `block_mut`
+// (exclusive tail-owner writes; shared blocks are frozen).
+unsafe impl Send for BlockPool {}
+unsafe impl Sync for BlockPool {}
 
 impl BlockPool {
     pub fn new(layout: RecordLayout, block_tokens: usize, capacity_blocks: usize) -> Self {
@@ -22,52 +57,117 @@ impl BlockPool {
             block_tokens.is_multiple_of(8),
             "block_tokens % 8 == 0 (block scorer 8-token unroll)"
         );
+        assert!(capacity_blocks > 0, "empty pool");
         let blocks = (0..capacity_blocks)
-            .map(|_| Block::new(&layout, block_tokens))
+            .map(|_| UnsafeCell::new(Block::new(&layout, block_tokens)))
             .collect();
         Self {
             layout,
             block_tokens,
             blocks,
-            refs: vec![0; capacity_blocks],
-            free: (0..capacity_blocks as BlockId).rev().collect(),
+            meta: Mutex::new(PoolMeta {
+                refs: vec![0; capacity_blocks],
+                epochs: vec![0; capacity_blocks],
+                free: (0..capacity_blocks as BlockId).rev().collect(),
+            }),
         }
     }
 
-    pub fn alloc(&mut self) -> Option<BlockId> {
-        let id = self.free.pop()?;
-        debug_assert_eq!(self.refs[id as usize], 0);
-        self.refs[id as usize] = 1;
-        self.blocks[id as usize].reset();
+    /// Allocate a fresh (reset) block with refcount 1, or `None` when the
+    /// pool is exhausted — the caller's signal to backpressure or preempt.
+    pub fn alloc(&self) -> Option<BlockId> {
+        let mut m = self.meta.lock().unwrap();
+        let id = m.free.pop()?;
+        debug_assert_eq!(m.refs[id as usize], 0);
+        m.refs[id as usize] = 1;
+        m.epochs[id as usize] += 1;
+        // SAFETY: the block was on the free list (refcount 0), so no
+        // borrow of it exists; we hold the meta lock, so no concurrent
+        // alloc can hand it out while we reset it.
+        unsafe { (*self.blocks[id as usize].get()).reset() };
         Some(id)
     }
 
-    pub fn retain(&mut self, id: BlockId) {
-        assert!(self.refs[id as usize] > 0, "retain of free block {id}");
-        self.refs[id as usize] += 1;
+    /// Take another reference on a live block (prefix sharing, forking).
+    pub fn retain(&self, id: BlockId) {
+        let mut m = self.meta.lock().unwrap();
+        assert!(m.refs[id as usize] > 0, "retain of free block {id}");
+        m.refs[id as usize] += 1;
     }
 
-    pub fn release(&mut self, id: BlockId) {
-        let r = &mut self.refs[id as usize];
-        assert!(*r > 0, "double free of block {id}");
-        *r -= 1;
-        if *r == 0 {
-            self.free.push(id);
+    /// `retain`, but only if the block is still the allocation the caller
+    /// observed (live AND at `epoch`). The prefix registry's adoption
+    /// primitive: a block that was freed — even if since reallocated with
+    /// different content — fails the epoch check and cannot be adopted.
+    pub fn try_retain_at_epoch(&self, id: BlockId, epoch: u64) -> bool {
+        let mut m = self.meta.lock().unwrap();
+        if m.refs[id as usize] > 0 && m.epochs[id as usize] == epoch {
+            m.refs[id as usize] += 1;
+            true
+        } else {
+            false
         }
     }
 
-    pub fn get(&self, id: BlockId) -> &Block {
-        debug_assert!(self.refs[id as usize] > 0, "use of free block {id}");
-        &self.blocks[id as usize]
+    /// Current epoch of a live block (captured by the prefix registry at
+    /// registration time).
+    pub fn epoch_of(&self, id: BlockId) -> u64 {
+        let m = self.meta.lock().unwrap();
+        debug_assert!(m.refs[id as usize] > 0, "epoch of free block {id}");
+        m.epochs[id as usize]
     }
 
-    pub fn get_mut(&mut self, id: BlockId) -> &mut Block {
-        debug_assert!(self.refs[id as usize] > 0, "use of free block {id}");
-        &mut self.blocks[id as usize]
+    /// Drop one reference; the block returns to the free list at zero.
+    pub fn release(&self, id: BlockId) {
+        let mut m = self.meta.lock().unwrap();
+        let r = &mut m.refs[id as usize];
+        assert!(*r > 0, "double free of block {id}");
+        *r -= 1;
+        if *r == 0 {
+            m.free.push(id);
+        }
+    }
+
+    /// Shared read access to a live block.
+    ///
+    /// Soundness relies on the pool-wide aliasing discipline: the only
+    /// writer of a block is the head cache holding it as its tail
+    /// (see [`Self::block_mut`]), and a task only reads blocks its own
+    /// sequence holds (its tail included — same thread) or shared prefix
+    /// blocks, which are full and frozen.
+    pub fn get(&self, id: BlockId) -> &Block {
+        #[cfg(debug_assertions)]
+        {
+            let m = self.meta.lock().unwrap();
+            debug_assert!(m.refs[id as usize] > 0, "use of free block {id}");
+        }
+        // SAFETY: see doc comment — no `&mut` to this block is live on
+        // another thread while a holder reads it.
+        unsafe { &*self.blocks[id as usize].get() }
+    }
+
+    /// Exclusive write access to a block **the caller exclusively owns**.
+    ///
+    /// # Safety
+    ///
+    /// The caller must be the only holder of `id` (refcount 1, the id in
+    /// exactly one block table) and must not let the returned borrow
+    /// overlap any other `get`/`block_mut` of the same id. The append
+    /// path upholds this: only the partially-filled tail block is ever
+    /// written, and tail blocks are never registered for sharing.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn block_mut(&self, id: BlockId) -> &mut Block {
+        #[cfg(debug_assertions)]
+        {
+            let m = self.meta.lock().unwrap();
+            debug_assert!(m.refs[id as usize] > 0, "write to free block {id}");
+            debug_assert_eq!(m.refs[id as usize], 1, "write to shared block {id}");
+        }
+        &mut *self.blocks[id as usize].get()
     }
 
     pub fn free_blocks(&self) -> usize {
-        self.free.len()
+        self.meta.lock().unwrap().free.len()
     }
 
     pub fn capacity_blocks(&self) -> usize {
@@ -78,19 +178,23 @@ impl BlockPool {
         self.capacity_blocks() - self.free_blocks()
     }
 
-    /// Bytes held by allocated blocks (memory-footprint metric).
+    /// Bytes held by allocated blocks — each block counted **once** no
+    /// matter how many sequences share it (the Fig. 5 engine metric).
     pub fn used_bytes(&self) -> usize {
-        self.refs
+        let m = self.meta.lock().unwrap();
+        m.refs
             .iter()
             .enumerate()
             .filter(|(_, &r)| r > 0)
-            .map(|(i, _)| self.blocks[i].bytes())
+            // SAFETY: shared read of a live block; `bytes()` touches only
+            // the (fixed) buffer lengths, never the payload.
+            .map(|(i, _)| unsafe { &*self.blocks[i].get() }.bytes())
             .sum()
     }
 
     /// Can `tokens` more tokens be stored (worst case, fresh blocks)?
     pub fn can_fit(&self, tokens: usize) -> bool {
-        self.free.len() * self.block_tokens >= tokens
+        self.free_blocks() * self.block_tokens >= tokens
     }
 }
 
@@ -108,7 +212,7 @@ mod tests {
 
     #[test]
     fn alloc_release_cycle() {
-        let mut p = pool(4);
+        let p = pool(4);
         let a = p.alloc().unwrap();
         let b = p.alloc().unwrap();
         assert_ne!(a, b);
@@ -124,7 +228,7 @@ mod tests {
 
     #[test]
     fn exhaustion_returns_none() {
-        let mut p = pool(2);
+        let p = pool(2);
         assert!(p.alloc().is_some());
         assert!(p.alloc().is_some());
         assert!(p.alloc().is_none());
@@ -133,7 +237,7 @@ mod tests {
 
     #[test]
     fn refcounts_delay_free() {
-        let mut p = pool(1);
+        let p = pool(1);
         let a = p.alloc().unwrap();
         p.retain(a);
         p.release(a);
@@ -145,10 +249,53 @@ mod tests {
     #[test]
     #[should_panic(expected = "double free")]
     fn double_free_panics() {
-        let mut p = pool(1);
+        let p = pool(1);
         let a = p.alloc().unwrap();
         p.release(a);
         p.release(a);
+    }
+
+    #[test]
+    fn epochs_invalidate_reallocated_blocks() {
+        let p = pool(1);
+        let a = p.alloc().unwrap();
+        let ep = p.epoch_of(a);
+        assert!(p.try_retain_at_epoch(a, ep), "live block at its epoch");
+        p.release(a);
+        p.release(a);
+        assert!(!p.try_retain_at_epoch(a, ep), "freed block must not adopt");
+        let b = p.alloc().unwrap();
+        assert_eq!(a, b, "same slot reused");
+        assert!(
+            !p.try_retain_at_epoch(b, ep),
+            "reallocated block has a new epoch"
+        );
+        assert!(p.try_retain_at_epoch(b, p.epoch_of(b)));
+    }
+
+    #[test]
+    fn shared_pool_allocs_across_threads() {
+        // the engine fan-out shape: worker threads alloc/release
+        // concurrently; conservation must hold afterwards
+        let p = std::sync::Arc::new(pool(64));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let p = std::sync::Arc::clone(&p);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    if let Some(id) = p.alloc() {
+                        p.retain(id);
+                        p.release(id);
+                        p.release(id);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(p.free_blocks(), 64);
+        assert_eq!(p.used_blocks(), 0);
     }
 
     #[test]
@@ -164,7 +311,7 @@ mod tests {
             },
             |(seed, ops)| {
                 let mut r = Rng::new(*seed);
-                let mut p = pool(8);
+                let p = pool(8);
                 let mut live: Vec<BlockId> = vec![];
                 let mut counts: std::collections::HashMap<BlockId, u32> =
                     Default::default();

@@ -6,8 +6,17 @@
 //! (paper: "the per-channel scaling factors α are also reused during the
 //! decoding stage"); score all cached tokens via LUT-GEMV over packed
 //! codes; gather + dequantize the top-k for attention.
+//!
+//! Since the memory-manager inversion the cache is a **view over borrowed
+//! pool blocks**: it owns only its block table (plus frozen stats and
+//! scratch arenas) and every operation takes the engine-wide shared
+//! [`BlockPool`] by `&` reference. Prefill goes through the
+//! [`KvManager`] so full blocks are content-addressed — an identical
+//! block already registered by another sequence is `retain`ed instead of
+//! re-encoded (prefix reuse; DESIGN.md §Memory manager).
 
 use super::block::BlockId;
+use super::manager::{fnv128_f32s, fnv128_seed, fnv128_u64, KvManager};
 use super::pool::BlockPool;
 use crate::quant::int2::{QuantParams, TokenQuant};
 use crate::quant::pack;
@@ -107,15 +116,37 @@ impl HeadCache {
         &self.stats.frozen().expect("prefill not ingested").mu
     }
 
+    /// Content signature of everything that determines this head's encoded
+    /// record bytes: the frozen (mu, alpha) plus the quantization geometry.
+    /// Two heads with equal signatures encode equal inputs to equal bytes,
+    /// which is what makes prefix-block adoption bit-exact.
+    fn params_sig(&self, pool: &BlockPool) -> u128 {
+        let frozen = self.stats.frozen().expect("prefill first");
+        let mut h = fnv128_seed();
+        h = fnv128_u64(h, self.dim as u64);
+        h = fnv128_u64(h, pool.block_tokens as u64);
+        h = fnv128_u64(h, self.cfg.quant_bits as u64);
+        h = fnv128_u64(h, self.cfg.quant_group as u64);
+        h = fnv128_u64(h, self.cfg.vq_group as u64);
+        h = fnv128_f32s(h, &frozen.mu);
+        h = fnv128_f32s(h, &frozen.alpha);
+        h
+    }
+
     /// Ingest the whole prefill for this head: keys/vals are (tokens × dim)
     /// row-major f32 (the PJRT prefill outputs). Returns tokens stored.
     ///
     /// One pass over the data for stats (cheap vector ops), then one
     /// encode pass — matching the paper's prefill cost model (quantization
-    /// + codebook are ~5% of TT2T, measured in table3).
+    /// + codebook are ~5% of TT2T, measured in table3). Full blocks are
+    /// content-addressed through the manager's prefix registry: a block
+    /// whose (params, raw K/V) hash is already registered is adopted
+    /// (refcount bump, no encode, no second copy); otherwise it is encoded
+    /// and registered for later sequences. The ragged tail block is always
+    /// private — decode appends mutate it.
     pub fn ingest_prefill(
         &mut self,
-        pool: &mut BlockPool,
+        mgr: &KvManager,
         keys: &[f32],
         vals: &[f32],
     ) -> Result<usize, CacheFull> {
@@ -163,8 +194,39 @@ impl HeadCache {
             self.cfg.quant_bits,
         );
 
-        for t in 0..tokens {
-            self.push_record(pool, &centered[t * self.dim..(t + 1) * self.dim], &kq, &vq, t)?;
+        let pool = mgr.pool();
+        debug_assert_eq!(
+            pool.layout,
+            crate::kvcache::layout::RecordLayout::new(self.dim, &self.cfg),
+            "shared pool layout must match this head's record layout"
+        );
+        let bt = pool.block_tokens;
+        let dim = self.dim;
+        let sig = self.params_sig(pool);
+        let mut t = 0usize;
+        while t < tokens {
+            if tokens - t >= bt {
+                debug_assert!(self.len.is_multiple_of(bt));
+                let mut key = sig;
+                key = fnv128_f32s(key, &keys[t * dim..(t + bt) * dim]);
+                key = fnv128_f32s(key, &vals[t * dim..(t + bt) * dim]);
+                if let Some(id) = mgr.adopt(key) {
+                    // identical block already in the pool: share it
+                    debug_assert_eq!(pool.get(id).used, bt);
+                    self.blocks.push(id);
+                    self.len += bt;
+                } else {
+                    for i in t..t + bt {
+                        self.push_record(pool, &centered[i * dim..(i + 1) * dim], &kq, &vq, i)?;
+                    }
+                    // full now — frozen forever, safe to share
+                    mgr.register(key, *self.blocks.last().unwrap());
+                }
+                t += bt;
+            } else {
+                self.push_record(pool, &centered[t * dim..(t + 1) * dim], &kq, &vq, t)?;
+                t += 1;
+            }
         }
         Ok(tokens)
     }
@@ -176,7 +238,7 @@ impl HeadCache {
     /// `baselines::ours::tests::decode_step_is_allocation_free`).
     pub fn append(
         &mut self,
-        pool: &mut BlockPool,
+        pool: &BlockPool,
         k_row: &[f32],
         v_row: &[f32],
     ) -> Result<(), CacheFull> {
@@ -222,7 +284,7 @@ impl HeadCache {
     /// Write token `t` of the (already quantized) batch into the cache.
     fn push_record(
         &mut self,
-        pool: &mut BlockPool,
+        pool: &BlockPool,
         centered_key: &[f32],
         kq: &TokenQuant,
         vq: &TokenQuant,
@@ -254,7 +316,12 @@ impl HeadCache {
         pack::pack_bits_into(&kq.values[t * dim..(t + 1) * dim], bits, &mut self.enc_packed_k);
         pack::pack_bits_into(&vq.values[t * dim..(t + 1) * dim], bits, &mut self.enc_packed_v);
 
-        let block = pool.get_mut(block_id);
+        // SAFETY: the written block is always this cache's partially
+        // filled tail — freshly allocated above or mid-fill, refcount 1.
+        // Blocks only become shareable (prefix-registered) once full, and
+        // full blocks are never written again, so no other borrow of this
+        // block can exist.
+        let block = unsafe { pool.block_mut(block_id) };
         let cb = layout.codes_bytes;
         block.codes[slot * cb..(slot + 1) * cb].copy_from_slice(&self.enc_packed_codes);
         let pb = layout.payload_bytes;
@@ -624,12 +691,20 @@ impl HeadCache {
         }
     }
 
-    /// Release all blocks back to the pool (sequence eviction).
-    pub fn free(&mut self, pool: &mut BlockPool) {
+    /// Release all block references back to the shared pool (sequence
+    /// completion, preemption). Shared prefix blocks survive as long as
+    /// any other holder remains; exclusive blocks return to the free list.
+    pub fn free(&mut self, pool: &BlockPool) {
         for id in self.blocks.drain(..) {
             pool.release(id);
         }
         self.len = 0;
+    }
+
+    /// Pool blocks the **next** append will allocate (1 exactly at block
+    /// boundaries, else 0) — the scheduler's exact preemption input.
+    pub fn blocks_for_next_append(&self, pool: &BlockPool) -> usize {
+        usize::from(self.len.is_multiple_of(pool.block_tokens))
     }
 
     /// Compressed bytes attributable to this head (token payload only;
@@ -677,16 +752,10 @@ static SIGN_TABLE: [[f32; 4]; 16] = {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::layout::RecordLayout;
-    use crate::selfindex::lut::Lut;
     use crate::substrate::rng::Rng;
 
-    fn mk_pool(cap: usize) -> BlockPool {
-        BlockPool::new(
-            RecordLayout::new(64, &SelfIndexConfig::default()),
-            16,
-            cap,
-        )
+    fn mk_mgr(cap: usize) -> KvManager {
+        KvManager::for_head(64, &SelfIndexConfig::default(), 16, cap)
     }
 
     fn rand_rows(r: &mut Rng, tokens: usize, dim: usize) -> Vec<f32> {
@@ -696,18 +765,19 @@ mod tests {
     #[test]
     fn prefill_then_scores_and_dequant() {
         let mut r = Rng::new(1);
-        let mut pool = mk_pool(64);
+        let mgr = mk_mgr(64);
+        let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
         let keys = rand_rows(&mut r, 100, 64);
         let vals = rand_rows(&mut r, 100, 64);
-        assert_eq!(hc.ingest_prefill(&mut pool, &keys, &vals).unwrap(), 100);
+        assert_eq!(hc.ingest_prefill(&mgr, &keys, &vals).unwrap(), 100);
         assert_eq!(hc.len(), 100);
 
         let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
         let lut = Lut::build(&q, hc.codebook());
         let blut = ByteLut::from_lut(&lut);
         let mut scores = Vec::new();
-        hc.scores(&pool, &blut, &mut scores);
+        hc.scores(pool, &blut, &mut scores);
         assert_eq!(scores.len(), 100);
 
         // dequantized keys reconstruct within the quant error bound
@@ -715,7 +785,7 @@ mod tests {
         let mut v_out = vec![0.0; 64];
         let mu = hc.mu().to_vec();
         for t in [0usize, 31, 99] {
-            hc.dequant_token(&pool, t, &mut k_out, &mut v_out);
+            hc.dequant_token(pool, t, &mut k_out, &mut v_out);
             for j in 0..64 {
                 let truth = keys[t * 64 + j] - mu[j];
                 assert!(
@@ -735,41 +805,43 @@ mod tests {
     #[test]
     fn decode_append_extends_scores() {
         let mut r = Rng::new(2);
-        let mut pool = mk_pool(64);
+        let mgr = mk_mgr(64);
+        let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 40, 64), &rand_rows(&mut r, 40, 64))
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 40, 64), &rand_rows(&mut r, 40, 64))
             .unwrap();
         for _ in 0..10 {
             let k: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
             let v: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
-            hc.append(&mut pool, &k, &v).unwrap();
+            hc.append(pool, &k, &v).unwrap();
         }
         assert_eq!(hc.len(), 50);
         let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
         let blut = ByteLut::from_lut(&Lut::build(&q, hc.codebook()));
         let mut scores = Vec::new();
-        hc.scores(&pool, &blut, &mut scores);
+        hc.scores(pool, &blut, &mut scores);
         assert_eq!(scores.len(), 50);
     }
 
     #[test]
     fn stream_scores_matches_flat_scores() {
         let mut r = Rng::new(9);
-        let mut pool = mk_pool(64);
+        let mgr = mk_mgr(64);
+        let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
         // 100 tokens over 16-token blocks: full blocks + a ragged tail
-        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64))
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64))
             .unwrap();
         let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
         let blut = ByteLut::from_lut(&Lut::build(&q, hc.codebook()));
         let mut flat = Vec::new();
-        hc.scores(&pool, &blut, &mut flat);
+        hc.scores(pool, &blut, &mut flat);
 
         for end in [100usize, 90, 16, 1, 0] {
             let mut streamed = vec![f32::NAN; end];
             let mut scratch = Vec::new();
             let mut blocks_seen = 0;
-            hc.stream_scores(&pool, &blut, end, &mut scratch, |base, s, bmax| {
+            hc.stream_scores(pool, &blut, end, &mut scratch, |base, s, bmax| {
                 let mut emax = f32::NEG_INFINITY;
                 for (o, &v) in s.iter().enumerate() {
                     streamed[base + o] = v;
@@ -788,12 +860,13 @@ mod tests {
     #[test]
     fn gather_quant_shapes() {
         let mut r = Rng::new(3);
-        let mut pool = mk_pool(64);
+        let mgr = mk_mgr(64);
+        let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 50, 64), &rand_rows(&mut r, 50, 64))
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 50, 64), &rand_rows(&mut r, 50, 64))
             .unwrap();
         let mut gq = GatheredQuant::default();
-        hc.gather_quant(&pool, &[0, 17, 49, 3], &mut gq);
+        hc.gather_quant(pool, &[0, 17, 49, 3], &mut gq);
         assert_eq!(gq.codes_i32.len(), 4 * 16);
         assert_eq!(gq.k_q.len(), 4 * 64);
         assert_eq!(gq.k_qs.len(), 4 * 2);
@@ -804,22 +877,23 @@ mod tests {
     #[test]
     fn pool_exhaustion_reported() {
         let mut r = Rng::new(4);
-        let mut pool = mk_pool(2); // 32 tokens max
+        let mgr = mk_mgr(2); // 32 tokens max
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
         let res =
-            hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64));
+            hc.ingest_prefill(&mgr, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64));
         assert!(res.is_err());
     }
 
     #[test]
     fn free_returns_blocks() {
         let mut r = Rng::new(5);
-        let mut pool = mk_pool(8);
+        let mgr = mk_mgr(8);
+        let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 64, 64), &rand_rows(&mut r, 64, 64))
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 64, 64), &rand_rows(&mut r, 64, 64))
             .unwrap();
         assert_eq!(pool.used_blocks(), 4);
-        hc.free(&mut pool);
+        hc.free(pool);
         assert_eq!(pool.used_blocks(), 0);
         assert_eq!(hc.len(), 0);
     }
@@ -827,12 +901,14 @@ mod tests {
     #[test]
     fn memory_accounting_matches_layout() {
         let mut r = Rng::new(6);
-        let mut pool = mk_pool(16);
+        let mgr = mk_mgr(16);
+        let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mut pool, &rand_rows(&mut r, 64, 64), &rand_rows(&mut r, 64, 64))
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 64, 64), &rand_rows(&mut r, 64, 64))
             .unwrap();
-        let expect = 4 * 16 * RecordLayout::new(64, &hc.cfg).bytes_per_token();
-        assert_eq!(hc.payload_bytes(&pool), expect);
+        let expect =
+            4 * 16 * crate::kvcache::layout::RecordLayout::new(64, &hc.cfg).bytes_per_token();
+        assert_eq!(hc.payload_bytes(pool), expect);
         assert!(hc.fixed_overhead_bytes() > 0);
     }
 }

@@ -16,11 +16,14 @@
 //! * where appends are contractually equivalent to a longer prefill
 //!   (full / quest / kivi), prefill(T)+append(m) equals prefill(T+m).
 
+use std::sync::Arc;
+
 use super::plan::{DecodePlan, DecodeWorkQueue, HeadTask};
 use super::registry::{self, BuildCtx};
 use super::SequenceCache;
 use crate::baselines::AttentionMethod;
 use crate::eval::cosine;
+use crate::kvcache::manager::KvManager;
 use crate::selfindex::SelfIndexConfig;
 use crate::substrate::exec::ThreadPool;
 use crate::substrate::rng::Rng;
@@ -103,9 +106,18 @@ pub fn run(case: &Conformance) {
     }
 }
 
+/// One shared manager per built context — the suite exercises the
+/// engine's ownership shape (seq cache and hand-driven leaves borrowing
+/// the same pool; identical per-head prefills adopt each other's prefix
+/// blocks, which the bit-exactness checks implicitly verify).
+fn mgr() -> Arc<KvManager> {
+    Arc::new(KvManager::for_head(DIM, &SelfIndexConfig::default(), 64, 1024))
+}
+
 fn ctx<'a>(
     si: &'a SelfIndexConfig,
     overlay: &'a [(String, crate::substrate::json::Json)],
+    mgr: &'a Arc<KvManager>,
 ) -> BuildCtx<'a> {
     BuildCtx {
         dim: DIM,
@@ -113,7 +125,7 @@ fn ctx<'a>(
         kv_heads: KVH,
         gqa_ratio: R,
         budget_hint: T,
-        pool_tokens: 2048,
+        mgr,
         selfindex: si,
         overlay,
     }
@@ -219,7 +231,8 @@ fn build_pair(
     let si = SelfIndexConfig::default();
     let overlay = vec![];
     let entry = registry::lookup(name).expect("registered");
-    let c = ctx(&si, &overlay);
+    let m = mgr();
+    let c = ctx(&si, &overlay, &m);
     let mut seq = entry.build_seq(&c);
     assert_eq!(seq.method_name(), name);
     assert_eq!(seq.n_layers(), LAYERS);
@@ -388,7 +401,8 @@ fn append_equals_longer_prefill(case: &Conformance) {
     let si = SelfIndexConfig::default();
     let overlay = vec![];
     let entry = registry::lookup(case.method).expect("registered");
-    let c = ctx(&si, &overlay);
+    let m = mgr();
+    let c = ctx(&si, &overlay, &m);
     let m = 24;
     let (keys, vals, query) = head_state(42, T + m);
 

@@ -62,14 +62,40 @@ pub trait SequenceCache: Send {
     /// Context-size-dependent cache bytes across every (layer, kv head).
     fn memory_bytes(&self) -> usize;
 
+    /// Shared-pool blocks the next decode step will allocate across every
+    /// (layer, kv head) — the exact-occupancy input the scheduler checks
+    /// before fanning the step out (preempting when it cannot fit). 0 for
+    /// methods that don't store into the engine pool.
+    fn step_blocks(&self) -> usize {
+        0
+    }
+
+    /// Bytes of [`Self::memory_bytes`] that live in the engine's shared
+    /// block pool, counted per holder; the engine replaces the sum of
+    /// these with `pool.used_bytes()` so prefix-shared blocks count once.
+    fn pool_payload_bytes(&self) -> usize {
+        0
+    }
+
     /// Run one decode step's layer inline (the serial entry point used by
     /// tests and single-threaded callers; the engine fans the same tasks
     /// out over its worker pool instead).
+    ///
+    /// Panics on pool exhaustion: serial callers have no preemption path,
+    /// so a failed append must surface loudly here — silently dropping a
+    /// task's `failed` flag would desync head lengths across the sequence.
+    /// Callers that preempt (the engine) inspect the flags themselves.
     fn attend_step(&mut self, plan: &DecodePlan<'_>, out: &mut [f32]) {
         let mut tasks = Vec::new();
         self.push_tasks(plan, out, &mut tasks);
         for t in &mut tasks {
             t.run();
+            assert!(
+                !t.failed,
+                "kv pool exhausted in attend_step (layer {}) — check step_blocks() \
+                 against free_blocks() and preempt before stepping",
+                plan.layer
+            );
         }
     }
 }

@@ -117,11 +117,20 @@ impl<M: AttentionMethod> SequenceCache for PerHeadSeqCache<M> {
                 dim,
                 budget: plan.budget,
                 out: o,
+                failed: false,
             });
         }
     }
 
     fn memory_bytes(&self) -> usize {
         self.heads.iter().map(|m| m.memory_bytes()).sum()
+    }
+
+    fn step_blocks(&self) -> usize {
+        self.heads.iter().map(|m| m.blocks_for_append()).sum()
+    }
+
+    fn pool_payload_bytes(&self) -> usize {
+        self.heads.iter().map(|m| m.pool_payload_bytes()).sum()
     }
 }

@@ -42,11 +42,21 @@ pub struct HeadTask<'a> {
     pub budget: usize,
     /// this head's output chunk: (gqa_ratio × dim)
     pub out: &'a mut [f32],
+    /// set by [`Self::run`] when the append hit pool exhaustion — the
+    /// engine maps failed tasks back to their sequence and preempts it
+    /// (the belt-and-braces path; exact pre-step accounting normally
+    /// preempts before any task can fail)
+    pub failed: bool,
 }
 
 impl HeadTask<'_> {
     pub fn run(&mut self) {
-        self.method.append(self.k_row, self.v_row);
+        if self.method.try_append(self.k_row, self.v_row).is_err() {
+            // leave `out` zeroed: the sequence will be preempted and
+            // recomputed, so this step's output is discarded anyway
+            self.failed = true;
+            return;
+        }
         self.method
             .attend_group(self.queries, self.dim, self.budget, self.out);
     }
@@ -93,6 +103,13 @@ impl DecodeWorkQueue {
     /// participates) and bank the task list's capacity for the next step.
     pub fn dispatch(&mut self, workers: &ThreadPool, mut tasks: Vec<HeadTask<'_>>) {
         workers.for_each_task(&mut tasks, |t| t.run());
+        self.bank(tasks);
+    }
+
+    /// Bank a task list's capacity without running it — for callers (the
+    /// engine) that run the tasks themselves and inspect per-task state
+    /// (the `failed` flags) before recycling the arena.
+    pub fn bank(&mut self, mut tasks: Vec<HeadTask<'_>>) {
         tasks.clear();
         self.arena = recycle(tasks);
     }
@@ -129,6 +146,7 @@ mod tests {
                     dim,
                     budget: usize::MAX,
                     out: o,
+                    failed: false,
                 });
             }
             let cap = tasks.capacity();

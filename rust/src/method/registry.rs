@@ -5,6 +5,7 @@
 //! a CLI typo tells the operator what exists instead of failing silently.
 
 use std::fmt;
+use std::sync::Arc;
 
 use super::per_head::PerHeadSeqCache;
 use super::SequenceCache;
@@ -12,6 +13,7 @@ use crate::baselines::{
     AttentionMethod, DoubleSparse, FullCache, KMeansCache, KiviCache, QuestCache, SelfIndexing,
     SnapKv,
 };
+use crate::kvcache::manager::KvManager;
 use crate::selfindex::SelfIndexConfig;
 use crate::substrate::json::Json;
 
@@ -64,9 +66,10 @@ pub struct BuildCtx<'a> {
     pub gqa_ratio: usize,
     /// engine budget hint at prefill time (e.g. SnapKV's static keep set)
     pub budget_hint: usize,
-    /// kv pool capacity in tokens per (layer, kv head) — sizes paged
-    /// caches up front so decode never reallocates
-    pub pool_tokens: usize,
+    /// the engine-wide memory manager: ONE shared block pool (plus the
+    /// prefix-block registry) serves every sequence, layer, and kv head —
+    /// pool-backed methods clone this `Arc` into each leaf
+    pub mgr: &'a Arc<KvManager>,
     pub selfindex: &'a SelfIndexConfig,
     /// validated `(knob, value)` overlay for the selected method
     pub overlay: &'a [(String, Json)],
@@ -93,6 +96,31 @@ impl BuildCtx<'_> {
     }
 }
 
+/// Apply the selfindex method's overlay knobs to a base config — shared
+/// by `build_head` and by the engine, which must size the shared pool's
+/// record layout from the *resolved* config (a `quant_bits` overlay
+/// changes the payload bytes per token).
+pub fn selfindex_overlayed(
+    base: &SelfIndexConfig,
+    overlay: &[(String, Json)],
+) -> SelfIndexConfig {
+    let get = |name: &str| overlay.iter().find(|(k, _)| k == name).map(|(_, v)| v);
+    let mut si = base.clone();
+    if let Some(b) = get("quant_bits").and_then(Json::as_usize) {
+        si.quant_bits = b as u32;
+    }
+    if let Some(s) = get("sink_tokens").and_then(Json::as_usize) {
+        si.sink_tokens = s;
+    }
+    if let Some(u) = get("use_sinks").and_then(Json::as_bool) {
+        si.use_sinks = u;
+    }
+    if let Some(k) = get("sparse_k").and_then(Json::as_usize) {
+        si.sparse_k = k;
+    }
+    si
+}
+
 /// A registered cache method: identity + knobs + builders. `build_head`
 /// is the per-head leaf (the mechanical migration path for all seven
 /// baselines, wrapped by [`PerHeadSeqCache`]); methods with cross-head
@@ -117,6 +145,15 @@ pub trait CacheMethod: Sync {
         Box::new(PerHeadSeqCache::build(self.name(), ctx, || {
             self.build_head(ctx)
         }))
+    }
+
+    /// Shared-pool blocks one (layer, kv-head) leaf needs to ingest a
+    /// `prompt_len`-token prompt — the engine multiplies by
+    /// `n_layers × kv_heads` for its exact-occupancy admission check.
+    /// 0 for methods that don't store into the engine pool.
+    fn head_blocks_for_prompt(&self, prompt_len: usize, block_tokens: usize) -> usize {
+        let _ = (prompt_len, block_tokens);
+        0
     }
 }
 
@@ -196,16 +233,12 @@ impl CacheMethod for SelfIndexMethod {
     }
 
     fn build_head(&self, ctx: &BuildCtx) -> Box<dyn AttentionMethod> {
-        let mut si = ctx.selfindex.clone();
-        si.quant_bits = ctx.knob_usize("quant_bits", si.quant_bits as usize) as u32;
-        si.sink_tokens = ctx.knob_usize("sink_tokens", si.sink_tokens);
-        si.use_sinks = ctx.knob_bool("use_sinks", si.use_sinks);
-        si.sparse_k = ctx.knob_usize("sparse_k", si.sparse_k);
-        Box::new(SelfIndexing::with_capacity(
-            ctx.dim,
-            si,
-            ctx.pool_tokens / 64 + 2,
-        ))
+        let si = selfindex_overlayed(ctx.selfindex, ctx.overlay);
+        Box::new(SelfIndexing::with_manager(ctx.dim, si, Arc::clone(ctx.mgr)))
+    }
+
+    fn head_blocks_for_prompt(&self, prompt_len: usize, block_tokens: usize) -> usize {
+        prompt_len.div_ceil(block_tokens)
     }
 }
 
@@ -383,14 +416,25 @@ pub fn validate_overlay(method: &str, overlay: &[(String, Json)]) -> Result<(), 
 mod tests {
     use super::*;
 
-    fn ctx<'a>(si: &'a SelfIndexConfig, overlay: &'a [(String, Json)]) -> BuildCtx<'a> {
+    fn mgr_for(si: &SelfIndexConfig, overlay: &[(String, Json)]) -> Arc<KvManager> {
+        // size the layout from the *resolved* config, exactly as the
+        // engine does — a quant_bits overlay changes record widths
+        let eff = selfindex_overlayed(si, overlay);
+        Arc::new(KvManager::for_head(64, &eff, 64, 64))
+    }
+
+    fn ctx<'a>(
+        si: &'a SelfIndexConfig,
+        overlay: &'a [(String, Json)],
+        mgr: &'a Arc<KvManager>,
+    ) -> BuildCtx<'a> {
         BuildCtx {
             dim: 64,
             n_layers: 2,
             kv_heads: 2,
             gqa_ratio: 2,
             budget_hint: 128,
-            pool_tokens: 4096,
+            mgr,
             selfindex: si,
             overlay,
         }
@@ -419,8 +463,9 @@ mod tests {
     fn every_entry_builds_a_seq_cache() {
         let si = SelfIndexConfig::default();
         let overlay = vec![];
+        let mgr = mgr_for(&si, &overlay);
         for m in entries() {
-            let cache = m.build_seq(&ctx(&si, &overlay));
+            let cache = m.build_seq(&ctx(&si, &overlay, &mgr));
             assert_eq!(cache.method_name(), m.name(), "name mismatch");
             assert_eq!(cache.n_layers(), 2);
             assert_eq!(cache.kv_heads(), 2);
@@ -431,10 +476,12 @@ mod tests {
     fn overlay_knobs_flow_into_builds() {
         let si = SelfIndexConfig::default();
         let overlay = vec![("quant_bits".to_string(), Json::Num(8.0))];
-        let head = lookup("ours").unwrap().build_head(&ctx(&si, &overlay));
+        let mgr = mgr_for(&si, &overlay);
+        let head = lookup("ours").unwrap().build_head(&ctx(&si, &overlay, &mgr));
         assert_eq!(head.name(), "selfindex");
         let overlay = vec![("keep".to_string(), Json::Num(7.0))];
-        let mut head = lookup("snapkv").unwrap().build_head(&ctx(&si, &overlay));
+        let mgr = mgr_for(&si, &[]);
+        let mut head = lookup("snapkv").unwrap().build_head(&ctx(&si, &overlay, &mgr));
         let keys = vec![0.5f32; 32 * 64];
         head.prefill(&keys, &keys.clone(), &[], 1);
         assert_eq!(head.memory_bytes(), 7 * 64 * 2 * 4, "keep knob applied");

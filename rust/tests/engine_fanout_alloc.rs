@@ -13,6 +13,9 @@
 //! Kept as the only test in this binary: the global counter sees every
 //! thread, so a concurrently running unrelated test would pollute it.
 
+use std::sync::Arc;
+
+use selfindex_kv::kvcache::manager::KvManager;
 use selfindex_kv::method::registry::{lookup, BuildCtx};
 use selfindex_kv::method::{DecodePlan, DecodeWorkQueue, SequenceCache};
 use selfindex_kv::selfindex::SelfIndexConfig;
@@ -35,13 +38,20 @@ const BUDGET: usize = 96;
 fn engine_fanout_is_allocation_free_at_steady_state() {
     let si = SelfIndexConfig::default();
     let overlay = vec![];
+    // ONE shared pool for all B × LAYERS × KVH heads — engine-shaped
+    let mgr = Arc::new(KvManager::for_head(
+        DIM,
+        &si,
+        64,
+        B * LAYERS * KVH * (2 * T) / 64,
+    ));
     let ctx = BuildCtx {
         dim: DIM,
         n_layers: LAYERS,
         kv_heads: KVH,
         gqa_ratio: R,
         budget_hint: T,
-        pool_tokens: 2 * T,
+        mgr: &mgr,
         selfindex: &si,
         overlay: &overlay,
     };

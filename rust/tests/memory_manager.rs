@@ -1,0 +1,339 @@
+//! Memory-manager integration tests: the engine-shaped serving loop over
+//! ONE shared block pool — admission on exact free-block accounting,
+//! pool-exhaustion → preemption → re-admission with **bit-exact** final
+//! outputs, prefix-block sharing across identical prompts, and leak-free
+//! refcount accounting (`free_blocks == capacity_blocks` once every
+//! sequence is gone).
+//!
+//! The loop mirrors `Engine::step` exactly — `Scheduler::plan` over
+//! [`PoolPressure`], registry-built [`SequenceCache`]s, FIFO re-stash of
+//! preempted requests — minus the PJRT boundary, so it runs without
+//! artifacts (the policy is what's under test; the full loop runs in
+//! `tests/engine_e2e.rs` when artifacts exist).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use selfindex_kv::baselines::{AttentionMethod, SelfIndexing};
+use selfindex_kv::coordinator::{PoolPressure, Scheduler, StepPlan};
+use selfindex_kv::kvcache::manager::KvManager;
+use selfindex_kv::method::registry::{lookup, BuildCtx, CacheMethod};
+use selfindex_kv::method::{DecodePlan, HeadTask, SequenceCache};
+use selfindex_kv::selfindex::SelfIndexConfig;
+use selfindex_kv::substrate::rng::Rng;
+
+const DIM: usize = 64;
+const LAYERS: usize = 1;
+const KVH: usize = 1;
+const R: usize = 1;
+const BT: usize = 64;
+const BUDGET: usize = 32;
+
+/// Deterministic per-request prompt K/V (kv-head-major, one layer).
+fn prompt_kv(id: u64, tokens: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut r = Rng::new(0x9000 + id);
+    let keys = (0..KVH * tokens * DIM).map(|_| r.normal_f32()).collect();
+    let vals = (0..KVH * tokens * DIM).map(|_| r.normal_f32()).collect();
+    (keys, vals)
+}
+
+/// Deterministic per-(request, step) decode inputs — a preempted request
+/// replays the identical stream, which is what makes recomputation
+/// bit-exact.
+fn step_rows(id: u64, step: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut r = Rng::new(id * 10_000 + step as u64 + 1);
+    let k = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
+    let v = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
+    let q = (0..KVH * R * DIM).map(|_| r.normal_f32()).collect();
+    (k, v, q)
+}
+
+struct Running {
+    cache: Box<dyn SequenceCache>,
+    steps_done: usize,
+    out: Vec<f32>,
+}
+
+struct TraceResult {
+    /// last decode step's attention output per request
+    finals: HashMap<u64, Vec<f32>>,
+    preemptions: usize,
+    peak_used_blocks: usize,
+}
+
+/// The engine's serving policy, verbatim: admit from the FIFO stash (then
+/// the queue) when the prompt fits on top of the running set's next step,
+/// preempt the youngest when a decode step cannot fit, decode otherwise.
+fn run_trace(
+    mgr: &Arc<KvManager>,
+    prompt_tokens: usize,
+    max_new: usize,
+    n_requests: u64,
+    max_batch: usize,
+) -> TraceResult {
+    let si = SelfIndexConfig::default();
+    let overlay = vec![];
+    let entry = lookup("selfindex").unwrap();
+    let ctx = BuildCtx {
+        dim: DIM,
+        n_layers: LAYERS,
+        kv_heads: KVH,
+        gqa_ratio: R,
+        budget_hint: prompt_tokens,
+        mgr,
+        selfindex: &si,
+        overlay: &overlay,
+    };
+
+    let mut scheduler = Scheduler::new(max_batch);
+    let mut queue: VecDeque<u64> = (0..n_requests).collect();
+    let mut stash: VecDeque<u64> = VecDeque::new();
+    let mut running: HashMap<u64, Running> = HashMap::new();
+    let mut finals = HashMap::new();
+    let mut preemptions = 0usize;
+    let mut peak = 0usize;
+
+    for _ in 0..100_000 {
+        if queue.is_empty() && stash.is_empty() && running.is_empty() {
+            return TraceResult {
+                finals,
+                preemptions,
+                peak_used_blocks: peak,
+            };
+        }
+        let candidate = stash.front().or_else(|| queue.front()).copied();
+        let pressure = PoolPressure {
+            free_blocks: mgr.pool().free_blocks(),
+            admit_blocks: candidate
+                .map(|_| entry.head_blocks_for_prompt(prompt_tokens, BT) * LAYERS * KVH),
+            step_blocks: scheduler
+                .running()
+                .iter()
+                .map(|id| running[id].cache.step_blocks())
+                .sum(),
+        };
+        match scheduler.plan(&pressure) {
+            StepPlan::Prefill => {
+                let id = stash.pop_front().or_else(|| queue.pop_front()).unwrap();
+                let mut cache = entry.build_seq(&ctx);
+                let (keys, vals) = prompt_kv(id, prompt_tokens);
+                for l in 0..LAYERS {
+                    cache.prefill_layer(l, &keys, &vals, &[]);
+                }
+                running.insert(
+                    id,
+                    Running {
+                        cache,
+                        steps_done: 0,
+                        out: vec![0.0; KVH * R * DIM],
+                    },
+                );
+                scheduler.add_running(id);
+            }
+            StepPlan::Decode(ids) => {
+                for id in ids {
+                    let st = running.get_mut(&id).unwrap();
+                    let (k, v, q) = step_rows(id, st.steps_done);
+                    for l in 0..LAYERS {
+                        let plan = DecodePlan {
+                            layer: l,
+                            dim: DIM,
+                            kv_heads: KVH,
+                            gqa_ratio: R,
+                            budget: BUDGET,
+                            k_rows: &k,
+                            v_rows: &v,
+                            queries: &q,
+                        };
+                        st.out.fill(0.0);
+                        st.cache.attend_step(&plan, &mut st.out);
+                    }
+                    st.steps_done += 1;
+                    if st.steps_done == max_new {
+                        let st = running.remove(&id).unwrap();
+                        scheduler.remove(id);
+                        finals.insert(id, st.out); // drop releases blocks
+                    }
+                }
+            }
+            StepPlan::Preempt(id) => {
+                let st = running.remove(&id).unwrap();
+                scheduler.remove(id);
+                drop(st); // the cache's Drop releases its pool blocks
+                stash.push_back(id);
+                preemptions += 1;
+            }
+            StepPlan::Idle => {}
+        }
+        peak = peak.max(mgr.pool().used_blocks());
+    }
+    panic!("trace did not converge (livelock in the admission/preemption policy)");
+}
+
+#[test]
+fn oversubscribed_trace_preempts_and_finishes_bit_exact() {
+    let si = SelfIndexConfig::default();
+    // each request: 2 prompt blocks + 2 decode-growth blocks (128 → 208
+    // tokens crosses 128 and 192). 7 blocks cannot host three such
+    // lifetimes (12 blocks) — or even two — without preemption.
+    let prompt = 128;
+    let max_new = 80;
+    let tight = Arc::new(KvManager::for_head(DIM, &si, BT, 7));
+    let contended = run_trace(&tight, prompt, max_new, 3, 3);
+    assert_eq!(contended.finals.len(), 3, "all requests finished");
+    assert!(
+        contended.preemptions > 0,
+        "7-block pool must preempt at least once"
+    );
+    assert!(contended.peak_used_blocks <= 7);
+    assert_eq!(
+        tight.pool().free_blocks(),
+        tight.pool().capacity_blocks(),
+        "all blocks returned after every sequence finished"
+    );
+
+    // uncontended reference: same requests, pool big enough for all
+    let loose = Arc::new(KvManager::for_head(DIM, &si, BT, 64));
+    let reference = run_trace(&loose, prompt, max_new, 3, 3);
+    assert_eq!(reference.preemptions, 0, "64 blocks never preempt");
+    for (id, out) in &reference.finals {
+        assert_eq!(
+            contended.finals[id], *out,
+            "request {id}: preempted-and-recomputed output must be \
+             bit-identical to the uncontended run"
+        );
+    }
+    assert_eq!(loose.pool().free_blocks(), loose.pool().capacity_blocks());
+}
+
+#[test]
+fn identical_prompts_share_prefix_blocks_and_attend_bit_exact() {
+    let si = SelfIndexConfig::default();
+    let overlay = vec![];
+    let entry = lookup("selfindex").unwrap();
+    let shared = Arc::new(KvManager::for_head(DIM, &si, BT, 32));
+    let ctx = BuildCtx {
+        dim: DIM,
+        n_layers: LAYERS,
+        kv_heads: KVH,
+        gqa_ratio: R,
+        budget_hint: 256,
+        mgr: &shared,
+        selfindex: &si,
+        overlay: &overlay,
+    };
+    let (keys, vals) = prompt_kv(77, 256); // exactly 4 full blocks
+
+    let mut a = entry.build_seq(&ctx);
+    a.prefill_layer(0, &keys, &vals, &[]);
+    let single_blocks = shared.pool().used_blocks();
+    let single_bytes = shared.pool().used_bytes();
+    assert_eq!(single_blocks, 4);
+
+    let mut b = entry.build_seq(&ctx);
+    b.prefill_layer(0, &keys, &vals, &[]);
+    assert_eq!(
+        shared.pool().used_blocks(),
+        single_blocks,
+        "an identical prompt adopts every block — zero new allocations"
+    );
+    assert_eq!(shared.prefix_hits(), 4, "all four full blocks adopted");
+    assert!(
+        shared.pool().used_bytes() < 2 * single_bytes,
+        "the acceptance bar: B sequences sharing a prefix stay strictly \
+         below B x the single-sequence footprint"
+    );
+
+    // an independent sequence (own pool) is the semantic reference: block
+    // sharing must not perturb attention by a single bit
+    let solo_mgr = Arc::new(KvManager::for_head(DIM, &si, BT, 32));
+    let solo_ctx = BuildCtx {
+        dim: DIM,
+        n_layers: LAYERS,
+        kv_heads: KVH,
+        gqa_ratio: R,
+        budget_hint: 256,
+        mgr: &solo_mgr,
+        selfindex: &si,
+        overlay: &overlay,
+    };
+    let mut solo = entry.build_seq(&solo_ctx);
+    solo.prefill_layer(0, &keys, &vals, &[]);
+
+    let (k, v, q) = step_rows(77, 0);
+    let plan = DecodePlan {
+        layer: 0,
+        dim: DIM,
+        kv_heads: KVH,
+        gqa_ratio: R,
+        budget: BUDGET,
+        k_rows: &k,
+        v_rows: &v,
+        queries: &q,
+    };
+    let mut out_a = vec![0.0f32; KVH * R * DIM];
+    let mut out_b = vec![0.0f32; KVH * R * DIM];
+    let mut out_solo = vec![0.0f32; KVH * R * DIM];
+    a.attend_step(&plan, &mut out_a);
+    b.attend_step(&plan, &mut out_b);
+    solo.attend_step(&plan, &mut out_solo);
+    assert_eq!(out_a, out_solo, "sharing must not change attention");
+    assert_eq!(out_b, out_solo, "adopted blocks attend identically");
+
+    // decode appends land in private tail blocks (one each), never in the
+    // shared prefix
+    assert_eq!(shared.pool().used_blocks(), single_blocks + 2);
+
+    // refcount accounting: sequences release their references on drop;
+    // with the registry holding none, the pool drains completely
+    drop(a);
+    assert_eq!(shared.pool().used_blocks(), single_blocks + 1);
+    drop(b);
+    assert_eq!(
+        shared.pool().free_blocks(),
+        shared.pool().capacity_blocks(),
+        "no leak after all sequences finish"
+    );
+    drop(solo);
+    assert_eq!(solo_mgr.pool().free_blocks(), solo_mgr.pool().capacity_blocks());
+}
+
+#[test]
+fn exhausted_append_flags_the_task_instead_of_panicking() {
+    let si = SelfIndexConfig::default();
+    let mgr = Arc::new(KvManager::for_head(DIM, &si, BT, 2));
+    let mut m = SelfIndexing::with_manager(DIM, si.clone(), Arc::clone(&mgr));
+    let (keys, vals) = prompt_kv(5, 128); // exactly fills both blocks
+    m.prefill(&keys, &vals, &[], 1);
+    assert_eq!(mgr.pool().free_blocks(), 0);
+    assert_eq!(m.blocks_for_append(), 1, "next append needs a fresh block");
+
+    let (k, v, q) = step_rows(5, 0);
+    let len_before = m.cache().len();
+    assert!(m.try_append(&k, &v).is_err(), "exhaustion is an Err, not a panic");
+    assert_eq!(m.cache().len(), len_before, "failed append records nothing");
+
+    // the work-queue path surfaces the same failure as a task flag the
+    // engine maps back to a sequence and preempts
+    let mut out = vec![0.0f32; R * DIM];
+    let mut task = HeadTask {
+        method: &mut m,
+        k_row: &k,
+        v_row: &v,
+        queries: &q[..DIM],
+        dim: DIM,
+        budget: BUDGET,
+        out: &mut out,
+        failed: false,
+    };
+    task.run();
+    assert!(task.failed, "pool exhaustion must flag the task");
+    assert!(out.iter().all(|&x| x == 0.0), "failed task leaves out zeroed");
+
+    // the sequence is still coherent: attention over the existing cache
+    // works (the engine preempts it, but nothing is poisoned)
+    m.attend(&q[..DIM], BUDGET, &mut out);
+    assert!(out.iter().any(|&x| x != 0.0));
+    drop(m);
+    assert_eq!(mgr.pool().free_blocks(), 2);
+}
