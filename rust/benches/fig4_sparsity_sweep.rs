@@ -35,6 +35,7 @@ fn build(name: &str, overlay: &[(String, Json)], budget_hint: usize) -> Box<dyn 
         mgr: &mgr,
         selfindex: &si,
         overlay,
+        prompt_hash: 0,
     };
     lookup(name).expect("registered").build_head(&ctx)
 }

@@ -41,7 +41,7 @@ fn main() {
     let mgr = KvManager::for_head(dim, &si, 64, tokens / 64 + 2);
     let pool = mgr.pool();
     let mut hc = HeadCache::new(dim, si.clone());
-    hc.ingest_prefill(&mgr, &keys, &vals).unwrap();
+    hc.ingest_prefill(&mgr, &keys, &vals, 0).unwrap();
     // sink ids spread over the context, ascending (as snapkv_select picks)
     let sink_ids: Vec<u32> = (0..sink_count as u32).map(|i| i * 7).collect();
     let end = tokens - recent_rows;

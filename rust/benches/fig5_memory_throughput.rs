@@ -105,6 +105,7 @@ fn run_trace(
         mgr,
         selfindex: &si,
         overlay: &overlay,
+        prompt_hash: 0,
     };
     let admit_blocks = entry.head_blocks_for_prompt(prompt_tokens, BT) * LAYERS * KVH;
 
@@ -173,6 +174,7 @@ fn run_trace(
                 stash.push_back(id);
                 stats.preemptions += 1;
             }
+            StepPlan::Shed(_) => unreachable!("no pinned sequences in this trace"),
             StepPlan::Idle => {}
         }
         stats.peak_used_blocks = stats.peak_used_blocks.max(mgr.pool().used_blocks());
@@ -197,6 +199,7 @@ fn prefix_sharing_ratio(prompt_tokens: usize) -> (usize, usize, f64) {
         mgr: &mgr,
         selfindex: &si,
         overlay: &overlay,
+        prompt_hash: 0,
     };
     let mut build = || {
         let mut c = entry.build_seq(&ctx);

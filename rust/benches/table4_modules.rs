@@ -121,7 +121,7 @@ fn main() {
     let mgr = KvManager::for_head(dim, &si, 64, tokens / 64 + 2);
     let pool = mgr.pool();
     let mut hc = HeadCache::new(dim, si.clone());
-    hc.ingest_prefill(&mgr, &keys, &vals).unwrap();
+    hc.ingest_prefill(&mgr, &keys, &vals, 0).unwrap();
     let lut = Lut::build(&query, hc.codebook());
     let blut = ByteLut::from_lut(&lut);
     let mut sc = Vec::new();
@@ -256,7 +256,7 @@ fn main() {
         let pool2 = mgr2.pool();
         let mut hc2 = HeadCache::new(dim, si.clone());
         let t0 = std::time::Instant::now();
-        hc2.ingest_prefill(&mgr2, &keys, &vals).unwrap();
+        hc2.ingest_prefill(&mgr2, &keys, &vals, 0).unwrap();
         let ingest = t0.elapsed();
         let mut sc2 = Vec::new();
         let s = bench.run(|| {

@@ -77,7 +77,7 @@ mod tests {
         let mut hc = HeadCache::new(64, cfg);
         let keys: Vec<f32> = (0..20 * 64).map(|_| r.normal_f32()).collect();
         let vals: Vec<f32> = (0..20 * 64).map(|_| r.normal_f32()).collect();
-        hc.ingest_prefill(&mgr, &keys, &vals).unwrap();
+        hc.ingest_prefill(&mgr, &keys, &vals, 0).unwrap();
         let sinks = SinkStore::build(64, &[0, 3], &keys, &vals);
 
         let mut pg = PaddedGather::default();

@@ -201,7 +201,7 @@ mod tests {
         let mut hc = HeadCache::new(64, cfg);
         let keys: Vec<f32> = (0..tokens * 64).map(|_| r.normal_f32()).collect();
         let vals: Vec<f32> = (0..tokens * 64).map(|_| r.normal_f32()).collect();
-        hc.ingest_prefill(&mgr, &keys, &vals).unwrap();
+        hc.ingest_prefill(&mgr, &keys, &vals, 0).unwrap();
         let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
         (hc, mgr, keys, vals, q)
     }

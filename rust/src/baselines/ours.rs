@@ -64,6 +64,10 @@ pub struct SelfIndexing {
     recent: Vec<f32>,
     /// cap on `recent` before folding into the compressed cache only
     recent_cap: usize,
+    /// router-interned content hash of the prompt (0 = not set): lets
+    /// prefill memoize full-block content keys in the manager so a
+    /// re-prefill after preemption skips re-hashing the raw rows
+    prompt_hash: u128,
 }
 
 impl SelfIndexing {
@@ -99,8 +103,15 @@ impl SelfIndexing {
             scores: vec![],
             recent: vec![],
             recent_cap: 64,
+            prompt_hash: 0,
             cfg,
         }
+    }
+
+    /// Set the router-interned prompt hash before `prefill` (engine path;
+    /// standalone users leave it 0 = key memoization off).
+    pub fn set_prompt_hash(&mut self, h: u128) {
+        self.prompt_hash = h;
     }
 
     /// The fused one-pass decode retrieval (DESIGN.md §Perf iteration 5):
@@ -191,7 +202,7 @@ impl AttentionMethod for SelfIndexing {
 
     fn prefill(&mut self, keys: &[f32], vals: &[f32], q_window: &[f32], r_heads: usize) {
         self.cache
-            .ingest_prefill(&self.mgr, keys, vals)
+            .ingest_prefill(&self.mgr, keys, vals, self.prompt_hash)
             .expect("shared kv pool exhausted at prefill (admission must check free blocks first)");
         if self.cfg.use_sinks && self.cfg.sink_tokens > 0 {
             let sel = if q_window.is_empty() {

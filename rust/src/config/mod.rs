@@ -96,6 +96,17 @@ pub struct EngineConfig {
     /// selected method's declared knobs (see `method::registry`)
     pub method_overlay: Vec<(String, Json)>,
     pub selfindex: SelfIndexConfig,
+    /// fault-injection spec, e.g. `"pool.alloc=prob:0.05,worker.panic=nth:3"`
+    /// (see `substrate::faults`); empty = consult `SIKV_FAULTS`, then
+    /// disarmed. Production runs leave this empty: a disarmed injector
+    /// costs one predicted branch per probe.
+    pub faults: String,
+    /// seed for probabilistic fault schedules (deterministic per seed)
+    pub fault_seed: u64,
+    /// evictions a request absorbs before aging kicks in: at `N` the
+    /// scheduler pins it (never a victim again), past `2N` it fails with
+    /// `Outcome::Thrashing` instead of re-stashing
+    pub preempt_budget: u32,
 }
 
 impl Default for EngineConfig {
@@ -112,6 +123,9 @@ impl Default for EngineConfig {
             method: "selfindex".to_string(),
             method_overlay: vec![],
             selfindex: SelfIndexConfig::default(),
+            faults: String::new(),
+            fault_seed: 0,
+            preempt_budget: 4,
         }
     }
 }
@@ -156,6 +170,15 @@ impl EngineConfig {
             // differences collapse to one name
             let entry = crate::method::lookup(x).map_err(|e| e.to_string())?;
             cfg.method = entry.name().to_string();
+        }
+        if let Some(x) = v.get("faults").and_then(Json::as_str) {
+            cfg.faults = x.to_string();
+        }
+        if let Some(x) = v.get("fault_seed").and_then(Json::as_usize) {
+            cfg.fault_seed = x as u64;
+        }
+        if let Some(x) = v.get("preempt_budget").and_then(Json::as_usize) {
+            cfg.preempt_budget = x as u32;
         }
         if let Some(x) = v.get("method_overlay") {
             let obj = x
@@ -204,6 +227,15 @@ impl EngineConfig {
                 "pool_tokens {} below one block ({})",
                 self.pool_tokens, self.block_tokens
             ));
+        }
+        if self.preempt_budget == 0 {
+            return Err("preempt_budget must be >= 1 (0 would fail every \
+                        first eviction as thrashing)"
+                .into());
+        }
+        if !self.faults.is_empty() {
+            crate::substrate::faults::FaultInjector::parse(&self.faults, self.fault_seed)
+                .map_err(|e| format!("faults: {e}"))?;
         }
         crate::method::registry::validate_overlay(&self.method, &self.method_overlay)?;
         Ok(())
@@ -292,6 +324,31 @@ mod tests {
         let err = EngineConfig::from_json(&j).unwrap_err();
         assert!(err.contains("unknown method 'h2o'"), "{err}");
         assert!(err.contains("selfindex"), "error must list known: {err}");
+    }
+
+    #[test]
+    fn fault_and_budget_knobs_roundtrip_and_validate() {
+        let e = EngineConfig::default();
+        assert!(e.faults.is_empty(), "production default is disarmed");
+        assert_eq!(e.preempt_budget, 4);
+
+        let j = Json::parse(
+            r#"{"faults":"pool.alloc=nth:3,worker.panic=prob:0.5",
+                "fault_seed":7,"preempt_budget":2}"#,
+        )
+        .unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.faults, "pool.alloc=nth:3,worker.panic=prob:0.5");
+        assert_eq!(e.fault_seed, 7);
+        assert_eq!(e.preempt_budget, 2);
+
+        let j = Json::parse(r#"{"faults":"pool.alloc=sometimes"}"#).unwrap();
+        let err = EngineConfig::from_json(&j).unwrap_err();
+        assert!(err.starts_with("faults:"), "{err}");
+
+        let j = Json::parse(r#"{"preempt_budget":0}"#).unwrap();
+        let err = EngineConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("preempt_budget"), "{err}");
     }
 
     #[test]

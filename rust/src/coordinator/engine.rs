@@ -22,19 +22,30 @@
 //! Admission and preemption run on **exact** free-block accounting
 //! ([`PoolPressure`] → `Scheduler::plan`): the head of the queue admits
 //! only when its prompt fits on top of the running set's next step, and
-//! when a decode step cannot fit the youngest running sequence is
-//! preempted — blocks released, request re-stashed FIFO for deterministic
-//! recomputation (DESIGN.md §Memory manager).
+//! when a decode step cannot fit the youngest unpinned running sequence
+//! is preempted — blocks released, request re-stashed FIFO for
+//! deterministic recomputation (DESIGN.md §Memory manager).
+//!
+//! Hardened lifecycle (DESIGN.md §Robustness): every terminal state is a
+//! structured [`Outcome`] — a worker panic fails only its own request
+//! ([`HeadTask::run_isolated`]), repeated eviction escalates through the
+//! preemption budget (pin, then `Thrashing`), deadlines expire with
+//! partial output, and internal invariant breaches surface as
+//! `"state_drift"`-coded errors instead of process panics. The whole
+//! path is exercised deterministically by the seeded
+//! [`crate::substrate::faults`] layer (tests/chaos_engine.rs).
 //!
 //! [`HeadTask`]: crate::method::HeadTask
+//! [`HeadTask::run_isolated`]: crate::method::HeadTask::run_isolated
 
 use crate::substrate::error as anyhow;
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::request::{Request, RequestId, RequestResult};
+use super::request::{Outcome, Request, RequestId, RequestResult};
 use super::router::{AdmitError, Router};
 use super::scheduler::{PoolPressure, Scheduler, StepPlan};
 use crate::config::{EngineConfig, ModelConfig};
@@ -44,6 +55,7 @@ use crate::method::registry::{self, BuildCtx, CacheMethod};
 use crate::method::{DecodePlan, DecodeWorkQueue, SequenceCache};
 use crate::runtime::{HostTensor, PjrtRuntime};
 use crate::substrate::exec::ThreadPool;
+use crate::substrate::faults::FaultInjector;
 use crate::substrate::metrics::Registry;
 
 pub use crate::method::MethodKind;
@@ -73,6 +85,9 @@ pub struct Engine {
     /// ownership inversion that replaced per-head pools (DESIGN.md
     /// §Memory manager)
     mgr: Arc<KvManager>,
+    /// seeded fault-injection points (disarmed in production: one branch
+    /// per probe); shared with the pool/manager via `KvManager::with_faults`
+    faults: Arc<FaultInjector>,
     router: Router,
     scheduler: Scheduler,
     seqs: HashMap<RequestId, SeqState>,
@@ -83,6 +98,8 @@ pub struct Engine {
     workers: ThreadPool,
     /// recycled task arena for the per-layer decode fan-out
     decode_tasks: DecodeWorkQueue,
+    /// monotone step counter — the clock for `submit_with_deadline`
+    step_idx: u64,
 }
 
 impl Engine {
@@ -92,6 +109,10 @@ impl Engine {
         registry::validate_overlay(&cfg.method, &cfg.method_overlay)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         let builder = method.entry();
+        let faults = Arc::new(
+            FaultInjector::from_config(&cfg.faults, cfg.fault_seed)
+                .map_err(|e| anyhow::anyhow!("fault spec: {e}"))?,
+        );
         let rt = PjrtRuntime::load(artifact_dir)?;
         let model = rt.manifest.model.clone();
         let metrics = Registry::default();
@@ -111,10 +132,11 @@ impl Engine {
         } else {
             1
         };
-        let mgr = Arc::new(KvManager::new(
+        let mgr = Arc::new(KvManager::with_faults(
             RecordLayout::new(model.head_dim, &si_eff),
             cfg.block_tokens,
             capacity_blocks,
+            Arc::clone(&faults),
         ));
         // reject prompts the pool could never host at SUBMIT time (a
         // per-request AdmitError) instead of letting step() abort the
@@ -127,6 +149,7 @@ impl Engine {
         };
         Ok(Self {
             mgr,
+            faults,
             router: Router::new(cfg.queue_limit, max_prompt, metrics.clone()),
             scheduler: Scheduler::new(cfg.max_batch),
             seqs: HashMap::new(),
@@ -143,6 +166,7 @@ impl Engine {
             cfg,
             method,
             metrics,
+            step_idx: 0,
         })
     }
 
@@ -157,6 +181,18 @@ impl Engine {
         self.router.submit(prompt, max_new)
     }
 
+    /// [`Self::submit`] with a step budget: the request expires once the
+    /// engine has run `max_steps` more steps, completing with whatever it
+    /// generated by then as [`Outcome::DeadlineExceeded`].
+    pub fn submit_with_deadline(
+        &mut self,
+        prompt: Vec<u8>,
+        max_new: usize,
+        max_steps: u64,
+    ) -> Result<RequestId, AdmitError> {
+        self.router.submit_with(prompt, max_new, Some(self.step_idx + max_steps))
+    }
+
     pub fn idle(&self) -> bool {
         self.router.is_empty() && self.seqs.is_empty() && self.stash.is_empty()
     }
@@ -168,6 +204,16 @@ impl Engine {
     /// The engine-wide memory manager (shared pool + prefix registry).
     pub fn manager(&self) -> &Arc<KvManager> {
         &self.mgr
+    }
+
+    /// The engine's fault-injection layer (disarmed unless configured).
+    pub fn faults(&self) -> &Arc<FaultInjector> {
+        &self.faults
+    }
+
+    /// Steps executed so far (the `submit_with_deadline` clock).
+    pub fn step_index(&self) -> u64 {
+        self.step_idx
     }
 
     /// KV bytes currently held across sequences (Fig. 5 metric): the
@@ -201,19 +247,98 @@ impl Engine {
             .sum()
     }
 
+    /// Terminal result for a sequence that ran (possibly partially).
+    /// Consuming the state drops its cache, releasing every shared-pool
+    /// block reference.
+    fn finish(st: SeqState, outcome: Outcome) -> RequestResult {
+        RequestResult {
+            id: st.req.id,
+            prompt_len: st.req.prompt.len(),
+            ttft: st
+                .first_token_at
+                .map(|t| t - st.req.submitted_at)
+                .unwrap_or_default(),
+            latency: st.req.submitted_at.elapsed(),
+            decode_steps: st.decode_steps,
+            generated: st.generated,
+            outcome,
+        }
+    }
+
+    /// Terminal result for a request that never (re)entered prefill.
+    fn never_ran(req: Request, outcome: Outcome) -> RequestResult {
+        RequestResult {
+            id: req.id,
+            generated: vec![],
+            prompt_len: req.prompt.len(),
+            ttft: Duration::default(),
+            latency: req.submitted_at.elapsed(),
+            decode_steps: 0,
+            outcome,
+        }
+    }
+
     /// Evict a running sequence: release its pool blocks (the cache's
     /// `Drop` returns every reference) and re-stash the request for
     /// recomputation. Greedy decode is deterministic, so the recomputed
-    /// request finishes with bit-identical output.
-    fn preempt(&mut self, id: RequestId) {
-        let st = self
-            .seqs
-            .remove(&id)
-            .expect("preempt of unknown sequence");
+    /// request finishes with bit-identical output. A request evicted more
+    /// than twice its preemption budget is failed with
+    /// [`Outcome::Thrashing`] instead (returned as `Some(result)`), so a
+    /// pool that cannot hold its working set terminates the request
+    /// structurally rather than looping forever.
+    fn preempt(&mut self, id: RequestId) -> anyhow::Result<Option<RequestResult>> {
+        let mut st = self.seqs.remove(&id).ok_or_else(|| {
+            anyhow::Error::coded("state_drift", format!("preempt of unknown sequence {id}"))
+        })?;
         self.scheduler.remove(id);
-        drop(st.cache); // releases shared-pool block references
-        self.stash.push_back(st.req);
+        st.req.preempt_count += 1;
         self.metrics.counter("engine.preemptions").inc();
+        if st.req.preempt_count > 2 * self.cfg.preempt_budget {
+            self.metrics.counter("engine.request_failures").inc();
+            return Ok(Some(Self::finish(st, Outcome::Thrashing)));
+        }
+        let SeqState { req, cache, .. } = st;
+        drop(cache); // releases shared-pool block references
+        self.stash.push_back(req);
+        Ok(None)
+    }
+
+    /// Expire every request whose deadline step has passed: running
+    /// sequences complete with their partial output, stashed/queued ones
+    /// with empty output — all as [`Outcome::DeadlineExceeded`].
+    fn expire_deadlines(&mut self) -> Vec<RequestResult> {
+        let step = self.step_idx;
+        let mut results = vec![];
+        let mut expired_running: Vec<RequestId> = self
+            .seqs
+            .iter()
+            .filter(|(_, st)| st.req.deadline_step.is_some_and(|d| step >= d))
+            .map(|(&id, _)| id)
+            .collect();
+        expired_running.sort_unstable(); // map order is not deterministic
+        for id in expired_running {
+            let st = self.seqs.remove(&id).unwrap();
+            self.scheduler.remove(id);
+            results.push(Self::finish(st, Outcome::DeadlineExceeded));
+        }
+        let mut kept = VecDeque::with_capacity(self.stash.len());
+        for r in self.stash.drain(..) {
+            if r.deadline_step.is_some_and(|d| step >= d) {
+                results.push(Self::never_ran(r, Outcome::DeadlineExceeded));
+            } else {
+                kept.push_back(r);
+            }
+        }
+        self.stash = kept;
+        for r in self.router.expire_before(step) {
+            results.push(Self::never_ran(r, Outcome::DeadlineExceeded));
+        }
+        if !results.is_empty() {
+            self.metrics
+                .counter("engine.deadline_expired")
+                .add(results.len() as u64);
+        }
+        results
     }
 
     fn refresh_pool_gauges(&self) {
@@ -224,17 +349,23 @@ impl Engine {
         self.metrics
             .gauge("pool.prefix_hits")
             .set(self.mgr.prefix_hits() as i64);
+        self.metrics
+            .gauge("pool.integrity_failures")
+            .set(self.mgr.integrity_failures() as i64);
     }
 
     /// Drive one scheduler step; returns requests completed in this step.
     ///
     /// Policy: prefill-prioritized continuous batching over exact pool
     /// occupancy — admit the head of the deferred/router queue while batch
-    /// capacity and free blocks allow, preempt the youngest running
-    /// sequence when the next decode step cannot fit, otherwise run one
-    /// decode step over the whole running set. Preempted requests retry
-    /// FIFO from the stash, ahead of the router queue.
+    /// capacity and free blocks allow, preempt the youngest unpinned
+    /// running sequence when the next decode step cannot fit, otherwise
+    /// run one decode step over the whole running set. Preempted requests
+    /// retry FIFO from the stash, ahead of the router queue. Deadlines
+    /// are checked first, against the pre-step counter.
     pub fn step(&mut self) -> anyhow::Result<Vec<RequestResult>> {
+        self.step_idx += 1;
+        let mut results = self.expire_deadlines();
         let candidate = self
             .stash
             .front()
@@ -256,11 +387,17 @@ impl Engine {
         }
         let out = match plan {
             StepPlan::Prefill => {
+                let from_stash = !self.stash.is_empty();
                 let req = self
                     .stash
                     .pop_front()
                     .or_else(|| self.router.pop())
-                    .expect("plan admitted an empty queue");
+                    .ok_or_else(|| {
+                        anyhow::Error::coded("state_drift", "plan admitted an empty queue")
+                    })?;
+                if from_stash {
+                    self.metrics.counter("engine.retries").inc();
+                }
                 let need = self.admit_blocks_for(req.prompt.len());
                 if need > self.mgr.pool().capacity_blocks() {
                     return Err(anyhow::anyhow!(
@@ -269,18 +406,26 @@ impl Engine {
                         self.mgr.pool().capacity_blocks()
                     ));
                 }
-                self.do_prefill(req)?;
-                Ok(vec![])
+                self.do_prefill(req).map(|r| r.into_iter().collect())
             }
-            StepPlan::Preempt(id) => {
-                self.preempt(id);
-                Ok(vec![])
+            StepPlan::Preempt(id) => self.preempt(id).map(|r| r.into_iter().collect()),
+            StepPlan::Shed(id) => {
+                // every running sequence is pinned and the step cannot
+                // fit: aging has no victim left, so the youngest pinned
+                // sequence fails structurally instead of livelocking
+                let st = self.seqs.remove(&id).ok_or_else(|| {
+                    anyhow::Error::coded("state_drift", format!("shed of unknown sequence {id}"))
+                })?;
+                self.scheduler.remove(id);
+                self.metrics.counter("engine.request_failures").inc();
+                Ok(vec![Self::finish(st, Outcome::Thrashing)])
             }
             StepPlan::Decode(ids) => self.do_decode(&ids),
             StepPlan::Idle => Ok(vec![]),
         };
         self.refresh_pool_gauges();
-        out
+        results.extend(out?);
+        Ok(results)
     }
 
     /// Run until all submitted work completes; returns all results.
@@ -292,7 +437,14 @@ impl Engine {
         Ok(out)
     }
 
-    fn do_prefill(&mut self, req: Request) -> anyhow::Result<()> {
+    /// Prefill one request. The cache build (compression, pool
+    /// allocation, prefix adoption) runs under `catch_unwind`: a panic
+    /// there — injected or real — drops the partial cache (releasing its
+    /// blocks) and counts as an eviction against the request's preemption
+    /// budget, re-stashing it or failing it with [`Outcome::Thrashing`].
+    /// PJRT execution stays outside the guard: a runtime fault is an
+    /// engine error, not a per-request one.
+    fn do_prefill(&mut self, req: Request) -> anyhow::Result<Option<RequestResult>> {
         let t0 = Instant::now();
         let prompt_len = req.prompt.len();
         let bucket = self
@@ -338,39 +490,62 @@ impl Engine {
             mgr: &self.mgr,
             selfindex: &self.cfg.selfindex,
             overlay: &self.cfg.method_overlay,
+            prompt_hash: req.prompt_hash,
         };
-        let mut cache = self.builder.build_seq(&ctx);
-        let mut keys_buf = vec![0.0f32; kvh * prompt_len * hd];
-        let mut vals_buf = vec![0.0f32; kvh * prompt_len * hd];
-        let mut qw_buf = vec![0.0f32; kvh * w * r * hd];
-        for l in 0..nl {
-            for head in 0..kvh {
-                // k_cache layout: (layers, padded, kvh, hd)
-                for t in 0..prompt_len {
-                    let src = ((l * padded + t) * kvh + head) * hd;
-                    let dst = (head * prompt_len + t) * hd;
-                    keys_buf[dst..dst + hd].copy_from_slice(&kc[src..src + hd]);
-                    vals_buf[dst..dst + hd].copy_from_slice(&vc[src..src + hd]);
-                }
-                // q_window layout: (layers, w, h, hd); group query heads
-                // under their kv head, head-major
-                for wi in 0..w {
-                    for ri in 0..r {
-                        let qh = head * r + ri;
-                        let src = ((l * w + wi) * h + qh) * hd;
-                        let dst = ((head * w + wi) * r + ri) * hd;
-                        qw_buf[dst..dst + hd].copy_from_slice(&qw[src..src + hd]);
+        let built = catch_unwind(AssertUnwindSafe(|| {
+            let mut cache = self.builder.build_seq(&ctx);
+            let mut keys_buf = vec![0.0f32; kvh * prompt_len * hd];
+            let mut vals_buf = vec![0.0f32; kvh * prompt_len * hd];
+            let mut qw_buf = vec![0.0f32; kvh * w * r * hd];
+            for l in 0..nl {
+                for head in 0..kvh {
+                    // k_cache layout: (layers, padded, kvh, hd)
+                    for t in 0..prompt_len {
+                        let src = ((l * padded + t) * kvh + head) * hd;
+                        let dst = (head * prompt_len + t) * hd;
+                        keys_buf[dst..dst + hd].copy_from_slice(&kc[src..src + hd]);
+                        vals_buf[dst..dst + hd].copy_from_slice(&vc[src..src + hd]);
+                    }
+                    // q_window layout: (layers, w, h, hd); group query heads
+                    // under their kv head, head-major
+                    for wi in 0..w {
+                        for ri in 0..r {
+                            let qh = head * r + ri;
+                            let src = ((l * w + wi) * h + qh) * hd;
+                            let dst = ((head * w + wi) * r + ri) * hd;
+                            qw_buf[dst..dst + hd].copy_from_slice(&qw[src..src + hd]);
+                        }
                     }
                 }
+                cache.prefill_layer(l, &keys_buf, &vals_buf, &qw_buf);
             }
-            cache.prefill_layer(l, &keys_buf, &vals_buf, &qw_buf);
-        }
+            cache
+        }));
+        let cache = match built {
+            Ok(cache) => cache,
+            Err(_) => {
+                // the unwinding closure dropped the partial cache, so its
+                // blocks are already back in the pool; charge an eviction
+                let mut req = req;
+                req.preempt_count += 1;
+                self.metrics.counter("engine.preemptions").inc();
+                if req.preempt_count > 2 * self.cfg.preempt_budget {
+                    self.metrics.counter("engine.request_failures").inc();
+                    return Ok(Some(Self::never_ran(req, Outcome::Thrashing)));
+                }
+                self.stash.push_back(req);
+                return Ok(None);
+            }
+        };
 
         // first token from prefill logits
         let first = argmax(last_logits.as_f32()) as u8;
         let mut tokens_all = req.prompt.clone();
         tokens_all.push(first);
         let id = req.id;
+        // aging: a request at its budget is pinned — never a preemption
+        // victim again — so repeat evictions cannot starve it forever
+        let pin = req.preempt_count >= self.cfg.preempt_budget;
         let st = SeqState {
             req,
             cache,
@@ -381,11 +556,14 @@ impl Engine {
         };
         self.seqs.insert(id, st);
         self.scheduler.add_running(id);
+        if pin {
+            self.scheduler.pin(id);
+        }
         self.metrics
             .histogram("engine.prefill_latency")
             .observe(t0.elapsed());
         self.metrics.counter("engine.prefills").inc();
-        Ok(())
+        Ok(None)
     }
 
     /// One decode step over `states`: embed → per-layer qkv → parallel
@@ -394,16 +572,24 @@ impl Engine {
     /// task owns its leaf's scratch arenas and a disjoint slice of the
     /// output buffer) → output projection → logits → greedy sample.
     ///
-    /// Returns the indices of sequences whose append hit pool exhaustion
-    /// mid-step (normally none — the scheduler's exact pre-step accounting
-    /// preempts first). A failed sequence skips its remaining layers and
-    /// its token sample; the caller preempts it, which discards the
-    /// partial step entirely (recompute-from-prompt semantics).
-    fn decode_batch(&mut self, states: &mut [SeqState]) -> anyhow::Result<Vec<usize>> {
+    /// Tasks run through [`crate::method::HeadTask::run_isolated`], so a
+    /// panicking worker marks only its own sequence. Returns
+    /// `(failed, panicked)` indices: `failed` covers both mid-step pool
+    /// exhaustion (normally none — the scheduler's exact pre-step
+    /// accounting preempts first) and panics; `panicked ⊆ failed`. A
+    /// failed sequence skips its remaining layers and its token sample;
+    /// the caller preempts (exhaustion) or fails (panic) it, which
+    /// discards the partial step entirely.
+    #[allow(clippy::type_complexity)]
+    fn decode_batch(
+        &mut self,
+        states: &mut [SeqState],
+    ) -> anyhow::Result<(Vec<usize>, Vec<usize>)> {
         let b = states.len();
         let m = self.model.clone();
         let (nl, kvh, hd, h, d) = (m.n_layers, m.n_kv_heads, m.head_dim, m.n_heads, m.d_model);
         let r = m.gqa_ratio();
+        let faults = Arc::clone(&self.faults);
 
         let bucket = self
             .rt
@@ -431,6 +617,7 @@ impl Engine {
             .map(|s| self.cfg.budget_for(s.tokens.len()))
             .collect();
         let mut failed = vec![false; b];
+        let mut panicked = vec![false; b];
         // (start, end) of each sequence's tasks in this layer's arena
         let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(b);
 
@@ -459,7 +646,7 @@ impl Engine {
                     let oslice = o_chunks.next().unwrap();
                     let start = tasks.len();
                     // a sequence that failed at an earlier layer appends
-                    // nothing further — it is preempted after this step
+                    // nothing further — it is resolved after this step
                     if !failed[i] {
                         let plan = DecodePlan {
                             layer: l,
@@ -478,10 +665,15 @@ impl Engine {
                     }
                     ranges.push((start, tasks.len()));
                 }
-                self.workers.for_each_task(&mut tasks, |t| t.run());
+                self.workers.for_each_task(&mut tasks, |t| t.run_isolated(&faults));
                 for (i, &(start, end)) in ranges.iter().enumerate() {
-                    if tasks[start..end].iter().any(|t| t.failed) {
-                        failed[i] = true;
+                    for t in &tasks[start..end] {
+                        if t.failed {
+                            failed[i] = true;
+                        }
+                        if t.panicked {
+                            panicked[i] = true;
+                        }
                     }
                 }
                 self.decode_tasks.bank(tasks);
@@ -506,14 +698,17 @@ impl Engine {
         let vocab = self.model.vocab_size;
         for (i, seq) in states.iter_mut().enumerate() {
             if failed[i] {
-                continue; // partial step: discarded by preemption
+                continue; // partial step: discarded by preemption/failure
             }
             let tok = argmax(&lf[i * vocab..(i + 1) * vocab]) as u8;
             seq.tokens.push(tok);
             seq.generated.push(tok);
             seq.decode_steps += 1;
         }
-        Ok((0..b).filter(|&i| failed[i]).collect())
+        Ok((
+            (0..b).filter(|&i| failed[i]).collect(),
+            (0..b).filter(|&i| panicked[i]).collect(),
+        ))
     }
 
     fn do_decode(&mut self, ids: &[RequestId]) -> anyhow::Result<Vec<RequestResult>> {
@@ -533,41 +728,57 @@ impl Engine {
                     for (id2, st) in ids.iter().zip(states.drain(..)) {
                         self.seqs.insert(*id2, st);
                     }
-                    panic!("decode of unknown/duplicate seq {id}");
+                    return Err(anyhow::Error::coded(
+                        "state_drift",
+                        format!("decode of unknown/duplicate seq {id}"),
+                    ));
                 }
             }
         }
-        let step = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.decode_batch(&mut states)
-        }));
+        let step = catch_unwind(AssertUnwindSafe(|| self.decode_batch(&mut states)));
         for (id, st) in ids.iter().zip(states) {
             self.seqs.insert(*id, st);
         }
-        let failed_idx = match step {
+        let (failed_idx, panicked_idx) = match step {
             Ok(res) => res?,
+            // worker panics are contained by run_isolated; anything that
+            // still unwinds here (PJRT, staging) is an engine-level bug
+            // and must keep unwinding once the map is consistent again
             Err(payload) => std::panic::resume_unwind(payload),
         };
+
+        let mut results = vec![];
+        // a panicked worker poisons its sequence's in-memory state:
+        // fail the request, return the pre-step partial output, release
+        // the blocks (via the finished state's cache Drop)
+        for &i in &panicked_idx {
+            let id = ids[i];
+            let st = self.seqs.remove(&id).ok_or_else(|| {
+                anyhow::Error::coded("state_drift", format!("panic on unknown seq {id}"))
+            })?;
+            self.scheduler.remove(id);
+            self.metrics.counter("engine.request_failures").inc();
+            results.push(Self::finish(st, Outcome::WorkerPanic));
+        }
         // mid-step pool exhaustion (the reservation check normally makes
         // this unreachable): preempt the starved sequences so the freed
-        // blocks let the survivors (and FIFO re-stash) make progress. A
-        // sequence that fails while running ALONE is fatal — the whole
-        // pool was its to use, so eviction could not free anything and
-        // retrying would loop forever. (`ids.len()`, not the post-preempt
-        // running count: preempting several failures from one batch must
-        // not be mistaken for that lone-runner dead end.)
-        if !failed_idx.is_empty() && ids.len() == 1 {
-            return Err(anyhow::anyhow!(
-                "kv pool exhausted with a single running sequence — \
-                 raise pool_tokens"
-            ));
-        }
+        // blocks let the survivors (and FIFO re-stash) make progress.
+        // Even a sequence failing while running ALONE terminates: each
+        // retry charges its preemption budget, so it either fits on a
+        // later mix or exits with `Outcome::Thrashing`.
         for &i in &failed_idx {
-            self.preempt(ids[i]);
+            if panicked_idx.contains(&i) {
+                continue;
+            }
+            if let Some(r) = self.preempt(ids[i])? {
+                results.push(r);
+            }
         }
 
         let mut done = vec![];
         for id in ids {
-            // preempted sequences left the map; they recompute later
+            // preempted/failed sequences left the map; stashed ones
+            // recompute later
             let Some(seq) = self.seqs.get(id) else { continue };
             if seq.generated.len() >= seq.req.max_new_tokens {
                 done.push(*id);
@@ -582,21 +793,10 @@ impl Engine {
             .counter("engine.decoded_tokens")
             .add((ids.len() - failed_idx.len()) as u64);
 
-        let mut results = vec![];
         for id in done {
             let seq = self.seqs.remove(&id).unwrap();
             self.scheduler.remove(id);
-            results.push(RequestResult {
-                id,
-                prompt_len: seq.req.prompt.len(),
-                ttft: seq
-                    .first_token_at
-                    .map(|t| t - seq.req.submitted_at)
-                    .unwrap_or_default(),
-                latency: seq.req.submitted_at.elapsed(),
-                decode_steps: seq.decode_steps,
-                generated: seq.generated,
-            });
+            results.push(Self::finish(seq, Outcome::Completed));
         }
         Ok(results)
     }

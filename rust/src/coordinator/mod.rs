@@ -15,6 +15,6 @@ pub mod router;
 pub mod scheduler;
 
 pub use engine::{Engine, MethodKind};
-pub use request::{Request, RequestId, RequestResult, RequestState};
+pub use request::{Outcome, Request, RequestId, RequestResult, RequestState};
 pub use router::Router;
 pub use scheduler::{PoolPressure, Scheduler, StepPlan};

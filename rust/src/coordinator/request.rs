@@ -11,6 +11,15 @@ pub struct Request {
     pub prompt: Vec<u8>,
     pub max_new_tokens: usize,
     pub submitted_at: Instant,
+    /// router-interned content hash of `prompt` (computed once at submit;
+    /// re-prefills after preemption reuse it instead of re-hashing)
+    pub prompt_hash: u128,
+    /// evictions suffered so far — drives the scheduler's pin-after-N
+    /// aging and the 2N thrashing cutoff (see `EngineConfig::preempt_budget`)
+    pub preempt_count: u32,
+    /// absolute engine step after which the request expires
+    /// (`Engine::submit_with_deadline`); `None` = no deadline
+    pub deadline_step: Option<u64>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -20,6 +29,24 @@ pub enum RequestState {
     Decoding,
     Finished,
     Rejected,
+}
+
+/// How a request's lifecycle ended. Every terminal state is structured —
+/// a hardened engine never reports failure by panicking or by silently
+/// truncating output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// ran to `max_new_tokens` — `generated` is the full output
+    Completed,
+    /// deadline expired mid-flight — `generated` holds the partial output
+    /// produced so far (possibly empty if it never left the queue)
+    DeadlineExceeded,
+    /// evicted more than twice its preemption budget: the pool cannot
+    /// hold this request's working set alongside the running mix
+    Thrashing,
+    /// a decode worker panicked on this sequence; its in-memory state is
+    /// suspect, so the partial output is returned and the blocks released
+    WorkerPanic,
 }
 
 #[derive(Clone, Debug)]
@@ -32,6 +59,8 @@ pub struct RequestResult {
     /// queue admission -> completion
     pub latency: Duration,
     pub decode_steps: usize,
+    /// how the lifecycle ended (partial outputs carry non-`Completed`)
+    pub outcome: Outcome,
 }
 
 impl RequestResult {
@@ -58,7 +87,9 @@ mod tests {
             ttft: Duration::from_millis(100),
             latency: Duration::from_millis(1100),
             decode_steps: 11,
+            outcome: Outcome::Completed,
         };
         assert!((r.decode_tps() - 10.0).abs() < 1e-9);
+        assert_eq!(r.outcome, Outcome::Completed);
     }
 }

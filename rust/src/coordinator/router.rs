@@ -4,6 +4,7 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 use super::request::{Request, RequestId};
+use crate::kvcache::{fnv128_bytes, random_seed128};
 use crate::substrate::metrics::Registry;
 
 #[derive(Debug)]
@@ -33,11 +34,22 @@ pub struct Router {
     max_prompt: usize,
     next_id: RequestId,
     metrics: Registry,
+    /// random key for interned prompt content hashes: computed once here
+    /// at submit, carried on the `Request` through every re-stash, so a
+    /// preempted request never re-hashes its full prompt on re-prefill
+    hash_seed: u128,
 }
 
 impl Router {
     pub fn new(limit: usize, max_prompt: usize, metrics: Registry) -> Self {
-        Self { queue: VecDeque::new(), limit, max_prompt, next_id: 1, metrics }
+        Self {
+            queue: VecDeque::new(),
+            limit,
+            max_prompt,
+            next_id: 1,
+            metrics,
+            hash_seed: random_seed128(),
+        }
     }
 
     /// Validate + enqueue; returns the assigned id.
@@ -45,6 +57,16 @@ impl Router {
         &mut self,
         prompt: Vec<u8>,
         max_new_tokens: usize,
+    ) -> Result<RequestId, AdmitError> {
+        self.submit_with(prompt, max_new_tokens, None)
+    }
+
+    /// [`Self::submit`] with an absolute engine-step deadline.
+    pub fn submit_with(
+        &mut self,
+        prompt: Vec<u8>,
+        max_new_tokens: usize,
+        deadline_step: Option<u64>,
     ) -> Result<RequestId, AdmitError> {
         if prompt.is_empty() {
             return Err(AdmitError::EmptyPrompt);
@@ -59,15 +81,42 @@ impl Router {
         }
         let id = self.next_id;
         self.next_id += 1;
+        let prompt_hash = fnv128_bytes(self.hash_seed, &prompt);
         self.queue.push_back(Request {
             id,
             prompt,
             max_new_tokens,
             submitted_at: Instant::now(),
+            prompt_hash,
+            preempt_count: 0,
+            deadline_step,
         });
         self.metrics.counter("router.admitted").inc();
         self.metrics.gauge("router.queue_depth").set(self.queue.len() as i64);
         Ok(id)
+    }
+
+    /// Drain every queued request whose deadline is at or before `step` —
+    /// the engine turns them into `Outcome::DeadlineExceeded` results with
+    /// empty output (they never ran).
+    pub fn expire_before(&mut self, step: u64) -> Vec<Request> {
+        let expired: Vec<Request> = {
+            let mut kept = VecDeque::with_capacity(self.queue.len());
+            let mut out = vec![];
+            for r in self.queue.drain(..) {
+                if r.deadline_step.is_some_and(|d| step >= d) {
+                    out.push(r);
+                } else {
+                    kept.push_back(r);
+                }
+            }
+            self.queue = kept;
+            out
+        };
+        if !expired.is_empty() {
+            self.metrics.gauge("router.queue_depth").set(self.queue.len() as i64);
+        }
+        expired
     }
 
     /// Head of the queue without dequeueing — the engine sizes its exact
@@ -132,5 +181,38 @@ mod tests {
             r.submit(vec![0; 5000], 1),
             Err(AdmitError::PromptTooLong(5000, 4096))
         ));
+    }
+
+    #[test]
+    fn prompt_hash_interned_once_per_content() {
+        let mut r = router(8);
+        r.submit(vec![1, 2, 3], 1).unwrap();
+        r.submit(vec![1, 2, 3], 1).unwrap();
+        r.submit(vec![1, 2, 4], 1).unwrap();
+        let a = r.pop().unwrap();
+        let b = r.pop().unwrap();
+        let c = r.pop().unwrap();
+        assert_ne!(a.prompt_hash, 0, "hash is computed at submit");
+        assert_eq!(a.prompt_hash, b.prompt_hash, "same content, same hash");
+        assert_ne!(a.prompt_hash, c.prompt_hash);
+        // seed is per-router: the same prompt hashes differently elsewhere
+        let mut r2 = router(8);
+        r2.submit(vec![1, 2, 3], 1).unwrap();
+        assert_ne!(r2.pop().unwrap().prompt_hash, a.prompt_hash);
+    }
+
+    #[test]
+    fn expire_before_drains_only_overdue_deadlines() {
+        let mut r = router(8);
+        let a = r.submit_with(vec![1], 4, Some(5)).unwrap();
+        let b = r.submit_with(vec![2], 4, Some(100)).unwrap();
+        let c = r.submit(vec![3], 4).unwrap();
+        let expired = r.expire_before(5);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, a);
+        assert_eq!(r.depth(), 2, "live deadline and no-deadline stay queued");
+        assert_eq!(r.pop().unwrap().id, b);
+        assert_eq!(r.pop().unwrap().id, c);
+        assert!(r.expire_before(u64::MAX).is_empty());
     }
 }

@@ -52,6 +52,32 @@ impl Block {
             + self.v_val.len()
             + (self.k_prm.len() + self.v_prm.len()) * std::mem::size_of::<QuantParams>()
     }
+
+    /// FNV-1a-64 over the full payload (codes, magnitudes, values, quant
+    /// params, append cursor). The prefix registry records this at
+    /// registration and re-verifies it at adoption: a frozen shared block
+    /// whose bytes drifted (injected bit-flip, or a real aliasing bug in
+    /// the unsafe tail-writer discipline) fails adoption and falls back to
+    /// fresh prefill instead of silently corrupting an adopter's output.
+    pub fn checksum(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x00000100000001b3;
+        let mut h = OFFSET;
+        let mut fold = |bytes: &[u8]| {
+            for &b in bytes {
+                h = (h ^ b as u64).wrapping_mul(PRIME);
+            }
+        };
+        fold(&(self.used as u64).to_le_bytes());
+        fold(&self.codes);
+        fold(&self.k_mag);
+        fold(&self.v_val);
+        for p in self.k_prm.iter().chain(self.v_prm.iter()) {
+            fold(&p.scale.to_le_bytes());
+            fold(&p.zero.to_le_bytes());
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -69,5 +95,22 @@ mod tests {
         assert_eq!(b.used, 0);
         // QuantParams is 2×u16
         assert_eq!(std::mem::size_of::<QuantParams>(), 4);
+    }
+
+    #[test]
+    fn checksum_sees_every_field() {
+        let layout = RecordLayout::new(64, &SelfIndexConfig::default());
+        let mut b = Block::new(&layout, 16);
+        let base = b.checksum();
+        assert_eq!(b.checksum(), base, "pure function of content");
+        b.codes[0] ^= 1;
+        assert_ne!(b.checksum(), base, "single bit flip must change it");
+        b.codes[0] ^= 1;
+        assert_eq!(b.checksum(), base);
+        b.used = 3;
+        assert_ne!(b.checksum(), base, "append cursor is covered");
+        b.used = 0;
+        b.v_prm[0].scale = 7;
+        assert_ne!(b.checksum(), base, "quant params are covered");
     }
 }

@@ -26,12 +26,26 @@
 //! Adoption trusts the 128-bit key: the raw K/V rows are not kept after
 //! encoding, so a colliding pair of inputs would silently share a block.
 //! FNV-1a-128 is non-cryptographic — accidental collisions are
-//! negligible (~2^-64 birthday bound at the entry cap), but an adversary
-//! who controls prompt bytes AND knows another tenant's exact prompt
-//! could in principle construct one. Single-tenant / trusted-prompt
-//! serving (this engine's scope) is fine; a multi-tenant deployment
-//! should swap `fnv128_*` for a keyed or cryptographic hash — the
-//! registry only needs the 128-bit key type to stay fixed.
+//! negligible (~2^-64 birthday bound at the entry cap) — so the
+//! remaining exposure is an adversary who *constructs* a collision
+//! offline. Two hardenings close the practical gap:
+//!
+//! * **keyed hashing** — every manager draws a random 128-bit
+//!   [`KvManager::hash_seed`] at construction ([`random_seed128`], OS
+//!   entropy via `RandomState`) and all content chains start from it, so
+//!   key values are unpredictable outside the process and differ across
+//!   engine runs. FNV's xor-multiply core is not a PRF, so this is
+//!   collision *obscurity*, not a cryptographic guarantee — a truly
+//!   adversarial multi-tenant deployment should still substitute a keyed
+//!   cryptographic hash (the registry only needs the 128-bit key type to
+//!   stay fixed);
+//! * **content checksums** — registration records a checksum of the
+//!   frozen block ([`super::block::Block::checksum`]) and adoption
+//!   re-verifies it, so post-registration byte drift (bit rot, an
+//!   aliasing bug in the unsafe tail-writer discipline, an injected
+//!   `block.corrupt` fault) fails adoption and falls back to fresh
+//!   prefill instead of silently serving corrupt KV state
+//!   (`pool.integrity_failures` counts these).
 //!
 //! ## Staleness without leaks
 //!
@@ -43,12 +57,13 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::block::BlockId;
 use super::layout::RecordLayout;
 use super::pool::BlockPool;
 use crate::selfindex::SelfIndexConfig;
+use crate::substrate::faults::{FaultInjector, FaultPoint};
 
 /// 128-bit content key of one full prefix block (FNV-1a).
 pub type PrefixKey = u128;
@@ -102,9 +117,26 @@ pub fn fnv128_seed() -> u128 {
     FNV128_OFFSET
 }
 
+/// A random 128 bits from OS entropy, via the std hasher's per-instance
+/// keying (`RandomState`) — the only randomness source available without
+/// external crates. Used to key per-engine content hashes so registry
+/// keys are unpredictable outside the process.
+pub fn random_seed128() -> u128 {
+    use std::collections::hash_map::RandomState;
+    use std::hash::{BuildHasher, Hasher};
+    let s = RandomState::new();
+    let mut a = s.build_hasher();
+    a.write_u64(0x5eed_0001);
+    let mut b = s.build_hasher();
+    b.write_u64(0x5eed_0002);
+    ((a.finish() as u128) << 64) | b.finish() as u128
+}
+
 struct PrefixEntry {
     block: BlockId,
     epoch: u64,
+    /// payload checksum at registration — re-verified at adoption
+    checksum: u64,
 }
 
 /// Bound on registered entries; past it the map is cleared outright
@@ -112,20 +144,52 @@ struct PrefixEntry {
 /// costs future hits, never correctness).
 const PREFIX_ENTRY_CAP: usize = 1 << 14;
 
+/// Bound on memoized content keys (same clear-on-overflow policy; a memo
+/// drop only costs re-hashing a prompt block, never correctness).
+const KEY_MEMO_CAP: usize = 1 << 14;
+
 pub struct KvManager {
     pool: BlockPool,
     prefix: Mutex<HashMap<PrefixKey, PrefixEntry>>,
+    /// `(prompt_hash, params_sig, block_idx) → content key` — lets a
+    /// re-prefill of an already-hashed prompt (preemption restart, shared
+    /// submit) skip re-hashing the raw K/V rows of full blocks. Sound for
+    /// the same reason prefix reuse is: under a fixed `params_sig` (which
+    /// folds the head's frozen encode stats) the compressed block is a
+    /// pure function of the prompt, which `prompt_hash` identifies —
+    /// the same FNV trust boundary documented above, not a new one.
+    key_memo: Mutex<HashMap<(u128, u128, u32), PrefixKey>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    integrity_failures: AtomicU64,
+    /// per-engine random key for all content-hash chains (see module doc)
+    hash_seed: u128,
 }
 
 impl KvManager {
     pub fn new(layout: RecordLayout, block_tokens: usize, capacity_blocks: usize) -> Self {
+        Self::with_faults(
+            layout,
+            block_tokens,
+            capacity_blocks,
+            Arc::new(FaultInjector::disarmed()),
+        )
+    }
+
+    pub fn with_faults(
+        layout: RecordLayout,
+        block_tokens: usize,
+        capacity_blocks: usize,
+        faults: Arc<FaultInjector>,
+    ) -> Self {
         Self {
-            pool: BlockPool::new(layout, block_tokens, capacity_blocks),
+            pool: BlockPool::with_faults(layout, block_tokens, capacity_blocks, faults),
             prefix: Mutex::new(HashMap::new()),
+            key_memo: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            integrity_failures: AtomicU64::new(0),
+            hash_seed: random_seed128(),
         }
     }
 
@@ -144,15 +208,31 @@ impl KvManager {
         &self.pool
     }
 
+    /// Per-engine random key that every content-hash chain starts from
+    /// (replaces the fixed `fnv128_seed` offset for registry keys).
+    pub fn hash_seed(&self) -> u128 {
+        self.hash_seed
+    }
+
     /// Adopt the registered block for `key`, taking a reference on it.
-    /// Returns `None` (and prunes the entry) when nothing is registered or
-    /// the registration went stale — freed, or freed-and-reallocated.
+    /// Returns `None` (and prunes the entry) when nothing is registered,
+    /// the registration went stale — freed, or freed-and-reallocated —
+    /// or the block's bytes no longer match the checksum captured at
+    /// registration (corruption: counted in `integrity_failures`). All
+    /// three fall back the same way: the caller re-encodes from raw rows
+    /// and re-registers, self-healing the registry.
     pub fn adopt(&self, key: PrefixKey) -> Option<BlockId> {
         let mut map = self.prefix.lock().unwrap();
         if let Some(e) = map.get(&key) {
             if self.pool.try_retain_at_epoch(e.block, e.epoch) {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Some(e.block);
+                if self.pool.get(e.block).checksum() == e.checksum {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(e.block);
+                }
+                // corrupt: drop the reference we just took, prune, and
+                // make the caller rebuild from source
+                self.pool.release(e.block);
+                self.integrity_failures.fetch_add(1, Ordering::Relaxed);
             }
             map.remove(&key);
         }
@@ -162,13 +242,55 @@ impl KvManager {
 
     /// Register a **full, henceforth frozen** block under its content key.
     /// Takes no reference — liveness is revalidated at adoption time.
+    /// Captures the payload checksum first; an armed `block.corrupt` fault
+    /// then flips one payload bit *after* capture, so the corruption is
+    /// detectable (the chaos suite asserts adopters fall back cleanly —
+    /// the donor itself reads its own flipped block and is counted as
+    /// fault-touched).
     pub fn register(&self, key: PrefixKey, block: BlockId) {
+        let checksum = self.pool.get(block).checksum();
+        if self.pool.faults().should_fire(FaultPoint::BlockCorrupt) {
+            // SAFETY: at registration the block is held only by the
+            // registering head cache (refcount 1 — `block_mut` debug-
+            // asserts this) and no other borrow is live on this thread.
+            unsafe { self.pool.block_mut(block).codes[0] ^= 1 };
+        }
         let epoch = self.pool.epoch_of(block);
         let mut map = self.prefix.lock().unwrap();
         if map.len() >= PREFIX_ENTRY_CAP {
             map.clear();
         }
-        map.insert(key, PrefixEntry { block, epoch });
+        map.insert(key, PrefixEntry { block, epoch, checksum });
+    }
+
+    /// Memoized content key for block `block_idx` of a prompt already
+    /// hashed under this manager's seed (see `key_memo` field doc).
+    pub fn memo_lookup(
+        &self,
+        prompt_hash: u128,
+        params_sig: u128,
+        block_idx: u32,
+    ) -> Option<PrefixKey> {
+        self.key_memo
+            .lock()
+            .unwrap()
+            .get(&(prompt_hash, params_sig, block_idx))
+            .copied()
+    }
+
+    /// Remember a computed content key for [`Self::memo_lookup`].
+    pub fn memo_store(
+        &self,
+        prompt_hash: u128,
+        params_sig: u128,
+        block_idx: u32,
+        key: PrefixKey,
+    ) {
+        let mut memo = self.key_memo.lock().unwrap();
+        if memo.len() >= KEY_MEMO_CAP {
+            memo.clear();
+        }
+        memo.insert((prompt_hash, params_sig, block_idx), key);
     }
 
     /// Prefix-block adoptions served so far (`pool.prefix_hits` gauge).
@@ -184,6 +306,12 @@ impl KvManager {
     /// Registered (not necessarily still live) prefix entries.
     pub fn prefix_entries(&self) -> usize {
         self.prefix.lock().unwrap().len()
+    }
+
+    /// Adoptions rejected because the block's bytes no longer matched the
+    /// registration checksum (`pool.integrity_failures` gauge).
+    pub fn integrity_failures(&self) -> u64 {
+        self.integrity_failures.load(Ordering::Relaxed)
     }
 }
 
@@ -228,6 +356,54 @@ mod tests {
         assert!(m.adopt(key).is_none(), "reallocated epoch must not adopt");
         m.pool().release(id3);
         assert_eq!(m.pool().free_blocks(), 2);
+    }
+
+    #[test]
+    fn corrupted_block_fails_adoption_and_prunes() {
+        let m = mgr(4);
+        let id = m.pool().alloc().unwrap();
+        let key = fnv128_u64(m.hash_seed(), 11);
+        m.register(key, id);
+        // flip one payload bit after registration (what block.corrupt does)
+        // SAFETY: sole holder, no other borrow live
+        unsafe { m.pool().block_mut(id).codes[0] ^= 1 };
+        assert!(m.adopt(key).is_none(), "corrupt block must not adopt");
+        assert_eq!(m.integrity_failures(), 1);
+        assert_eq!(m.prefix_hits(), 0);
+        assert_eq!(m.prefix_entries(), 0, "corrupt entry pruned");
+        // the failed adoption released its trial reference: donor's
+        // release drains the pool completely
+        m.pool().release(id);
+        assert_eq!(m.pool().free_blocks(), 4, "no leak on integrity failure");
+        // re-registration with the corrected content self-heals
+        let id2 = m.pool().alloc().unwrap();
+        m.register(key, id2);
+        assert_eq!(m.adopt(key), Some(id2));
+        m.pool().release(id2);
+        m.pool().release(id2);
+    }
+
+    #[test]
+    fn hash_seed_is_per_manager_random() {
+        assert_ne!(mgr(1).hash_seed(), mgr(1).hash_seed());
+        assert_ne!(random_seed128(), random_seed128());
+    }
+
+    #[test]
+    fn key_memo_roundtrip_and_bound() {
+        let m = mgr(1);
+        assert_eq!(m.memo_lookup(1, 2, 0), None);
+        m.memo_store(1, 2, 0, 0xabc);
+        assert_eq!(m.memo_lookup(1, 2, 0), Some(0xabc));
+        assert_eq!(m.memo_lookup(1, 2, 1), None, "per-block-index");
+        assert_eq!(m.memo_lookup(1, 3, 0), None, "per-params-sig");
+        for i in 0..(super::KEY_MEMO_CAP as u32 + 8) {
+            m.memo_store(9, 9, i, i as u128);
+        }
+        assert!(
+            m.key_memo.lock().unwrap().len() <= super::KEY_MEMO_CAP,
+            "memo stays bounded"
+        );
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub mod store;
 
 pub use block::BlockId;
 pub use layout::RecordLayout;
-pub use manager::{KvManager, PrefixKey};
+pub use manager::{fnv128_bytes, random_seed128, KvManager, PrefixKey};
 pub use pool::BlockPool;
 pub use sink::{snapkv_select, SinkStore};
 pub use store::{CacheFull, GatheredQuant, HeadCache};

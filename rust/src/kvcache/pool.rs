@@ -26,10 +26,11 @@
 //! a stale entry (block freed and reused) can never be adopted.
 
 use std::cell::UnsafeCell;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::block::{Block, BlockId};
 use super::layout::RecordLayout;
+use crate::substrate::faults::{FaultInjector, FaultPoint};
 
 struct PoolMeta {
     refs: Vec<u32>,
@@ -43,6 +44,9 @@ pub struct BlockPool {
     pub block_tokens: usize,
     blocks: Vec<UnsafeCell<Block>>,
     meta: Mutex<PoolMeta>,
+    /// chaos probes (`pool.alloc` here; downstream layers reach it via
+    /// [`Self::faults`]) — disarmed in production, one branch per probe
+    faults: Arc<FaultInjector>,
 }
 
 // SAFETY: all mutation of shared state goes through the meta Mutex except
@@ -53,6 +57,20 @@ unsafe impl Sync for BlockPool {}
 
 impl BlockPool {
     pub fn new(layout: RecordLayout, block_tokens: usize, capacity_blocks: usize) -> Self {
+        Self::with_faults(
+            layout,
+            block_tokens,
+            capacity_blocks,
+            Arc::new(FaultInjector::disarmed()),
+        )
+    }
+
+    pub fn with_faults(
+        layout: RecordLayout,
+        block_tokens: usize,
+        capacity_blocks: usize,
+        faults: Arc<FaultInjector>,
+    ) -> Self {
         assert!(
             block_tokens.is_multiple_of(8),
             "block_tokens % 8 == 0 (block scorer 8-token unroll)"
@@ -70,12 +88,25 @@ impl BlockPool {
                 epochs: vec![0; capacity_blocks],
                 free: (0..capacity_blocks as BlockId).rev().collect(),
             }),
+            faults,
         }
+    }
+
+    /// The engine's fault injector (disarmed unless chaos-armed). Layers
+    /// above the pool probe their own points through this handle so one
+    /// spec string arms the whole stack.
+    pub fn faults(&self) -> &Arc<FaultInjector> {
+        &self.faults
     }
 
     /// Allocate a fresh (reset) block with refcount 1, or `None` when the
     /// pool is exhausted — the caller's signal to backpressure or preempt.
+    /// An armed `pool.alloc` fault reports exhaustion without touching the
+    /// free list, exercising exactly the paths real pressure would.
     pub fn alloc(&self) -> Option<BlockId> {
+        if self.faults.should_fire(FaultPoint::PoolAlloc) {
+            return None;
+        }
         let mut m = self.meta.lock().unwrap();
         let id = m.free.pop()?;
         debug_assert_eq!(m.refs[id as usize], 0);
@@ -224,6 +255,21 @@ mod tests {
         p.release(b);
         p.release(c);
         assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    fn injected_alloc_fault_mimics_exhaustion_without_leaking() {
+        let layout = RecordLayout::new(64, &SelfIndexConfig::default());
+        let inj = Arc::new(FaultInjector::parse("pool.alloc=nth:2", 0).unwrap());
+        let p = BlockPool::with_faults(layout, 16, 4, Arc::clone(&inj));
+        let a = p.alloc().expect("1st alloc clean");
+        assert!(p.alloc().is_none(), "2nd alloc faulted");
+        assert_eq!(p.free_blocks(), 3, "faulted alloc touched no free-list state");
+        let b = p.alloc().expect("3rd alloc clean again (nth fires once)");
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.free_blocks(), 4);
+        assert_eq!(inj.fired(FaultPoint::PoolAlloc), 1);
     }
 
     #[test]

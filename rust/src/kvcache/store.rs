@@ -16,8 +16,9 @@
 //! re-encoded (prefix reuse; DESIGN.md §Memory manager).
 
 use super::block::BlockId;
-use super::manager::{fnv128_f32s, fnv128_seed, fnv128_u64, KvManager};
+use super::manager::{fnv128_f32s, fnv128_u64, KvManager};
 use super::pool::BlockPool;
+use crate::substrate::faults::FaultPoint;
 use crate::quant::int2::{QuantParams, TokenQuant};
 use crate::quant::pack;
 use crate::selfindex::codebook::{Codebook, CodebookBuilder};
@@ -119,12 +120,15 @@ impl HeadCache {
     /// Content signature of everything that determines this head's encoded
     /// record bytes: the frozen (mu, alpha) plus the quantization geometry.
     /// Two heads with equal signatures encode equal inputs to equal bytes,
-    /// which is what makes prefix-block adoption bit-exact.
-    fn params_sig(&self, pool: &BlockPool) -> u128 {
+    /// which is what makes prefix-block adoption bit-exact. The chain
+    /// starts from the manager's per-engine random [`KvManager::hash_seed`]
+    /// so registry keys are unpredictable outside the process (the
+    /// manager's trust-boundary hardening).
+    fn params_sig(&self, mgr: &KvManager) -> u128 {
         let frozen = self.stats.frozen().expect("prefill first");
-        let mut h = fnv128_seed();
+        let mut h = mgr.hash_seed();
         h = fnv128_u64(h, self.dim as u64);
-        h = fnv128_u64(h, pool.block_tokens as u64);
+        h = fnv128_u64(h, mgr.pool().block_tokens as u64);
         h = fnv128_u64(h, self.cfg.quant_bits as u64);
         h = fnv128_u64(h, self.cfg.quant_group as u64);
         h = fnv128_u64(h, self.cfg.vq_group as u64);
@@ -144,11 +148,18 @@ impl HeadCache {
     /// (refcount bump, no encode, no second copy); otherwise it is encoded
     /// and registered for later sequences. The ragged tail block is always
     /// private — decode appends mutate it.
+    ///
+    /// `prompt_hash` (0 = disabled) is the router's interned content hash
+    /// of the prompt these rows derive from: when set, full-block content
+    /// keys are memoized in the manager under
+    /// `(prompt_hash, params_sig, block_idx)`, so a re-prefill of the same
+    /// prompt (preemption restart) skips re-hashing the raw K/V rows.
     pub fn ingest_prefill(
         &mut self,
         mgr: &KvManager,
         keys: &[f32],
         vals: &[f32],
+        prompt_hash: u128,
     ) -> Result<usize, CacheFull> {
         assert_eq!(keys.len(), vals.len());
         assert_eq!(keys.len() % self.dim, 0);
@@ -202,14 +213,26 @@ impl HeadCache {
         );
         let bt = pool.block_tokens;
         let dim = self.dim;
-        let sig = self.params_sig(pool);
+        let sig = self.params_sig(mgr);
         let mut t = 0usize;
         while t < tokens {
             if tokens - t >= bt {
                 debug_assert!(self.len.is_multiple_of(bt));
-                let mut key = sig;
-                key = fnv128_f32s(key, &keys[t * dim..(t + bt) * dim]);
-                key = fnv128_f32s(key, &vals[t * dim..(t + bt) * dim]);
+                let block_idx = (t / bt) as u32;
+                let memoized = if prompt_hash != 0 {
+                    mgr.memo_lookup(prompt_hash, sig, block_idx)
+                } else {
+                    None
+                };
+                let key = memoized.unwrap_or_else(|| {
+                    let mut key = sig;
+                    key = fnv128_f32s(key, &keys[t * dim..(t + bt) * dim]);
+                    key = fnv128_f32s(key, &vals[t * dim..(t + bt) * dim]);
+                    if prompt_hash != 0 {
+                        mgr.memo_store(prompt_hash, sig, block_idx, key);
+                    }
+                    key
+                });
                 if let Some(id) = mgr.adopt(key) {
                     // identical block already in the pool: share it
                     debug_assert_eq!(pool.get(id).used, bt);
@@ -243,6 +266,11 @@ impl HeadCache {
         v_row: &[f32],
     ) -> Result<(), CacheFull> {
         assert_eq!(k_row.len(), self.dim);
+        if pool.faults().should_fire(FaultPoint::AppendCacheFull) {
+            // chaos probe: report mid-decode exhaustion before touching
+            // any cache state — the caller's CacheFull path must cope
+            return Err(CacheFull);
+        }
         let dim = self.dim;
         {
             let frozen = self.stats.frozen().expect("prefill first");
@@ -770,7 +798,7 @@ mod tests {
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
         let keys = rand_rows(&mut r, 100, 64);
         let vals = rand_rows(&mut r, 100, 64);
-        assert_eq!(hc.ingest_prefill(&mgr, &keys, &vals).unwrap(), 100);
+        assert_eq!(hc.ingest_prefill(&mgr, &keys, &vals, 0).unwrap(), 100);
         assert_eq!(hc.len(), 100);
 
         let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
@@ -808,7 +836,7 @@ mod tests {
         let mgr = mk_mgr(64);
         let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 40, 64), &rand_rows(&mut r, 40, 64))
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 40, 64), &rand_rows(&mut r, 40, 64), 0)
             .unwrap();
         for _ in 0..10 {
             let k: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
@@ -830,7 +858,7 @@ mod tests {
         let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
         // 100 tokens over 16-token blocks: full blocks + a ragged tail
-        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64))
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64), 0)
             .unwrap();
         let q: Vec<f32> = (0..64).map(|_| r.normal_f32()).collect();
         let blut = ByteLut::from_lut(&Lut::build(&q, hc.codebook()));
@@ -863,7 +891,7 @@ mod tests {
         let mgr = mk_mgr(64);
         let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 50, 64), &rand_rows(&mut r, 50, 64))
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 50, 64), &rand_rows(&mut r, 50, 64), 0)
             .unwrap();
         let mut gq = GatheredQuant::default();
         hc.gather_quant(pool, &[0, 17, 49, 3], &mut gq);
@@ -880,7 +908,7 @@ mod tests {
         let mgr = mk_mgr(2); // 32 tokens max
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
         let res =
-            hc.ingest_prefill(&mgr, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64));
+            hc.ingest_prefill(&mgr, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64), 0);
         assert!(res.is_err());
     }
 
@@ -890,7 +918,7 @@ mod tests {
         let mgr = mk_mgr(8);
         let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 64, 64), &rand_rows(&mut r, 64, 64))
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 64, 64), &rand_rows(&mut r, 64, 64), 0)
             .unwrap();
         assert_eq!(pool.used_blocks(), 4);
         hc.free(pool);
@@ -904,7 +932,7 @@ mod tests {
         let mgr = mk_mgr(16);
         let pool = mgr.pool();
         let mut hc = HeadCache::new(64, SelfIndexConfig::default());
-        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 64, 64), &rand_rows(&mut r, 64, 64))
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 64, 64), &rand_rows(&mut r, 64, 64), 0)
             .unwrap();
         let expect =
             4 * 16 * crate::kvcache::layout::RecordLayout::new(64, &hc.cfg).bytes_per_token();

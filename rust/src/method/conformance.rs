@@ -128,6 +128,7 @@ fn ctx<'a>(
         mgr,
         selfindex: si,
         overlay,
+        prompt_hash: 0,
     }
 }
 

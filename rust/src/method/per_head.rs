@@ -118,6 +118,7 @@ impl<M: AttentionMethod> SequenceCache for PerHeadSeqCache<M> {
                 budget: plan.budget,
                 out: o,
                 failed: false,
+                panicked: false,
             });
         }
     }

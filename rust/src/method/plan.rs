@@ -7,8 +7,11 @@
 //!
 //! [`SequenceCache`]: super::SequenceCache
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
 use crate::baselines::AttentionMethod;
 use crate::substrate::exec::ThreadPool;
+use crate::substrate::faults::{FaultInjector, FaultPoint};
 
 /// One sequence's slice of a decode step for one layer: the freshly
 /// projected K/V rows to append, the grouped queries, and the retrieval
@@ -47,6 +50,11 @@ pub struct HeadTask<'a> {
     /// (the belt-and-braces path; exact pre-step accounting normally
     /// preempts before any task can fail)
     pub failed: bool,
+    /// set by [`Self::run_isolated`] when the task body panicked — unlike
+    /// `failed` (transient pressure → preempt and retry), a panic means
+    /// this sequence's in-memory state is suspect, so the engine fails
+    /// the request outright (`Outcome::WorkerPanic`)
+    pub panicked: bool,
 }
 
 impl HeadTask<'_> {
@@ -59,6 +67,27 @@ impl HeadTask<'_> {
         }
         self.method
             .attend_group(self.queries, self.dim, self.budget, self.out);
+    }
+
+    /// [`Self::run`] with panic containment: a panicking task marks
+    /// itself `failed` + `panicked` instead of unwinding into the worker
+    /// pool, so one poisoned (sequence, kv-head) fails one request while
+    /// the rest of the batch completes. The `worker.panic` chaos point
+    /// fires *before* the body runs — an injected panic leaves the leaf's
+    /// state untouched. Real mid-append panics are also safe to contain:
+    /// the failed request's caches are dropped, and their `Drop` impls
+    /// release every pool block the sequence held.
+    pub fn run_isolated(&mut self, faults: &FaultInjector) {
+        let body = catch_unwind(AssertUnwindSafe(|| {
+            if faults.should_fire(FaultPoint::WorkerPanic) {
+                panic!("injected worker panic (chaos)");
+            }
+            self.run();
+        }));
+        if body.is_err() {
+            self.failed = true;
+            self.panicked = true;
+        }
     }
 }
 
@@ -147,6 +176,7 @@ mod tests {
                     budget: usize::MAX,
                     out: o,
                     failed: false,
+                    panicked: false,
                 });
             }
             let cap = tasks.capacity();
@@ -160,5 +190,35 @@ mod tests {
         }
         assert!(outs.iter().all(|&x| x != 0.0));
         assert_eq!(heads[0].len(), 4 + 3);
+    }
+
+    #[test]
+    fn run_isolated_contains_injected_panic() {
+        let dim = 16;
+        let mut h = FullCache::new(dim);
+        let keys = vec![0.5f32; 4 * dim];
+        h.prefill(&keys, &keys.clone(), &[], 1);
+        let k = vec![0.25f32; dim];
+        let q = vec![1.0f32; dim];
+        let mut out = vec![0.0f32; dim];
+        let faults = FaultInjector::parse("worker.panic=nth:1", 0).unwrap();
+        let mut task = HeadTask {
+            method: &mut h,
+            k_row: &k,
+            v_row: &k,
+            queries: &q,
+            dim,
+            budget: usize::MAX,
+            out: &mut out,
+            failed: false,
+            panicked: false,
+        };
+        task.run_isolated(&faults);
+        assert!(task.failed && task.panicked, "panic marks both flags");
+        assert!(task.out.iter().all(|&x| x == 0.0), "fired before the body");
+        // nth:1 is spent; the same task body now runs clean
+        task.run_isolated(&faults);
+        assert!(task.out.iter().any(|&x| x != 0.0));
+        assert_eq!(h.len(), 4 + 1, "panicked run appended nothing");
     }
 }

@@ -73,6 +73,10 @@ pub struct BuildCtx<'a> {
     pub selfindex: &'a SelfIndexConfig,
     /// validated `(knob, value)` overlay for the selected method
     pub overlay: &'a [(String, Json)],
+    /// router-interned content hash of this sequence's prompt (0 = none):
+    /// pool-backed methods pass it down so prefill can memoize full-block
+    /// content keys across re-prefills of the same prompt
+    pub prompt_hash: u128,
 }
 
 impl BuildCtx<'_> {
@@ -234,7 +238,9 @@ impl CacheMethod for SelfIndexMethod {
 
     fn build_head(&self, ctx: &BuildCtx) -> Box<dyn AttentionMethod> {
         let si = selfindex_overlayed(ctx.selfindex, ctx.overlay);
-        Box::new(SelfIndexing::with_manager(ctx.dim, si, Arc::clone(ctx.mgr)))
+        let mut m = SelfIndexing::with_manager(ctx.dim, si, Arc::clone(ctx.mgr));
+        m.set_prompt_hash(ctx.prompt_hash);
+        Box::new(m)
     }
 
     fn head_blocks_for_prompt(&self, prompt_len: usize, block_tokens: usize) -> usize {
@@ -437,6 +443,7 @@ mod tests {
             mgr,
             selfindex: si,
             overlay,
+            prompt_hash: 0,
         }
     }
 

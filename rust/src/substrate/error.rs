@@ -7,24 +7,37 @@
 
 use std::fmt;
 
-/// Catch-all error: an owned message, convertible from any std error.
+/// Catch-all error: an owned message, convertible from any std error,
+/// optionally tagged with a static machine-readable code so callers can
+/// branch on failure class without string-matching the message.
 pub struct Error {
     msg: String,
+    code: Option<&'static str>,
 }
 
 impl Error {
     /// Build from anything displayable (the `anyhow::Error::msg` shape).
     pub fn msg<M: fmt::Display>(m: M) -> Self {
-        Self { msg: m.to_string() }
+        Self { msg: m.to_string(), code: None }
+    }
+
+    /// Build with a machine-readable code (e.g. `"state_drift"`).
+    pub fn coded<M: fmt::Display>(code: &'static str, m: M) -> Self {
+        Self { msg: m.to_string(), code: Some(code) }
     }
 
     pub fn message(&self) -> &str {
         &self.msg
     }
 
-    /// Prefix with context, keeping the original message.
+    /// Machine-readable failure class, if the construction site set one.
+    pub fn code(&self) -> Option<&'static str> {
+        self.code
+    }
+
+    /// Prefix with context, keeping the original message and code.
     pub fn context<C: fmt::Display>(self, c: C) -> Self {
-        Self { msg: format!("{c}: {}", self.msg) }
+        Self { msg: format!("{c}: {}", self.msg), code: self.code }
     }
 }
 
@@ -50,13 +63,13 @@ impl<E: std::error::Error> From<E> for Error {
 
 impl From<String> for Error {
     fn from(s: String) -> Self {
-        Error { msg: s }
+        Error { msg: s, code: None }
     }
 }
 
 impl From<&str> for Error {
     fn from(s: &str) -> Self {
-        Error { msg: s.to_string() }
+        Error { msg: s.to_string(), code: None }
     }
 }
 
@@ -108,5 +121,15 @@ mod tests {
         assert!(!e.message().is_empty());
         let e2: super::Error = "plain".into();
         assert_eq!(e2.context("ctx").message(), "ctx: plain");
+    }
+
+    #[test]
+    fn coded_errors_carry_class_through_context() {
+        let e = super::Error::coded("state_drift", "scheduler saw ghost seq 7");
+        assert_eq!(e.code(), Some("state_drift"));
+        let e = e.context("step 12");
+        assert_eq!(e.code(), Some("state_drift"), "context keeps the code");
+        assert_eq!(e.message(), "step 12: scheduler saw ghost seq 7");
+        assert_eq!(anyhow::anyhow!("plain").code(), None);
     }
 }

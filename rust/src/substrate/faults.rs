@@ -1,0 +1,364 @@
+//! Deterministic, seeded fault injection for the serving engine.
+//!
+//! Chaos testing a serving engine needs faults that are (a) *named* — each
+//! failure mode has one injection point with one spelling, shared between
+//! config, env, tests, and docs — and (b) *reproducible* — a failing CI
+//! seed replays locally, byte for byte. This module provides both: a
+//! [`FaultInjector`] armed from a spec string like
+//! `pool.alloc=nth:5,block.corrupt=prob:0.125`, with per-point schedules
+//! that fire on exact call counts (`nth:`/`every:`) or with a seeded
+//! probability (`prob:`, SplitMix64-mixed so two injectors with the same
+//! seed make identical decisions at identical arrival counts).
+//!
+//! Zero-cost when disarmed: every probe goes through
+//! [`FaultInjector::should_fire`], which is a single branch on a plain
+//! bool before any atomics are touched — a production engine carries the
+//! probes at the price of one predictable branch per injection point.
+//!
+//! The injector is plain shared state (`Arc`-able, all interior
+//! mutability via relaxed atomics), **not** a process-global: `cargo test`
+//! runs many engines in one process, and faults armed for one must never
+//! leak into another.
+//!
+//! DESIGN.md §Robustness holds the fault-point matrix (injection point →
+//! expected degradation → test).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A named injection point inside the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// `pool.alloc` — [`BlockPool::alloc`] returns `None` as if the pool
+    /// were exhausted (admission backpressure / preemption paths).
+    ///
+    /// [`BlockPool::alloc`]: crate::kvcache::pool::BlockPool::alloc
+    PoolAlloc,
+    /// `append.cache_full` — a decode-time `HeadCache::append` fails with
+    /// `CacheFull` before touching the pool (mid-step exhaustion paths).
+    AppendCacheFull,
+    /// `worker.panic` — a decode `HeadTask` panics at the start of its
+    /// run (worker-poisoning containment paths).
+    WorkerPanic,
+    /// `block.corrupt` — one bit of a block's payload is flipped right
+    /// after prefix registration (integrity-check paths).
+    BlockCorrupt,
+}
+
+impl FaultPoint {
+    pub const ALL: [FaultPoint; 4] = [
+        FaultPoint::PoolAlloc,
+        FaultPoint::AppendCacheFull,
+        FaultPoint::WorkerPanic,
+        FaultPoint::BlockCorrupt,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::PoolAlloc => "pool.alloc",
+            FaultPoint::AppendCacheFull => "append.cache_full",
+            FaultPoint::WorkerPanic => "worker.panic",
+            FaultPoint::BlockCorrupt => "block.corrupt",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultPoint> {
+        Self::ALL.into_iter().find(|p| p.name() == s)
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultPoint::PoolAlloc => 0,
+            FaultPoint::AppendCacheFull => 1,
+            FaultPoint::WorkerPanic => 2,
+            FaultPoint::BlockCorrupt => 3,
+        }
+    }
+}
+
+/// When an armed point fires, relative to its own arrival counter.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    /// Fire exactly once, on the n-th arrival (1-based). The workhorse of
+    /// bit-exactness chaos assertions: one deterministic fault, everything
+    /// else untouched.
+    Nth(u64),
+    /// Fire on every n-th arrival (n, 2n, 3n, ...).
+    Every(u64),
+    /// Fire with probability `p` per arrival, drawn from a per-point
+    /// seeded counter-mode PRNG — deterministic in (seed, arrival index),
+    /// lock-free under concurrent probes. Use for no-panic / no-leak
+    /// sweeps, not bit-exactness (thread interleaving permutes which
+    /// arrival lands where).
+    Prob(f64),
+}
+
+struct PointState {
+    schedule: Schedule,
+    arrivals: AtomicU64,
+    fired: AtomicU64,
+    /// per-point seed for `Prob` draws (counter-mode: the draw for
+    /// arrival `i` is `mix64(seed + i·GOLDEN)`, so concurrent arrivals
+    /// need no shared RNG state beyond the arrival counter)
+    seed: u64,
+}
+
+/// SplitMix64 finalizer (also the mixer in `substrate::rng`): bijective,
+/// avalanching — consecutive counters map to decorrelated draws.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+const GOLDEN: u64 = 0x9e3779b97f4a7c15;
+
+/// Deterministic seeded fault-injection state for one engine.
+pub struct FaultInjector {
+    /// checked before anything else on every probe — a disarmed injector
+    /// costs one predictable branch
+    armed: bool,
+    points: [Option<PointState>; 4],
+}
+
+impl Default for FaultInjector {
+    fn default() -> Self {
+        Self::disarmed()
+    }
+}
+
+impl FaultInjector {
+    /// No faults; every probe is a single cold branch.
+    pub fn disarmed() -> Self {
+        Self { armed: false, points: [None, None, None, None] }
+    }
+
+    /// Parse a spec like `pool.alloc=nth:5,block.corrupt=prob:0.125`.
+    /// Entries are comma-separated `point=kind:arg`; an empty spec is the
+    /// disarmed injector. `seed` feeds the `prob:` draws (each point's
+    /// stream is further decorrelated by its own name hash).
+    pub fn parse(spec: &str, seed: u64) -> Result<Self, String> {
+        let mut inj = Self::disarmed();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (name, sched) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("fault entry '{entry}' is not point=kind:arg"))?;
+            let point = FaultPoint::parse(name.trim()).ok_or_else(|| {
+                format!(
+                    "unknown fault point '{}' (known: {})",
+                    name.trim(),
+                    FaultPoint::ALL.map(FaultPoint::name).join(", ")
+                )
+            })?;
+            let (kind, arg) = sched
+                .split_once(':')
+                .ok_or_else(|| format!("fault schedule '{sched}' is not kind:arg"))?;
+            let schedule = match kind.trim() {
+                "nth" => {
+                    let n: u64 = arg.trim().parse().map_err(|_| {
+                        format!("nth argument '{arg}' is not an integer")
+                    })?;
+                    if n == 0 {
+                        return Err("nth:0 — arrivals are 1-based".into());
+                    }
+                    Schedule::Nth(n)
+                }
+                "every" => {
+                    let n: u64 = arg.trim().parse().map_err(|_| {
+                        format!("every argument '{arg}' is not an integer")
+                    })?;
+                    if n == 0 {
+                        return Err("every:0 — period must be positive".into());
+                    }
+                    Schedule::Every(n)
+                }
+                "prob" => {
+                    let p: f64 = arg.trim().parse().map_err(|_| {
+                        format!("prob argument '{arg}' is not a number")
+                    })?;
+                    if !(p > 0.0 && p <= 1.0) {
+                        return Err(format!("prob {p} outside (0, 1]"));
+                    }
+                    Schedule::Prob(p)
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault schedule kind '{other}' (nth, every, prob)"
+                    ))
+                }
+            };
+            let idx = point.index();
+            if inj.points[idx].is_some() {
+                return Err(format!("fault point '{}' armed twice", point.name()));
+            }
+            // decorrelate the per-point prob streams: same injector seed,
+            // different points, different draws
+            let mut pseed = seed ^ GOLDEN;
+            for b in point.name().bytes() {
+                pseed = mix64(pseed ^ b as u64);
+            }
+            inj.points[idx] = Some(PointState {
+                schedule,
+                arrivals: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+                seed: pseed,
+            });
+            inj.armed = true;
+        }
+        Ok(inj)
+    }
+
+    /// Build from config, falling back to the `SIKV_FAULTS` /
+    /// `SIKV_FAULT_SEED` environment when the config spec is empty — the
+    /// CI chaos matrix arms the engine without touching config files.
+    pub fn from_config(spec: &str, seed: u64) -> Result<Self, String> {
+        if !spec.is_empty() {
+            return Self::parse(spec, seed);
+        }
+        match std::env::var("SIKV_FAULTS") {
+            Ok(env_spec) if !env_spec.is_empty() => {
+                let env_seed = std::env::var("SIKV_FAULT_SEED")
+                    .ok()
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(seed);
+                Self::parse(&env_spec, env_seed)
+            }
+            _ => Ok(Self::disarmed()),
+        }
+    }
+
+    /// Is any point armed?
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Probe the injection point: returns `true` when the armed schedule
+    /// says this arrival faults. Disarmed injectors return `false` after
+    /// a single branch; unarmed points after two.
+    #[inline]
+    pub fn should_fire(&self, point: FaultPoint) -> bool {
+        if !self.armed {
+            return false;
+        }
+        self.probe_armed(point)
+    }
+
+    #[cold]
+    fn probe_armed(&self, point: FaultPoint) -> bool {
+        let Some(st) = &self.points[point.index()] else {
+            return false;
+        };
+        let arrival = st.arrivals.fetch_add(1, Ordering::Relaxed) + 1;
+        let fire = match st.schedule {
+            Schedule::Nth(n) => arrival == n,
+            Schedule::Every(n) => arrival.is_multiple_of(n),
+            Schedule::Prob(p) => {
+                let z = mix64(st.seed.wrapping_add(arrival.wrapping_mul(GOLDEN)));
+                // 53 uniform mantissa bits in [0, 1)
+                ((z >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < p
+            }
+        };
+        if fire {
+            st.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Times `point` has fired so far.
+    pub fn fired(&self, point: FaultPoint) -> u64 {
+        self.points[point.index()]
+            .as_ref()
+            .map_or(0, |st| st.fired.load(Ordering::Relaxed))
+    }
+
+    /// Times `point` has been probed while armed.
+    pub fn arrivals(&self, point: FaultPoint) -> u64 {
+        self.points[point.index()]
+            .as_ref()
+            .map_or(0, |st| st.arrivals.load(Ordering::Relaxed))
+    }
+
+    /// Total fires across all points (the chaos summaries' headline).
+    pub fn total_fired(&self) -> u64 {
+        FaultPoint::ALL.into_iter().map(|p| self.fired(p)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_never_fires() {
+        let inj = FaultInjector::disarmed();
+        assert!(!inj.armed());
+        for _ in 0..100 {
+            assert!(!inj.should_fire(FaultPoint::PoolAlloc));
+        }
+        assert_eq!(inj.fired(FaultPoint::PoolAlloc), 0);
+        assert_eq!(inj.arrivals(FaultPoint::PoolAlloc), 0, "disarmed probes are free");
+    }
+
+    #[test]
+    fn nth_fires_exactly_once_at_n() {
+        let inj = FaultInjector::parse("pool.alloc=nth:5", 0).unwrap();
+        let fires: Vec<bool> =
+            (0..10).map(|_| inj.should_fire(FaultPoint::PoolAlloc)).collect();
+        assert_eq!(fires.iter().filter(|&&f| f).count(), 1);
+        assert!(fires[4], "1-based: the 5th arrival fires");
+        assert_eq!(inj.fired(FaultPoint::PoolAlloc), 1);
+        assert_eq!(inj.arrivals(FaultPoint::PoolAlloc), 10);
+    }
+
+    #[test]
+    fn every_fires_periodically() {
+        let inj = FaultInjector::parse("append.cache_full=every:3", 0).unwrap();
+        let fires: Vec<bool> = (0..9)
+            .map(|_| inj.should_fire(FaultPoint::AppendCacheFull))
+            .collect();
+        assert_eq!(fires, [false, false, true, false, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn prob_is_seed_deterministic_and_calibrated() {
+        let a = FaultInjector::parse("worker.panic=prob:0.25", 42).unwrap();
+        let b = FaultInjector::parse("worker.panic=prob:0.25", 42).unwrap();
+        let da: Vec<bool> = (0..2000).map(|_| a.should_fire(FaultPoint::WorkerPanic)).collect();
+        let db: Vec<bool> = (0..2000).map(|_| b.should_fire(FaultPoint::WorkerPanic)).collect();
+        assert_eq!(da, db, "same seed, same arrival index, same decision");
+        let rate = a.fired(FaultPoint::WorkerPanic) as f64 / 2000.0;
+        assert!((rate - 0.25).abs() < 0.05, "empirical rate {rate} far from 0.25");
+        let c = FaultInjector::parse("worker.panic=prob:0.25", 43).unwrap();
+        let dc: Vec<bool> = (0..2000).map(|_| c.should_fire(FaultPoint::WorkerPanic)).collect();
+        assert_ne!(da, dc, "different seed, different stream");
+    }
+
+    #[test]
+    fn multi_point_specs_parse_and_stay_independent() {
+        let inj =
+            FaultInjector::parse(" pool.alloc=nth:1 , block.corrupt=every:2 ", 7).unwrap();
+        assert!(inj.should_fire(FaultPoint::PoolAlloc));
+        assert!(!inj.should_fire(FaultPoint::PoolAlloc));
+        assert!(!inj.should_fire(FaultPoint::BlockCorrupt));
+        assert!(inj.should_fire(FaultPoint::BlockCorrupt));
+        assert!(!inj.should_fire(FaultPoint::WorkerPanic), "unarmed point never fires");
+        assert_eq!(inj.total_fired(), 2);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            "pool.malloc=nth:1",   // unknown point
+            "pool.alloc",          // no schedule
+            "pool.alloc=nth",      // no argument
+            "pool.alloc=nth:0",    // 1-based arrivals
+            "pool.alloc=every:0",  // zero period
+            "pool.alloc=prob:0.0", // never fires: spec bug, say so
+            "pool.alloc=prob:1.5", // not a probability
+            "pool.alloc=often:2",  // unknown kind
+            "pool.alloc=nth:1,pool.alloc=nth:2", // armed twice
+        ] {
+            assert!(FaultInjector::parse(bad, 0).is_err(), "{bad} must be rejected");
+        }
+        assert!(!FaultInjector::parse("", 0).unwrap().armed(), "empty spec = disarmed");
+    }
+}

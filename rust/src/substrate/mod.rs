@@ -10,6 +10,7 @@
 //! * [`json`]     — JSON parser/serializer (configs, manifest)
 //! * [`cli`]      — declarative argument parser
 //! * [`exec`]     — thread-pool executor + scoped parallelism
+//! * [`faults`]   — deterministic seeded fault injection (chaos testing)
 //! * [`prop`]     — property-based testing (generate / shrink / run)
 //! * [`benchkit`] — measurement harness (warmup, percentiles, throughput)
 //! * [`metrics`]  — counters / gauges / histograms registry
@@ -18,6 +19,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod error;
 pub mod exec;
+pub mod faults;
 pub mod json;
 pub mod metrics;
 pub mod prop;

@@ -1,0 +1,467 @@
+//! Chaos suite: the hardened serving lifecycle under deterministic,
+//! seeded fault injection (`substrate::faults`).
+//!
+//! The loop below mirrors `Engine::step`'s hardened policy — prefill
+//! under `catch_unwind` charging the preemption budget, decode fan-out
+//! through `HeadTask::run_isolated`, pin-after-N aging, the 2N thrashing
+//! cutoff, step deadlines, and `StepPlan::Shed` — minus the PJRT
+//! boundary, so it runs without artifacts (same trade as
+//! `tests/memory_manager.rs`).
+//!
+//! Invariants asserted across every scenario:
+//! * no fault schedule panics the process — every request ends in a
+//!   structured [`Fin`];
+//! * the pool drains leak-free (`free_blocks == capacity_blocks`);
+//! * requests untouched by a fault finish **bit-identical** to the
+//!   fault-free baseline (greedy recomputation is deterministic).
+//!
+//! `SIKV_CHAOS_SEED` (default 1) seeds the probabilistic scenarios; CI
+//! runs the suite across a seed matrix and uploads the
+//! `CHAOS_summary.json` written at the end.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use selfindex_kv::coordinator::{PoolPressure, Scheduler, StepPlan};
+use selfindex_kv::kvcache::manager::KvManager;
+use selfindex_kv::kvcache::RecordLayout;
+use selfindex_kv::method::registry::{lookup, BuildCtx};
+use selfindex_kv::method::{DecodePlan, HeadTask, SequenceCache};
+use selfindex_kv::selfindex::SelfIndexConfig;
+use selfindex_kv::substrate::faults::FaultInjector;
+use selfindex_kv::substrate::json::Json;
+use selfindex_kv::substrate::rng::Rng;
+
+const DIM: usize = 64;
+const LAYERS: usize = 1;
+const KVH: usize = 1;
+const R: usize = 1;
+const BT: usize = 64;
+const BUDGET: usize = 32;
+const PROMPT: usize = 128;
+
+/// Deterministic per-content prompt K/V (kv-head-major, one layer).
+fn prompt_kv(content: u64, tokens: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut r = Rng::new(0x9000 + content);
+    let keys = (0..KVH * tokens * DIM).map(|_| r.normal_f32()).collect();
+    let vals = (0..KVH * tokens * DIM).map(|_| r.normal_f32()).collect();
+    (keys, vals)
+}
+
+/// Deterministic per-(content, step) decode inputs — recomputation after
+/// eviction replays the identical stream, making outputs bit-exact.
+fn step_rows(content: u64, step: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut r = Rng::new(content * 10_000 + step as u64 + 1);
+    let k = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
+    let v = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
+    let q = (0..KVH * R * DIM).map(|_| r.normal_f32()).collect();
+    (k, v, q)
+}
+
+/// `(content, max_new, deadline_step)` — content keys the deterministic
+/// prompt/decode streams, so two requests with equal content are
+/// byte-identical submissions (and share prefix blocks).
+type Spec = (u64, usize, Option<u64>);
+
+/// Structured terminal state — the harness's `Outcome` mirror.
+#[derive(Clone, Debug, PartialEq)]
+enum Fin {
+    /// last decode step's attention output
+    Completed(Vec<f32>),
+    Thrashing,
+    WorkerPanic,
+    DeadlineExceeded { steps_done: usize },
+}
+
+struct Running {
+    cache: Box<dyn SequenceCache>,
+    steps_done: usize,
+    out: Vec<f32>,
+}
+
+struct ChaosRun {
+    /// terminal state per request, same order as the spec slice
+    fins: Vec<Fin>,
+    evictions: usize,
+    integrity_failures: u64,
+    prefix_hits: u64,
+    drained: bool,
+}
+
+impl ChaosRun {
+    fn completed(&self, i: usize) -> &[f32] {
+        match &self.fins[i] {
+            Fin::Completed(out) => out,
+            other => panic!("request {i} expected Completed, got {other:?}"),
+        }
+    }
+
+    fn count(&self, pred: fn(&Fin) -> bool) -> usize {
+        self.fins.iter().filter(|&f| pred(f)).count()
+    }
+}
+
+/// The engine's hardened serving policy, verbatim: admit from the FIFO
+/// stash (then the queue) with prefill contained by `catch_unwind`,
+/// decode through `run_isolated`, expire deadlines against the step
+/// counter, charge every eviction to the request's preemption budget.
+fn run_chaos(
+    faults_spec: &str,
+    fault_seed: u64,
+    capacity_blocks: usize,
+    preempt_budget: u32,
+    max_batch: usize,
+    reqs: &[Spec],
+) -> ChaosRun {
+    let si = SelfIndexConfig::default();
+    let faults = Arc::new(FaultInjector::parse(faults_spec, fault_seed).unwrap());
+    let mgr = Arc::new(KvManager::with_faults(
+        RecordLayout::new(DIM, &si),
+        BT,
+        capacity_blocks,
+        Arc::clone(&faults),
+    ));
+    let entry = lookup("selfindex").unwrap();
+    let overlay = vec![];
+
+    let n = reqs.len();
+    let mut scheduler = Scheduler::new(max_batch);
+    let mut queue: VecDeque<usize> = (0..n).collect();
+    let mut stash: VecDeque<usize> = VecDeque::new();
+    let mut running: HashMap<usize, Running> = HashMap::new();
+    let mut fins: Vec<Option<Fin>> = vec![None; n];
+    let mut evict_count = vec![0u32; n];
+    let mut evictions = 0usize;
+    let mut step: u64 = 0;
+
+    for _ in 0..200_000 {
+        if queue.is_empty() && stash.is_empty() && running.is_empty() {
+            return ChaosRun {
+                fins: fins.into_iter().map(Option::unwrap).collect(),
+                evictions,
+                integrity_failures: mgr.integrity_failures(),
+                prefix_hits: mgr.prefix_hits(),
+                drained: mgr.pool().free_blocks() == mgr.pool().capacity_blocks(),
+            };
+        }
+        step += 1;
+
+        // deadlines first, against the pre-plan counter: running expire
+        // with partial progress, stashed/queued with none
+        let mut expired: Vec<u64> = scheduler
+            .running()
+            .iter()
+            .copied()
+            .filter(|&id| reqs[id as usize].2.is_some_and(|d| step >= d))
+            .collect();
+        expired.sort_unstable();
+        for id in expired {
+            let st = running.remove(&(id as usize)).unwrap();
+            scheduler.remove(id);
+            fins[id as usize] = Some(Fin::DeadlineExceeded { steps_done: st.steps_done });
+        }
+        for waiting in [&mut stash, &mut queue] {
+            waiting.retain(|&i| {
+                if reqs[i].2.is_some_and(|d| step >= d) {
+                    fins[i] = Some(Fin::DeadlineExceeded { steps_done: 0 });
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+
+        let candidate = stash.front().or_else(|| queue.front()).copied();
+        let pressure = PoolPressure {
+            free_blocks: mgr.pool().free_blocks(),
+            admit_blocks: candidate
+                .map(|_| entry.head_blocks_for_prompt(PROMPT, BT) * LAYERS * KVH),
+            step_blocks: scheduler
+                .running()
+                .iter()
+                .map(|id| running[&(*id as usize)].cache.step_blocks())
+                .sum(),
+        };
+        match scheduler.plan(&pressure) {
+            StepPlan::Prefill => {
+                let i = stash.pop_front().or_else(|| queue.pop_front()).unwrap();
+                let content = reqs[i].0;
+                let ctx = BuildCtx {
+                    dim: DIM,
+                    n_layers: LAYERS,
+                    kv_heads: KVH,
+                    gqa_ratio: R,
+                    budget_hint: PROMPT,
+                    mgr: &mgr,
+                    selfindex: &si,
+                    overlay: &overlay,
+                    prompt_hash: u128::from(content + 1),
+                };
+                // prefill containment: a panic (injected alloc fault, real
+                // exhaustion) drops the partial cache — blocks released —
+                // and charges one eviction
+                let built = catch_unwind(AssertUnwindSafe(|| {
+                    let mut cache = entry.build_seq(&ctx);
+                    let (keys, vals) = prompt_kv(content, PROMPT);
+                    for l in 0..LAYERS {
+                        cache.prefill_layer(l, &keys, &vals, &[]);
+                    }
+                    cache
+                }));
+                match built {
+                    Ok(cache) => {
+                        running.insert(
+                            i,
+                            Running { cache, steps_done: 0, out: vec![0.0; KVH * R * DIM] },
+                        );
+                        scheduler.add_running(i as u64);
+                        if evict_count[i] >= preempt_budget {
+                            scheduler.pin(i as u64);
+                        }
+                    }
+                    Err(_) => {
+                        evictions += 1;
+                        evict_count[i] += 1;
+                        if evict_count[i] > 2 * preempt_budget {
+                            fins[i] = Some(Fin::Thrashing);
+                        } else {
+                            stash.push_back(i);
+                        }
+                    }
+                }
+            }
+            StepPlan::Decode(ids) => {
+                for id in ids {
+                    let i = id as usize;
+                    let st = running.get_mut(&i).unwrap();
+                    let (k, v, q) = step_rows(reqs[i].0, st.steps_done);
+                    let mut step_failed = false;
+                    let mut step_panicked = false;
+                    for l in 0..LAYERS {
+                        let plan = DecodePlan {
+                            layer: l,
+                            dim: DIM,
+                            kv_heads: KVH,
+                            gqa_ratio: R,
+                            budget: BUDGET,
+                            k_rows: &k,
+                            v_rows: &v,
+                            queries: &q,
+                        };
+                        st.out.fill(0.0);
+                        let mut tasks: Vec<HeadTask> = Vec::new();
+                        st.cache.push_tasks(&plan, &mut st.out, &mut tasks);
+                        for t in tasks.iter_mut() {
+                            t.run_isolated(&faults);
+                        }
+                        step_failed |= tasks.iter().any(|t| t.failed);
+                        step_panicked |= tasks.iter().any(|t| t.panicked);
+                    }
+                    if step_panicked {
+                        // worker panic: the sequence's state is suspect —
+                        // fail it, release its blocks, keep the batch
+                        running.remove(&i);
+                        scheduler.remove(id);
+                        fins[i] = Some(Fin::WorkerPanic);
+                    } else if step_failed {
+                        // mid-step exhaustion: eviction + budget charge
+                        running.remove(&i);
+                        scheduler.remove(id);
+                        evictions += 1;
+                        evict_count[i] += 1;
+                        if evict_count[i] > 2 * preempt_budget {
+                            fins[i] = Some(Fin::Thrashing);
+                        } else {
+                            stash.push_back(i);
+                        }
+                    } else {
+                        st.steps_done += 1;
+                        if st.steps_done == reqs[i].1 {
+                            let st = running.remove(&i).unwrap();
+                            scheduler.remove(id);
+                            fins[i] = Some(Fin::Completed(st.out));
+                        }
+                    }
+                }
+            }
+            StepPlan::Preempt(id) => {
+                let i = id as usize;
+                let st = running.remove(&i).unwrap();
+                scheduler.remove(id);
+                drop(st); // the cache's Drop releases its pool blocks
+                evictions += 1;
+                evict_count[i] += 1;
+                if evict_count[i] > 2 * preempt_budget {
+                    fins[i] = Some(Fin::Thrashing);
+                } else {
+                    stash.push_back(i);
+                }
+            }
+            StepPlan::Shed(id) => {
+                // all running pinned and the step cannot fit: fail the
+                // youngest structurally instead of livelocking
+                let i = id as usize;
+                running.remove(&i);
+                scheduler.remove(id);
+                fins[i] = Some(Fin::Thrashing);
+            }
+            StepPlan::Idle => {}
+        }
+    }
+    panic!("chaos trace did not converge (livelock in the hardened policy)");
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("SIKV_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+fn scenario_json(run: &ChaosRun) -> Json {
+    let completed = run.count(|f| matches!(f, Fin::Completed(_)));
+    let thrashing = run.count(|f| matches!(f, Fin::Thrashing));
+    let panicked = run.count(|f| matches!(f, Fin::WorkerPanic));
+    let expired = run.count(|f| matches!(f, Fin::DeadlineExceeded { .. }));
+    let mut m = BTreeMap::new();
+    m.insert("completed".to_string(), Json::Num(completed as f64));
+    m.insert("thrashing".to_string(), Json::Num(thrashing as f64));
+    m.insert("worker_panic".to_string(), Json::Num(panicked as f64));
+    m.insert("deadline_exceeded".to_string(), Json::Num(expired as f64));
+    m.insert("evictions".to_string(), Json::Num(run.evictions as f64));
+    let integrity = run.integrity_failures as f64;
+    m.insert("integrity_failures".to_string(), Json::Num(integrity));
+    m.insert("drained".to_string(), Json::Bool(run.drained));
+    Json::Obj(m)
+}
+
+#[test]
+fn chaos_suite() {
+    let seed = chaos_seed();
+    let mut summary = BTreeMap::new();
+    summary.insert("seed".to_string(), Json::Num(seed as f64));
+    let work: Vec<Spec> = vec![(0, 20, None), (1, 20, None), (2, 20, None)];
+
+    // -- baseline: disarmed injector is the bit-exactness reference -----
+    let baseline = run_chaos("", 0, 64, 4, 3, &work);
+    assert_eq!(baseline.count(|f| matches!(f, Fin::Completed(_))), 3);
+    assert_eq!(baseline.evictions, 0, "64 blocks never evict this mix");
+    assert!(baseline.drained, "pool must drain leak-free");
+    summary.insert("baseline".to_string(), scenario_json(&baseline));
+
+    // -- injected allocation failures: evict + recompute, never corrupt -
+    let alloc = run_chaos("pool.alloc=prob:0.1", seed, 64, 16, 3, &work);
+    for i in 0..work.len() {
+        assert_eq!(
+            alloc.completed(i),
+            baseline.completed(i),
+            "request {i}: eviction-and-recompute must be bit-identical"
+        );
+    }
+    assert!(alloc.drained, "every injected alloc failure must leak nothing");
+    summary.insert("alloc_faults".to_string(), scenario_json(&alloc));
+
+    // -- one injected worker panic: fails exactly one request ----------
+    let panic_run = run_chaos("worker.panic=nth:40", 0, 64, 4, 3, &work);
+    assert_eq!(
+        panic_run.count(|f| matches!(f, Fin::WorkerPanic)),
+        1,
+        "an nth schedule panics exactly one (sequence, head) task"
+    );
+    assert_eq!(panic_run.count(|f| matches!(f, Fin::Completed(_))), 2);
+    for i in 0..work.len() {
+        if let Fin::Completed(out) = &panic_run.fins[i] {
+            assert_eq!(
+                out.as_slice(),
+                baseline.completed(i),
+                "request {i} untouched by the panic must be bit-identical"
+            );
+        }
+    }
+    assert!(panic_run.drained, "the failed request's blocks are released");
+    summary.insert("worker_panic".to_string(), scenario_json(&panic_run));
+
+    // -- injected block corruption: checksum at adoption, fallback ------
+    let shared: Vec<Spec> = vec![(7, 12, None), (7, 12, None)];
+    let solo = run_chaos("", 0, 64, 4, 1, &[(7, 12, None)]);
+    let clean = run_chaos("", 0, 64, 4, 2, &shared);
+    assert_eq!(clean.completed(0), solo.completed(0));
+    assert_eq!(clean.completed(1), solo.completed(0), "sharing is bit-exact");
+    let corrupt = run_chaos("block.corrupt=nth:1", 0, 64, 4, 2, &shared);
+    assert!(
+        corrupt.integrity_failures >= 1,
+        "the adopter must detect the flipped bit at adoption"
+    );
+    assert!(
+        corrupt.prefix_hits >= 1,
+        "uncorrupted prefix blocks still adopt"
+    );
+    assert_eq!(
+        corrupt.completed(1),
+        solo.completed(0),
+        "adoption of a corrupted block falls back to a fresh encode — \
+         never silent corruption"
+    );
+    assert!(matches!(corrupt.fins[0], Fin::Completed(_)));
+    assert!(corrupt.drained);
+    summary.insert("block_corrupt".to_string(), scenario_json(&corrupt));
+
+    // -- thrashing cutoff: a working set the pool can never hold -------
+    // 128-token prompt + 80 decode steps wants 4 blocks; 3 exist. Each
+    // retry charges the budget (1): evictions 1, 2, then 3 > 2×budget.
+    let thrash = run_chaos("", 0, 3, 1, 2, &[(9, 80, None)]);
+    assert_eq!(thrash.fins[0], Fin::Thrashing, "structured, not a livelock");
+    assert_eq!(thrash.evictions, 3, "pin → retry → 2N cutoff");
+    assert!(thrash.drained);
+    summary.insert("thrash".to_string(), scenario_json(&thrash));
+
+    // -- injected CacheFull on append: one eviction, bit-exact finish --
+    let append = run_chaos("append.cache_full=nth:2", 0, 64, 4, 3, &work);
+    assert!(append.evictions >= 1, "the injected CacheFull must evict");
+    for i in 0..work.len() {
+        assert_eq!(append.completed(i), baseline.completed(i));
+    }
+    assert!(append.drained);
+    summary.insert("append_full".to_string(), scenario_json(&append));
+
+    // -- deadlines: partial output for running, empty for queued -------
+    let dl = run_chaos("", 0, 64, 4, 1, &[(0, 40, Some(10)), (1, 40, Some(5))]);
+    match dl.fins[0] {
+        Fin::DeadlineExceeded { steps_done } => {
+            assert!(steps_done > 0, "the running request keeps partial output");
+            assert!(steps_done < 40, "it expired before completing");
+        }
+        ref other => panic!("request 0 expected DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(
+        dl.fins[1],
+        Fin::DeadlineExceeded { steps_done: 0 },
+        "a request that never left the queue expires with no output"
+    );
+    assert!(dl.drained);
+    summary.insert("deadline".to_string(), scenario_json(&dl));
+
+    // -- seeded sweep: alloc + append + panic armed at once ------------
+    // No bit-exactness claim — the invariants are: the process never
+    // panics, every request reaches a structured terminal state, and the
+    // pool drains regardless of which faults fired.
+    let sweep_work: Vec<Spec> = (0..5).map(|c| (c, 16, None)).collect();
+    let sweep = run_chaos(
+        "pool.alloc=prob:0.05,append.cache_full=prob:0.05,worker.panic=prob:0.02",
+        seed,
+        16,
+        4,
+        3,
+        &sweep_work,
+    );
+    assert_eq!(sweep.fins.len(), sweep_work.len(), "every request terminal");
+    assert!(sweep.drained, "no fault mix may leak blocks");
+    summary.insert("sweep".to_string(), scenario_json(&sweep));
+
+    std::fs::write(
+        "CHAOS_summary.json",
+        format!("{}\n", Json::Obj(summary)),
+    )
+    .expect("write CHAOS_summary.json");
+}

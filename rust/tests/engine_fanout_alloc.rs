@@ -54,6 +54,7 @@ fn engine_fanout_is_allocation_free_at_steady_state() {
         mgr: &mgr,
         selfindex: &si,
         overlay: &overlay,
+        prompt_hash: 0,
     };
     let entry = lookup("selfindex").unwrap();
 

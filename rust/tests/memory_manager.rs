@@ -83,6 +83,7 @@ fn run_trace(
         mgr,
         selfindex: &si,
         overlay: &overlay,
+        prompt_hash: 0,
     };
 
     let mut scheduler = Scheduler::new(max_batch);
@@ -163,6 +164,7 @@ fn run_trace(
                 stash.push_back(id);
                 preemptions += 1;
             }
+            StepPlan::Shed(_) => unreachable!("no pinned sequences in this trace"),
             StepPlan::Idle => {}
         }
         peak = peak.max(mgr.pool().used_blocks());
@@ -221,6 +223,7 @@ fn identical_prompts_share_prefix_blocks_and_attend_bit_exact() {
         mgr: &shared,
         selfindex: &si,
         overlay: &overlay,
+        prompt_hash: 0,
     };
     let (keys, vals) = prompt_kv(77, 256); // exactly 4 full blocks
 
@@ -256,6 +259,7 @@ fn identical_prompts_share_prefix_blocks_and_attend_bit_exact() {
         mgr: &solo_mgr,
         selfindex: &si,
         overlay: &overlay,
+        prompt_hash: 0,
     };
     let mut solo = entry.build_seq(&solo_ctx);
     solo.prefill_layer(0, &keys, &vals, &[]);
@@ -325,9 +329,11 @@ fn exhausted_append_flags_the_task_instead_of_panicking() {
         budget: BUDGET,
         out: &mut out,
         failed: false,
+        panicked: false,
     };
     task.run();
     assert!(task.failed, "pool exhaustion must flag the task");
+    assert!(!task.panicked, "exhaustion is a clean failure, not a panic");
     assert!(out.iter().all(|&x| x == 0.0), "failed task leaves out zeroed");
 
     // the sequence is still coherent: attention over the existing cache
