@@ -19,14 +19,22 @@ use selfindex_kv::baselines::AttentionMethod;
 use selfindex_kv::kvcache::manager::KvManager;
 use selfindex_kv::kvcache::sink::SinkStore;
 use selfindex_kv::kvcache::store::HeadCache;
+use selfindex_kv::quant::pack;
 use selfindex_kv::selfindex::codebook::CodebookBuilder;
+use selfindex_kv::selfindex::codes::sign_code;
 use selfindex_kv::selfindex::lut::Lut;
-use selfindex_kv::selfindex::score::{exact_scores, score_tokens_bytelut, ByteLut};
+use selfindex_kv::selfindex::score::{
+    exact_scores, popcnt_kernel_name, score_block_bytelut, score_block_popcnt,
+    score_block_popcnt_scalar, score_tokens_bytelut, BlockScorer, ByteLut,
+};
 use selfindex_kv::selfindex::SelfIndexConfig;
 use selfindex_kv::attention::dense::attend_dense;
 use selfindex_kv::attention::sparse::{attend_sparse_fused, SparseAttnScratch};
 use selfindex_kv::selfindex::topk::{top_k_indices, TopKStream};
-use selfindex_kv::substrate::benchkit::{fmt_duration, Bench, StageTimer, Table};
+use selfindex_kv::substrate::benchkit::{
+    fmt_duration, write_bench_json, Bench, StageTimer, Table,
+};
+use selfindex_kv::substrate::json::{num, obj, s};
 
 fn main() {
     let tokens = if common::fast_mode() { 2048 } else { 16384 };
@@ -188,7 +196,82 @@ fn main() {
     at.row(vec!["nibble LUT (G lookups)".into(),
                 fmt_duration(s_nib.mean),
                 format!("{:.2}x", s_nib.mean.as_secs_f64() / s_byte.mean.as_secs_f64())]);
+
+    // popcount rows (§Perf iteration 8): same workload scored as
+    // XOR+popcount over the word-packed sign codes — block-kernel
+    // apples-to-apples against the block byte-LUT scorer
+    let q_codes: Vec<u8> = query.chunks_exact(4).map(sign_code).collect();
+    let q_packed = pack::pack_codes(&q_codes);
+    let q_words = pack::pack_signs_u64(&q_packed, 1, dim / 8);
+    let words = pack::pack_signs_u64(&packed, tokens, dim / 8);
+    let mut block_out = vec![0.0f32; tokens];
+    let s_blk = bench.run(|| {
+        std::hint::black_box(score_block_bytelut(
+            &blut2,
+            std::hint::black_box(&packed),
+            tokens,
+            &mut block_out,
+        ));
+    });
+    let s_pop = bench.run(|| {
+        std::hint::black_box(score_block_popcnt(
+            &q_words,
+            std::hint::black_box(&words),
+            tokens,
+            dim,
+            &mut block_out,
+        ));
+    });
+    let s_pop_scalar = bench.run(|| {
+        std::hint::black_box(score_block_popcnt_scalar(
+            &q_words,
+            std::hint::black_box(&words),
+            tokens,
+            dim,
+            &mut block_out,
+        ));
+    });
+    let kernel = popcnt_kernel_name(q_words.len());
+    let popcnt_vs_bytelut = s_blk.mean.as_secs_f64() / s_pop.mean.as_secs_f64();
+    at.row(vec!["byte-LUT block kernel (8-tok unroll)".into(),
+                fmt_duration(s_blk.mean),
+                format!("{:.2}x", s_blk.mean.as_secs_f64() / s_byte.mean.as_secs_f64())]);
+    at.row(vec![format!("popcount block kernel ({kernel})"),
+                fmt_duration(s_pop.mean),
+                format!("{:.2}x", s_pop.mean.as_secs_f64() / s_byte.mean.as_secs_f64())]);
+    at.row(vec!["popcount scalar (always-compiled)".into(),
+                fmt_duration(s_pop_scalar.mean),
+                format!("{:.2}x",
+                        s_pop_scalar.mean.as_secs_f64() / s_byte.mean.as_secs_f64())]);
     println!("{}", at.render());
+    println!(
+        "popcount vs byte-LUT block kernel: {popcnt_vs_bytelut:.2}x \
+         (bench gate: >= 1.0x)\n"
+    );
+
+    let score_payload = obj(vec![
+        ("bench", s("score_kernels")),
+        ("context_tokens", num(tokens as f64)),
+        ("bytelut_us", num(s_byte.mean.as_secs_f64() * 1e6)),
+        ("nibble_us", num(s_nib.mean.as_secs_f64() * 1e6)),
+        ("bytelut_block_us", num(s_blk.mean.as_secs_f64() * 1e6)),
+        ("popcnt_us", num(s_pop.mean.as_secs_f64() * 1e6)),
+        ("popcnt_scalar_us", num(s_pop_scalar.mean.as_secs_f64() * 1e6)),
+        ("popcnt_kernel", s(kernel)),
+        ("popcnt_vs_bytelut", num(popcnt_vs_bytelut)),
+        (
+            "popcnt_tokens_per_sec",
+            num(tokens as f64 / s_pop.mean.as_secs_f64()),
+        ),
+        (
+            "bytelut_tokens_per_sec",
+            num(tokens as f64 / s_blk.mean.as_secs_f64()),
+        ),
+    ]);
+    match write_bench_json("score", score_payload) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("failed to write BENCH_score.json: {e}"),
+    }
 
     // ---------------- per-stage decode decomposition --------------------
     // The fused pipeline has no standalone "select" stage: scoring and
@@ -215,9 +298,16 @@ fn main() {
     bench.run(|| {
         fused_stages.time("score+select", || {
             // the exact pipeline the serving path runs (shared impl)
+            let scorer = BlockScorer::ByteLut(&blut);
             hc.stream_select(
-                pool, &blut, tokens, &[], budget,
-                &mut block_scores, &mut selector, &mut sel_out,
+                pool,
+                &scorer,
+                tokens,
+                &[],
+                budget,
+                &mut block_scores,
+                &mut selector,
+                &mut sel_out,
             );
         });
         std::hint::black_box(&sel_out);

@@ -15,10 +15,12 @@ use crate::kvcache::manager::KvManager;
 use crate::kvcache::pool::BlockPool;
 use crate::kvcache::sink::{snapkv_select, SinkStore};
 use crate::kvcache::store::{CacheFull, HeadCache};
+use crate::quant::pack;
+use crate::selfindex::codes::sign_code;
 use crate::selfindex::lut::Lut;
-use crate::selfindex::score::ByteLut;
+use crate::selfindex::score::{BlockScorer, ByteLut};
 use crate::selfindex::topk::TopKStream;
-use crate::selfindex::SelfIndexConfig;
+use crate::selfindex::{Scorer, SelfIndexConfig};
 
 /// Per-head scratch arenas for the fused one-pass retrieval pipeline.
 /// Everything a decode step touches is preallocated here and reused, so
@@ -27,6 +29,13 @@ use crate::selfindex::SelfIndexConfig;
 struct RetrievalScratch {
     lut: Lut,
     blut: ByteLut,
+    /// popcount-scorer arenas (only touched when `cfg.scorer` is
+    /// `Popcnt`): summed GQA query, its nibble sign codes, the packed
+    /// bytes, and the word-packed form the kernel XORs against
+    q_sum: Vec<f32>,
+    q_codes: Vec<u8>,
+    q_packed: Vec<u8>,
+    q_words: Vec<u64>,
     /// one block's worth of scores (sized to the pool's block_tokens)
     block_scores: Vec<f32>,
     selector: TopKStream,
@@ -38,6 +47,10 @@ impl RetrievalScratch {
         Self {
             lut: Lut::empty(groups),
             blut: ByteLut::empty(),
+            q_sum: vec![],
+            q_codes: vec![],
+            q_packed: vec![],
+            q_words: vec![],
             block_scores: vec![],
             selector: TopKStream::new(0),
             selected: vec![],
@@ -128,11 +141,36 @@ impl SelfIndexing {
         let pool = self.mgr.pool();
         let cache = &self.cache;
         let r = &mut self.retrieval;
-        r.lut.rebuild(&queries[..dim], cache.codebook());
-        for q in queries[dim..].chunks_exact(dim) {
-            r.lut.add_query(q, cache.codebook());
+        match self.cfg.scorer {
+            Scorer::ByteLut => {
+                r.lut.rebuild(&queries[..dim], cache.codebook());
+                for q in queries[dim..].chunks_exact(dim) {
+                    r.lut.add_query(q, cache.codebook());
+                }
+                r.blut.rebuild(&r.lut);
+            }
+            Scorer::Popcnt => {
+                // GQA analogue of summed LUTs: sum the R query heads,
+                // then take the sign plane of the sum — one XOR+popcount
+                // pass for the whole group
+                r.q_sum.clear();
+                r.q_sum.extend_from_slice(&queries[..dim]);
+                for q in queries[dim..].chunks_exact(dim) {
+                    for (a, &b) in r.q_sum.iter_mut().zip(q) {
+                        *a += b;
+                    }
+                }
+                r.q_codes.clear();
+                r.q_codes.extend(r.q_sum.chunks_exact(4).map(sign_code));
+                pack::pack_codes_into(&r.q_codes, &mut r.q_packed);
+                pack::pack_signs_u64_into(
+                    &r.q_packed,
+                    1,
+                    pool.layout.codes_bytes,
+                    &mut r.q_words,
+                );
+            }
         }
-        r.blut.rebuild(&r.lut);
 
         // recent fp rows always attend: exclude them by scoring only the
         // prefix (index arithmetic, pass 0 work)
@@ -141,10 +179,14 @@ impl SelfIndexing {
 
         // sinks always attend via the fp sink store — stream_select skips
         // them by index arithmetic over the sorted id list
-        let RetrievalScratch { blut, block_scores, selector, selected, .. } = r;
+        let RetrievalScratch { blut, q_words, block_scores, selector, selected, .. } = r;
+        let scorer = match self.cfg.scorer {
+            Scorer::ByteLut => BlockScorer::ByteLut(blut),
+            Scorer::Popcnt => BlockScorer::Popcnt { q_words: q_words.as_slice(), dim },
+        };
         cache.stream_select(
             pool,
-            blut,
+            &scorer,
             end,
             &self.sink_ids,
             k,
@@ -502,6 +544,72 @@ mod tests {
         }
         let delta = thread_allocations() - before;
         assert_eq!(delta, 0, "fused decode step allocated {delta} times");
+        assert!(outs.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn popcnt_scorer_retrieves_planted_needles() {
+        // end-to-end through the popcount kernel: needles aligned with
+        // the query at 10× magnitude keep their sign plane through
+        // channel-mean centering, so sign-agreement scoring must rank
+        // them above gaussian background keys
+        let dim = 64;
+        let (mut keys, vals, query) = clustered(11, 1024, dim, 4.0);
+        let needles = [33usize, 500, 900];
+        for &t in &needles {
+            for j in 0..dim {
+                keys[t * dim + j] = 10.0 * query[j];
+            }
+        }
+        let mut cfg = SelfIndexConfig::default();
+        cfg.scorer = Scorer::Popcnt;
+        let mut ours = SelfIndexing::new(dim, cfg);
+        ours.prefill(&keys, &vals, &[], 1);
+        ours.fused_select(&query, 96);
+        let selected = ours.retrieval.selected.clone();
+        for &t in &needles {
+            assert!(
+                selected.contains(&(t as u32)) || ours.sink_ids.contains(&(t as u32)),
+                "needle {t} missing from popcnt selection {selected:?}"
+            );
+        }
+        // and the full attend path runs on the same kernel
+        let mut out = vec![0.0; dim];
+        ours.attend(&query, 96, &mut out);
+        assert!(out.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn popcnt_decode_step_is_allocation_free() {
+        // same guarantee as `decode_step_is_allocation_free`, through the
+        // popcount scorer: the q_sum/q_codes/q_packed/q_words arenas must
+        // reach steady-state capacity during warmup and never reallocate
+        use crate::substrate::metrics::thread_allocations;
+        let dim = 64;
+        let (keys, vals, query) = clustered(12, 2048, dim, 4.0);
+        let mut cfg = SelfIndexConfig::default();
+        cfg.scorer = Scorer::Popcnt;
+        let mut ours = SelfIndexing::new(dim, cfg);
+        ours.prefill(&keys, &vals, &[], 1);
+        let r = 4;
+        let queries: Vec<f32> = (0..r).flat_map(|_| query.clone()).collect();
+        let mut outs = vec![0.0f32; r * dim];
+        let mut out = vec![0.0f32; dim];
+        for i in 0..72 {
+            let k = &keys[(i % 256) * dim..(i % 256 + 1) * dim];
+            ours.append(k, k);
+            ours.attend_group(&queries, dim, 96, &mut outs);
+            ours.attend(&query, 96, &mut out);
+        }
+        let before = thread_allocations();
+        for i in 0..8 {
+            let k = &keys[(i % 256) * dim..(i % 256 + 1) * dim];
+            ours.append(k, k);
+            ours.attend_group(&queries, dim, 96, &mut outs);
+            ours.attend(&query, 96, &mut out);
+        }
+        let delta = thread_allocations() - before;
+        assert_eq!(delta, 0, "popcnt decode step allocated {delta} times");
         assert!(outs.iter().any(|&x| x != 0.0));
     }
 

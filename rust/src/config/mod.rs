@@ -202,6 +202,11 @@ impl EngineConfig {
         if let Some(x) = v.path("selfindex.use_sinks").and_then(Json::as_bool) {
             si.use_sinks = x;
         }
+        if let Some(x) = v.path("selfindex.scorer").and_then(Json::as_str) {
+            si.scorer = crate::selfindex::Scorer::parse(x).ok_or_else(|| {
+                format!("selfindex.scorer '{x}' unknown (expects bytelut or popcnt)")
+            })?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -298,6 +303,21 @@ mod tests {
         assert_eq!(e.sparse_k, None);
         assert_eq!(e.selfindex.sink_tokens, 32);
         assert!(!e.selfindex.use_sinks);
+    }
+
+    #[test]
+    fn selfindex_scorer_parses_and_rejects_unknown() {
+        use crate::selfindex::Scorer;
+        let j = Json::parse(r#"{"selfindex":{"scorer":"popcnt"}}"#).unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.selfindex.scorer, Scorer::Popcnt);
+        let j = Json::parse(r#"{"selfindex":{"scorer":"bytelut"}}"#).unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.selfindex.scorer, Scorer::ByteLut);
+        assert_eq!(EngineConfig::default().selfindex.scorer, Scorer::ByteLut);
+        let j = Json::parse(r#"{"selfindex":{"scorer":"gemv"}}"#).unwrap();
+        let err = EngineConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("selfindex.scorer 'gemv'"), "{err}");
     }
 
     #[test]

@@ -15,6 +15,12 @@ pub struct Block {
     /// sequential byte streak per block, which is what keeps the fused
     /// score→select pass prefetch-friendly (DESIGN.md §Perf iteration 5)
     pub codes: Vec<u8>,
+    /// word-packed mirror of `codes` for the popcount scorer
+    /// (`score_block_popcnt`): `codes_words()` little-endian `u64`s per
+    /// token, tail bytes zero-padded at write time so XOR-based scoring
+    /// needs no mask (§Perf iteration 8). Written in lockstep with
+    /// `codes` by `HeadCache::push_record`; token-major like every field
+    pub codes_w: Vec<u64>,
     pub k_mag: Vec<u8>,
     pub k_prm: Vec<QuantParams>,
     pub v_val: Vec<u8>,
@@ -27,6 +33,7 @@ impl Block {
     pub fn new(layout: &RecordLayout, block_tokens: usize) -> Self {
         Self {
             codes: vec![0; block_tokens * layout.codes_bytes],
+            codes_w: vec![0; block_tokens * layout.codes_words()],
             k_mag: vec![0; block_tokens * layout.payload_bytes],
             k_prm: vec![
                 QuantParams { scale: 0, zero: 0 };
@@ -48,6 +55,7 @@ impl Block {
     /// Heap bytes held by this block (the Fig. 5 memory accounting).
     pub fn bytes(&self) -> usize {
         self.codes.len()
+            + self.codes_w.len() * std::mem::size_of::<u64>()
             + self.k_mag.len()
             + self.v_val.len()
             + (self.k_prm.len() + self.v_prm.len()) * std::mem::size_of::<QuantParams>()
@@ -70,6 +78,9 @@ impl Block {
         };
         fold(&(self.used as u64).to_le_bytes());
         fold(&self.codes);
+        for w in &self.codes_w {
+            fold(&w.to_le_bytes());
+        }
         fold(&self.k_mag);
         fold(&self.v_val);
         for p in self.k_prm.iter().chain(self.v_prm.iter()) {
@@ -90,6 +101,7 @@ mod tests {
         let layout = RecordLayout::new(64, &SelfIndexConfig::default());
         let b = Block::new(&layout, 16);
         assert_eq!(b.codes.len(), 16 * 8);
+        assert_eq!(b.codes_w.len(), 16, "one word per token at head_dim 64");
         assert_eq!(b.k_mag.len(), 16 * 16);
         assert_eq!(b.k_prm.len(), 16 * 2);
         assert_eq!(b.used, 0);
@@ -112,5 +124,8 @@ mod tests {
         b.used = 0;
         b.v_prm[0].scale = 7;
         assert_ne!(b.checksum(), base, "quant params are covered");
+        b.v_prm[0].scale = 0;
+        b.codes_w[0] ^= 1 << 63;
+        assert_ne!(b.checksum(), base, "word-packed mirror is covered");
     }
 }

@@ -41,6 +41,13 @@ impl RecordLayout {
         self.head_dim / 4
     }
 
+    /// `u64` words per token in the block's word-packed sign-code mirror
+    /// (`Block::codes_w`) — derived, not stored, so the paper's
+    /// byte-accounting ([`Self::bytes_per_token`]) is untouched.
+    pub fn codes_words(&self) -> usize {
+        crate::quant::pack::words_per_token(self.codes_bytes)
+    }
+
     pub fn param_groups(&self) -> usize {
         self.head_dim / self.quant_group
     }
@@ -96,6 +103,16 @@ mod tests {
         assert_eq!(l.params_bytes, 8);
         assert_eq!(l.bytes_per_token(), 8 + 32 + 16);
         assert!(l.savings_vs_fp16() > 0.7);
+    }
+
+    #[test]
+    fn codes_words_rounds_up_to_whole_words() {
+        let cfg = SelfIndexConfig::default();
+        // head_dim 64 → 8 code bytes → one word; 128 → 16 bytes → two
+        assert_eq!(RecordLayout::new(64, &cfg).codes_words(), 1);
+        assert_eq!(RecordLayout::new(128, &cfg).codes_words(), 2);
+        // sub-word tail still occupies a full (zero-padded) word
+        assert_eq!(RecordLayout::new(32, &cfg).codes_words(), 1);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::quant::pack;
 use crate::selfindex::codebook::{Codebook, CodebookBuilder};
 use crate::selfindex::codes::code_signs;
 use crate::selfindex::normalize::ChannelStats;
-use crate::selfindex::score::{score_tokens_bytelut, ByteLut};
+use crate::selfindex::score::{score_tokens_bytelut, BlockScorer, ByteLut};
 use crate::selfindex::topk::TopKStream;
 use crate::selfindex::SelfIndexConfig;
 
@@ -48,6 +48,9 @@ pub struct HeadCache {
     /// encode arenas shared by prefill + append record writes
     enc_codes: Vec<u8>,
     enc_packed_codes: Vec<u8>,
+    /// word-packed mirror of `enc_packed_codes` (one token) for the
+    /// block's `codes_w` field
+    enc_words: Vec<u64>,
     enc_packed_k: Vec<u8>,
     enc_packed_v: Vec<u8>,
 }
@@ -91,6 +94,7 @@ impl HeadCache {
             vq_scratch: empty_token_quant(dim, cfg.quant_group, cfg.quant_bits),
             enc_codes: vec![],
             enc_packed_codes: vec![],
+            enc_words: vec![],
             enc_packed_k: vec![],
             enc_packed_v: vec![],
             cfg,
@@ -340,6 +344,12 @@ impl HeadCache {
                 .map(crate::selfindex::codes::sign_code),
         );
         pack::pack_codes_into(&self.enc_codes, &mut self.enc_packed_codes);
+        pack::pack_signs_u64_into(
+            &self.enc_packed_codes,
+            1,
+            layout.codes_bytes,
+            &mut self.enc_words,
+        );
         let bits = self.cfg.quant_bits;
         pack::pack_bits_into(&kq.values[t * dim..(t + 1) * dim], bits, &mut self.enc_packed_k);
         pack::pack_bits_into(&vq.values[t * dim..(t + 1) * dim], bits, &mut self.enc_packed_v);
@@ -352,6 +362,8 @@ impl HeadCache {
         let block = unsafe { pool.block_mut(block_id) };
         let cb = layout.codes_bytes;
         block.codes[slot * cb..(slot + 1) * cb].copy_from_slice(&self.enc_packed_codes);
+        let wpt = layout.codes_words();
+        block.codes_w[slot * wpt..(slot + 1) * wpt].copy_from_slice(&self.enc_words);
         let pb = layout.payload_bytes;
         block.k_mag[slot * pb..(slot + 1) * pb].copy_from_slice(&self.enc_packed_k);
         block.v_val[slot * pb..(slot + 1) * pb].copy_from_slice(&self.enc_packed_v);
@@ -384,17 +396,20 @@ impl HeadCache {
         }
     }
 
-    /// Stream LUT-GEMV scores block by block — the fused one-pass decode
-    /// pipeline (DESIGN.md §Perf iteration 5). Scores tokens `0..end`
-    /// straight out of each pool block (block-major contiguous reads, no
-    /// flat per-sequence score vector) and hands every block to `f` as
+    /// Stream per-block scores — the fused one-pass decode pipeline
+    /// (DESIGN.md §Perf iteration 5). Scores tokens `0..end` straight out
+    /// of each pool block (block-major contiguous reads, no flat
+    /// per-sequence score vector) and hands every block to `f` as
     /// `(base_index, scores, block_max)` while it is still L1-hot, so the
-    /// caller's selector consumes it in the same pass. `scratch` is a
-    /// reusable per-block arena (resized once to `block_tokens`).
+    /// caller's selector consumes it in the same pass. `scorer` picks the
+    /// kernel — byte-LUT over `codes` or popcount over the `codes_w`
+    /// word mirror (§Perf iteration 8); block max/threshold semantics
+    /// are identical either way. `scratch` is a reusable per-block arena
+    /// (resized once to `block_tokens`).
     pub fn stream_scores<F: FnMut(usize, &[f32], f32)>(
         &self,
         pool: &BlockPool,
-        blut: &ByteLut,
+        scorer: &BlockScorer,
         end: usize,
         scratch: &mut Vec<f32>,
         mut f: F,
@@ -411,12 +426,7 @@ impl HeadCache {
             }
             let n = (end - base).min(bt);
             let block = pool.get(id);
-            let bmax = crate::selfindex::score::score_block_bytelut(
-                blut,
-                &block.codes,
-                n,
-                &mut scratch[..n],
-            );
+            let bmax = scorer.score_block(&block.codes, &block.codes_w, n, &mut scratch[..n]);
             f(base, &scratch[..n], bmax);
             base += n;
         }
@@ -436,7 +446,7 @@ impl HeadCache {
     pub fn stream_select(
         &self,
         pool: &BlockPool,
-        blut: &ByteLut,
+        scorer: &BlockScorer,
         end: usize,
         sink_ids: &[u32],
         k: usize,
@@ -446,7 +456,7 @@ impl HeadCache {
     ) {
         selector.reset(k);
         let mut si = 0usize; // cursor into the ascending sink list
-        self.stream_scores(pool, blut, end, block_scores, |base, scores, bmax| {
+        self.stream_scores(pool, scorer, end, block_scores, |base, scores, bmax| {
             while si < sink_ids.len() && (sink_ids[si] as usize) < base {
                 si += 1;
             }
@@ -869,7 +879,8 @@ mod tests {
             let mut streamed = vec![f32::NAN; end];
             let mut scratch = Vec::new();
             let mut blocks_seen = 0;
-            hc.stream_scores(pool, &blut, end, &mut scratch, |base, s, bmax| {
+            let scorer = BlockScorer::ByteLut(&blut);
+            hc.stream_scores(pool, &scorer, end, &mut scratch, |base, s, bmax| {
                 let mut emax = f32::NEG_INFINITY;
                 for (o, &v) in s.iter().enumerate() {
                     streamed[base + o] = v;

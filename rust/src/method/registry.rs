@@ -35,6 +35,8 @@ pub enum KnobKind {
     Bool,
     /// a quantization bit width the packers support
     Bits,
+    /// a string drawn from a fixed set of variants
+    Choice(&'static [&'static str]),
 }
 
 impl KnobKind {
@@ -51,6 +53,10 @@ impl KnobKind {
             KnobKind::Bits => match v.as_usize() {
                 Some(2) | Some(4) | Some(8) => Ok(()),
                 _ => Err("expects a bit width of 2, 4, or 8".to_string()),
+            },
+            KnobKind::Choice(variants) => match v.as_str() {
+                Some(s) if variants.contains(&s) => Ok(()),
+                _ => Err(format!("expects one of {}", variants.join(", "))),
             },
         }
     }
@@ -121,6 +127,14 @@ pub fn selfindex_overlayed(
     }
     if let Some(k) = get("sparse_k").and_then(Json::as_usize) {
         si.sparse_k = k;
+    }
+    if let Some(sc) = get("scorer").and_then(Json::as_str) {
+        // validate_overlay already constrained the string to the knob's
+        // Choice set, so parse can only fail for hand-built overlays —
+        // keep the base scorer in that case rather than panicking
+        if let Some(sc) = crate::selfindex::Scorer::parse(sc) {
+            si.scorer = sc;
+        }
     }
     si
 }
@@ -232,6 +246,13 @@ impl CacheMethod for SelfIndexMethod {
                 doc: "dynamically retrieved tokens per decode step",
                 default: "96",
                 kind: KnobKind::Usize,
+            },
+            Knob {
+                name: "scorer",
+                doc: "decode-retrieval score kernel (byte-LUT oracle or \
+                      XOR+popcount over word-packed sign codes)",
+                default: "bytelut",
+                kind: KnobKind::Choice(&["bytelut", "popcnt"]),
             },
         ]
     }
@@ -526,5 +547,37 @@ mod tests {
             ("quant_bits".to_string(), Json::Num(8.0)),
         ];
         assert!(validate_overlay("ours", &good).is_ok());
+    }
+
+    #[test]
+    fn choice_knob_validates_scorer_values() {
+        for v in ["bytelut", "popcnt"] {
+            let good = vec![("scorer".to_string(), Json::Str(v.to_string()))];
+            assert!(validate_overlay("ours", &good).is_ok(), "{v}");
+        }
+        // unknown variant lists the valid set
+        let bad = vec![("scorer".to_string(), Json::Str("gemv".to_string()))];
+        let err = validate_overlay("ours", &bad).unwrap_err();
+        assert!(err.contains("expects one of bytelut, popcnt"), "{err}");
+        // wrong type (number where a choice string is expected)
+        let bad = vec![("scorer".to_string(), Json::Num(1.0))];
+        assert!(validate_overlay("ours", &bad).is_err());
+    }
+
+    #[test]
+    fn scorer_overlay_flows_into_resolved_config() {
+        use crate::selfindex::Scorer;
+        let si = SelfIndexConfig::default();
+        let overlay = vec![("scorer".to_string(), Json::Str("popcnt".to_string()))];
+        assert_eq!(selfindex_overlayed(&si, &overlay).scorer, Scorer::Popcnt);
+        assert_eq!(selfindex_overlayed(&si, &[]).scorer, Scorer::ByteLut);
+        // the overlaid method still builds and serves
+        let mgr = mgr_for(&si, &overlay);
+        let mut head = lookup("ours").unwrap().build_head(&ctx(&si, &overlay, &mgr));
+        let keys = vec![0.5f32; 32 * 64];
+        head.prefill(&keys, &keys.clone(), &[], 1);
+        let mut out = vec![0.0f32; 64];
+        head.attend(&keys[..64], 16, &mut out);
+        assert!(out.iter().any(|&x| x != 0.0));
     }
 }

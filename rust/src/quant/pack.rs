@@ -82,6 +82,49 @@ pub fn pack_codes_into(codes: &[u8], out: &mut Vec<u8>) {
     }
 }
 
+/// Words per token for the popcount scorer: `codes_bytes` packed nibble
+/// bytes rounded up to whole `u64` words.
+#[inline(always)]
+pub fn words_per_token(codes_bytes: usize) -> usize {
+    codes_bytes.div_ceil(8)
+}
+
+/// Reinterpret token-major packed nibble bytes (from [`pack_codes`]) as
+/// little-endian `u64` words, `words_per_token(codes_bytes)` per token.
+/// Tail bytes of a token's last word are zero-padded, so the XOR of two
+/// packed streams is zero in every padding bit — the popcount scorer
+/// (`selfindex::score::score_block_popcnt`) needs no mask at score time.
+/// Popcount is bit-order agnostic, so no per-bit reshuffling happens
+/// here: the words carry the exact nibble layout the byte path stores.
+pub fn pack_signs_u64(packed: &[u8], n_tokens: usize, codes_bytes: usize) -> Vec<u64> {
+    let mut out = Vec::new();
+    pack_signs_u64_into(packed, n_tokens, codes_bytes, &mut out);
+    out
+}
+
+/// [`pack_signs_u64`] into a caller-owned arena (cleared + refilled):
+/// the decode-append path word-packs one token per step without
+/// allocating, matching the other `*_into` arena packers.
+pub fn pack_signs_u64_into(
+    packed: &[u8],
+    n_tokens: usize,
+    codes_bytes: usize,
+    out: &mut Vec<u64>,
+) {
+    assert!(packed.len() >= n_tokens * codes_bytes, "not enough bytes");
+    let wpt = words_per_token(codes_bytes);
+    out.clear();
+    out.resize(n_tokens * wpt, 0);
+    for t in 0..n_tokens {
+        let row = &packed[t * codes_bytes..(t + 1) * codes_bytes];
+        for (w, chunk) in row.chunks(8).enumerate() {
+            let mut le = [0u8; 8];
+            le[..chunk.len()].copy_from_slice(chunk);
+            out[t * wpt + w] = u64::from_le_bytes(le);
+        }
+    }
+}
+
 pub fn unpack_codes(bytes: &[u8], n: usize) -> Vec<u8> {
     assert!(bytes.len() * 2 >= n, "not enough bytes");
     (0..n).map(|i| (bytes[i / 2] >> ((i % 2) * 4)) & 0x0f).collect()
@@ -165,6 +208,51 @@ mod tests {
         for (i, &v) in v2.iter().enumerate() {
             assert_eq!(get_u2(&p2, i), v);
         }
+    }
+
+    #[test]
+    fn sign_words_roundtrip_and_tail_padding() {
+        // every codes_bytes width 1..=20 (covers sub-word tails, exactly
+        // one word, and a ragged second word) must reassemble byte-exact
+        // with zeroed padding bits
+        for cb in 1usize..=20 {
+            for n_tokens in [0usize, 1, 3, 8] {
+                let bytes: Vec<u8> = (0..n_tokens * cb)
+                    .map(|i| (i * 37 + 11) as u8)
+                    .collect();
+                let words = pack_signs_u64(&bytes, n_tokens, cb);
+                let wpt = words_per_token(cb);
+                assert_eq!(words.len(), n_tokens * wpt, "cb={cb} n={n_tokens}");
+                for t in 0..n_tokens {
+                    let row = &bytes[t * cb..(t + 1) * cb];
+                    let mut rebuilt = Vec::new();
+                    for w in 0..wpt {
+                        rebuilt.extend_from_slice(&words[t * wpt + w].to_le_bytes());
+                    }
+                    assert_eq!(&rebuilt[..cb], row, "cb={cb} t={t}");
+                    // padding bits beyond codes_bytes are zero
+                    assert!(
+                        rebuilt[cb..].iter().all(|&b| b == 0),
+                        "cb={cb} t={t}: nonzero padding"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sign_words_arena_reuse_does_not_leak_stale_bytes() {
+        // refilling an arena with a shorter token run must not leave old
+        // words visible, and the arena must not reallocate once warm
+        let mut arena = Vec::new();
+        let a: Vec<u8> = (0..4 * 8).map(|_| 0xffu8).collect();
+        pack_signs_u64_into(&a, 4, 8, &mut arena);
+        assert_eq!(arena, vec![u64::MAX; 4]);
+        let cap = arena.capacity();
+        let b = vec![0u8; 2 * 8];
+        pack_signs_u64_into(&b, 2, 8, &mut arena);
+        assert_eq!(arena, vec![0u64; 2]);
+        assert_eq!(arena.capacity(), cap, "arena must not reallocate");
     }
 
     #[test]

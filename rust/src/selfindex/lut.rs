@@ -70,6 +70,28 @@ impl Lut {
     pub fn get(&self, g: usize, c: usize) -> f32 {
         self.table[g * 16 + c]
     }
+
+    /// Sign-agreement LUT for a query's own nibble codes: entry
+    /// `[g][c] = 4 − 2·popcount(q_code_g ⊕ c)` — the number of agreeing
+    /// sign bits minus disagreeing ones, an integer in [−4, 4]. Scoring
+    /// packed codes with this table is *exactly* the popcount scorer's
+    /// `dim − 2·popcount(q ⊕ k)` (every partial sum is a small integer,
+    /// exact in f32 under any summation order), which is what lets the CI
+    /// parity matrix pin byte-LUT, reference, and popcount kernels
+    /// bit-identical. Equivalently: `Lut::build` of the ±1-expanded query
+    /// over `Codebook::sign_only` (asserted in tests).
+    pub fn sign_agreement(q_codes: &[u8]) -> Self {
+        let groups = q_codes.len();
+        let mut lut = Lut::empty(groups);
+        for (g, &qc) in q_codes.iter().enumerate() {
+            debug_assert!(qc < 16, "4-bit code out of range: {qc}");
+            for c in 0..16u8 {
+                lut.table[g * 16 + c as usize] =
+                    (4 - 2 * (qc ^ c).count_ones() as i32) as f32;
+            }
+        }
+        lut
+    }
 }
 
 #[cfg(test)]
@@ -94,6 +116,33 @@ mod tests {
                 let expect: f32 = (0..4).map(|i| q[g * 4 + i] * cent[i]).sum();
                 assert!((lut.get(g, c) - expect).abs() < 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn sign_agreement_equals_pm1_query_over_sign_codebook() {
+        use crate::selfindex::codebook::Codebook;
+        use crate::selfindex::codes::{code_signs, sign_code};
+        let mut r = Rng::new(3);
+        let dim = 32;
+        let q: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        let q_codes: Vec<u8> = q.chunks_exact(4).map(sign_code).collect();
+        let sa = Lut::sign_agreement(&q_codes);
+        // the ±1-expanded query dotted with ±1 sign centroids gives the
+        // same integers — bit-exact, since every product is ±1
+        let pm1: Vec<f32> = q_codes.iter().flat_map(|&c| code_signs(c)).collect();
+        let reference = Lut::build(&pm1, &Codebook::sign_only(dim / 4));
+        assert_eq!(sa.table.len(), reference.table.len());
+        for i in 0..sa.table.len() {
+            assert_eq!(
+                sa.table[i].to_bits(),
+                reference.table[i].to_bits(),
+                "entry {i}: {} vs {}",
+                sa.table[i],
+                reference.table[i]
+            );
+            assert!((-4.0..=4.0).contains(&sa.table[i]));
+            assert_eq!(sa.table[i], sa.table[i].trunc(), "integer entries");
         }
     }
 

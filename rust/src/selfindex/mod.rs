@@ -30,8 +30,45 @@ pub use codebook::{Codebook, CodebookBuilder};
 pub use codes::{encode_token, encode_tokens_packed, sign_code};
 pub use lut::Lut;
 pub use normalize::ChannelStats;
-pub use score::{score_block_bytelut, score_tokens, score_tokens_bytelut, ByteLut};
+pub use score::{
+    popcnt_kernel_name, score_block_bytelut, score_block_popcnt,
+    score_block_popcnt_scalar, score_tokens, score_tokens_bytelut, BlockScorer, ByteLut,
+};
 pub use topk::{top_k_indices, TopKStream};
+
+/// Which kernel scores packed codes during decode retrieval (the method
+/// registry's `scorer` knob; DESIGN.md §Perf iteration 8).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Scorer {
+    /// byte-combined LUT over the magnitude-centroid table — the general
+    /// scorer and the conformance oracle (default).
+    #[default]
+    ByteLut,
+    /// XOR + popcount over word-packed sign codes: sign-agreement
+    /// scoring, the paper's "retrieval is a bit operation" claim made
+    /// literal. Ignores centroid magnitudes (like the sign-only
+    /// ablation), trading a little retrieval fidelity for a much
+    /// cheaper score stage.
+    Popcnt,
+}
+
+impl Scorer {
+    /// Parse a knob/config string (`"bytelut"` / `"popcnt"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "bytelut" | "byte_lut" | "lut" => Some(Scorer::ByteLut),
+            "popcnt" | "popcount" => Some(Scorer::Popcnt),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scorer::ByteLut => "bytelut",
+            Scorer::Popcnt => "popcnt",
+        }
+    }
+}
 
 /// Paper hyper-parameters + ablation switches.
 #[derive(Clone, Debug)]
@@ -55,6 +92,8 @@ pub struct SelfIndexConfig {
     pub sign_plane_quant: bool,
     /// ablation: disable sink tokens — Table 5 "w/o sink tokens".
     pub use_sinks: bool,
+    /// decode-retrieval score kernel (byte-LUT oracle vs popcount).
+    pub scorer: Scorer,
 }
 
 impl Default for SelfIndexConfig {
@@ -68,6 +107,7 @@ impl Default for SelfIndexConfig {
             magnitude_centroids: true,
             sign_plane_quant: true,
             use_sinks: true,
+            scorer: Scorer::ByteLut,
         }
     }
 }
@@ -113,8 +153,19 @@ mod tests {
         assert_eq!(c.quant_group, 32);
         assert_eq!(c.sink_tokens, 64);
         assert_eq!(c.sparse_k, 96);
+        assert_eq!(c.scorer, Scorer::ByteLut, "byte-LUT stays the oracle default");
         assert!(c.validate(64).is_ok());
         assert!(c.validate(128).is_ok());
+    }
+
+    #[test]
+    fn scorer_parse_and_name_roundtrip() {
+        for sc in [Scorer::ByteLut, Scorer::Popcnt] {
+            assert_eq!(Scorer::parse(sc.name()), Some(sc));
+        }
+        assert_eq!(Scorer::parse(" POPCOUNT "), Some(Scorer::Popcnt));
+        assert_eq!(Scorer::parse("lut"), Some(Scorer::ByteLut));
+        assert_eq!(Scorer::parse("gemv"), None);
     }
 
     #[test]

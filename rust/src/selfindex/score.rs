@@ -18,9 +18,14 @@ use super::lut::Lut;
 pub fn score_tokens(lut: &Lut, packed: &[u8], n_tokens: usize, out: &mut Vec<f32>) {
     let g = lut.groups;
     let bpt = g / 2;
+    debug_assert_eq!(
+        packed.len(),
+        n_tokens * bpt,
+        "packed length must be exactly n_tokens × bytes_per_token"
+    );
     assert!(packed.len() >= n_tokens * bpt);
     out.clear();
-    out.reserve(n_tokens);
+    out.resize(n_tokens, 0.0);
     for t in 0..n_tokens {
         let row = &packed[t * bpt..(t + 1) * bpt];
         let mut acc = 0.0f32;
@@ -28,7 +33,7 @@ pub fn score_tokens(lut: &Lut, packed: &[u8], n_tokens: usize, out: &mut Vec<f32
             acc += lut.get(2 * j, (b & 0x0f) as usize);
             acc += lut.get(2 * j + 1, (b >> 4) as usize);
         }
-        out.push(acc);
+        out[t] = acc;
     }
 }
 
@@ -159,6 +164,324 @@ pub fn score_block_bytelut(
         bmax = bmax.max(a);
     }
     bmax
+}
+
+/// Scorer selection for the fused block-streaming pipeline
+/// (`HeadCache::stream_scores` / `stream_select`): either the
+/// byte-combined LUT (general magnitude-centroid scoring, the
+/// conformance oracle) or XOR+popcount over word-packed sign codes
+/// (sign-agreement scoring — the paper's "hardware-friendly bit
+/// operation"; §Perf iteration 8). Both produce per-token scores plus a
+/// block max, so block rejection and threshold semantics are identical.
+pub enum BlockScorer<'a> {
+    ByteLut(&'a ByteLut),
+    Popcnt {
+        /// the query's word-packed sign codes
+        /// (`quant::pack::pack_signs_u64`), `codes_words` long
+        q_words: &'a [u64],
+        /// head_dim — one sign bit per channel, so scores lie in [-dim, dim]
+        dim: usize,
+    },
+}
+
+impl BlockScorer<'_> {
+    /// Score one block's first `n_tokens` into `out`, returning the block
+    /// max. `codes` is the block's packed nibble bytes, `codes_w` its
+    /// word-packed mirror — each variant reads only its own layout.
+    #[inline]
+    pub fn score_block(
+        &self,
+        codes: &[u8],
+        codes_w: &[u64],
+        n_tokens: usize,
+        out: &mut [f32],
+    ) -> f32 {
+        match self {
+            BlockScorer::ByteLut(blut) => score_block_bytelut(blut, codes, n_tokens, out),
+            BlockScorer::Popcnt { q_words, dim } => {
+                score_block_popcnt(q_words, codes_w, n_tokens, *dim, out)
+            }
+        }
+    }
+}
+
+/// Popcount block scorer: `score(token) = dim − 2·popcount(q ⊕ k)` over
+/// word-packed sign codes — the sign-agreement dot product
+/// `Σ_j sign(q_j)·sign(k_j)` (paper Eq. 2: the compressed keys ARE the
+/// retrieval index, and retrieval is an XNOR+popcount). Padding bits are
+/// zero in both operands (`pack_signs_u64_into`), so the XOR contributes
+/// nothing and no tail mask is needed. Scores are integers in
+/// [−dim, dim], exact in f32, so every kernel below is bit-identical to
+/// the others — and to the byte-LUT path over a sign-agreement LUT
+/// (`Lut::sign_agreement`) — under any RUSTFLAGS (the CI parity matrix).
+///
+/// Runtime dispatch: AVX2 (Mula's `pshufb` nibble-LUT popcount) or
+/// hardware `popcnt` on x86-64, NEON `cnt` on aarch64, with the unrolled
+/// scalar loop always compiled as the fallback. Returns the block max.
+pub fn score_block_popcnt(
+    q_words: &[u64],
+    words: &[u64],
+    n_tokens: usize,
+    dim: usize,
+    out: &mut [f32],
+) -> f32 {
+    assert!(words.len() >= n_tokens * q_words.len());
+    assert!(out.len() >= n_tokens);
+    #[cfg(target_arch = "x86_64")]
+    {
+        let wpt = q_words.len();
+        if (wpt == 1 || wpt == 2)
+            && is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("popcnt")
+        {
+            // SAFETY: both features verified present at runtime.
+            return unsafe { x86::block_avx2(q_words, words, n_tokens, dim, out) };
+        }
+        if is_x86_feature_detected!("popcnt") {
+            // SAFETY: popcnt verified present at runtime.
+            return unsafe { x86::block_popcnt(q_words, words, n_tokens, dim, out) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    return arm::block_neon(q_words, words, n_tokens, dim, out);
+    #[cfg(not(target_arch = "aarch64"))]
+    score_block_popcnt_scalar(q_words, words, n_tokens, dim, out)
+}
+
+/// The always-compiled scalar kernel behind [`score_block_popcnt`] —
+/// public so the CI parity matrix can pin dispatched == scalar without
+/// knowing which SIMD path the host selected.
+pub fn score_block_popcnt_scalar(
+    q_words: &[u64],
+    words: &[u64],
+    n_tokens: usize,
+    dim: usize,
+    out: &mut [f32],
+) -> f32 {
+    assert!(words.len() >= n_tokens * q_words.len());
+    assert!(out.len() >= n_tokens);
+    popcnt_body(q_words, words, n_tokens, dim, out)
+}
+
+/// Shared 8-token-unrolled loop body: eight independent XOR+popcount
+/// chains per iteration hide the latency of `count_ones()` the same way
+/// the byte-LUT unroll hides its L1 load latency. `#[inline(always)]` so
+/// the `#[target_feature(enable = "popcnt")]` wrapper inlines it and the
+/// compiler lowers `count_ones()` to the hardware instruction there
+/// (baseline x86-64 compiles it to bit-twiddling otherwise).
+#[inline(always)]
+fn popcnt_body(
+    q_words: &[u64],
+    words: &[u64],
+    n_tokens: usize,
+    dim: usize,
+    out: &mut [f32],
+) -> f32 {
+    let wpt = q_words.len();
+    let d = dim as i32;
+    let mut bmax = f32::NEG_INFINITY;
+    let chunks = n_tokens / 8;
+    for c in 0..chunks {
+        let t0 = c * 8;
+        let base = t0 * wpt;
+        let mut cnt = [0u32; 8];
+        for (w, &q) in q_words.iter().enumerate() {
+            for (u, cn) in cnt.iter_mut().enumerate() {
+                *cn += (q ^ words[base + u * wpt + w]).count_ones();
+            }
+        }
+        for (u, &cn) in cnt.iter().enumerate() {
+            let sc = (d - 2 * cn as i32) as f32;
+            out[t0 + u] = sc;
+            bmax = bmax.max(sc);
+        }
+    }
+    for t in chunks * 8..n_tokens {
+        let row = &words[t * wpt..(t + 1) * wpt];
+        let mut cn = 0u32;
+        for (w, &q) in q_words.iter().enumerate() {
+            cn += (q ^ row[w]).count_ones();
+        }
+        let sc = (d - 2 * cn as i32) as f32;
+        out[t] = sc;
+        bmax = bmax.max(sc);
+    }
+    bmax
+}
+
+/// Which popcount kernel [`score_block_popcnt`] will dispatch to on this
+/// host for a token width of `words_per_token` — bench/CI reporting only.
+pub fn popcnt_kernel_name(words_per_token: usize) -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if (words_per_token == 1 || words_per_token == 2)
+            && is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("popcnt")
+        {
+            return "avx2";
+        }
+        if is_x86_feature_detected!("popcnt") {
+            return "popcnt";
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if words_per_token == 1 {
+            return "neon";
+        }
+    }
+    let _ = words_per_token;
+    "scalar"
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::popcnt_body;
+    use std::arch::x86_64::*;
+
+    /// The scalar body compiled with POPCNT enabled, so `count_ones()`
+    /// lowers to the hardware instruction even under baseline RUSTFLAGS.
+    ///
+    /// # Safety
+    /// The caller must have verified `popcnt` via `is_x86_feature_detected!`.
+    #[target_feature(enable = "popcnt")]
+    pub unsafe fn block_popcnt(
+        q_words: &[u64],
+        words: &[u64],
+        n_tokens: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) -> f32 {
+        popcnt_body(q_words, words, n_tokens, dim, out)
+    }
+
+    /// Mula's AVX2 popcount: per-byte counts via a `pshufb` nibble LUT,
+    /// summed into per-64-bit-lane totals with `psadbw` — one lane per
+    /// token word, so a 256-bit vector scores 4 tokens at one word per
+    /// token (head_dim 64) or 2 tokens at two (head_dim 128).
+    ///
+    /// # Safety
+    /// The caller must have verified `avx2` and `popcnt` via
+    /// `is_x86_feature_detected!`, and `q_words.len()` must be 1 or 2.
+    #[target_feature(enable = "avx2", enable = "popcnt")]
+    pub unsafe fn block_avx2(
+        q_words: &[u64],
+        words: &[u64],
+        n_tokens: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) -> f32 {
+        let wpt = q_words.len();
+        debug_assert!(wpt == 1 || wpt == 2);
+        let d = dim as i64;
+        let mut bmax = f32::NEG_INFINITY;
+        let tok_per_vec = 4 / wpt;
+        let vecs = n_tokens / tok_per_vec;
+        unsafe {
+            #[rustfmt::skip]
+            let nib_lut = _mm256_setr_epi8(
+                0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+                0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            );
+            let low_mask = _mm256_set1_epi8(0x0f);
+            let qv = if wpt == 1 {
+                _mm256_set1_epi64x(q_words[0] as i64)
+            } else {
+                _mm256_setr_epi64x(
+                    q_words[0] as i64,
+                    q_words[1] as i64,
+                    q_words[0] as i64,
+                    q_words[1] as i64,
+                )
+            };
+            let mut lane_cnts = [0u64; 4];
+            for v in 0..vecs {
+                let ptr = words.as_ptr().add(v * 4) as *const __m256i;
+                let x = _mm256_xor_si256(_mm256_loadu_si256(ptr), qv);
+                let lo = _mm256_shuffle_epi8(nib_lut, _mm256_and_si256(x, low_mask));
+                let hi = _mm256_shuffle_epi8(
+                    nib_lut,
+                    _mm256_and_si256(_mm256_srli_epi64::<4>(x), low_mask),
+                );
+                let sums = _mm256_sad_epu8(_mm256_add_epi8(lo, hi), _mm256_setzero_si256());
+                _mm256_storeu_si256(lane_cnts.as_mut_ptr() as *mut __m256i, sums);
+                let t0 = v * tok_per_vec;
+                if wpt == 1 {
+                    for (u, &cn) in lane_cnts.iter().enumerate() {
+                        let sc = (d - 2 * cn as i64) as f32;
+                        out[t0 + u] = sc;
+                        bmax = bmax.max(sc);
+                    }
+                } else {
+                    let s0 = (d - 2 * (lane_cnts[0] + lane_cnts[1]) as i64) as f32;
+                    let s1 = (d - 2 * (lane_cnts[2] + lane_cnts[3]) as i64) as f32;
+                    out[t0] = s0;
+                    out[t0 + 1] = s1;
+                    bmax = bmax.max(s0).max(s1);
+                }
+            }
+        }
+        // ragged tail through the (popcnt-lowered) scalar body
+        let done = vecs * tok_per_vec;
+        if done < n_tokens {
+            let tail = popcnt_body(
+                q_words,
+                &words[done * wpt..],
+                n_tokens - done,
+                dim,
+                &mut out[done..],
+            );
+            bmax = bmax.max(tail);
+        }
+        bmax
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::popcnt_body;
+    use std::arch::aarch64::*;
+
+    /// NEON popcount (`cnt` per byte + widening pair-adds): two tokens per
+    /// 128-bit vector at one word per token. NEON is baseline on aarch64,
+    /// so no runtime detection is needed; wider tokens use the scalar body
+    /// (LLVM lowers `count_ones()` to `cnt`+`addv` there anyway).
+    pub fn block_neon(
+        q_words: &[u64],
+        words: &[u64],
+        n_tokens: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) -> f32 {
+        if q_words.len() != 1 {
+            return popcnt_body(q_words, words, n_tokens, dim, out);
+        }
+        let q = q_words[0];
+        let d = dim as i32;
+        let mut bmax = f32::NEG_INFINITY;
+        let pairs = n_tokens / 2;
+        // SAFETY: NEON is a baseline aarch64 feature; loads stay within
+        // `words[..n_tokens]` (asserted by the dispatching caller).
+        unsafe {
+            let qv = vreinterpretq_u8_u64(vdupq_n_u64(q));
+            for p in 0..pairs {
+                let x = veorq_u8(vld1q_u8(words.as_ptr().add(p * 2) as *const u8), qv);
+                let c64 = vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(x))));
+                let s0 = (d - 2 * vgetq_lane_u64::<0>(c64) as i32) as f32;
+                let s1 = (d - 2 * vgetq_lane_u64::<1>(c64) as i32) as f32;
+                out[p * 2] = s0;
+                out[p * 2 + 1] = s1;
+                bmax = bmax.max(s0).max(s1);
+            }
+        }
+        if pairs * 2 < n_tokens {
+            let t = n_tokens - 1;
+            let sc = (d - 2 * (q ^ words[t]).count_ones() as i32) as f32;
+            out[t] = sc;
+            bmax = bmax.max(sc);
+        }
+        bmax
+    }
 }
 
 /// Full-precision scores q·K'ᵀ — the baseline LUT-GEMV replaces
@@ -295,10 +618,129 @@ mod tests {
     fn empty_and_tiny_inputs() {
         let (lut, packed, _, _) = setup(7, 8, 64);
         let mut out = Vec::new();
-        score_tokens(&lut, &packed, 0, &mut out);
+        // exact-length slices: score_tokens asserts packed == n_tokens*bpt
+        score_tokens(&lut, &packed[..0], 0, &mut out);
         assert!(out.is_empty());
+        let bpt = lut.groups / 2;
+        score_tokens(&lut, &packed[..bpt], 1, &mut out);
+        assert_eq!(out.len(), 1);
         let blut = ByteLut::from_lut(&lut);
         score_tokens_bytelut(&blut, &packed, 1, &mut out);
         assert_eq!(out.len(), 1);
+    }
+
+    /// naive integer sign-agreement score: Σ_j sign(q_j)·sign(k_j) from
+    /// the unpacked nibble codes — the ground truth every popcount kernel
+    /// and the sign-LUT path must match bit-for-bit
+    fn naive_sign_agreement(q_codes: &[u8], packed: &[u8], n_tokens: usize) -> Vec<f32> {
+        let g = q_codes.len();
+        let codes = crate::quant::pack::unpack_codes(packed, n_tokens * g);
+        (0..n_tokens)
+            .map(|t| {
+                let mut acc = 0i32;
+                for (gi, &qc) in q_codes.iter().enumerate() {
+                    let kc = codes[t * g + gi];
+                    // 4 agreements − 4 disagreements per nibble
+                    acc += 4 - 2 * (qc ^ kc).count_ones() as i32;
+                }
+                acc as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn popcnt_matches_naive_sign_agreement() {
+        use crate::quant::pack::{pack_signs_u64, words_per_token};
+        let mut r = Rng::new(20);
+        // dims cover wpt==1 (64), wpt==2 (128), and sub-word tails (8..56)
+        for &dim in &[8usize, 16, 24, 32, 40, 56, 64, 72, 96, 120, 128] {
+            for &tokens in &[0usize, 1, 5, 8, 17, 64, 257] {
+                let keys: Vec<f32> =
+                    (0..tokens * dim).map(|_| r.normal_f32()).collect();
+                let q: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+                let packed = encode_tokens_packed(&keys, dim);
+                let q_codes: Vec<u8> = q
+                    .chunks_exact(4)
+                    .map(crate::selfindex::codes::sign_code)
+                    .collect();
+                let cb = dim / 8;
+                let words = pack_signs_u64(&packed, tokens, cb);
+                let q_packed = crate::quant::pack::pack_codes(&q_codes);
+                let q_words = pack_signs_u64(&q_packed, 1, cb);
+                assert_eq!(q_words.len(), words_per_token(cb));
+
+                let expect = naive_sign_agreement(&q_codes, &packed, tokens);
+                let mut out = vec![f32::NAN; tokens];
+                let bmax = score_block_popcnt(&q_words, &words, tokens, dim, &mut out);
+                let mut smax = f32::NEG_INFINITY;
+                for (t, (&a, &e)) in out.iter().zip(&expect).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        e.to_bits(),
+                        "dim {dim} t {t}: {a} vs {e}"
+                    );
+                    smax = smax.max(e);
+                }
+                assert_eq!(bmax.to_bits(), smax.to_bits(), "dim {dim} block max");
+
+                let mut out2 = vec![f32::NAN; tokens];
+                let bmax2 =
+                    score_block_popcnt_scalar(&q_words, &words, tokens, dim, &mut out2);
+                assert_eq!(bmax.to_bits(), bmax2.to_bits());
+                for (a, b) in out.iter().zip(&out2) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "dispatched vs scalar");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn popcnt_score_range_and_extremes() {
+        use crate::quant::pack::pack_signs_u64;
+        // identical codes → score == +dim; complemented → −dim
+        for &dim in &[64usize, 128] {
+            let cb = dim / 8;
+            let token: Vec<u8> = (0..cb).map(|i| (i * 41 + 3) as u8).collect();
+            let anti: Vec<u8> = token.iter().map(|b| !b).collect();
+            let mut both = token.clone();
+            both.extend_from_slice(&anti);
+            let words = pack_signs_u64(&both, 2, cb);
+            let q_words = pack_signs_u64(&token, 1, cb);
+            let mut out = [0.0f32; 2];
+            let bmax = score_block_popcnt(&q_words, &words, 2, dim, &mut out);
+            assert_eq!(out[0], dim as f32);
+            assert_eq!(out[1], -(dim as f32));
+            assert_eq!(bmax, dim as f32);
+        }
+        // n == 0: nothing written, max is -inf
+        let q_words = [0u64];
+        let mut empty: [f32; 0] = [];
+        assert_eq!(
+            score_block_popcnt(&q_words, &[], 0, 64, &mut empty),
+            f32::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn block_scorer_dispatch_matches_direct_calls() {
+        use crate::quant::pack::pack_signs_u64;
+        let dim = 64;
+        let tokens = 37;
+        let (lut, packed, _, _) = setup(21, tokens, dim);
+        let blut = ByteLut::from_lut(&lut);
+        let mut a = vec![0.0f32; tokens];
+        let mut b = vec![0.0f32; tokens];
+        let m1 = BlockScorer::ByteLut(&blut).score_block(&packed, &[], tokens, &mut a);
+        let m2 = score_block_bytelut(&blut, &packed, tokens, &mut b);
+        assert_eq!(m1.to_bits(), m2.to_bits());
+        assert_eq!(a, b);
+
+        let words = pack_signs_u64(&packed, tokens, dim / 8);
+        let q_words = vec![0x5a5a_5a5a_5a5a_5a5au64];
+        let sc = BlockScorer::Popcnt { q_words: &q_words, dim };
+        let m3 = sc.score_block(&[], &words, tokens, &mut a);
+        let m4 = score_block_popcnt(&q_words, &words, tokens, dim, &mut b);
+        assert_eq!(m3.to_bits(), m4.to_bits());
+        assert_eq!(a, b);
     }
 }

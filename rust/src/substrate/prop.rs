@@ -208,4 +208,105 @@ mod tests {
             assert!(v.iter().all(|&x| x < 10));
         }
     }
+
+    /// Random (dim, tokens) sign-code workload: raw key rows, their nibble
+    /// codes, and a query's codes — the shared generator for the
+    /// pack→score round-trip properties below.
+    fn sign_workload(r: &mut Rng) -> (usize, usize, Vec<u8>, Vec<u8>) {
+        // dims cover sub-word (non-multiple-of-64-bit) tails: 8..=136
+        let dim = 8 * (1 + r.below(17) as usize);
+        let tokens = r.below(70) as usize;
+        let key_codes: Vec<u8> =
+            (0..tokens * dim / 4).map(|_| r.below(16) as u8).collect();
+        let q_codes: Vec<u8> = (0..dim / 4).map(|_| r.below(16) as u8).collect();
+        (dim, tokens, key_codes, q_codes)
+    }
+
+    #[test]
+    fn prop_sign_word_packing_roundtrips_and_pads_tail() {
+        use crate::quant::pack;
+        check(11, 300, sign_workload, |(dim, tokens, key_codes, _)| {
+            let cb = dim / 8;
+            let packed = pack::pack_codes(key_codes);
+            let words = pack::pack_signs_u64(&packed, *tokens, cb);
+            let wpt = pack::words_per_token(cb);
+            prop_assert!(words.len() == tokens * wpt, "len {}", words.len());
+            for t in 0..*tokens {
+                let row = &packed[t * cb..(t + 1) * cb];
+                for (w, &word) in words[t * wpt..(t + 1) * wpt].iter().enumerate() {
+                    let bytes = word.to_le_bytes();
+                    for (i, &b) in bytes.iter().enumerate() {
+                        let want = row.get(w * 8 + i).copied().unwrap_or(0);
+                        prop_assert!(
+                            b == want,
+                            "token {t} word {w} byte {i}: {b} != {want} \
+                             (tail bytes must be zero-padded)"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_popcount_score_equals_naive_and_sign_lut() {
+        use crate::quant::pack;
+        use crate::selfindex::lut::Lut;
+        use crate::selfindex::score::{
+            score_block_popcnt, score_block_popcnt_scalar, score_tokens, ByteLut,
+        };
+        check(12, 200, sign_workload, |(dim, tokens, key_codes, q_codes)| {
+            let cb = dim / 8;
+            let packed = pack::pack_codes(key_codes);
+            let words = pack::pack_signs_u64(&packed, *tokens, cb);
+            let q_packed = pack::pack_codes(q_codes);
+            let q_words = pack::pack_signs_u64(&q_packed, 1, cb);
+            // naive oracle: per-nibble sign agreement, summed in i32
+            let naive: Vec<f32> = (0..*tokens)
+                .map(|t| {
+                    let mut acc = 0i32;
+                    for g in 0..dim / 4 {
+                        let kc = key_codes[t * (dim / 4) + g];
+                        acc += 4 - 2 * (q_codes[g] ^ kc).count_ones() as i32;
+                    }
+                    acc as f32
+                })
+                .collect();
+            let mut pop = vec![0.0f32; *tokens];
+            let mut sc = vec![0.0f32; *tokens];
+            let bmax = score_block_popcnt(&q_words, &words, *tokens, *dim, &mut pop);
+            let smax =
+                score_block_popcnt_scalar(&q_words, &words, *tokens, *dim, &mut sc);
+            let lut = Lut::sign_agreement(q_codes);
+            let blut = ByteLut::from_lut(&lut);
+            let mut via_lut = Vec::new();
+            score_tokens(&lut, &packed, *tokens, &mut via_lut);
+            let mut via_blut = Vec::new();
+            crate::selfindex::score::score_tokens_bytelut(
+                &blut, &packed, *tokens, &mut via_blut,
+            );
+            prop_assert!(bmax.to_bits() == smax.to_bits(), "{bmax} vs {smax}");
+            for t in 0..*tokens {
+                for (name, got) in [
+                    ("popcnt", pop[t]),
+                    ("popcnt_scalar", sc[t]),
+                    ("sign_lut", via_lut[t]),
+                    ("sign_bytelut", via_blut[t]),
+                ] {
+                    prop_assert!(
+                        got.to_bits() == naive[t].to_bits(),
+                        "token {t} {name}: {got} != naive {}",
+                        naive[t]
+                    );
+                }
+                prop_assert!(
+                    (-(*dim as f32)..=*dim as f32).contains(&pop[t]),
+                    "token {t} out of [-dim, dim]: {}",
+                    pop[t]
+                );
+            }
+            Ok(())
+        });
+    }
 }

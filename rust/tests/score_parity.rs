@@ -1,0 +1,157 @@
+//! CI kernel-parity matrix: every scorer implementation must produce
+//! BIT-IDENTICAL sign-agreement scores on randomized codes — the
+//! dispatched popcount kernel (AVX2 / hardware-popcnt / NEON, whatever
+//! the host selects), the always-compiled scalar popcount, the nibble
+//! reference scorer and the byte-combined LUT over `Lut::sign_agreement`,
+//! and a from-first-principles integer oracle. Scores are integers in
+//! [−dim, dim] and integer f32 addition is exact under any summation
+//! order, so equality holds under ANY RUSTFLAGS — the workflow runs this
+//! file twice (baseline and `-C target-cpu=native`) to pin exactly that.
+
+use selfindex_kv::quant::pack;
+use selfindex_kv::selfindex::codes::{encode_tokens_packed, sign_code};
+use selfindex_kv::selfindex::lut::Lut;
+use selfindex_kv::selfindex::score::{
+    popcnt_kernel_name, score_block_bytelut, score_block_popcnt, score_block_popcnt_scalar,
+    score_tokens, score_tokens_bytelut, BlockScorer, ByteLut,
+};
+use selfindex_kv::substrate::rng::Rng;
+
+/// The ground-truth oracle: unpack nibbles, count agreeing minus
+/// disagreeing sign bits per group, sum in i32.
+fn oracle(q_codes: &[u8], packed: &[u8], n_tokens: usize) -> Vec<f32> {
+    let g = q_codes.len();
+    let codes = pack::unpack_codes(packed, n_tokens * g);
+    (0..n_tokens)
+        .map(|t| {
+            let mut acc = 0i32;
+            for (gi, &qc) in q_codes.iter().enumerate() {
+                acc += 4 - 2 * (qc ^ codes[t * g + gi]).count_ones() as i32;
+            }
+            acc as f32
+        })
+        .collect()
+}
+
+/// Run all five scorer paths on one (query, keys) workload and assert
+/// bitwise equality of every score and of the block max.
+fn assert_parity(q_codes: &[u8], packed: &[u8], n_tokens: usize, dim: usize, label: &str) {
+    let cb = dim / 8;
+    assert_eq!(packed.len(), n_tokens * cb, "{label}: workload shape");
+    let expect = oracle(q_codes, packed, n_tokens);
+    let emax = expect.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+
+    // popcount: dispatched kernel + scalar, over word-packed codes
+    let words = pack::pack_signs_u64(packed, n_tokens, cb);
+    let q_packed = pack::pack_codes(q_codes);
+    let q_words = pack::pack_signs_u64(&q_packed, 1, cb);
+    let mut pop = vec![f32::NAN; n_tokens];
+    let mut pop_s = vec![f32::NAN; n_tokens];
+    let m_pop = score_block_popcnt(&q_words, &words, n_tokens, dim, &mut pop);
+    let m_pop_s = score_block_popcnt_scalar(&q_words, &words, n_tokens, dim, &mut pop_s);
+
+    // byte-LUT conformance oracle + reference scorer over the
+    // sign-agreement LUT (integer entries)
+    let lut = Lut::sign_agreement(q_codes);
+    let blut = ByteLut::from_lut(&lut);
+    let mut refr = Vec::new();
+    score_tokens(&lut, packed, n_tokens, &mut refr);
+    let mut bl = Vec::new();
+    score_tokens_bytelut(&blut, packed, n_tokens, &mut bl);
+    let mut bl_block = vec![f32::NAN; n_tokens];
+    let m_bl = score_block_bytelut(&blut, packed, n_tokens, &mut bl_block);
+
+    // and through the BlockScorer dispatch enum the serving path uses
+    let mut via_enum = vec![f32::NAN; n_tokens];
+    let enum_scorer = BlockScorer::Popcnt { q_words: &q_words, dim };
+    let m_enum = enum_scorer.score_block(&[], &words, n_tokens, &mut via_enum);
+
+    for t in 0..n_tokens {
+        let e = expect[t];
+        for (name, got) in [
+            ("popcnt", pop[t]),
+            ("popcnt_scalar", pop_s[t]),
+            ("reference", refr[t]),
+            ("bytelut", bl[t]),
+            ("bytelut_block", bl_block[t]),
+            ("block_scorer_enum", via_enum[t]),
+        ] {
+            assert_eq!(
+                got.to_bits(),
+                e.to_bits(),
+                "{label} token {t} {name}: {got} != oracle {e}"
+            );
+        }
+    }
+    if n_tokens > 0 {
+        for (name, got) in [
+            ("popcnt", m_pop),
+            ("popcnt_scalar", m_pop_s),
+            ("bytelut_block", m_bl),
+            ("block_scorer_enum", m_enum),
+        ] {
+            assert_eq!(got.to_bits(), emax.to_bits(), "{label} block max {name}");
+        }
+    }
+}
+
+#[test]
+fn parity_over_randomized_real_keys() {
+    // gaussian keys through the real encoder: the production shape
+    let mut r = Rng::new(0x5eed);
+    for &dim in &[8usize, 32, 56, 64, 72, 96, 128] {
+        for &tokens in &[0usize, 1, 7, 8, 33, 256, 511] {
+            let keys: Vec<f32> = (0..tokens * dim).map(|_| r.normal_f32()).collect();
+            let q: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+            let packed = encode_tokens_packed(&keys, dim);
+            let q_codes: Vec<u8> = q.chunks_exact(4).map(sign_code).collect();
+            assert_parity(&q_codes, &packed, tokens, dim, &format!("keys d{dim} n{tokens}"));
+        }
+    }
+}
+
+#[test]
+fn parity_over_raw_random_nibbles() {
+    // adversarial: arbitrary packed bytes, not reachable from any real
+    // key — the kernels must agree on ALL code patterns, not just the
+    // encoder's image
+    let mut r = Rng::new(0xfeed);
+    for &dim in &[16usize, 40, 64, 104, 128] {
+        for &tokens in &[1usize, 13, 64, 200] {
+            let cb = dim / 8;
+            let packed: Vec<u8> = (0..tokens * cb).map(|_| r.below(256) as u8).collect();
+            let q_codes: Vec<u8> = (0..dim / 4).map(|_| r.below(16) as u8).collect();
+            assert_parity(&q_codes, &packed, tokens, dim, &format!("raw d{dim} n{tokens}"));
+        }
+    }
+}
+
+#[test]
+fn parity_at_extremes() {
+    // all-zero and all-ones codes bracket the score range
+    for &dim in &[64usize, 128] {
+        let cb = dim / 8;
+        let zeros = vec![0u8; 3 * cb];
+        let ones = vec![0xffu8; 3 * cb];
+        let q_zero = vec![0u8; dim / 4];
+        let q_ones = vec![0xfu8; dim / 4];
+        for (q, keys, label) in [
+            (&q_zero, &zeros, "zz"),
+            (&q_zero, &ones, "zo"),
+            (&q_ones, &zeros, "oz"),
+            (&q_ones, &ones, "oo"),
+        ] {
+            assert_parity(q, keys, 3, dim, &format!("extreme {label} d{dim}"));
+        }
+    }
+}
+
+#[test]
+fn report_selected_kernel() {
+    // not an assertion — makes the dispatched kernel visible in CI logs
+    // (`cargo test -- --nocapture` in the parity matrix job) so a run
+    // that silently fell back to scalar is diagnosable
+    for wpt in [1usize, 2, 3] {
+        println!("popcnt kernel (wpt={wpt}): {}", popcnt_kernel_name(wpt));
+    }
+}

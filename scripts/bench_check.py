@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare freshly produced BENCH_*.json files
+against a checked-in baseline spec and fail CI on regressions.
+
+Usage: bench_check.py <baseline.json> [--dir DIR]
+
+The baseline spec is JSON:
+
+    {
+      "tolerance": 0.25,
+      "checks": [
+        {"file": "BENCH_decode.json", "metric": "retrieval_speedup",
+         "min": 1.2},
+        {"file": "BENCH_score.json",  "metric": "popcnt_tokens_per_sec",
+         "baseline": 2.0e8, "tolerance": 0.5}
+      ]
+    }
+
+Two check kinds:
+
+* "min"      — a hard floor, used for machine-relative ratios (a speedup
+               of the same workload on the same host must not dip below
+               it regardless of how fast the runner is).
+* "baseline" — an absolute reference value; the measured metric must be
+               >= baseline * (1 - tolerance). The per-check "tolerance"
+               overrides the spec-level default (0.25 = fail on a >25%
+               regression).
+
+Metrics are dotted paths into the bench JSON ("stage_us.score_select_us").
+A missing file or metric is a FAILURE — silently skipping a gate because
+a bench stopped emitting it would hide exactly the regressions this
+exists to catch. Stdlib only; exit code 1 on any failure.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_TOLERANCE = 0.25
+
+
+def lookup(doc, dotted):
+    """Resolve a dotted path into nested dicts; None if absent."""
+    node = doc
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def run_check(check, bench_dir, default_tol, cache):
+    path = os.path.join(bench_dir, check["file"])
+    if path not in cache:
+        try:
+            with open(path, encoding="utf-8") as f:
+                cache[path] = json.load(f)
+        except (OSError, ValueError) as e:
+            cache[path] = e
+    doc = cache[path]
+    name = "%s :: %s" % (check["file"], check["metric"])
+    if isinstance(doc, Exception):
+        return False, name, "cannot read %s: %s" % (check["file"], doc)
+
+    value = lookup(doc, check["metric"])
+    if not isinstance(value, (int, float)):
+        return False, name, "metric missing or non-numeric (got %r)" % (value,)
+
+    if "min" in check:
+        floor = float(check["min"])
+        ok = value >= floor
+        detail = "%.4g >= floor %.4g" % (value, floor)
+    elif "baseline" in check:
+        tol = float(check.get("tolerance", default_tol))
+        floor = float(check["baseline"]) * (1.0 - tol)
+        ok = value >= floor
+        detail = "%.4g >= baseline %.4g * (1 - %.2f) = %.4g" % (
+            value,
+            float(check["baseline"]),
+            tol,
+            floor,
+        )
+    else:
+        return False, name, "check has neither 'min' nor 'baseline'"
+    return ok, name, detail
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="path to the baseline spec JSON")
+    ap.add_argument(
+        "--dir",
+        default=None,
+        help="directory holding the BENCH_*.json files "
+        "(default: the baseline spec's directory)",
+    )
+    args = ap.parse_args()
+
+    with open(args.baseline, encoding="utf-8") as f:
+        spec = json.load(f)
+    bench_dir = args.dir or os.path.dirname(os.path.abspath(args.baseline))
+    default_tol = float(spec.get("tolerance", DEFAULT_TOLERANCE))
+    checks = spec.get("checks", [])
+    if not checks:
+        print("bench_check: baseline spec has no checks", file=sys.stderr)
+        return 1
+
+    cache = {}
+    failures = 0
+    print("bench regression gate (%d checks, default tolerance %.0f%%)" % (
+        len(checks), default_tol * 100))
+    for check in checks:
+        ok, name, detail = run_check(check, bench_dir, default_tol, cache)
+        status = "PASS" if ok else "FAIL"
+        print("  [%s] %-55s %s" % (status, name, detail))
+        if not ok:
+            failures += 1
+    if failures:
+        print("bench_check: %d of %d checks failed" % (failures, len(checks)),
+              file=sys.stderr)
+        return 1
+    print("bench_check: all %d checks passed" % len(checks))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
