@@ -1,26 +1,176 @@
-//! End-to-end validation driver (DESIGN.md §End-to-end validation):
-//! load the build-time-trained tiny model via PJRT, serve a batched
-//! open-loop trace of long-context requests through the full stack
-//! (router → scheduler → PJRT prefill → compressed cache → LUT-GEMV
-//! retrieval → fused sparse attention → PJRT decode), and report
-//! latency/throughput plus needle-recall accuracy of the generations.
+//! Long-context serving driver, two phases:
 //!
-//! Requires artifacts: `make artifacts` first.
+//! 1. **Serving bench** (runs everywhere, including CI): the
+//!    continuous-batching front-end (`ServingEngine` over the PJRT-free
+//!    `NativeExecutor`) replays an open-loop trace with Poisson
+//!    (exponential-gap) arrivals against the wall clock — chunked
+//!    prefill, wall-clock SLOs — and emits `BENCH_serving.json` with
+//!    TTFT p50/p99, TPOT, tokens/s, preemption and deadline-miss rates.
+//!    `SIKV_BENCH_FAST=1` shrinks the trace for smoke runs.
+//! 2. **End-to-end validation** (needs artifacts — `make artifacts`):
+//!    load the build-time-trained tiny model via PJRT, serve the trace
+//!    through the full stack (router → scheduler → PJRT prefill →
+//!    compressed cache → LUT-GEMV retrieval → fused sparse attention →
+//!    PJRT decode), and report latency/throughput plus needle-recall
+//!    accuracy of the generations.
+//!
 //! Run: `cargo run --release --example serve_longcontext -- [method]`
 
 use selfindex_kv::substrate::error as anyhow;
 use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use selfindex_kv::config::EngineConfig;
-use selfindex_kv::coordinator::{Engine, MethodKind};
-use selfindex_kv::substrate::benchkit::{fmt_bytes, fmt_duration, Table};
+use selfindex_kv::coordinator::{
+    Engine, MethodKind, NativeExecutor, Outcome, ServingEngine,
+};
+use selfindex_kv::kvcache::manager::KvManager;
+use selfindex_kv::selfindex::SelfIndexConfig;
+use selfindex_kv::substrate::benchkit::{fmt_bytes, fmt_duration, write_bench_json, Table};
+use selfindex_kv::substrate::json::{num, obj, s};
 use selfindex_kv::workloads::trace::{self, TraceConfig};
 
+fn fast_mode() -> bool {
+    std::env::var("SIKV_BENCH_FAST").is_ok()
+}
+
+/// Exact quantile by nearest-rank over a sorted sample.
+fn quantile_ms(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
+fn serving_bench(fast: bool) -> anyhow::Result<()> {
+    const DIM: usize = 64;
+    const BT: usize = 64;
+    const CHUNK: usize = 256;
+    let si = SelfIndexConfig::default();
+    // 512 blocks = 32K cache tokens: comfortably holds the running set,
+    // so the reported preemption rate reflects policy, not starvation
+    let mgr = Arc::new(KvManager::for_head(DIM, &si, BT, 512));
+    let exec = NativeExecutor::new(DIM, 1, 1, 1, 48, si, Arc::clone(&mgr));
+    let cfg = EngineConfig {
+        block_tokens: BT,
+        prefill_chunk_tokens: CHUNK,
+        max_batch: 8,
+        ..EngineConfig::default()
+    };
+    let mut eng = ServingEngine::new(cfg, exec)?;
+
+    let tcfg = TraceConfig {
+        requests: if fast { 16 } else { 48 },
+        mean_gap_ms: if fast { 2.0 } else { 5.0 },
+        prompt_lens: &[256, 512, 1024],
+        decode_tokens: 16,
+        seed: 2024,
+        slo_ms: Some(2_000.0),
+    };
+    let reqs = trace::generate(&tcfg);
+    let n = reqs.len();
+    println!(
+        "== serving bench: {n} requests, Poisson arrivals (mean gap {:.1} ms), \
+         chunked prefill ({CHUNK} tokens), SLO {} ms ==\n",
+        tcfg.mean_gap_ms,
+        tcfg.slo_ms.unwrap_or(0.0)
+    );
+
+    // open-loop replay against the wall clock: submit each request at its
+    // trace arrival time, step the engine whenever work is pending
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    while next < n || !eng.is_drained() {
+        let now = t0.elapsed();
+        while next < n && reqs[next].at <= now {
+            let r = &reqs[next];
+            match r.slo {
+                Some(slo) => eng.submit_with_deadline(r.prompt.clone(), r.max_new_tokens, slo),
+                None => eng.submit(r.prompt.clone(), r.max_new_tokens),
+            }
+            .expect("trace fits the admission queue");
+            next += 1;
+        }
+        if eng.is_drained() {
+            std::thread::sleep(Duration::from_micros(200)); // idle until the next arrival
+            continue;
+        }
+        eng.step()?;
+    }
+    let wall = t0.elapsed();
+
+    let mut results = eng.take_results();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), n, "every submitted request reaches a result");
+    let mut ttft_ms: Vec<f64> = results
+        .iter()
+        .filter(|r| r.decode_steps > 0)
+        .map(|r| r.ttft.as_secs_f64() * 1e3)
+        .collect();
+    ttft_ms.sort_by(f64::total_cmp);
+    let tpots: Vec<f64> = results
+        .iter()
+        .filter(|r| r.decode_steps > 1)
+        .map(|r| {
+            r.latency.saturating_sub(r.ttft).as_secs_f64() * 1e3 / (r.decode_steps - 1) as f64
+        })
+        .collect();
+    let tpot_ms = tpots.iter().sum::<f64>() / tpots.len().max(1) as f64;
+    let total_tokens: usize = results.iter().map(|r| r.generated.len()).sum();
+    let tokens_per_sec = total_tokens as f64 / wall.as_secs_f64();
+    let completed = results.iter().filter(|r| r.outcome == Outcome::Completed).count();
+    let misses = results
+        .iter()
+        .filter(|r| r.outcome == Outcome::DeadlineExceeded)
+        .count();
+    let preemptions = eng.metrics.counter("engine.preemptions").get();
+    let p50 = quantile_ms(&ttft_ms, 0.50);
+    let p99 = quantile_ms(&ttft_ms, 0.99);
+
+    let mut tab = Table::new(&["metric", "value"]);
+    tab.row(vec!["completed".into(), format!("{completed}/{n}")]);
+    tab.row(vec!["ttft p50".into(), format!("{p50:.2} ms")]);
+    tab.row(vec!["ttft p99".into(), format!("{p99:.2} ms")]);
+    tab.row(vec!["tpot (mean)".into(), format!("{tpot_ms:.3} ms")]);
+    tab.row(vec!["throughput".into(), format!("{tokens_per_sec:.0} tok/s")]);
+    tab.row(vec!["preemptions".into(), preemptions.to_string()]);
+    tab.row(vec!["deadline misses".into(), format!("{misses}/{n}")]);
+    tab.row(vec!["wall".into(), fmt_duration(wall)]);
+    println!("{}", tab.render());
+
+    let payload = obj(vec![
+        ("bench", s("serving")),
+        ("requests", num(n as f64)),
+        ("completed", num(completed as f64)),
+        ("ttft_p50_ms", num(p50)),
+        ("ttft_p99_ms", num(p99)),
+        ("tpot_ms", num(tpot_ms)),
+        ("tokens_per_sec", num(tokens_per_sec)),
+        ("preemption_rate", num(preemptions as f64 / n as f64)),
+        ("deadline_miss_rate", num(misses as f64 / n as f64)),
+        ("chunk_tokens", num(CHUNK as f64)),
+        ("wall_secs", num(wall.as_secs_f64())),
+    ]);
+    match write_bench_json("serving", payload) {
+        Ok(p) => println!("wrote {}\n", p.display()),
+        Err(e) => eprintln!("failed to write BENCH_serving.json: {e}\n"),
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    serving_bench(fast_mode())?;
+
     let args: Vec<String> = std::env::args().skip(1).collect();
     let method = MethodKind::parse(args.first().map(|s| s.as_str()).unwrap_or("selfindex"))
         .expect("method: selfindex|full|kivi|snapkv|quest|doublesparse");
     let artifacts = std::env::var("SIKV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !Path::new(&artifacts).join("manifest.json").exists() {
+        println!("(artifacts missing — PJRT needle-recall phase skipped; run `make artifacts`)");
+        return Ok(());
+    }
 
     let mut cfg = EngineConfig::default();
     cfg.max_batch = 4;
@@ -34,6 +184,7 @@ fn main() -> anyhow::Result<()> {
         prompt_lens: &[256, 512, 1024],
         decode_tokens: 8,
         seed: 2024,
+        slo_ms: None,
     };
     let reqs = trace::generate(&tcfg);
     // expected values: each trace prompt ends with "?key:" whose

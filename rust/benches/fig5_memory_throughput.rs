@@ -7,12 +7,12 @@
 //!
 //! Since the memory-manager PR this bench also drives an **oversubscribed
 //! trace** over the engine-wide shared block pool (no PJRT artifacts
-//! needed — the serving policy runs at the method/scheduler layer):
-//! admission on exact free-block accounting, preemption when a decode
-//! step cannot fit, prefix-block adoption across identical prompts. It
-//! reports pool occupancy, preemption and prefix-hit counts, and emits
-//! `BENCH_memory.json` (uploaded as a CI artifact next to
-//! `BENCH_decode.json`).
+//! needed — the trace runs the shipped `ServingEngine` over the
+//! `NativeExecutor` backend): admission on exact free-block accounting,
+//! preemption when a decode step cannot fit, prefix-block adoption across
+//! identical prompts. It reports pool occupancy, preemption and
+//! prefix-hit counts, and emits `BENCH_memory.json` (uploaded as a CI
+//! artifact next to `BENCH_decode.json`).
 
 mod common;
 
@@ -22,10 +22,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use selfindex_kv::config::EngineConfig;
-use selfindex_kv::coordinator::{Engine, MethodKind, PoolPressure, Scheduler, StepPlan};
+use selfindex_kv::coordinator::{Engine, MethodKind, NativeExecutor, Outcome, ServingEngine};
 use selfindex_kv::kvcache::manager::KvManager;
 use selfindex_kv::method::registry::{lookup, BuildCtx, CacheMethod};
-use selfindex_kv::method::{DecodePlan, SequenceCache};
+use selfindex_kv::method::SequenceCache;
 use selfindex_kv::selfindex::SelfIndexConfig;
 use selfindex_kv::substrate::benchkit::{fmt_bytes, write_bench_json, Table};
 use selfindex_kv::substrate::json::{num, obj, s};
@@ -58,16 +58,6 @@ fn prompt_kv(prompt_id: u64, layer: usize, tokens: usize) -> (Vec<f32>, Vec<f32>
     (keys, vals)
 }
 
-/// Deterministic decode inputs per (request, step): a preempted request
-/// replays the identical stream on recomputation.
-fn step_rows(id: u64, step: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let mut r = Rng::new(id * 7919 + step as u64 + 1);
-    let k = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
-    let v = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
-    let q = (0..KVH * R * DIM).map(|_| r.normal_f32()).collect();
-    (k, v, q)
-}
-
 struct TraceStats {
     completed: usize,
     preemptions: usize,
@@ -75,17 +65,10 @@ struct TraceStats {
     steps: usize,
 }
 
-struct Running {
-    cache: Box<dyn SequenceCache>,
-    steps_done: usize,
-    out: Vec<f32>,
-}
-
-/// The engine's serving policy at the method/scheduler layer: admit from
-/// the FIFO stash (then the queue) when the prompt fits on top of the
-/// running set's next decode step, preempt the youngest when a step
-/// cannot fit, decode otherwise. `prompts[i]` is request i's prompt id —
-/// duplicates share prefix blocks.
+/// Drive the shipped `ServingEngine` over a `NativeExecutor` bound to
+/// `mgr`'s pool. `prompts[i]` is request i's prompt id — duplicates
+/// submit byte-identical prompts (the executor derives its synthetic K/V
+/// from prompt content), so they share prefix blocks through adoption.
 fn run_trace(
     mgr: &Arc<KvManager>,
     prompts: &[u64],
@@ -93,90 +76,44 @@ fn run_trace(
     max_new: usize,
     max_batch: usize,
 ) -> TraceStats {
-    let si = SelfIndexConfig::default();
-    let overlay = vec![];
-    let entry = lookup("selfindex").unwrap();
-    let ctx = BuildCtx {
-        dim: DIM,
-        n_layers: LAYERS,
-        kv_heads: KVH,
-        gqa_ratio: R,
-        budget_hint: prompt_tokens,
-        mgr,
-        selfindex: &si,
-        overlay: &overlay,
-        prompt_hash: 0,
+    let exec = NativeExecutor::new(
+        DIM,
+        LAYERS,
+        KVH,
+        R,
+        BUDGET,
+        SelfIndexConfig::default(),
+        Arc::clone(mgr),
+    );
+    let cfg = EngineConfig {
+        max_batch,
+        block_tokens: BT,
+        // churn is the point of this trace; the thrash cutoff is
+        // tests/chaos_engine.rs's job
+        preempt_budget: 100,
+        ..EngineConfig::default()
     };
-    let admit_blocks = entry.head_blocks_for_prompt(prompt_tokens, BT) * LAYERS * KVH;
+    let mut eng = ServingEngine::new(cfg, exec).expect("valid config");
+    for &pid in prompts {
+        let prompt = (0..prompt_tokens)
+            .map(|t| (pid as u8).wrapping_mul(41) ^ (t as u8).wrapping_mul(29))
+            .collect();
+        eng.submit(prompt, max_new).expect("queue admits the trace");
+    }
 
-    let mut scheduler = Scheduler::new(max_batch);
-    let mut queue: std::collections::VecDeque<u64> = (0..prompts.len() as u64).collect();
-    let mut stash: std::collections::VecDeque<u64> = Default::default();
-    let mut running: std::collections::HashMap<u64, Running> = Default::default();
     let mut stats = TraceStats { completed: 0, preemptions: 0, peak_used_blocks: 0, steps: 0 };
-
     for _ in 0..200_000 {
-        if queue.is_empty() && stash.is_empty() && running.is_empty() {
+        if eng.is_drained() {
+            stats.completed = eng
+                .take_results()
+                .iter()
+                .filter(|r| r.outcome == Outcome::Completed)
+                .count();
+            stats.preemptions = eng.metrics.counter("engine.preemptions").get() as usize;
+            stats.steps = eng.step_index() as usize;
             return stats;
         }
-        stats.steps += 1;
-        let candidate = stash.front().or_else(|| queue.front()).copied();
-        let pressure = PoolPressure {
-            free_blocks: mgr.pool().free_blocks(),
-            admit_blocks: candidate.map(|_| admit_blocks),
-            step_blocks: scheduler
-                .running()
-                .iter()
-                .map(|id| running[id].cache.step_blocks())
-                .sum(),
-        };
-        match scheduler.plan(&pressure) {
-            StepPlan::Prefill => {
-                let id = stash.pop_front().or_else(|| queue.pop_front()).unwrap();
-                let mut cache = entry.build_seq(&ctx);
-                for l in 0..LAYERS {
-                    let (keys, vals) = prompt_kv(prompts[id as usize], l, prompt_tokens);
-                    cache.prefill_layer(l, &keys, &vals, &[]);
-                }
-                running
-                    .insert(id, Running { cache, steps_done: 0, out: vec![0.0; KVH * R * DIM] });
-                scheduler.add_running(id);
-            }
-            StepPlan::Decode(ids) => {
-                for id in ids {
-                    let st = running.get_mut(&id).unwrap();
-                    let (k, v, q) = step_rows(id, st.steps_done);
-                    for l in 0..LAYERS {
-                        let plan = DecodePlan {
-                            layer: l,
-                            dim: DIM,
-                            kv_heads: KVH,
-                            gqa_ratio: R,
-                            budget: BUDGET,
-                            k_rows: &k,
-                            v_rows: &v,
-                            queries: &q,
-                        };
-                        st.out.fill(0.0);
-                        st.cache.attend_step(&plan, &mut st.out);
-                    }
-                    st.steps_done += 1;
-                    if st.steps_done == max_new {
-                        running.remove(&id); // drop releases pool blocks
-                        scheduler.remove(id);
-                        stats.completed += 1;
-                    }
-                }
-            }
-            StepPlan::Preempt(id) => {
-                running.remove(&id); // drop releases pool blocks
-                scheduler.remove(id);
-                stash.push_back(id);
-                stats.preemptions += 1;
-            }
-            StepPlan::Shed(_) => unreachable!("no pinned sequences in this trace"),
-            StepPlan::Idle => {}
-        }
+        eng.step().expect("no state drift");
         stats.peak_used_blocks = stats.peak_used_blocks.max(mgr.pool().used_blocks());
     }
     panic!("oversubscribed trace did not converge");

@@ -196,6 +196,49 @@ impl SelfIndexing {
         );
     }
 
+    /// Chunked prefill (the serving path): ingest prompt tokens
+    /// `[start, end)`. `keys`/`vals`/`q_window` are the FULL prompt
+    /// arrays on every call — chunk 0 freezes stats and codebook over the
+    /// whole prompt (see [`HeadCache::ingest_prefill_range`]), so the
+    /// result is bit-identical to a one-shot [`Self::prefill`] regardless
+    /// of slicing. Sinks build on the final chunk only: SnapKV selection
+    /// needs every key, and mu has been frozen since chunk 0.
+    pub fn prefill_chunk(
+        &mut self,
+        keys: &[f32],
+        vals: &[f32],
+        q_window: &[f32],
+        r_heads: usize,
+        start: usize,
+        end: usize,
+    ) {
+        self.cache
+            .ingest_prefill_range(&self.mgr, keys, vals, start, end, self.prompt_hash)
+            .expect("shared kv pool exhausted at prefill (admission must check free blocks first)");
+        let tokens = keys.len() / self.dim;
+        if end == tokens && self.cfg.use_sinks && self.cfg.sink_tokens > 0 {
+            let sel = if q_window.is_empty() {
+                // degenerate: first tokens (StreamingLLM-style)
+                (0..self.cfg.sink_tokens.min(tokens) as u32).collect::<Vec<_>>()
+            } else {
+                snapkv_select(q_window, r_heads, keys, self.dim, self.cfg.sink_tokens)
+            };
+            // sink store holds CENTERED keys (K'), matching the compressed
+            // cache's reconstruction target
+            let mu = self.cache.mu().to_vec();
+            let mut centered = keys.to_vec();
+            for row in centered.chunks_exact_mut(self.dim) {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v -= mu[j];
+                }
+            }
+            self.sinks = SinkStore::build(self.dim, &sel, &centered, vals);
+            let mut ids = sel;
+            ids.sort_unstable();
+            self.sink_ids = ids;
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.cache.len() + self.recent.len() / (2 * self.dim)
     }
@@ -243,31 +286,10 @@ impl AttentionMethod for SelfIndexing {
     }
 
     fn prefill(&mut self, keys: &[f32], vals: &[f32], q_window: &[f32], r_heads: usize) {
-        self.cache
-            .ingest_prefill(&self.mgr, keys, vals, self.prompt_hash)
-            .expect("shared kv pool exhausted at prefill (admission must check free blocks first)");
-        if self.cfg.use_sinks && self.cfg.sink_tokens > 0 {
-            let sel = if q_window.is_empty() {
-                // degenerate: first tokens (StreamingLLM-style)
-                (0..self.cfg.sink_tokens.min(keys.len() / self.dim) as u32)
-                    .collect::<Vec<_>>()
-            } else {
-                snapkv_select(q_window, r_heads, keys, self.dim, self.cfg.sink_tokens)
-            };
-            // sink store holds CENTERED keys (K'), matching the compressed
-            // cache's reconstruction target
-            let mu = self.cache.mu().to_vec();
-            let mut centered = keys.to_vec();
-            for row in centered.chunks_exact_mut(self.dim) {
-                for (j, v) in row.iter_mut().enumerate() {
-                    *v -= mu[j];
-                }
-            }
-            self.sinks = SinkStore::build(self.dim, &sel, &centered, vals);
-            let mut ids = sel;
-            ids.sort_unstable();
-            self.sink_ids = ids;
-        }
+        // one-shot == a single chunk spanning the whole prompt: the
+        // serving layer's chunked path and this one are the same code
+        let tokens = keys.len() / self.dim;
+        self.prefill_chunk(keys, vals, q_window, r_heads, 0, tokens);
     }
 
     fn append(&mut self, k_row: &[f32], v_row: &[f32]) {

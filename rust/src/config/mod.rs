@@ -82,6 +82,14 @@ pub struct EngineConfig {
     /// tokens per pool block (paged-allocation granularity; must be a
     /// multiple of 8 for the block scorer's unroll)
     pub block_tokens: usize,
+    /// chunked-prefill slice size in tokens (0 = disabled: whole prompts
+    /// prefill in one step). When set, the serving layer splits long
+    /// prompts into slices of this many tokens and strictly alternates
+    /// them with decode turns over the running set. Must be a multiple of
+    /// `block_tokens` so every chunk boundary is a block boundary —
+    /// prefix-block registration/adoption operates on whole blocks and
+    /// the chunked ingest stays bit-identical to the one-shot path.
+    pub prefill_chunk_tokens: usize,
     /// admission queue bound (backpressure)
     pub queue_limit: usize,
     /// max new tokens per request default
@@ -117,6 +125,7 @@ impl Default for EngineConfig {
             sparse_k: Some(96),
             pool_tokens: 1 << 20,
             block_tokens: 64,
+            prefill_chunk_tokens: 0,
             queue_limit: 256,
             max_new_tokens: 32,
             decode_workers: 0,
@@ -155,6 +164,9 @@ impl EngineConfig {
         }
         if let Some(x) = v.get("block_tokens").and_then(Json::as_usize) {
             cfg.block_tokens = x;
+        }
+        if let Some(x) = v.get("prefill_chunk_tokens").and_then(Json::as_usize) {
+            cfg.prefill_chunk_tokens = x;
         }
         if let Some(x) = v.get("queue_limit").and_then(Json::as_usize) {
             cfg.queue_limit = x;
@@ -231,6 +243,14 @@ impl EngineConfig {
             return Err(format!(
                 "pool_tokens {} below one block ({})",
                 self.pool_tokens, self.block_tokens
+            ));
+        }
+        if self.prefill_chunk_tokens % self.block_tokens != 0 {
+            return Err(format!(
+                "prefill_chunk_tokens {} must be a multiple of block_tokens {} \
+                 (chunk boundaries must be block boundaries for prefix \
+                 registration and bit-exact chunked ingest)",
+                self.prefill_chunk_tokens, self.block_tokens
             ));
         }
         if self.preempt_budget == 0 {
@@ -332,6 +352,20 @@ mod tests {
         let e = EngineConfig::from_json(&j).unwrap();
         assert_eq!(e.block_tokens, 32);
         assert_eq!(e.pool_tokens, 4096);
+    }
+
+    #[test]
+    fn prefill_chunk_tokens_is_validated() {
+        assert_eq!(EngineConfig::default().prefill_chunk_tokens, 0, "off by default");
+        let j = Json::parse(r#"{"prefill_chunk_tokens":96}"#).unwrap();
+        let err = EngineConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("multiple of block_tokens"), "{err}");
+        let j = Json::parse(r#"{"prefill_chunk_tokens":256}"#).unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.prefill_chunk_tokens, 256);
+        let j = Json::parse(r#"{"block_tokens":32,"prefill_chunk_tokens":96}"#).unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.prefill_chunk_tokens, 96, "multiple of a non-default block");
     }
 
     #[test]

@@ -98,8 +98,98 @@ pub struct Engine {
     workers: ThreadPool,
     /// recycled task arena for the per-layer decode fan-out
     decode_tasks: DecodeWorkQueue,
-    /// monotone step counter — the clock for `submit_with_deadline`
+    /// cached PJRT staging per batch bucket: bucket-name strings + host
+    /// tensor buffers reused across decode steps (no steady-state
+    /// formatting or staging allocations)
+    staging: Vec<DecodeStaging>,
+    /// monotone step counter (scheduler progress metric)
     step_idx: u64,
+}
+
+/// Cached host-side staging for one `decode_batch` bucket size `bb`:
+/// the four bucket-name strings and the token/position/output buffers
+/// (with their shape vectors), reused across decode steps via
+/// take-into-`HostTensor` / put-back cycles — steady-state decode stages
+/// with zero heap allocations (asserted by the unit test below, since
+/// PJRT itself cannot run in CI).
+struct DecodeStaging {
+    bb: usize,
+    embed: String,
+    qkv: String,
+    out: String,
+    logits: String,
+    toks: Vec<i32>,
+    toks_shape: Vec<usize>,
+    pos: Vec<i32>,
+    pos_shape: Vec<usize>,
+    o: Vec<f32>,
+    o_shape: Vec<usize>,
+}
+
+impl DecodeStaging {
+    fn new(bb: usize, h: usize, hd: usize) -> Self {
+        Self {
+            bb,
+            embed: format!("embed_b{bb}"),
+            qkv: format!("decode_qkv_b{bb}"),
+            out: format!("decode_out_b{bb}"),
+            logits: format!("logits_b{bb}"),
+            toks: vec![0; bb],
+            toks_shape: vec![bb],
+            pos: vec![0; bb],
+            pos_shape: vec![bb],
+            o: vec![0.0; bb * h * hd],
+            o_shape: vec![bb, h, hd],
+        }
+    }
+
+    fn take_toks(&mut self) -> HostTensor {
+        HostTensor::I32(std::mem::take(&mut self.toks), std::mem::take(&mut self.toks_shape))
+    }
+
+    fn put_toks(&mut self, t: HostTensor) {
+        if let HostTensor::I32(v, s) = t {
+            self.toks = v;
+            self.toks_shape = s;
+        }
+    }
+
+    fn take_pos(&mut self) -> HostTensor {
+        HostTensor::I32(std::mem::take(&mut self.pos), std::mem::take(&mut self.pos_shape))
+    }
+
+    fn put_pos(&mut self, t: HostTensor) {
+        if let HostTensor::I32(v, s) = t {
+            self.pos = v;
+            self.pos_shape = s;
+        }
+    }
+
+    fn take_o(&mut self) -> HostTensor {
+        HostTensor::F32(std::mem::take(&mut self.o), std::mem::take(&mut self.o_shape))
+    }
+
+    fn put_o(&mut self, t: HostTensor) {
+        if let HostTensor::F32(v, s) = t {
+            self.o = v;
+            self.o_shape = s;
+        }
+    }
+}
+
+/// Parse the numeric suffix of a PJRT bucket name (`prefill_l4096` →
+/// 4096). A name that does not parse means the compiled manifest and the
+/// engine have drifted — surfaced as a `"state_drift"`-coded error, never
+/// an engine-crashing panic.
+fn parse_bucket(name: &str, prefix: &str) -> anyhow::Result<usize> {
+    name.strip_prefix(prefix)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            anyhow::Error::coded(
+                "state_drift",
+                format!("unparseable bucket name {name:?} (expected {prefix}<N>)"),
+            )
+        })
 }
 
 impl Engine {
@@ -160,6 +250,7 @@ impl Engine {
                 ThreadPool::new(cfg.decode_workers)
             },
             decode_tasks: DecodeWorkQueue::new(),
+            staging: vec![],
             builder,
             rt,
             model,
@@ -181,16 +272,18 @@ impl Engine {
         self.router.submit(prompt, max_new)
     }
 
-    /// [`Self::submit`] with a step budget: the request expires once the
-    /// engine has run `max_steps` more steps, completing with whatever it
-    /// generated by then as [`Outcome::DeadlineExceeded`].
+    /// [`Self::submit`] with a wall-clock SLO: the request expires `slo`
+    /// after submission, completing with whatever it generated by then as
+    /// [`Outcome::DeadlineExceeded`] (empty output if it never ran —
+    /// expiry is also checked at admission, so a dead-on-arrival request
+    /// never burns its prefill).
     pub fn submit_with_deadline(
         &mut self,
         prompt: Vec<u8>,
         max_new: usize,
-        max_steps: u64,
+        slo: Duration,
     ) -> Result<RequestId, AdmitError> {
-        self.router.submit_with(prompt, max_new, Some(self.step_idx + max_steps))
+        self.router.submit_with(prompt, max_new, Some(Instant::now() + slo))
     }
 
     pub fn idle(&self) -> bool {
@@ -211,7 +304,7 @@ impl Engine {
         &self.faults
     }
 
-    /// Steps executed so far (the `submit_with_deadline` clock).
+    /// Steps executed so far.
     pub fn step_index(&self) -> u64 {
         self.step_idx
     }
@@ -303,16 +396,16 @@ impl Engine {
         Ok(None)
     }
 
-    /// Expire every request whose deadline step has passed: running
+    /// Expire every request whose wall-clock deadline has passed: running
     /// sequences complete with their partial output, stashed/queued ones
     /// with empty output — all as [`Outcome::DeadlineExceeded`].
     fn expire_deadlines(&mut self) -> Vec<RequestResult> {
-        let step = self.step_idx;
+        let now = Instant::now();
         let mut results = vec![];
         let mut expired_running: Vec<RequestId> = self
             .seqs
             .iter()
-            .filter(|(_, st)| st.req.deadline_step.is_some_and(|d| step >= d))
+            .filter(|(_, st)| st.req.deadline.is_some_and(|d| now >= d))
             .map(|(&id, _)| id)
             .collect();
         expired_running.sort_unstable(); // map order is not deterministic
@@ -323,14 +416,14 @@ impl Engine {
         }
         let mut kept = VecDeque::with_capacity(self.stash.len());
         for r in self.stash.drain(..) {
-            if r.deadline_step.is_some_and(|d| step >= d) {
+            if r.deadline.is_some_and(|d| now >= d) {
                 results.push(Self::never_ran(r, Outcome::DeadlineExceeded));
             } else {
                 kept.push_back(r);
             }
         }
         self.stash = kept;
-        for r in self.router.expire_before(step) {
+        for r in self.router.expire_before(now) {
             results.push(Self::never_ran(r, Outcome::DeadlineExceeded));
         }
         if !results.is_empty() {
@@ -375,6 +468,9 @@ impl Engine {
             free_blocks: self.mgr.pool().free_blocks(),
             admit_blocks: candidate.map(|len| self.admit_blocks_for(len)),
             step_blocks: self.step_blocks(),
+            // this engine prefills whole prompts in one step; the chunked
+            // path lives in `super::serving::ServingEngine`
+            ..Default::default()
         };
         let plan = self.scheduler.plan(&pressure);
         // deferred = batch capacity existed but pool pressure refused the
@@ -421,6 +517,10 @@ impl Engine {
                 Ok(vec![Self::finish(st, Outcome::Thrashing)])
             }
             StepPlan::Decode(ids) => self.do_decode(&ids),
+            StepPlan::PrefillChunk => Err(anyhow::Error::coded(
+                "state_drift",
+                "scheduler planned a prefill chunk but this engine never starts one",
+            )),
             StepPlan::Idle => Ok(vec![]),
         };
         self.refresh_pool_gauges();
@@ -446,6 +546,13 @@ impl Engine {
     /// engine error, not a per-request one.
     fn do_prefill(&mut self, req: Request) -> anyhow::Result<Option<RequestResult>> {
         let t0 = Instant::now();
+        // admission-time SLO check: an already-expired request must not
+        // burn a (possibly 100K-token) prefill only to be discarded at
+        // the next step boundary
+        if req.deadline.is_some_and(|d| t0 >= d) {
+            self.metrics.counter("engine.deadline_expired").inc();
+            return Ok(Some(Self::never_ran(req, Outcome::DeadlineExceeded)));
+        }
         let prompt_len = req.prompt.len();
         let bucket = self
             .rt
@@ -454,7 +561,16 @@ impl Engine {
             .ok_or_else(|| anyhow::anyhow!("prompt {} exceeds buckets", prompt_len))?
             .name
             .clone();
-        let padded: usize = bucket.strip_prefix("prefill_l").unwrap().parse().unwrap();
+        let padded: usize = match parse_bucket(&bucket, "prefill_l") {
+            Ok(p) => p,
+            Err(_) => {
+                // manifest drift is contained per the robustness policy:
+                // fail THIS request with a structured outcome and keep
+                // the engine serving, instead of panicking the loop
+                self.metrics.counter("engine.request_failures").inc();
+                return Ok(Some(Self::never_ran(req, Outcome::Failed)));
+            }
+        };
 
         let mut tokens = vec![0i32; padded];
         for (i, &b) in req.prompt.iter().enumerate() {
@@ -598,18 +714,30 @@ impl Engine {
             .ok_or_else(|| anyhow::anyhow!("batch {} exceeds buckets", b))?
             .name
             .clone();
-        let bb: usize = bucket.strip_prefix("embed_b").unwrap().parse().unwrap();
+        let bb: usize = parse_bucket(&bucket, "embed_b")?;
+        // bucket-keyed staging cache: bucket-name strings + host buffers
+        // reused across steps (a `?` return drops the entry; it is
+        // rebuilt on the next step)
+        let idx = match self.staging.iter().position(|s| s.bb == bb) {
+            Some(i) => i,
+            None => {
+                self.staging.push(DecodeStaging::new(bb, h, hd));
+                self.staging.len() - 1
+            }
+        };
+        let mut stg = self.staging.swap_remove(idx);
 
         // stage last tokens + positions (padded to bucket)
-        let mut toks = vec![0i32; bb];
-        let mut pos = vec![0i32; bb];
+        stg.toks.fill(0);
+        stg.pos.fill(0);
         for (i, s) in states.iter().enumerate() {
-            toks[i] = *s.tokens.last().unwrap() as i32;
-            pos[i] = (s.tokens.len() - 1) as i32;
+            stg.toks[i] = *s.tokens.last().unwrap() as i32;
+            stg.pos[i] = (s.tokens.len() - 1) as i32;
         }
-        let outs = self
-            .rt
-            .run(&format!("embed_b{bb}"), None, &[HostTensor::I32(toks, vec![bb])])?;
+        let args = [stg.take_toks()];
+        let outs = self.rt.run(&stg.embed, None, &args)?;
+        let [toks_t] = args;
+        stg.put_toks(toks_t);
         let mut x = outs.into_iter().next().unwrap();
 
         let budgets: Vec<usize> = states
@@ -622,11 +750,11 @@ impl Engine {
         let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(b);
 
         for l in 0..nl {
-            let qkv = self.rt.run(
-                &format!("decode_qkv_b{bb}"),
-                Some(l),
-                &[x.clone(), HostTensor::I32(pos.clone(), vec![bb])],
-            )?;
+            let args = [x, stg.take_pos()];
+            let qkv = self.rt.run(&stg.qkv, Some(l), &args)?;
+            let [x_back, pos_t] = args;
+            x = x_back;
+            stg.put_pos(pos_t);
             let (q, k, v) = (&qkv[0], &qkv[1], &qkv[2]);
             let qf = q.as_f32(); // (bb, h, hd)
             let kf = k.as_f32(); // (bb, kvh, hd)
@@ -637,11 +765,11 @@ impl Engine {
             // expands its DecodePlan into HeadTasks (disjoint &mut leaf +
             // disjoint r·hd output chunk), and the pre-built task slice
             // runs under one atomic cursor — no per-job boxing
-            let mut o = vec![0.0f32; bb * h * hd];
+            stg.o.fill(0.0);
             {
                 let mut tasks = self.decode_tasks.take();
                 ranges.clear();
-                let mut o_chunks = o.chunks_mut(h * hd);
+                let mut o_chunks = stg.o.chunks_mut(h * hd);
                 for (i, seq) in states.iter_mut().enumerate() {
                     let oslice = o_chunks.next().unwrap();
                     let start = tasks.len();
@@ -679,21 +807,22 @@ impl Engine {
                 self.decode_tasks.bank(tasks);
             }
 
-            let next = self.rt.run(
-                &format!("decode_out_b{bb}"),
-                Some(l),
-                &[HostTensor::F32(o, vec![bb, h, hd]), x.clone()],
-            )?;
+            let args = [stg.take_o(), x];
+            let next = self.rt.run(&stg.out, Some(l), &args)?;
+            let [o_t, _x_residual] = args;
+            stg.put_o(o_t);
             x = next.into_iter().next().unwrap();
         }
         debug_assert_eq!(x.shape(), &[bb, d]);
 
+        let args = [x];
         let logits = self
             .rt
-            .run(&format!("logits_b{bb}"), None, &[x])?
+            .run(&stg.logits, None, &args)?
             .into_iter()
             .next()
             .unwrap();
+        self.staging.push(stg);
         let lf = logits.as_f32(); // (bb, vocab)
         let vocab = self.model.vocab_size;
         for (i, seq) in states.iter_mut().enumerate() {
@@ -812,4 +941,66 @@ fn argmax(xs: &[f32]) -> usize {
         }
     }
     best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::metrics::thread_allocations;
+
+    #[test]
+    fn bucket_parse_is_fallible_not_panicking() {
+        assert_eq!(parse_bucket("prefill_l4096", "prefill_l").unwrap(), 4096);
+        assert_eq!(parse_bucket("embed_b8", "embed_b").unwrap(), 8);
+        for bad in ["prefill_l", "prefill_lx", "decode_b8", ""] {
+            let e = parse_bucket(bad, "prefill_l").unwrap_err();
+            assert_eq!(e.code(), Some("state_drift"), "drift must be coded: {bad:?}");
+        }
+    }
+
+    /// One full staging cycle exactly as `decode_batch` performs it:
+    /// fill + take/put the token and position tensors, zero + take/put
+    /// the per-layer output buffer. PJRT itself cannot run in CI, so the
+    /// reuse contract is asserted directly on the staging struct under
+    /// the counting allocator.
+    fn staging_cycle(stg: &mut DecodeStaging, layers: usize) {
+        stg.toks.fill(0);
+        stg.pos.fill(0);
+        stg.toks[0] = 7;
+        stg.pos[0] = 42;
+        let args = [stg.take_toks()];
+        let [t] = args;
+        stg.put_toks(t);
+        for _ in 0..layers {
+            let args = [stg.take_pos()];
+            let [p] = args;
+            stg.put_pos(p);
+            stg.o.fill(0.0);
+            let args = [stg.take_o()];
+            let [o] = args;
+            stg.put_o(o);
+        }
+    }
+
+    #[test]
+    fn decode_staging_reuse_is_allocation_free() {
+        let mut stg = DecodeStaging::new(8, 4, 16);
+        for _ in 0..4 {
+            staging_cycle(&mut stg, 3); // warm-up
+        }
+        let before = thread_allocations();
+        for _ in 0..8 {
+            staging_cycle(&mut stg, 3);
+        }
+        assert_eq!(
+            thread_allocations() - before,
+            0,
+            "steady-state decode staging must not allocate"
+        );
+        assert_eq!(stg.toks.len(), 8, "buffers survive the cycles");
+        assert_eq!(stg.pos.len(), 8);
+        assert_eq!(stg.o.len(), 8 * 4 * 16);
+        assert_eq!(stg.toks_shape, [8]);
+        assert_eq!(stg.o_shape, [8, 4, 16]);
+    }
 }

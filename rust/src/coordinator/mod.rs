@@ -5,16 +5,25 @@
 //!   under backpressure, queue metrics.
 //! * [`scheduler`] — step planning: continuous batching of decodes,
 //!   prefill interleaving, pool-pressure awareness.
-//! * [`engine`]    — the serving loop: PJRT prefill → per-head compressed
-//!   caches → per-step LUT-GEMV retrieval + sparse attention → PJRT
-//!   decode projections → greedy sampling. Python never runs here.
+//! * [`engine`]    — the closed-batch serving loop: PJRT prefill →
+//!   per-head compressed caches → per-step LUT-GEMV retrieval + sparse
+//!   attention → PJRT decode projections → greedy sampling. Python never
+//!   runs here.
+//! * [`serving`]   — the continuous-batching front-end: async-style
+//!   submission with per-request token streams, chunked prefill
+//!   interleaved with decode turns, wall-clock SLOs, and the PJRT-free
+//!   [`NativeExecutor`] backend for tests/benches/CI.
 
 pub mod engine;
 pub mod request;
 pub mod router;
 pub mod scheduler;
+pub mod serving;
 
 pub use engine::{Engine, MethodKind};
 pub use request::{Outcome, Request, RequestId, RequestResult, RequestState};
 pub use router::Router;
 pub use scheduler::{PoolPressure, Scheduler, StepPlan};
+pub use serving::{
+    DecodeOutcome, NativeExecutor, SeqExecutor, ServingEngine, StreamEvent, SubmitHandle,
+};

@@ -17,9 +17,11 @@ pub struct Request {
     /// evictions suffered so far — drives the scheduler's pin-after-N
     /// aging and the 2N thrashing cutoff (see `EngineConfig::preempt_budget`)
     pub preempt_count: u32,
-    /// absolute engine step after which the request expires
-    /// (`Engine::submit_with_deadline`); `None` = no deadline
-    pub deadline_step: Option<u64>,
+    /// wall-clock SLO: the instant at which the request expires
+    /// (`submit_with_deadline` stamps `now + slo`); `None` = no deadline.
+    /// Checked at step boundaries AND at admission, so an already-expired
+    /// request never burns a long prefill.
+    pub deadline: Option<Instant>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +49,10 @@ pub enum Outcome {
     /// a decode worker panicked on this sequence; its in-memory state is
     /// suspect, so the partial output is returned and the blocks released
     WorkerPanic,
+    /// an engine-side invariant broke while serving this request (e.g. a
+    /// drifted PJRT bucket name) — contained per the robustness policy:
+    /// the request fails with whatever it produced, the engine continues
+    Failed,
 }
 
 #[derive(Clone, Debug)]

@@ -61,12 +61,13 @@ impl Router {
         self.submit_with(prompt, max_new_tokens, None)
     }
 
-    /// [`Self::submit`] with an absolute engine-step deadline.
+    /// [`Self::submit`] with an absolute wall-clock deadline (the serving
+    /// layer stamps `now + slo`).
     pub fn submit_with(
         &mut self,
         prompt: Vec<u8>,
         max_new_tokens: usize,
-        deadline_step: Option<u64>,
+        deadline: Option<Instant>,
     ) -> Result<RequestId, AdmitError> {
         if prompt.is_empty() {
             return Err(AdmitError::EmptyPrompt);
@@ -89,22 +90,22 @@ impl Router {
             submitted_at: Instant::now(),
             prompt_hash,
             preempt_count: 0,
-            deadline_step,
+            deadline,
         });
         self.metrics.counter("router.admitted").inc();
         self.metrics.gauge("router.queue_depth").set(self.queue.len() as i64);
         Ok(id)
     }
 
-    /// Drain every queued request whose deadline is at or before `step` —
+    /// Drain every queued request whose deadline is at or before `now` —
     /// the engine turns them into `Outcome::DeadlineExceeded` results with
     /// empty output (they never ran).
-    pub fn expire_before(&mut self, step: u64) -> Vec<Request> {
+    pub fn expire_before(&mut self, now: Instant) -> Vec<Request> {
         let expired: Vec<Request> = {
             let mut kept = VecDeque::with_capacity(self.queue.len());
             let mut out = vec![];
             for r in self.queue.drain(..) {
-                if r.deadline_step.is_some_and(|d| step >= d) {
+                if r.deadline.is_some_and(|d| now >= d) {
                     out.push(r);
                 } else {
                     kept.push_back(r);
@@ -203,16 +204,22 @@ mod tests {
 
     #[test]
     fn expire_before_drains_only_overdue_deadlines() {
+        use std::time::Duration;
+        let t0 = Instant::now();
         let mut r = router(8);
-        let a = r.submit_with(vec![1], 4, Some(5)).unwrap();
-        let b = r.submit_with(vec![2], 4, Some(100)).unwrap();
+        let a = r
+            .submit_with(vec![1], 4, Some(t0 + Duration::from_millis(5)))
+            .unwrap();
+        let b = r
+            .submit_with(vec![2], 4, Some(t0 + Duration::from_secs(100)))
+            .unwrap();
         let c = r.submit(vec![3], 4).unwrap();
-        let expired = r.expire_before(5);
+        let expired = r.expire_before(t0 + Duration::from_millis(5));
         assert_eq!(expired.len(), 1);
         assert_eq!(expired[0].id, a);
         assert_eq!(r.depth(), 2, "live deadline and no-deadline stay queued");
         assert_eq!(r.pop().unwrap().id, b);
         assert_eq!(r.pop().unwrap().id, c);
-        assert!(r.expire_before(u64::MAX).is_empty());
+        assert!(r.expire_before(t0 + Duration::from_secs(1000)).is_empty());
     }
 }

@@ -21,8 +21,12 @@ use super::request::RequestId;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum StepPlan {
     /// admit the request at the head of the deferred/router queue
-    /// (the engine pops it and runs its prefill)
+    /// (the engine pops it and runs its prefill — or, when chunked
+    /// prefill is configured, its first `prefill_chunk_tokens` slice)
     Prefill,
+    /// continue the mid-flight chunked prefill with its next token slice
+    /// (see [`PoolPressure::inflight_prefill`])
+    PrefillChunk,
     /// one decode step over these running sequences
     Decode(Vec<RequestId>),
     /// evict this (youngest unpinned) running sequence: release its
@@ -47,6 +51,15 @@ pub struct PoolPressure {
     pub admit_blocks: Option<usize>,
     /// blocks the running set will allocate on its next decode step
     pub step_blocks: usize,
+    /// a chunked prefill is mid-flight: new admissions pause until its
+    /// final slice lands, and its remaining chunks alternate with decode
+    /// steps over the running set
+    pub inflight_prefill: bool,
+    /// the previous plan ran a prefill chunk — with anything running, the
+    /// next plan is a decode turn (strict alternation: a 100K-token
+    /// prompt can never stall an in-flight decode for more than one
+    /// chunk's worth of work)
+    pub chunk_last: bool,
 }
 
 pub struct Scheduler {
@@ -97,6 +110,11 @@ impl Scheduler {
 
     /// Plan the next step from exact pool pressure.
     ///
+    /// * A mid-flight chunked prefill ([`PoolPressure::inflight_prefill`])
+    ///   takes priority over new admissions and strictly alternates with
+    ///   decode turns: after a chunk (`chunk_last`), anything running gets
+    ///   a decode step (or a preemption if that step cannot fit) before
+    ///   the next chunk; with nothing running, chunks run back-to-back.
     /// * Admission requires batch capacity AND enough free blocks for the
     ///   prompt *on top of* the running set's next step — admitting must
     ///   never trigger an immediate preemption. When nothing is running
@@ -111,7 +129,13 @@ impl Scheduler {
     ///   [`StepPlan::Shed`] — the engine fails that request with a
     ///   structured `Thrashing` outcome rather than spinning forever.
     pub fn plan(&self, pressure: &PoolPressure) -> StepPlan {
-        if let Some(need) = pressure.admit_blocks {
+        if pressure.inflight_prefill {
+            if self.running.is_empty() || !pressure.chunk_last {
+                return StepPlan::PrefillChunk;
+            }
+            // chunk_last with a live running set: fall through to the
+            // decode/preempt logic below — the running set's turn
+        } else if let Some(need) = pressure.admit_blocks {
             let fits = pressure
                 .free_blocks
                 .checked_sub(pressure.step_blocks)
@@ -142,7 +166,7 @@ mod tests {
         admit_blocks: Option<usize>,
         step_blocks: usize,
     ) -> PoolPressure {
-        PoolPressure { free_blocks, admit_blocks, step_blocks }
+        PoolPressure { free_blocks, admit_blocks, step_blocks, ..Default::default() }
     }
 
     #[test]
@@ -225,6 +249,60 @@ mod tests {
     }
 
     #[test]
+    fn chunked_prefill_alternates_with_decode_turns() {
+        let mut s = Scheduler::new(4);
+        s.add_running(1);
+        let chunk_turn = PoolPressure {
+            free_blocks: 100,
+            step_blocks: 1,
+            inflight_prefill: true,
+            ..Default::default()
+        };
+        assert_eq!(s.plan(&chunk_turn), StepPlan::PrefillChunk);
+        // the chunk ran: the running set gets its decode turn next
+        let decode_turn = PoolPressure { chunk_last: true, ..chunk_turn };
+        assert_eq!(s.plan(&decode_turn), StepPlan::Decode(vec![1]));
+        // nothing running: chunks run back-to-back
+        s.remove(1);
+        assert_eq!(s.plan(&decode_turn), StepPlan::PrefillChunk);
+    }
+
+    #[test]
+    fn inflight_prefill_pauses_admission() {
+        let mut s = Scheduler::new(4);
+        s.add_running(1);
+        // a queued prompt that would otherwise admit must wait for the
+        // mid-flight chunked prefill to land its final slice
+        let p = PoolPressure {
+            free_blocks: 100,
+            admit_blocks: Some(2),
+            step_blocks: 1,
+            inflight_prefill: true,
+            ..Default::default()
+        };
+        assert_eq!(s.plan(&p), StepPlan::PrefillChunk);
+        assert_eq!(
+            s.plan(&PoolPressure { chunk_last: true, ..p }),
+            StepPlan::Decode(vec![1])
+        );
+    }
+
+    #[test]
+    fn inflight_decode_turn_still_preempts_under_pressure() {
+        let mut s = Scheduler::new(4);
+        s.add_running(1);
+        s.add_running(2);
+        let p = PoolPressure {
+            free_blocks: 1,
+            step_blocks: 3,
+            inflight_prefill: true,
+            chunk_last: true,
+            ..Default::default()
+        };
+        assert_eq!(s.plan(&p), StepPlan::Preempt(2));
+    }
+
+    #[test]
     fn pinned_sequences_are_skipped_as_victims() {
         let mut s = Scheduler::new(4);
         s.add_running(1);
@@ -280,6 +358,7 @@ mod tests {
                     free_blocks: free,
                     admit_blocks: Some(need),
                     step_blocks: step,
+                    ..Default::default()
                 };
                 if s.plan(&p) != StepPlan::Prefill {
                     return Ok(()); // vacuous: nothing admitted
@@ -294,6 +373,7 @@ mod tests {
                     free_blocks: free - need,
                     admit_blocks: None,
                     step_blocks: step,
+                    ..Default::default()
                 };
                 match s.plan(&after) {
                     StepPlan::Preempt(_) | StepPlan::Shed(_) => Err(format!(
@@ -353,6 +433,7 @@ mod tests {
                         free_blocks: free,
                         admit_blocks: admit,
                         step_blocks,
+                        ..Default::default()
                     };
                     let plan = s.plan(&p);
                     let is_shed = matches!(plan, StepPlan::Shed(_));

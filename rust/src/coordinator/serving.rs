@@ -1,0 +1,1010 @@
+//! Continuous-batching serving front-end (DESIGN.md §Serving).
+//!
+//! [`ServingEngine`] wraps the coordinator's admission/scheduling stack
+//! (router → scheduler → shared-pool accounting) behind an async-style
+//! API: [`ServingEngine::submit`] returns a [`SubmitHandle`] immediately
+//! and tokens stream to it as they are produced, while the caller (or a
+//! driver loop) pumps [`ServingEngine::step`].
+//!
+//! Chunked prefill: with `EngineConfig::prefill_chunk_tokens > 0`, a long
+//! prompt is ingested `chunk` tokens at a time, and the scheduler
+//! alternates each chunk with a decode turn for the running batch
+//! ([`StepPlan::PrefillChunk`]) — a 100K-token arrival can no longer
+//! stall every in-flight decode for the whole prefill. Chunk boundaries
+//! are block boundaries (validated in `EngineConfig::validate`), and
+//! chunk 0 freezes per-head stats/codebooks over the FULL prompt
+//! (`HeadCache::ingest_prefill_range`), so the chunked cache is
+//! bit-identical to a one-shot prefill — served output equals closed
+//! batch output by construction.
+//!
+//! Deadlines are wall-clock SLOs ([`ServingEngine::submit_with_deadline`]
+//! stamps `now + slo`), checked at every step boundary AND at admission,
+//! so an already-expired request never burns a long prefill. Tests pin
+//! time with [`ServingEngine::with_virtual_clock`] (the clock advances a
+//! fixed tick per step), keeping deadline scenarios deterministic.
+//!
+//! The engine is generic over a [`SeqExecutor`] — the thing that actually
+//! builds per-sequence caches and runs attention. [`NativeExecutor`]
+//! runs the full self-indexing stack (shared [`KvManager`] pool, prefix
+//! reuse, fault injection, [`HeadTask::run_isolated`] panic containment)
+//! on synthetic deterministic K/V derived from prompt *content*, so the
+//! complete serving lifecycle — preemption, thrashing, worker panics,
+//! SLO expiry, chunked prefill — is exercised in tests, benches, and CI
+//! without PJRT artifacts. The PJRT [`super::Engine`] keeps its own
+//! closed-batch loop; both sit on the same router/scheduler/pool layers.
+
+use crate::substrate::error as anyhow;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::request::{Outcome, Request, RequestId, RequestResult};
+use super::router::{AdmitError, Router};
+use super::scheduler::{PoolPressure, Scheduler, StepPlan};
+use crate::baselines::{AttentionMethod, SelfIndexing};
+use crate::config::EngineConfig;
+use crate::kvcache::manager::KvManager;
+use crate::method::HeadTask;
+use crate::selfindex::SelfIndexConfig;
+use crate::substrate::faults::FaultInjector;
+use crate::substrate::metrics::Registry;
+use crate::substrate::rng::Rng;
+
+/// What a decode step produced for one sequence.
+pub struct DecodeOutcome {
+    /// greedy-sampled token (meaningless when `failed`)
+    pub token: u8,
+    /// mid-step pool exhaustion: the engine preempts the sequence and the
+    /// partial step is discarded (recomputation is bit-identical)
+    pub failed: bool,
+    /// a worker panicked on this sequence: its state is suspect, the
+    /// engine fails the request with [`Outcome::WorkerPanic`]
+    pub panicked: bool,
+}
+
+/// The compute + cache backend a [`ServingEngine`] drives. One instance
+/// serves every sequence; per-sequence state lives in `Self::Seq`
+/// (dropping a `Seq` must release every pool block it holds).
+pub trait SeqExecutor {
+    /// per-sequence cache state (layer × kv-head leaves)
+    type Seq;
+
+    /// Exact shared-pool blocks needed to admit a `prompt_len` prompt.
+    fn admit_blocks(&self, prompt_len: usize) -> usize;
+    /// Blocks this sequence will allocate on its next decode step.
+    fn step_blocks(&self, seq: &Self::Seq) -> usize;
+    /// Current free blocks in the shared pool.
+    fn free_blocks(&self) -> usize;
+    /// Total blocks in the shared pool.
+    fn capacity_blocks(&self) -> usize;
+    /// Longest admissible prompt (the router rejects beyond this).
+    fn max_prompt(&self) -> usize;
+
+    /// Ingest prompt tokens `[start, end)`. Builds `*seq` when
+    /// `start == 0`; returns `Some(first_token)` once the final chunk
+    /// lands (`end == prompt len`), `None` mid-prompt. Pool exhaustion
+    /// must PANIC (the engine contains it and charges an eviction against
+    /// the request's preemption budget); `Err` means an engine-side
+    /// invariant broke — the request fails with [`Outcome::Failed`] and
+    /// the engine keeps serving.
+    fn prefill_chunk(
+        &mut self,
+        seq: &mut Option<Self::Seq>,
+        req: &Request,
+        start: usize,
+        end: usize,
+    ) -> anyhow::Result<Option<u8>>;
+
+    /// One decode step for one sequence (`step` = tokens generated so
+    /// far, first prefill token included).
+    fn decode_step(&mut self, req: &Request, seq: &mut Self::Seq, step: usize) -> DecodeOutcome;
+
+    /// Terminal hook: the request left the engine with `outcome`
+    /// (`seq` is `None` when it never finished a prefill). Dropping the
+    /// seq releases its pool blocks; implementations may capture final
+    /// state first (e.g. [`NativeExecutor`] keeps the last attention
+    /// output as a bit-exactness witness).
+    fn retire(&mut self, _req: &Request, _seq: Option<Self::Seq>, _outcome: Outcome) {}
+}
+
+/// One streamed event on a [`SubmitHandle`]'s channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// the next generated token (tokens already streamed are never
+    /// re-sent, even across preemption + bit-identical recomputation)
+    Token(u8),
+    /// terminal: how the request's lifecycle ended
+    Done(Outcome),
+}
+
+/// Returned by [`ServingEngine::submit`]: the assigned id plus the
+/// receiving end of the request's token stream. Dropping the handle is
+/// fine — the engine ignores send failures and the full result is still
+/// available via [`ServingEngine::take_results`].
+pub struct SubmitHandle {
+    pub id: RequestId,
+    pub tokens: Receiver<StreamEvent>,
+}
+
+/// A running (post-prefill) sequence.
+struct Active<S> {
+    req: Request,
+    seq: S,
+    generated: Vec<u8>,
+    first_token_at: Option<Instant>,
+    decode_steps: usize,
+}
+
+/// The one mid-flight chunked prefill (at most one at a time: chunk 0
+/// freezes stats over the full prompt, so chunks of one request must land
+/// in order, and serial chunks keep admission accounting exact).
+struct Inflight<S> {
+    req: Request,
+    seq: Option<S>,
+    /// prompt tokens ingested so far
+    done: usize,
+}
+
+/// Continuous-batching serving loop over a [`SeqExecutor`]. See the
+/// module docs for the full policy.
+pub struct ServingEngine<X: SeqExecutor> {
+    exec: X,
+    pub cfg: EngineConfig,
+    pub metrics: Registry,
+    router: Router,
+    scheduler: Scheduler,
+    seqs: HashMap<RequestId, Active<X::Seq>>,
+    /// preempted requests awaiting recomputation, FIFO, ahead of the queue
+    stash: VecDeque<Request>,
+    inflight: Option<Inflight<X::Seq>>,
+    /// true iff the previous executed plan was a prefill chunk — the
+    /// scheduler uses it to hand the running batch a decode turn between
+    /// chunks (the interleave that bounds decode stalls to one chunk)
+    chunk_last: bool,
+    /// per-request token sinks: (sender, tokens streamed so far)
+    sinks: HashMap<RequestId, (Sender<StreamEvent>, usize)>,
+    done: Vec<RequestResult>,
+    step_idx: u64,
+    /// virtual clock support: `now()` = `origin + tick × step_idx` when a
+    /// tick is pinned, else the real `Instant::now()`
+    origin: Instant,
+    tick: Option<Duration>,
+}
+
+impl<X: SeqExecutor> ServingEngine<X> {
+    pub fn new(cfg: EngineConfig, exec: X) -> anyhow::Result<Self> {
+        cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let metrics = Registry::default();
+        let max_prompt = exec.max_prompt();
+        Ok(Self {
+            router: Router::new(cfg.queue_limit, max_prompt, metrics.clone()),
+            scheduler: Scheduler::new(cfg.max_batch),
+            seqs: HashMap::new(),
+            stash: VecDeque::new(),
+            inflight: None,
+            chunk_last: false,
+            sinks: HashMap::new(),
+            done: vec![],
+            step_idx: 0,
+            origin: Instant::now(),
+            tick: None,
+            exec,
+            cfg,
+            metrics,
+        })
+    }
+
+    /// Pin the SLO clock to `tick` per step: deadlines become a pure
+    /// function of step count, making expiry scenarios deterministic
+    /// under test regardless of host speed.
+    pub fn with_virtual_clock(mut self, tick: Duration) -> Self {
+        self.tick = Some(tick);
+        self
+    }
+
+    /// The engine's notion of "now" for SLO accounting.
+    fn now(&self) -> Instant {
+        match self.tick {
+            Some(t) => self.origin + t * (self.step_idx as u32),
+            None => Instant::now(),
+        }
+    }
+
+    pub fn submit(&mut self, prompt: Vec<u8>, max_new: usize) -> Result<SubmitHandle, AdmitError> {
+        self.submit_opt(prompt, max_new, None)
+    }
+
+    /// [`Self::submit`] with a wall-clock SLO: the request expires `slo`
+    /// after submission, completing with whatever it generated by then as
+    /// [`Outcome::DeadlineExceeded`] (empty output if it never ran —
+    /// expiry is checked at admission too, so a dead-on-arrival request
+    /// skips its prefill entirely).
+    pub fn submit_with_deadline(
+        &mut self,
+        prompt: Vec<u8>,
+        max_new: usize,
+        slo: Duration,
+    ) -> Result<SubmitHandle, AdmitError> {
+        self.submit_opt(prompt, max_new, Some(slo))
+    }
+
+    fn submit_opt(
+        &mut self,
+        prompt: Vec<u8>,
+        max_new: usize,
+        slo: Option<Duration>,
+    ) -> Result<SubmitHandle, AdmitError> {
+        let deadline = slo.map(|s| self.now() + s);
+        let id = self.router.submit_with(prompt, max_new, deadline)?;
+        let (tx, rx) = channel();
+        self.sinks.insert(id, (tx, 0));
+        Ok(SubmitHandle { id, tokens: rx })
+    }
+
+    /// No queued, stashed, in-flight, or running work remains.
+    pub fn is_drained(&self) -> bool {
+        self.router.is_empty()
+            && self.seqs.is_empty()
+            && self.stash.is_empty()
+            && self.inflight.is_none()
+    }
+
+    pub fn running(&self) -> usize {
+        self.scheduler.running().len()
+    }
+
+    pub fn step_index(&self) -> u64 {
+        self.step_idx
+    }
+
+    pub fn executor(&self) -> &X {
+        &self.exec
+    }
+
+    pub fn executor_mut(&mut self) -> &mut X {
+        &mut self.exec
+    }
+
+    /// Results accumulated since the last call (requests finish inside
+    /// [`Self::step`]; this drains them).
+    pub fn take_results(&mut self) -> Vec<RequestResult> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Stream any not-yet-sent tokens of `generated` to the request's
+    /// sink. The per-request high-water mark survives preemption: greedy
+    /// decode recomputes bit-identically, so re-produced tokens are
+    /// skipped rather than duplicated.
+    fn stream_new_tokens(&mut self, id: RequestId, generated: &[u8]) {
+        if let Some((tx, sent)) = self.sinks.get_mut(&id) {
+            while *sent < generated.len() {
+                let _ = tx.send(StreamEvent::Token(generated[*sent]));
+                *sent += 1;
+            }
+        }
+    }
+
+    /// Terminal path for a sequence that ran (possibly partially):
+    /// stream the tail + `Done`, record TTFT/TPOT, hand the seq to the
+    /// executor's retire hook (dropping it releases the pool blocks).
+    fn finish(&mut self, st: Active<X::Seq>, outcome: Outcome) {
+        let Active { req, seq, generated, first_token_at, decode_steps } = st;
+        self.stream_new_tokens(req.id, &generated);
+        if let Some((tx, _)) = self.sinks.remove(&req.id) {
+            let _ = tx.send(StreamEvent::Done(outcome));
+        }
+        let ttft = first_token_at.map(|t| t - req.submitted_at).unwrap_or_default();
+        let latency = req.submitted_at.elapsed();
+        self.metrics.histogram("serving.ttft").observe(ttft);
+        if decode_steps > 1 {
+            // time-per-output-token over the decode phase (excludes prefill)
+            let tpot = latency.saturating_sub(ttft) / (decode_steps - 1) as u32;
+            self.metrics.histogram("serving.tpot").observe(tpot);
+        }
+        let res = RequestResult {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            ttft,
+            latency,
+            decode_steps,
+            generated,
+            outcome,
+        };
+        self.exec.retire(&req, Some(seq), outcome);
+        self.done.push(res);
+    }
+
+    /// Terminal path for a request that never finished a prefill.
+    fn never_ran(&mut self, req: Request, outcome: Outcome) {
+        if let Some((tx, _)) = self.sinks.remove(&req.id) {
+            let _ = tx.send(StreamEvent::Done(outcome));
+        }
+        let res = RequestResult {
+            id: req.id,
+            generated: vec![],
+            prompt_len: req.prompt.len(),
+            ttft: Duration::default(),
+            latency: req.submitted_at.elapsed(),
+            decode_steps: 0,
+            outcome,
+        };
+        self.exec.retire(&req, None, outcome);
+        self.done.push(res);
+    }
+
+    /// Expire every request whose wall-clock deadline is at or before
+    /// `now`: running sequences finish with partial output, the in-flight
+    /// prefill is abandoned (its partial cache drops, releasing blocks),
+    /// stashed/queued requests finish empty.
+    fn expire_deadlines(&mut self, now: Instant) {
+        let mut n = 0u64;
+        let mut expired_running: Vec<RequestId> = self
+            .seqs
+            .iter()
+            .filter(|(_, st)| st.req.deadline.is_some_and(|d| now >= d))
+            .map(|(&id, _)| id)
+            .collect();
+        expired_running.sort_unstable(); // map order is not deterministic
+        for id in expired_running {
+            let st = self.seqs.remove(&id).unwrap();
+            self.scheduler.remove(id);
+            self.finish(st, Outcome::DeadlineExceeded);
+            n += 1;
+        }
+        if self
+            .inflight
+            .as_ref()
+            .is_some_and(|fl| fl.req.deadline.is_some_and(|d| now >= d))
+        {
+            let Inflight { req, seq, .. } = self.inflight.take().unwrap();
+            drop(seq); // partial cache → blocks back to the pool
+            self.chunk_last = false;
+            self.never_ran(req, Outcome::DeadlineExceeded);
+            n += 1;
+        }
+        let mut kept = VecDeque::with_capacity(self.stash.len());
+        for r in self.stash.drain(..) {
+            if r.deadline.is_some_and(|d| now >= d) {
+                self.never_ran(r, Outcome::DeadlineExceeded);
+                n += 1;
+            } else {
+                kept.push_back(r);
+            }
+        }
+        self.stash = kept;
+        for r in self.router.expire_before(now) {
+            self.never_ran(r, Outcome::DeadlineExceeded);
+            n += 1;
+        }
+        if n > 0 {
+            self.metrics.counter("engine.deadline_expired").add(n);
+        }
+    }
+
+    /// Blocks the running set will allocate on its next decode step.
+    fn step_blocks(&self) -> usize {
+        self.scheduler
+            .running()
+            .iter()
+            .map(|id| self.exec.step_blocks(&self.seqs[id].seq))
+            .sum()
+    }
+
+    /// Drive one scheduler step; returns the plan that was executed (the
+    /// interleave tests assert on the plan sequence). Finished requests
+    /// accumulate in [`Self::take_results`] and stream to their handles.
+    pub fn step(&mut self) -> anyhow::Result<StepPlan> {
+        self.step_idx += 1;
+        let now = self.now();
+        self.expire_deadlines(now);
+        let candidate = self
+            .stash
+            .front()
+            .map(|r| r.prompt.len())
+            .or_else(|| self.router.peek().map(|r| r.prompt.len()));
+        let pressure = PoolPressure {
+            free_blocks: self.exec.free_blocks(),
+            // no new admissions while a chunked prefill is mid-flight
+            admit_blocks: if self.inflight.is_some() {
+                None
+            } else {
+                candidate.map(|len| self.exec.admit_blocks(len))
+            },
+            step_blocks: self.step_blocks(),
+            inflight_prefill: self.inflight.is_some(),
+            chunk_last: self.chunk_last,
+        };
+        let plan = self.scheduler.plan(&pressure);
+        match &plan {
+            StepPlan::Prefill => self.start_prefill(now)?,
+            StepPlan::PrefillChunk => self.continue_prefill()?,
+            StepPlan::Preempt(id) => self.preempt(*id)?,
+            StepPlan::Shed(id) => {
+                // every running sequence is pinned and the step cannot
+                // fit: fail the youngest structurally, never livelock
+                let id = *id;
+                let st = self.seqs.remove(&id).ok_or_else(|| {
+                    anyhow::Error::coded("state_drift", format!("shed of unknown sequence {id}"))
+                })?;
+                self.scheduler.remove(id);
+                self.metrics.counter("engine.request_failures").inc();
+                self.finish(st, Outcome::Thrashing);
+            }
+            StepPlan::Decode(ids) => {
+                let ids = ids.clone();
+                self.do_decode(&ids)?;
+            }
+            StepPlan::Idle => {}
+        }
+        Ok(plan)
+    }
+
+    /// Pump [`Self::step`] until drained; returns every accumulated result.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<Vec<RequestResult>> {
+        while !self.is_drained() {
+            self.step()?;
+        }
+        Ok(self.take_results())
+    }
+
+    /// Admit the next request (stash first, FIFO) and run its first
+    /// prefill chunk. The admission-time deadline check lives here: an
+    /// expired request finishes empty instead of burning a prefill.
+    fn start_prefill(&mut self, now: Instant) -> anyhow::Result<()> {
+        let from_stash = !self.stash.is_empty();
+        let req = self
+            .stash
+            .pop_front()
+            .or_else(|| self.router.pop())
+            .ok_or_else(|| anyhow::Error::coded("state_drift", "plan admitted an empty queue"))?;
+        if from_stash {
+            self.metrics.counter("engine.retries").inc();
+        }
+        if req.deadline.is_some_and(|d| now >= d) {
+            self.metrics.counter("engine.deadline_expired").inc();
+            self.never_ran(req, Outcome::DeadlineExceeded);
+            return Ok(());
+        }
+        let need = self.exec.admit_blocks(req.prompt.len());
+        if need > self.exec.capacity_blocks() {
+            return Err(anyhow::anyhow!(
+                "prompt needs {need} pool blocks but the pool holds {} — raise pool_tokens",
+                self.exec.capacity_blocks()
+            ));
+        }
+        self.metrics.counter("engine.prefills").inc();
+        self.inflight = Some(Inflight { req, seq: None, done: 0 });
+        self.continue_prefill()
+    }
+
+    /// Run the next prefill chunk of the in-flight request under panic
+    /// containment: a panic (injected fault or pool exhaustion mid-chunk)
+    /// drops the partial cache and charges an eviction against the
+    /// preemption budget — re-stash or [`Outcome::Thrashing`]. An `Err`
+    /// from the executor is an engine-side invariant breach: that request
+    /// alone fails with [`Outcome::Failed`] and serving continues.
+    fn continue_prefill(&mut self) -> anyhow::Result<()> {
+        let mut fl = self.inflight.take().ok_or_else(|| {
+            anyhow::Error::coded("state_drift", "prefill-chunk plan without an inflight prefill")
+        })?;
+        let total = fl.req.prompt.len();
+        let chunk = if self.cfg.prefill_chunk_tokens == 0 {
+            total
+        } else {
+            self.cfg.prefill_chunk_tokens
+        };
+        let start = fl.done;
+        let end = (start + chunk).min(total);
+        let exec = &mut self.exec;
+        let ran = catch_unwind(AssertUnwindSafe(|| {
+            exec.prefill_chunk(&mut fl.seq, &fl.req, start, end)
+        }));
+        match ran {
+            Err(_) => {
+                // the partial cache (however many chunks landed) drops
+                // here, releasing its blocks; charge one eviction
+                let Inflight { mut req, seq, .. } = fl;
+                drop(seq);
+                self.chunk_last = false;
+                req.preempt_count += 1;
+                self.metrics.counter("engine.preemptions").inc();
+                if req.preempt_count > 2 * self.cfg.preempt_budget {
+                    self.metrics.counter("engine.request_failures").inc();
+                    self.never_ran(req, Outcome::Thrashing);
+                } else {
+                    self.stash.push_back(req);
+                }
+                Ok(())
+            }
+            Ok(Err(_e)) => {
+                let Inflight { req, seq, .. } = fl;
+                drop(seq);
+                self.chunk_last = false;
+                self.metrics.counter("engine.request_failures").inc();
+                self.never_ran(req, Outcome::Failed);
+                Ok(())
+            }
+            Ok(Ok(None)) => {
+                // mid-prompt: keep the prefill in flight, give the
+                // running batch the next turn
+                fl.done = end;
+                self.inflight = Some(fl);
+                self.chunk_last = true;
+                Ok(())
+            }
+            Ok(Ok(Some(first))) => {
+                debug_assert_eq!(end, total, "first token before the final chunk");
+                let id = fl.req.id;
+                let pin = fl.req.preempt_count >= self.cfg.preempt_budget;
+                let seq = fl.seq.take().ok_or_else(|| {
+                    anyhow::Error::coded(
+                        "state_drift",
+                        "executor finished a prefill without building a sequence",
+                    )
+                })?;
+                self.stream_new_tokens(id, &[first]);
+                self.seqs.insert(
+                    id,
+                    Active {
+                        req: fl.req,
+                        seq,
+                        generated: vec![first],
+                        first_token_at: Some(Instant::now()),
+                        decode_steps: 1,
+                    },
+                );
+                self.scheduler.add_running(id);
+                if pin {
+                    // aging: at its budget the request is pinned — never
+                    // a preemption victim again
+                    self.scheduler.pin(id);
+                }
+                self.chunk_last = false;
+                Ok(())
+            }
+        }
+    }
+
+    /// Evict a running sequence: drop its cache (blocks back to the
+    /// pool), re-stash the request for bit-identical recomputation, or
+    /// fail it with [`Outcome::Thrashing`] past twice its budget.
+    fn preempt(&mut self, id: RequestId) -> anyhow::Result<()> {
+        let mut st = self.seqs.remove(&id).ok_or_else(|| {
+            anyhow::Error::coded("state_drift", format!("preempt of unknown sequence {id}"))
+        })?;
+        self.scheduler.remove(id);
+        st.req.preempt_count += 1;
+        self.metrics.counter("engine.preemptions").inc();
+        if st.req.preempt_count > 2 * self.cfg.preempt_budget {
+            self.metrics.counter("engine.request_failures").inc();
+            self.finish(st, Outcome::Thrashing);
+            return Ok(());
+        }
+        let Active { req, seq, .. } = st;
+        drop(seq);
+        self.stash.push_back(req);
+        Ok(())
+    }
+
+    /// One decode step over the running set, in scheduler order (the
+    /// order is deterministic, so served runs replay bit-identically).
+    fn do_decode(&mut self, ids: &[RequestId]) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        for &id in ids {
+            let mut st = self.seqs.remove(&id).ok_or_else(|| {
+                anyhow::Error::coded("state_drift", format!("decode of unknown sequence {id}"))
+            })?;
+            let out = self.exec.decode_step(&st.req, &mut st.seq, st.decode_steps);
+            if out.panicked {
+                self.scheduler.remove(id);
+                self.metrics.counter("engine.request_failures").inc();
+                self.finish(st, Outcome::WorkerPanic);
+                continue;
+            }
+            if out.failed {
+                // mid-step pool exhaustion: discard the partial step and
+                // preempt (exact pre-step accounting normally prevents
+                // this; chaos injection exercises it)
+                self.scheduler.remove(id);
+                st.req.preempt_count += 1;
+                self.metrics.counter("engine.preemptions").inc();
+                if st.req.preempt_count > 2 * self.cfg.preempt_budget {
+                    self.metrics.counter("engine.request_failures").inc();
+                    self.finish(st, Outcome::Thrashing);
+                } else {
+                    let Active { req, seq, .. } = st;
+                    drop(seq);
+                    self.stash.push_back(req);
+                }
+                continue;
+            }
+            st.generated.push(out.token);
+            st.decode_steps += 1;
+            self.stream_new_tokens(id, &st.generated);
+            self.metrics.counter("engine.decoded_tokens").inc();
+            if st.generated.len() >= st.req.max_new_tokens {
+                self.scheduler.remove(id);
+                self.finish(st, Outcome::Completed);
+            } else {
+                self.seqs.insert(id, st);
+            }
+        }
+        self.metrics
+            .histogram("engine.decode_step_latency")
+            .observe(t0.elapsed());
+        self.metrics.counter("engine.decode_steps").inc();
+        self.chunk_last = false;
+        Ok(())
+    }
+}
+
+/// Per-(layer, kv-head) full-precision prompt rows, retained only while
+/// the chunked prefill is in flight (dropped once the cache is built).
+struct HeadRows {
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    q_window: Vec<f32>,
+}
+
+/// [`NativeExecutor`]'s per-sequence state: one [`SelfIndexing`] leaf per
+/// (layer, kv-head), layer-major — the same fan-out shape as the PJRT
+/// engine's [`crate::method::SequenceCache`].
+pub struct NativeSeq {
+    heads: Vec<SelfIndexing>,
+    rows: Vec<HeadRows>,
+    /// last decode step's attention output, (kv_heads × gqa_ratio × dim)
+    out: Vec<f32>,
+    content_seed: u64,
+}
+
+/// Fixed-constant FNV-1a over the prompt bytes: the seed for a request's
+/// synthetic K/V streams. Depends only on prompt CONTENT, so two engines
+/// (or a preempted sequence's recomputation) derive identical tensors.
+fn content_seed(prompt: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in prompt {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// PJRT-free [`SeqExecutor`]: runs the complete self-indexing cache stack
+/// (compression, shared pool, prefix reuse, retrieval, sparse attention,
+/// fault injection) on deterministic synthetic K/V derived from prompt
+/// content. Model weights never enter the picture, so serving-layer
+/// behavior — scheduling, chunking, SLOs, preemption, containment — is
+/// testable and benchable in CI without artifacts, with bit-exact
+/// cross-engine outputs.
+pub struct NativeExecutor {
+    mgr: Arc<KvManager>,
+    faults: Arc<FaultInjector>,
+    si: SelfIndexConfig,
+    dim: usize,
+    n_layers: usize,
+    kv_heads: usize,
+    gqa_ratio: usize,
+    /// retrieval budget per decode step (tokens)
+    budget: usize,
+    /// SnapKV observation-window tokens for sink selection
+    q_window_tokens: usize,
+    /// final attention outputs of completed requests — the bit-exactness
+    /// witness compared across serving modes
+    finals: HashMap<RequestId, Vec<f32>>,
+}
+
+impl NativeExecutor {
+    pub fn new(
+        dim: usize,
+        n_layers: usize,
+        kv_heads: usize,
+        gqa_ratio: usize,
+        budget: usize,
+        si: SelfIndexConfig,
+        mgr: Arc<KvManager>,
+    ) -> Self {
+        let faults = Arc::clone(mgr.pool().faults());
+        Self {
+            mgr,
+            faults,
+            si,
+            dim,
+            n_layers,
+            kv_heads,
+            gqa_ratio,
+            budget,
+            q_window_tokens: 8,
+            finals: HashMap::new(),
+        }
+    }
+
+    pub fn mgr(&self) -> &Arc<KvManager> {
+        &self.mgr
+    }
+
+    /// Final attention output per completed request id.
+    pub fn finals(&self) -> &HashMap<RequestId, Vec<f32>> {
+        &self.finals
+    }
+
+    fn build_seq(&self, req: &Request) -> NativeSeq {
+        let seed = content_seed(&req.prompt);
+        let total = req.prompt.len();
+        let (d, r, w) = (self.dim, self.gqa_ratio, self.q_window_tokens.min(total));
+        let n = self.n_layers * self.kv_heads;
+        let mut heads = Vec::with_capacity(n);
+        let mut rows = Vec::with_capacity(n);
+        for l in 0..self.n_layers {
+            for h in 0..self.kv_heads {
+                let mut head = SelfIndexing::with_manager(d, self.si.clone(), Arc::clone(&self.mgr));
+                head.set_prompt_hash(req.prompt_hash);
+                heads.push(head);
+                // stream seed mixes (layer, head) so leaves diverge, but
+                // derives only from prompt content
+                let mix = ((l as u64) << 32 | h as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let mut rng = Rng::new(seed ^ mix);
+                rows.push(HeadRows {
+                    keys: (0..total * d).map(|_| rng.f32() - 0.5).collect(),
+                    vals: (0..total * d).map(|_| rng.f32() - 0.5).collect(),
+                    q_window: (0..w * r * d).map(|_| rng.f32() - 0.5).collect(),
+                });
+            }
+        }
+        NativeSeq {
+            heads,
+            rows,
+            out: vec![0.0; self.kv_heads * r * d],
+            content_seed: seed,
+        }
+    }
+}
+
+impl SeqExecutor for NativeExecutor {
+    type Seq = NativeSeq;
+
+    fn admit_blocks(&self, prompt_len: usize) -> usize {
+        prompt_len.div_ceil(self.mgr.pool().block_tokens) * self.n_layers * self.kv_heads
+    }
+
+    fn step_blocks(&self, seq: &NativeSeq) -> usize {
+        seq.heads.iter().map(|h| h.blocks_for_append()).sum()
+    }
+
+    fn free_blocks(&self) -> usize {
+        self.mgr.pool().free_blocks()
+    }
+
+    fn capacity_blocks(&self) -> usize {
+        self.mgr.pool().capacity_blocks()
+    }
+
+    fn max_prompt(&self) -> usize {
+        let heads = (self.n_layers * self.kv_heads).max(1);
+        (self.capacity_blocks() / heads) * self.mgr.pool().block_tokens
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        seq: &mut Option<NativeSeq>,
+        req: &Request,
+        start: usize,
+        end: usize,
+    ) -> anyhow::Result<Option<u8>> {
+        let total = req.prompt.len();
+        if start == 0 {
+            *seq = Some(self.build_seq(req));
+        }
+        let s = seq.as_mut().ok_or_else(|| {
+            anyhow::Error::coded("state_drift", "prefill chunk without a built sequence")
+        })?;
+        for (head, rows) in s.heads.iter_mut().zip(&s.rows) {
+            // panics on pool exhaustion — contained by the engine
+            head.prefill_chunk(&rows.keys, &rows.vals, &rows.q_window, self.gqa_ratio, start, end);
+        }
+        if end < total {
+            return Ok(None);
+        }
+        // cache built: the retained fp rows are no longer needed
+        s.rows = Vec::new();
+        // deterministic "first token" from prompt content alone
+        Ok(Some((content_seed(&req.prompt[..1]) ^ s.content_seed) as u8))
+    }
+
+    fn decode_step(&mut self, req: &Request, seq: &mut NativeSeq, step: usize) -> DecodeOutcome {
+        let _ = req;
+        let (d, r) = (self.dim, self.gqa_ratio);
+        let mut failed = false;
+        let mut panicked = false;
+        for l in 0..self.n_layers {
+            // per-(step, layer) synthetic projections, seeded by content:
+            // replays after preemption regenerate the exact same rows
+            let mix = 0xa076_1d64_78bd_642f_u64 ^ ((step as u64) << 20) ^ l as u64;
+            let mut rng = Rng::new(seq.content_seed ^ mix);
+            let k: Vec<f32> = (0..self.kv_heads * d).map(|_| rng.f32() - 0.5).collect();
+            let v: Vec<f32> = (0..self.kv_heads * d).map(|_| rng.f32() - 0.5).collect();
+            let q: Vec<f32> = (0..self.kv_heads * r * d).map(|_| rng.f32() - 0.5).collect();
+            let mut chunks = seq.out.chunks_mut(r * d);
+            for h in 0..self.kv_heads {
+                let out = chunks.next().unwrap();
+                let mut task = HeadTask {
+                    method: &mut seq.heads[l * self.kv_heads + h],
+                    k_row: &k[h * d..(h + 1) * d],
+                    v_row: &v[h * d..(h + 1) * d],
+                    queries: &q[h * r * d..(h + 1) * r * d],
+                    dim: d,
+                    budget: self.budget,
+                    out,
+                    failed: false,
+                    panicked: false,
+                };
+                task.run_isolated(&self.faults);
+                failed |= task.failed;
+                panicked |= task.panicked;
+            }
+        }
+        // greedy "sample": hash the last layer's attention output bits
+        let mut h64 = 0xcbf2_9ce4_8422_2325u64;
+        for &x in &seq.out {
+            h64 ^= x.to_bits() as u64;
+            h64 = h64.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        DecodeOutcome { token: (h64 >> 24) as u8, failed, panicked }
+    }
+
+    fn retire(&mut self, req: &Request, seq: Option<NativeSeq>, outcome: Outcome) {
+        if let (Some(seq), Outcome::Completed) = (seq, outcome) {
+            self.finals.insert(req.id, seq.out);
+        }
+        // dropping `seq` releases every pool block the sequence held
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIM: usize = 64;
+    const BT: usize = 16;
+
+    fn si_cfg() -> SelfIndexConfig {
+        SelfIndexConfig { sink_tokens: 4, sparse_k: 16, ..Default::default() }
+    }
+
+    fn native(capacity_blocks: usize) -> NativeExecutor {
+        let mgr = Arc::new(KvManager::for_head(DIM, &si_cfg(), BT, capacity_blocks));
+        NativeExecutor::new(DIM, 1, 1, 1, 24, si_cfg(), mgr)
+    }
+
+    fn cfg(chunk: usize) -> EngineConfig {
+        EngineConfig {
+            block_tokens: BT,
+            pool_tokens: 1 << 12,
+            prefill_chunk_tokens: chunk,
+            max_batch: 4,
+            preempt_budget: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serves_and_streams_to_completion() {
+        let mut eng = ServingEngine::new(cfg(0), native(256)).unwrap();
+        let h = eng.submit(vec![7; 40], 4).unwrap();
+        let mut results = eng.run_to_completion().unwrap();
+        assert_eq!(results.len(), 1);
+        let r = results.pop().unwrap();
+        assert_eq!(r.outcome, Outcome::Completed);
+        assert_eq!(r.generated.len(), 4);
+        assert_eq!(r.decode_steps, 4, "first token from prefill + 3 decodes");
+        let mut streamed = vec![];
+        loop {
+            match h.tokens.try_recv().unwrap() {
+                StreamEvent::Token(t) => streamed.push(t),
+                StreamEvent::Done(o) => {
+                    assert_eq!(o, Outcome::Completed);
+                    break;
+                }
+            }
+        }
+        assert_eq!(streamed, r.generated, "stream carries exactly the output");
+        assert_eq!(eng.executor().finals().len(), 1);
+        assert_eq!(
+            eng.executor().mgr().pool().used_blocks(),
+            0,
+            "drained engine leaks no blocks"
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_serving_is_bit_identical_to_one_shot() {
+        let prompts: Vec<Vec<u8>> = vec![vec![1; 40], vec![2; 33], vec![3; 64]];
+        let run = |chunk: usize| {
+            let mut eng = ServingEngine::new(cfg(chunk), native(256)).unwrap();
+            for p in &prompts {
+                eng.submit(p.clone(), 6).unwrap();
+            }
+            let mut res = eng.run_to_completion().unwrap();
+            res.sort_by_key(|r| r.id);
+            let finals: Vec<Vec<f32>> = res
+                .iter()
+                .map(|r| eng.executor().finals()[&r.id].clone())
+                .collect();
+            let toks: Vec<(Vec<u8>, Outcome)> =
+                res.into_iter().map(|r| (r.generated, r.outcome)).collect();
+            (toks, finals)
+        };
+        let one_shot = run(0);
+        let chunked = run(BT); // prompts 40 and 33 take 3 chunks, 64 takes 4
+        assert_eq!(one_shot, chunked);
+    }
+
+    #[test]
+    fn expired_queued_request_skips_prefill_entirely() {
+        let mut eng = ServingEngine::new(cfg(0), native(256))
+            .unwrap()
+            .with_virtual_clock(Duration::from_millis(1));
+        let h = eng
+            .submit_with_deadline(vec![9; 40], 8, Duration::from_millis(0))
+            .unwrap();
+        let res = eng.run_to_completion().unwrap();
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].outcome, Outcome::DeadlineExceeded);
+        assert!(res[0].generated.is_empty());
+        assert_eq!(
+            eng.metrics.counter("engine.prefills").get(),
+            0,
+            "a dead-on-arrival request must not burn its prefill"
+        );
+        assert_eq!(
+            h.tokens.try_recv().unwrap(),
+            StreamEvent::Done(Outcome::DeadlineExceeded)
+        );
+    }
+
+    #[test]
+    fn running_request_expires_with_partial_output() {
+        let mut eng = ServingEngine::new(cfg(0), native(256))
+            .unwrap()
+            .with_virtual_clock(Duration::from_millis(1));
+        eng.submit_with_deadline(vec![5; 40], 1000, Duration::from_millis(10))
+            .unwrap();
+        let res = eng.run_to_completion().unwrap();
+        assert_eq!(res[0].outcome, Outcome::DeadlineExceeded);
+        let n = res[0].generated.len();
+        assert!(n > 0 && n < 1000, "partial output, got {n} tokens");
+        assert_eq!(eng.executor().mgr().pool().used_blocks(), 0);
+    }
+
+    #[test]
+    fn preemption_replay_never_duplicates_streamed_tokens() {
+        // tight pool: two decoding sequences + pressure forces eviction;
+        // the evicted one replays bit-identically and its stream must
+        // carry each token exactly once
+        let mut eng = ServingEngine::new(cfg(0), native(8)).unwrap();
+        let ha = eng.submit(vec![11; 48], 40).unwrap();
+        let hb = eng.submit(vec![13; 48], 40).unwrap();
+        let res = eng.run_to_completion().unwrap();
+        assert_eq!(res.len(), 2);
+        assert!(res.iter().all(|r| r.outcome == Outcome::Completed));
+        assert!(
+            eng.metrics.counter("engine.preemptions").get() > 0,
+            "the tight pool must force at least one eviction"
+        );
+        for (h, id) in [(&ha, ha.id), (&hb, hb.id)] {
+            let want = &res.iter().find(|r| r.id == id).unwrap().generated;
+            let mut got = vec![];
+            loop {
+                match h.tokens.try_recv().unwrap() {
+                    StreamEvent::Token(t) => got.push(t),
+                    StreamEvent::Done(o) => {
+                        assert_eq!(o, Outcome::Completed);
+                        break;
+                    }
+                }
+            }
+            assert_eq!(&got, want, "stream {id} must be duplicate-free");
+        }
+    }
+}

@@ -167,44 +167,99 @@ impl HeadCache {
     ) -> Result<usize, CacheFull> {
         assert_eq!(keys.len(), vals.len());
         assert_eq!(keys.len() % self.dim, 0);
-        assert!(self.codebook.is_none(), "prefill already ingested");
         let tokens = keys.len() / self.dim;
+        self.ingest_prefill_range(mgr, keys, vals, 0, tokens, prompt_hash)
+    }
 
-        self.stats.accumulate(keys);
-        self.stats.freeze(keys);
-        let mu = self.stats.frozen().unwrap().mu.clone();
+    /// Chunked variant of [`Self::ingest_prefill`]: ingest prompt tokens
+    /// `[start, end)` out of the FULL prompt rows (`keys`/`vals` always
+    /// hold every token). The first chunk (`start == 0`) freezes the
+    /// channel stats and codebook over the **whole** prompt — exactly
+    /// what the one-shot path freezes — so however the prompt is sliced,
+    /// every encoded record, content key, and adopted prefix block is
+    /// bit-identical to a one-shot ingest. `start` must equal the tokens
+    /// ingested so far and be block-aligned (chunk boundaries are block
+    /// boundaries: a full block never spans chunks, so prefix-block
+    /// registration/adoption is untouched by chunking).
+    pub fn ingest_prefill_range(
+        &mut self,
+        mgr: &KvManager,
+        keys: &[f32],
+        vals: &[f32],
+        start: usize,
+        end: usize,
+        prompt_hash: u128,
+    ) -> Result<usize, CacheFull> {
+        assert_eq!(keys.len(), vals.len());
+        assert_eq!(keys.len() % self.dim, 0);
+        let tokens = keys.len() / self.dim;
+        assert!(
+            start < end && end <= tokens,
+            "bad prefill chunk [{start}, {end}) of {tokens} tokens"
+        );
+        assert_eq!(self.len, start, "prefill chunks must arrive in order");
+        let dim = self.dim;
+
+        // chunk-local centered copy (K'); chunk 0 also feeds the codebook
+        // builder with the FULL prompt before truncating to its own slice
+        let centered: Vec<f32>;
+        if start == 0 {
+            assert!(self.codebook.is_none(), "prefill already ingested");
+            self.stats.accumulate(keys);
+            self.stats.freeze(keys);
+            let mu = &self.stats.frozen().unwrap().mu;
+            let mut full = keys.to_vec();
+            for row in full.chunks_exact_mut(dim) {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v -= mu[j];
+                }
+            }
+            self.builder.accumulate(&full);
+            self.codebook = Some(if self.cfg.magnitude_centroids {
+                self.builder.finalize()
+            } else {
+                Codebook::sign_only(dim / self.cfg.vq_group)
+            });
+            full.truncate(end * dim);
+            centered = full;
+        } else {
+            assert!(
+                self.codebook.is_some(),
+                "later prefill chunks need chunk 0's frozen stats/codebook"
+            );
+            assert!(
+                start.is_multiple_of(mgr.pool().block_tokens),
+                "prefill chunk start {start} must be block-aligned"
+            );
+            let mu = &self.stats.frozen().expect("prefill first").mu;
+            let mut c = keys[start * dim..end * dim].to_vec();
+            for row in c.chunks_exact_mut(dim) {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v -= mu[j];
+                }
+            }
+            centered = c;
+        }
         let alpha = self.stats.frozen().unwrap().alpha.clone();
 
-        // centered copy (K')
-        let mut centered = keys.to_vec();
-        for row in centered.chunks_exact_mut(self.dim) {
-            for (j, v) in row.iter_mut().enumerate() {
-                *v -= mu[j];
-            }
-        }
-        self.builder.accumulate(&centered);
-        self.codebook = Some(if self.cfg.magnitude_centroids {
-            self.builder.finalize()
-        } else {
-            Codebook::sign_only(self.dim / self.cfg.vq_group)
-        });
-
-        // quantize magnitudes (|K'|/alpha) and values token-wise
+        // quantize magnitudes (|K'|/alpha) and values token-wise — both
+        // per-token-independent, so chunk-local arrays quantize to the
+        // same bytes as the one-shot full arrays
         let mut khat = centered.clone();
-        for row in khat.chunks_exact_mut(self.dim) {
+        for row in khat.chunks_exact_mut(dim) {
             for (j, v) in row.iter_mut().enumerate() {
                 *v = v.abs() / alpha[j];
             }
         }
         let kq = crate::quant::int2::quantize_tokens(
             &khat,
-            self.dim,
+            dim,
             self.cfg.quant_group,
             self.cfg.quant_bits,
         );
         let vq = crate::quant::int2::quantize_tokens(
-            vals,
-            self.dim,
+            &vals[start * dim..end * dim],
+            dim,
             self.cfg.quant_group,
             self.cfg.quant_bits,
         );
@@ -216,11 +271,10 @@ impl HeadCache {
             "shared pool layout must match this head's record layout"
         );
         let bt = pool.block_tokens;
-        let dim = self.dim;
         let sig = self.params_sig(mgr);
-        let mut t = 0usize;
-        while t < tokens {
-            if tokens - t >= bt {
+        let mut t = start;
+        while t < end {
+            if end - t >= bt {
                 debug_assert!(self.len.is_multiple_of(bt));
                 let block_idx = (t / bt) as u32;
                 let memoized = if prompt_hash != 0 {
@@ -244,18 +298,32 @@ impl HeadCache {
                     self.len += bt;
                 } else {
                     for i in t..t + bt {
-                        self.push_record(pool, &centered[i * dim..(i + 1) * dim], &kq, &vq, i)?;
+                        let local = i - start;
+                        self.push_record(
+                            pool,
+                            &centered[local * dim..(local + 1) * dim],
+                            &kq,
+                            &vq,
+                            local,
+                        )?;
                     }
                     // full now — frozen forever, safe to share
                     mgr.register(key, *self.blocks.last().unwrap());
                 }
                 t += bt;
             } else {
-                self.push_record(pool, &centered[t * dim..(t + 1) * dim], &kq, &vq, t)?;
+                let local = t - start;
+                self.push_record(
+                    pool,
+                    &centered[local * dim..(local + 1) * dim],
+                    &kq,
+                    &vq,
+                    local,
+                )?;
                 t += 1;
             }
         }
-        Ok(tokens)
+        Ok(end - start)
     }
 
     /// Append one decode-time token (k/v rows, dim each), reusing frozen
@@ -894,6 +962,52 @@ mod tests {
                 assert!((a - b).abs() < 1e-5, "{a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn chunked_ingest_is_bit_identical_to_one_shot() {
+        // the chunked-prefill contract: block-aligned chunks over the full
+        // prompt rows encode the SAME blocks as a one-shot ingest — same
+        // frozen stats, same codebook, same record bytes, same content
+        // keys (the second cache adopts every full block the first one
+        // registered, proving key equality end-to-end)
+        let mut r = Rng::new(11);
+        let mgr = mk_mgr(64); // block_tokens = 16
+        let pool = mgr.pool();
+        let keys = rand_rows(&mut r, 72, 64); // 4 full blocks + ragged tail
+        let vals = rand_rows(&mut r, 72, 64);
+
+        let mut one = HeadCache::new(64, SelfIndexConfig::default());
+        one.ingest_prefill(&mgr, &keys, &vals, 0).unwrap();
+
+        let mut chunked = HeadCache::new(64, SelfIndexConfig::default());
+        for (s, e) in [(0usize, 32usize), (32, 64), (64, 72)] {
+            assert_eq!(
+                chunked
+                    .ingest_prefill_range(&mgr, &keys, &vals, s, e, 0)
+                    .unwrap(),
+                e - s
+            );
+        }
+        assert_eq!(one.len(), chunked.len());
+        assert_eq!(one.mu(), chunked.mu(), "chunk 0 froze full-prompt stats");
+        assert_eq!(one.alpha(), chunked.alpha());
+        assert_eq!(one.blocks.len(), chunked.blocks.len());
+        let hits_before = mgr.prefix_hits();
+        assert!(
+            hits_before >= 4,
+            "chunked full blocks adopt the one-shot registrations ({hits_before})"
+        );
+        for (&a, &b) in one.blocks.iter().zip(&chunked.blocks) {
+            let (ba, bb) = (pool.get(a), pool.get(b));
+            assert_eq!(ba.used, bb.used);
+            assert_eq!(ba.checksum(), bb.checksum(), "record bytes differ");
+        }
+        // the ragged tails are private copies, never shared
+        assert_ne!(one.blocks.last(), chunked.blocks.last());
+        one.free(pool);
+        chunked.free(pool);
+        assert_eq!(pool.used_blocks(), 0);
     }
 
     #[test]

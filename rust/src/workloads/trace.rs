@@ -11,6 +11,8 @@ pub struct TraceRequest {
     pub at: std::time::Duration,
     pub prompt: Vec<u8>,
     pub max_new_tokens: usize,
+    /// per-request wall-clock SLO (deadline = arrival + slo), if any
+    pub slo: Option<std::time::Duration>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -21,6 +23,8 @@ pub struct TraceConfig {
     pub prompt_lens: &'static [usize],
     pub decode_tokens: usize,
     pub seed: u64,
+    /// wall-clock SLO stamped on every request (None = no deadline)
+    pub slo_ms: Option<f64>,
 }
 
 impl Default for TraceConfig {
@@ -31,6 +35,7 @@ impl Default for TraceConfig {
             prompt_lens: &[256, 512, 1024],
             decode_tokens: 16,
             seed: 42,
+            slo_ms: None,
         }
     }
 }
@@ -52,6 +57,9 @@ pub fn generate(cfg: &TraceConfig) -> Vec<TraceRequest> {
                 at: std::time::Duration::from_micros((t * 1000.0) as u64),
                 prompt,
                 max_new_tokens: cfg.decode_tokens,
+                slo: cfg
+                    .slo_ms
+                    .map(|ms| std::time::Duration::from_micros((ms * 1000.0) as u64)),
             }
         })
         .collect()

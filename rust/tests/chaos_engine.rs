@@ -1,12 +1,12 @@
 //! Chaos suite: the hardened serving lifecycle under deterministic,
 //! seeded fault injection (`substrate::faults`).
 //!
-//! The loop below mirrors `Engine::step`'s hardened policy — prefill
-//! under `catch_unwind` charging the preemption budget, decode fan-out
-//! through `HeadTask::run_isolated`, pin-after-N aging, the 2N thrashing
-//! cutoff, step deadlines, and `StepPlan::Shed` — minus the PJRT
-//! boundary, so it runs without artifacts (same trade as
-//! `tests/memory_manager.rs`).
+//! The suite drives the shipped [`ServingEngine`] over the PJRT-free
+//! [`NativeExecutor`] — prefill containment charging the preemption
+//! budget, decode fan-out through `HeadTask::run_isolated`, pin-after-N
+//! aging, the 2N thrashing cutoff, wall-clock deadlines on a virtual
+//! clock (one step = one millisecond, so scenarios stay deterministic),
+//! and `StepPlan::Shed`.
 //!
 //! Invariants asserted across every scenario:
 //! * no fault schedule panics the process — every request ends in a
@@ -19,19 +19,17 @@
 //! runs the suite across a seed matrix and uploads the
 //! `CHAOS_summary.json` written at the end.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
+use std::time::Duration;
 
-use selfindex_kv::coordinator::{PoolPressure, Scheduler, StepPlan};
+use selfindex_kv::config::EngineConfig;
+use selfindex_kv::coordinator::{NativeExecutor, Outcome, RequestResult, ServingEngine};
 use selfindex_kv::kvcache::manager::KvManager;
 use selfindex_kv::kvcache::RecordLayout;
-use selfindex_kv::method::registry::{lookup, BuildCtx};
-use selfindex_kv::method::{DecodePlan, HeadTask, SequenceCache};
 use selfindex_kv::selfindex::SelfIndexConfig;
 use selfindex_kv::substrate::faults::FaultInjector;
 use selfindex_kv::substrate::json::Json;
-use selfindex_kv::substrate::rng::Rng;
 
 const DIM: usize = 64;
 const LAYERS: usize = 1;
@@ -41,27 +39,20 @@ const BT: usize = 64;
 const BUDGET: usize = 32;
 const PROMPT: usize = 128;
 
-/// Deterministic per-content prompt K/V (kv-head-major, one layer).
-fn prompt_kv(content: u64, tokens: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut r = Rng::new(0x9000 + content);
-    let keys = (0..KVH * tokens * DIM).map(|_| r.normal_f32()).collect();
-    let vals = (0..KVH * tokens * DIM).map(|_| r.normal_f32()).collect();
-    (keys, vals)
+/// Deterministic prompt bytes per content key. [`NativeExecutor`] derives
+/// every synthetic K/V stream from prompt CONTENT, so two requests with
+/// equal content are byte-identical submissions (identical streams, and
+/// they share prefix blocks); recomputation after eviction replays the
+/// identical stream, making outputs bit-exact.
+fn prompt_bytes(content: u64) -> Vec<u8> {
+    (0..PROMPT)
+        .map(|t| (content as u8).wrapping_mul(37) ^ (t as u8).wrapping_mul(31))
+        .collect()
 }
 
-/// Deterministic per-(content, step) decode inputs — recomputation after
-/// eviction replays the identical stream, making outputs bit-exact.
-fn step_rows(content: u64, step: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let mut r = Rng::new(content * 10_000 + step as u64 + 1);
-    let k = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
-    let v = (0..KVH * DIM).map(|_| r.normal_f32()).collect();
-    let q = (0..KVH * R * DIM).map(|_| r.normal_f32()).collect();
-    (k, v, q)
-}
-
-/// `(content, max_new, deadline_step)` — content keys the deterministic
-/// prompt/decode streams, so two requests with equal content are
-/// byte-identical submissions (and share prefix blocks).
+/// `(content, max_new, deadline_ms)` — content keys the deterministic
+/// prompt bytes; `deadline_ms` is a wall-clock SLO on the virtual clock
+/// (one engine step = 1 ms), so `Some(10)` expires at step 10 exactly.
 type Spec = (u64, usize, Option<u64>);
 
 /// Structured terminal state — the harness's `Outcome` mirror.
@@ -71,13 +62,8 @@ enum Fin {
     Completed(Vec<f32>),
     Thrashing,
     WorkerPanic,
-    DeadlineExceeded { steps_done: usize },
-}
-
-struct Running {
-    cache: Box<dyn SequenceCache>,
-    steps_done: usize,
-    out: Vec<f32>,
+    /// `tokens_done` = streamed tokens at expiry (0 = never left the queue)
+    DeadlineExceeded { tokens_done: usize },
 }
 
 struct ChaosRun {
@@ -102,10 +88,11 @@ impl ChaosRun {
     }
 }
 
-/// The engine's hardened serving policy, verbatim: admit from the FIFO
-/// stash (then the queue) with prefill contained by `catch_unwind`,
-/// decode through `run_isolated`, expire deadlines against the step
-/// counter, charge every eviction to the request's preemption budget.
+/// Run one chaos scenario through the shipped serving loop: build a
+/// fault-armed pool, submit every spec (deadlines as wall-clock SLOs on
+/// the 1 ms virtual clock), pump [`ServingEngine::step`] until drained,
+/// and fold the structured [`RequestResult`]s back into [`Fin`]s in spec
+/// order.
 fn run_chaos(
     faults_spec: &str,
     fault_seed: u64,
@@ -122,192 +109,62 @@ fn run_chaos(
         capacity_blocks,
         Arc::clone(&faults),
     ));
-    let entry = lookup("selfindex").unwrap();
-    let overlay = vec![];
+    let exec = NativeExecutor::new(DIM, LAYERS, KVH, R, BUDGET, si, Arc::clone(&mgr));
+    let cfg = EngineConfig {
+        max_batch,
+        block_tokens: BT,
+        preempt_budget,
+        ..EngineConfig::default()
+    };
+    let mut eng = ServingEngine::new(cfg, exec)
+        .expect("valid config")
+        .with_virtual_clock(Duration::from_millis(1));
 
-    let n = reqs.len();
-    let mut scheduler = Scheduler::new(max_batch);
-    let mut queue: VecDeque<usize> = (0..n).collect();
-    let mut stash: VecDeque<usize> = VecDeque::new();
-    let mut running: HashMap<usize, Running> = HashMap::new();
-    let mut fins: Vec<Option<Fin>> = vec![None; n];
-    let mut evict_count = vec![0u32; n];
-    let mut evictions = 0usize;
-    let mut step: u64 = 0;
+    let mut ids = Vec::with_capacity(reqs.len());
+    for &(content, max_new, deadline_ms) in reqs {
+        let h = match deadline_ms {
+            Some(d) => eng
+                .submit_with_deadline(prompt_bytes(content), max_new, Duration::from_millis(d))
+                .expect("queue admits the scenario"),
+            None => eng
+                .submit(prompt_bytes(content), max_new)
+                .expect("queue admits the scenario"),
+        };
+        ids.push(h.id);
+    }
 
     for _ in 0..200_000 {
-        if queue.is_empty() && stash.is_empty() && running.is_empty() {
+        if eng.is_drained() {
+            let mut by_id: HashMap<_, RequestResult> =
+                eng.take_results().into_iter().map(|r| (r.id, r)).collect();
+            let fins = ids
+                .iter()
+                .map(|id| {
+                    let r = by_id.remove(id).expect("every submission reaches a result");
+                    match r.outcome {
+                        Outcome::Completed => {
+                            Fin::Completed(eng.executor().finals()[id].clone())
+                        }
+                        Outcome::Thrashing => Fin::Thrashing,
+                        Outcome::WorkerPanic => Fin::WorkerPanic,
+                        Outcome::DeadlineExceeded => {
+                            Fin::DeadlineExceeded { tokens_done: r.generated.len() }
+                        }
+                        Outcome::Failed => {
+                            panic!("no fault in this suite maps to Outcome::Failed")
+                        }
+                    }
+                })
+                .collect();
             return ChaosRun {
-                fins: fins.into_iter().map(Option::unwrap).collect(),
-                evictions,
+                fins,
+                evictions: eng.metrics.counter("engine.preemptions").get() as usize,
                 integrity_failures: mgr.integrity_failures(),
                 prefix_hits: mgr.prefix_hits(),
                 drained: mgr.pool().free_blocks() == mgr.pool().capacity_blocks(),
             };
         }
-        step += 1;
-
-        // deadlines first, against the pre-plan counter: running expire
-        // with partial progress, stashed/queued with none
-        let mut expired: Vec<u64> = scheduler
-            .running()
-            .iter()
-            .copied()
-            .filter(|&id| reqs[id as usize].2.is_some_and(|d| step >= d))
-            .collect();
-        expired.sort_unstable();
-        for id in expired {
-            let st = running.remove(&(id as usize)).unwrap();
-            scheduler.remove(id);
-            fins[id as usize] = Some(Fin::DeadlineExceeded { steps_done: st.steps_done });
-        }
-        for waiting in [&mut stash, &mut queue] {
-            waiting.retain(|&i| {
-                if reqs[i].2.is_some_and(|d| step >= d) {
-                    fins[i] = Some(Fin::DeadlineExceeded { steps_done: 0 });
-                    false
-                } else {
-                    true
-                }
-            });
-        }
-
-        let candidate = stash.front().or_else(|| queue.front()).copied();
-        let pressure = PoolPressure {
-            free_blocks: mgr.pool().free_blocks(),
-            admit_blocks: candidate
-                .map(|_| entry.head_blocks_for_prompt(PROMPT, BT) * LAYERS * KVH),
-            step_blocks: scheduler
-                .running()
-                .iter()
-                .map(|id| running[&(*id as usize)].cache.step_blocks())
-                .sum(),
-        };
-        match scheduler.plan(&pressure) {
-            StepPlan::Prefill => {
-                let i = stash.pop_front().or_else(|| queue.pop_front()).unwrap();
-                let content = reqs[i].0;
-                let ctx = BuildCtx {
-                    dim: DIM,
-                    n_layers: LAYERS,
-                    kv_heads: KVH,
-                    gqa_ratio: R,
-                    budget_hint: PROMPT,
-                    mgr: &mgr,
-                    selfindex: &si,
-                    overlay: &overlay,
-                    prompt_hash: u128::from(content + 1),
-                };
-                // prefill containment: a panic (injected alloc fault, real
-                // exhaustion) drops the partial cache — blocks released —
-                // and charges one eviction
-                let built = catch_unwind(AssertUnwindSafe(|| {
-                    let mut cache = entry.build_seq(&ctx);
-                    let (keys, vals) = prompt_kv(content, PROMPT);
-                    for l in 0..LAYERS {
-                        cache.prefill_layer(l, &keys, &vals, &[]);
-                    }
-                    cache
-                }));
-                match built {
-                    Ok(cache) => {
-                        running.insert(
-                            i,
-                            Running { cache, steps_done: 0, out: vec![0.0; KVH * R * DIM] },
-                        );
-                        scheduler.add_running(i as u64);
-                        if evict_count[i] >= preempt_budget {
-                            scheduler.pin(i as u64);
-                        }
-                    }
-                    Err(_) => {
-                        evictions += 1;
-                        evict_count[i] += 1;
-                        if evict_count[i] > 2 * preempt_budget {
-                            fins[i] = Some(Fin::Thrashing);
-                        } else {
-                            stash.push_back(i);
-                        }
-                    }
-                }
-            }
-            StepPlan::Decode(ids) => {
-                for id in ids {
-                    let i = id as usize;
-                    let st = running.get_mut(&i).unwrap();
-                    let (k, v, q) = step_rows(reqs[i].0, st.steps_done);
-                    let mut step_failed = false;
-                    let mut step_panicked = false;
-                    for l in 0..LAYERS {
-                        let plan = DecodePlan {
-                            layer: l,
-                            dim: DIM,
-                            kv_heads: KVH,
-                            gqa_ratio: R,
-                            budget: BUDGET,
-                            k_rows: &k,
-                            v_rows: &v,
-                            queries: &q,
-                        };
-                        st.out.fill(0.0);
-                        let mut tasks: Vec<HeadTask> = Vec::new();
-                        st.cache.push_tasks(&plan, &mut st.out, &mut tasks);
-                        for t in tasks.iter_mut() {
-                            t.run_isolated(&faults);
-                        }
-                        step_failed |= tasks.iter().any(|t| t.failed);
-                        step_panicked |= tasks.iter().any(|t| t.panicked);
-                    }
-                    if step_panicked {
-                        // worker panic: the sequence's state is suspect —
-                        // fail it, release its blocks, keep the batch
-                        running.remove(&i);
-                        scheduler.remove(id);
-                        fins[i] = Some(Fin::WorkerPanic);
-                    } else if step_failed {
-                        // mid-step exhaustion: eviction + budget charge
-                        running.remove(&i);
-                        scheduler.remove(id);
-                        evictions += 1;
-                        evict_count[i] += 1;
-                        if evict_count[i] > 2 * preempt_budget {
-                            fins[i] = Some(Fin::Thrashing);
-                        } else {
-                            stash.push_back(i);
-                        }
-                    } else {
-                        st.steps_done += 1;
-                        if st.steps_done == reqs[i].1 {
-                            let st = running.remove(&i).unwrap();
-                            scheduler.remove(id);
-                            fins[i] = Some(Fin::Completed(st.out));
-                        }
-                    }
-                }
-            }
-            StepPlan::Preempt(id) => {
-                let i = id as usize;
-                let st = running.remove(&i).unwrap();
-                scheduler.remove(id);
-                drop(st); // the cache's Drop releases its pool blocks
-                evictions += 1;
-                evict_count[i] += 1;
-                if evict_count[i] > 2 * preempt_budget {
-                    fins[i] = Some(Fin::Thrashing);
-                } else {
-                    stash.push_back(i);
-                }
-            }
-            StepPlan::Shed(id) => {
-                // all running pinned and the step cannot fit: fail the
-                // youngest structurally instead of livelocking
-                let i = id as usize;
-                running.remove(&i);
-                scheduler.remove(id);
-                fins[i] = Some(Fin::Thrashing);
-            }
-            StepPlan::Idle => {}
-        }
+        eng.step().expect("no state drift");
     }
     panic!("chaos trace did not converge (livelock in the hardened policy)");
 }
@@ -408,8 +265,9 @@ fn chaos_suite() {
     summary.insert("block_corrupt".to_string(), scenario_json(&corrupt));
 
     // -- thrashing cutoff: a working set the pool can never hold -------
-    // 128-token prompt + 80 decode steps wants 4 blocks; 3 exist. Each
-    // retry charges the budget (1): evictions 1, 2, then 3 > 2×budget.
+    // a 128-token prompt growing to 80 generated tokens (207 cache rows)
+    // wants 4 blocks; 3 exist. Each retry charges the budget (1):
+    // evictions 1, 2, then 3 > 2×budget.
     let thrash = run_chaos("", 0, 3, 1, 2, &[(9, 80, None)]);
     assert_eq!(thrash.fins[0], Fin::Thrashing, "structured, not a livelock");
     assert_eq!(thrash.evictions, 3, "pin → retry → 2N cutoff");
@@ -426,17 +284,18 @@ fn chaos_suite() {
     summary.insert("append_full".to_string(), scenario_json(&append));
 
     // -- deadlines: partial output for running, empty for queued -------
+    // wall-clock SLOs on the 1 ms virtual clock: 10 ms ≈ 10 engine steps
     let dl = run_chaos("", 0, 64, 4, 1, &[(0, 40, Some(10)), (1, 40, Some(5))]);
     match dl.fins[0] {
-        Fin::DeadlineExceeded { steps_done } => {
-            assert!(steps_done > 0, "the running request keeps partial output");
-            assert!(steps_done < 40, "it expired before completing");
+        Fin::DeadlineExceeded { tokens_done } => {
+            assert!(tokens_done > 0, "the running request keeps partial output");
+            assert!(tokens_done < 40, "it expired before completing");
         }
         ref other => panic!("request 0 expected DeadlineExceeded, got {other:?}"),
     }
     assert_eq!(
         dl.fins[1],
-        Fin::DeadlineExceeded { steps_done: 0 },
+        Fin::DeadlineExceeded { tokens_done: 0 },
         "a request that never left the queue expires with no output"
     );
     assert!(dl.drained);

@@ -1,21 +1,22 @@
-//! Memory-manager integration tests: the engine-shaped serving loop over
-//! ONE shared block pool — admission on exact free-block accounting,
+//! Memory-manager integration tests: the REAL serving loop
+//! ([`ServingEngine`] over the PJRT-free [`NativeExecutor`]) on ONE
+//! shared block pool — admission on exact free-block accounting,
 //! pool-exhaustion → preemption → re-admission with **bit-exact** final
 //! outputs, prefix-block sharing across identical prompts, and leak-free
 //! refcount accounting (`free_blocks == capacity_blocks` once every
 //! sequence is gone).
 //!
-//! The loop mirrors `Engine::step` exactly — `Scheduler::plan` over
-//! [`PoolPressure`], registry-built [`SequenceCache`]s, FIFO re-stash of
-//! preempted requests — minus the PJRT boundary, so it runs without
-//! artifacts (the policy is what's under test; the full loop runs in
-//! `tests/engine_e2e.rs` when artifacts exist).
+//! The oversubscription trace drives `ServingEngine::step` itself (no
+//! hand-rolled mirror of the policy): what ships is what's tested. The
+//! direct-API tests below it pin the block-sharing and task-failure
+//! contracts at the cache layer.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use selfindex_kv::baselines::{AttentionMethod, SelfIndexing};
-use selfindex_kv::coordinator::{PoolPressure, Scheduler, StepPlan};
+use selfindex_kv::config::EngineConfig;
+use selfindex_kv::coordinator::{NativeExecutor, Outcome, RequestId, ServingEngine};
 use selfindex_kv::kvcache::manager::KvManager;
 use selfindex_kv::method::registry::{lookup, BuildCtx, CacheMethod};
 use selfindex_kv::method::{DecodePlan, HeadTask, SequenceCache};
@@ -48,125 +49,74 @@ fn step_rows(id: u64, step: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     (k, v, q)
 }
 
-struct Running {
-    cache: Box<dyn SequenceCache>,
-    steps_done: usize,
-    out: Vec<f32>,
+/// Distinct prompt bytes per request: [`NativeExecutor`] seeds each
+/// request's synthetic K/V stream from prompt CONTENT, so distinct
+/// prompts exercise distinct caches (identical prompts would collapse
+/// into prefix sharing, which the dedicated test below covers).
+fn prompt_bytes(id: u64, tokens: usize) -> Vec<u8> {
+    (0..tokens)
+        .map(|t| (id as u8 + 1) ^ (t as u8).wrapping_mul(31))
+        .collect()
 }
 
 struct TraceResult {
     /// last decode step's attention output per request
-    finals: HashMap<u64, Vec<f32>>,
-    preemptions: usize,
+    finals: HashMap<RequestId, Vec<f32>>,
+    /// full streamed token output per request
+    generated: HashMap<RequestId, Vec<u8>>,
+    preemptions: u64,
     peak_used_blocks: usize,
 }
 
-/// The engine's serving policy, verbatim: admit from the FIFO stash (then
-/// the queue) when the prompt fits on top of the running set's next step,
-/// preempt the youngest when a decode step cannot fit, decode otherwise.
-fn run_trace(
+/// Drive the shipped [`ServingEngine`] over a [`NativeExecutor`] bound to
+/// `mgr`'s pool until every request finishes, sampling pool occupancy
+/// after each step.
+fn serve_trace(
     mgr: &Arc<KvManager>,
     prompt_tokens: usize,
     max_new: usize,
     n_requests: u64,
     max_batch: usize,
 ) -> TraceResult {
-    let si = SelfIndexConfig::default();
-    let overlay = vec![];
-    let entry = lookup("selfindex").unwrap();
-    let ctx = BuildCtx {
-        dim: DIM,
-        n_layers: LAYERS,
-        kv_heads: KVH,
-        gqa_ratio: R,
-        budget_hint: prompt_tokens,
-        mgr,
-        selfindex: &si,
-        overlay: &overlay,
-        prompt_hash: 0,
+    let exec = NativeExecutor::new(
+        DIM,
+        LAYERS,
+        KVH,
+        R,
+        BUDGET,
+        SelfIndexConfig::default(),
+        Arc::clone(mgr),
+    );
+    let cfg = EngineConfig {
+        max_batch,
+        block_tokens: BT,
+        // a generous eviction allowance: this trace measures the memory
+        // manager under churn; the thrash cutoff is chaos_engine.rs's job
+        preempt_budget: 100,
+        ..EngineConfig::default()
     };
-
-    let mut scheduler = Scheduler::new(max_batch);
-    let mut queue: VecDeque<u64> = (0..n_requests).collect();
-    let mut stash: VecDeque<u64> = VecDeque::new();
-    let mut running: HashMap<u64, Running> = HashMap::new();
-    let mut finals = HashMap::new();
-    let mut preemptions = 0usize;
+    let mut eng = ServingEngine::new(cfg, exec).expect("valid config");
+    for id in 0..n_requests {
+        eng.submit(prompt_bytes(id, prompt_tokens), max_new)
+            .expect("queue admits the whole trace");
+    }
     let mut peak = 0usize;
-
     for _ in 0..100_000 {
-        if queue.is_empty() && stash.is_empty() && running.is_empty() {
+        if eng.is_drained() {
+            let generated = eng
+                .take_results()
+                .into_iter()
+                .inspect(|r| assert_eq!(r.outcome, Outcome::Completed, "request {:?}", r.id))
+                .map(|r| (r.id, r.generated))
+                .collect();
             return TraceResult {
-                finals,
-                preemptions,
+                finals: eng.executor().finals().clone(),
+                generated,
+                preemptions: eng.metrics.counter("engine.preemptions").get(),
                 peak_used_blocks: peak,
             };
         }
-        let candidate = stash.front().or_else(|| queue.front()).copied();
-        let pressure = PoolPressure {
-            free_blocks: mgr.pool().free_blocks(),
-            admit_blocks: candidate
-                .map(|_| entry.head_blocks_for_prompt(prompt_tokens, BT) * LAYERS * KVH),
-            step_blocks: scheduler
-                .running()
-                .iter()
-                .map(|id| running[id].cache.step_blocks())
-                .sum(),
-        };
-        match scheduler.plan(&pressure) {
-            StepPlan::Prefill => {
-                let id = stash.pop_front().or_else(|| queue.pop_front()).unwrap();
-                let mut cache = entry.build_seq(&ctx);
-                let (keys, vals) = prompt_kv(id, prompt_tokens);
-                for l in 0..LAYERS {
-                    cache.prefill_layer(l, &keys, &vals, &[]);
-                }
-                running.insert(
-                    id,
-                    Running {
-                        cache,
-                        steps_done: 0,
-                        out: vec![0.0; KVH * R * DIM],
-                    },
-                );
-                scheduler.add_running(id);
-            }
-            StepPlan::Decode(ids) => {
-                for id in ids {
-                    let st = running.get_mut(&id).unwrap();
-                    let (k, v, q) = step_rows(id, st.steps_done);
-                    for l in 0..LAYERS {
-                        let plan = DecodePlan {
-                            layer: l,
-                            dim: DIM,
-                            kv_heads: KVH,
-                            gqa_ratio: R,
-                            budget: BUDGET,
-                            k_rows: &k,
-                            v_rows: &v,
-                            queries: &q,
-                        };
-                        st.out.fill(0.0);
-                        st.cache.attend_step(&plan, &mut st.out);
-                    }
-                    st.steps_done += 1;
-                    if st.steps_done == max_new {
-                        let st = running.remove(&id).unwrap();
-                        scheduler.remove(id);
-                        finals.insert(id, st.out); // drop releases blocks
-                    }
-                }
-            }
-            StepPlan::Preempt(id) => {
-                let st = running.remove(&id).unwrap();
-                scheduler.remove(id);
-                drop(st); // the cache's Drop releases its pool blocks
-                stash.push_back(id);
-                preemptions += 1;
-            }
-            StepPlan::Shed(_) => unreachable!("no pinned sequences in this trace"),
-            StepPlan::Idle => {}
-        }
+        eng.step().expect("no state drift");
         peak = peak.max(mgr.pool().used_blocks());
     }
     panic!("trace did not converge (livelock in the admission/preemption policy)");
@@ -175,13 +125,13 @@ fn run_trace(
 #[test]
 fn oversubscribed_trace_preempts_and_finishes_bit_exact() {
     let si = SelfIndexConfig::default();
-    // each request: 2 prompt blocks + 2 decode-growth blocks (128 → 208
+    // each request: 2 prompt blocks + 2 decode-growth blocks (128 → 207
     // tokens crosses 128 and 192). 7 blocks cannot host three such
     // lifetimes (12 blocks) — or even two — without preemption.
     let prompt = 128;
     let max_new = 80;
     let tight = Arc::new(KvManager::for_head(DIM, &si, BT, 7));
-    let contended = run_trace(&tight, prompt, max_new, 3, 3);
+    let contended = serve_trace(&tight, prompt, max_new, 3, 3);
     assert_eq!(contended.finals.len(), 3, "all requests finished");
     assert!(
         contended.preemptions > 0,
@@ -196,13 +146,18 @@ fn oversubscribed_trace_preempts_and_finishes_bit_exact() {
 
     // uncontended reference: same requests, pool big enough for all
     let loose = Arc::new(KvManager::for_head(DIM, &si, BT, 64));
-    let reference = run_trace(&loose, prompt, max_new, 3, 3);
+    let reference = serve_trace(&loose, prompt, max_new, 3, 3);
     assert_eq!(reference.preemptions, 0, "64 blocks never preempt");
+    assert_eq!(reference.finals.len(), 3);
     for (id, out) in &reference.finals {
         assert_eq!(
             contended.finals[id], *out,
-            "request {id}: preempted-and-recomputed output must be \
+            "request {id:?}: preempted-and-recomputed output must be \
              bit-identical to the uncontended run"
+        );
+        assert_eq!(
+            contended.generated[id], reference.generated[id],
+            "request {id:?}: streamed tokens must match across pool sizes"
         );
     }
     assert_eq!(loose.pool().free_blocks(), loose.pool().capacity_blocks());

@@ -1,0 +1,159 @@
+//! Serving front-end integration tests.
+//!
+//! * Chunked prefill must bound head-of-line blocking: while a 100K-token
+//!   prompt prefills, an in-flight decode never stalls for more than ONE
+//!   chunk — the scheduler alternates `PrefillChunk` with `Decode` turns.
+//! * The continuous-batching path is an execution schedule, not a model
+//!   change: a served trace (staggered submissions, chunked prefill)
+//!   finishes **bit-identical** to the closed-batch
+//!   `run_to_completion` over the same requests with chunking off.
+//!
+//! Both tests run on the PJRT-free [`NativeExecutor`], whose synthetic
+//! K/V streams derive only from prompt content — so outputs are
+//! comparable across engines, schedules, and pool sizes.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use selfindex_kv::config::EngineConfig;
+use selfindex_kv::coordinator::{
+    NativeExecutor, Outcome, RequestId, ServingEngine, StepPlan,
+};
+use selfindex_kv::kvcache::manager::KvManager;
+use selfindex_kv::selfindex::SelfIndexConfig;
+
+const DIM: usize = 32;
+const BT: usize = 64;
+const BUDGET: usize = 32;
+
+fn si_cfg() -> SelfIndexConfig {
+    SelfIndexConfig { sink_tokens: 16, sparse_k: 16, ..SelfIndexConfig::default() }
+}
+
+fn engine(capacity_blocks: usize, chunk: usize) -> ServingEngine<NativeExecutor> {
+    let si = si_cfg();
+    let mgr = Arc::new(KvManager::for_head(DIM, &si, BT, capacity_blocks));
+    let exec = NativeExecutor::new(DIM, 1, 1, 1, BUDGET, si, mgr);
+    let cfg = EngineConfig {
+        block_tokens: BT,
+        prefill_chunk_tokens: chunk,
+        max_batch: 4,
+        preempt_budget: 4,
+        ..EngineConfig::default()
+    };
+    ServingEngine::new(cfg, exec).expect("valid config")
+}
+
+fn prompt(seed: u8, len: usize) -> Vec<u8> {
+    (0..len).map(|t| seed ^ (t as u8).wrapping_mul(31)).collect()
+}
+
+/// The ISSUE's acceptance bar: submit a short request, let it decode,
+/// then submit a 100K-token prompt. With `prefill_chunk_tokens` set, the
+/// long prefill must interleave — while anything is running, no two
+/// consecutive steps may both be prefill turns (a decode gap of at most
+/// one chunk).
+#[test]
+fn long_prompt_prefill_never_stalls_inflight_decode_beyond_one_chunk() {
+    const LONG: usize = 100_000;
+    const CHUNK: usize = 1024;
+    // 100K tokens = 1563 blocks for the long prompt + slack for the
+    // decoding neighbour: nothing here should preempt
+    let mut eng = engine(1600, CHUNK);
+
+    let a = eng.submit(prompt(7, BT), 300).expect("short request admitted");
+    while eng.running() == 0 {
+        eng.step().expect("no state drift");
+    }
+    let b = eng.submit(prompt(9, LONG), 4).expect("long request admitted");
+
+    let mut consecutive_prefill = 0u32;
+    let mut interleaved_chunks = 0u32;
+    while !eng.is_drained() {
+        let running_before = eng.running();
+        let plan = eng.step().expect("no state drift");
+        match plan {
+            StepPlan::Prefill | StepPlan::PrefillChunk => {
+                if matches!(plan, StepPlan::PrefillChunk) && running_before > 0 {
+                    interleaved_chunks += 1;
+                }
+                if running_before > 0 {
+                    consecutive_prefill += 1;
+                    assert!(
+                        consecutive_prefill <= 1,
+                        "two consecutive prefill turns while a decode was \
+                         in flight — the stall exceeded one chunk"
+                    );
+                } else {
+                    // nothing to decode: back-to-back chunks are correct
+                    consecutive_prefill = 0;
+                }
+            }
+            StepPlan::Decode(_) => consecutive_prefill = 0,
+            StepPlan::Preempt(_) | StepPlan::Shed(_) => {
+                panic!("this pool is sized to avoid preemption")
+            }
+            StepPlan::Idle => {}
+        }
+    }
+
+    assert!(
+        interleaved_chunks >= 50,
+        "a {LONG}-token prompt at {CHUNK}-token chunks must interleave \
+         many chunks with live decodes (saw {interleaved_chunks})"
+    );
+    let mut results: Vec<_> = eng.take_results();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 2);
+    assert_eq!(results[0].id, a.id);
+    assert_eq!(results[0].outcome, Outcome::Completed);
+    assert_eq!(results[0].generated.len(), 300);
+    assert_eq!(results[1].id, b.id);
+    assert_eq!(results[1].outcome, Outcome::Completed);
+    assert_eq!(results[1].generated.len(), 4);
+    assert_eq!(eng.metrics.counter("engine.preemptions").get(), 0);
+}
+
+type Served = (Vec<(RequestId, Outcome, Vec<u8>)>, HashMap<RequestId, Vec<f32>>);
+
+/// Run the same three requests either staggered + chunked (the serving
+/// path) or submitted up front with chunking off (closed batch).
+fn serve(chunk: usize, staggered: bool) -> Served {
+    let mut eng = engine(64, chunk);
+    let specs: [(u8, usize); 3] = [(3, 200), (5, 333), (11, 512)];
+    for (i, &(seed, len)) in specs.iter().enumerate() {
+        if staggered && i > 0 {
+            // arrivals mid-decode: the batch composition differs from the
+            // closed-batch run, the outputs must not
+            for _ in 0..3 {
+                eng.step().expect("no state drift");
+            }
+        }
+        eng.submit(prompt(seed, len), 12).expect("admitted");
+    }
+    let mut results = eng.run_to_completion().expect("no state drift");
+    results.sort_by_key(|r| r.id);
+    let outs = results.into_iter().map(|r| (r.id, r.outcome, r.generated)).collect();
+    (outs, eng.executor().finals().clone())
+}
+
+#[test]
+fn served_trace_is_bit_identical_to_closed_batch() {
+    let (closed_outs, closed_finals) = serve(0, false);
+    let (served_outs, served_finals) = serve(128, true);
+    assert_eq!(closed_outs.len(), 3);
+    for (id, outcome, _) in &closed_outs {
+        assert_eq!(*outcome, Outcome::Completed, "request {id} in closed batch");
+    }
+    assert_eq!(
+        served_outs, closed_outs,
+        "streamed tokens must not depend on arrival timing or chunking"
+    );
+    for (id, out) in &closed_finals {
+        assert_eq!(
+            served_finals[id], *out,
+            "request {id}: final attention output must be bit-identical \
+             between the served and closed-batch schedules"
+        );
+    }
+}

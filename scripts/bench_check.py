@@ -16,11 +16,13 @@ The baseline spec is JSON:
       ]
     }
 
-Two check kinds:
+Three check kinds:
 
 * "min"      — a hard floor, used for machine-relative ratios (a speedup
                of the same workload on the same host must not dip below
                it regardless of how fast the runner is).
+* "max"      — a hard ceiling, used for latency-style metrics (TTFT p99,
+               deadline-miss rate) where regression means the value GREW.
 * "baseline" — an absolute reference value; the measured metric must be
                >= baseline * (1 - tolerance). The per-check "tolerance"
                overrides the spec-level default (0.25 = fail on a >25%
@@ -71,6 +73,10 @@ def run_check(check, bench_dir, default_tol, cache):
         floor = float(check["min"])
         ok = value >= floor
         detail = "%.4g >= floor %.4g" % (value, floor)
+    elif "max" in check:
+        ceil = float(check["max"])
+        ok = value <= ceil
+        detail = "%.4g <= ceiling %.4g" % (value, ceil)
     elif "baseline" in check:
         tol = float(check.get("tolerance", default_tol))
         floor = float(check["baseline"]) * (1.0 - tol)
@@ -82,7 +88,7 @@ def run_check(check, bench_dir, default_tol, cache):
             floor,
         )
     else:
-        return False, name, "check has neither 'min' nor 'baseline'"
+        return False, name, "check has none of 'min', 'max', 'baseline'"
     return ok, name, detail
 
 
