@@ -3,9 +3,13 @@
 //! 1. **Serving bench** (runs everywhere, including CI): the
 //!    continuous-batching front-end (`ServingEngine` over the PJRT-free
 //!    `NativeExecutor`) replays an open-loop trace with Poisson
-//!    (exponential-gap) arrivals against the wall clock — chunked
-//!    prefill, wall-clock SLOs — and emits `BENCH_serving.json` with
-//!    TTFT p50/p99, TPOT, tokens/s, preemption and deadline-miss rates.
+//!    (exponential-gap) arrivals on a **virtual clock** (one engine step
+//!    = one millisecond, no wall-clock reads, no sleeps) — chunked
+//!    prefill, SLOs as virtual deadlines — and emits
+//!    `BENCH_serving.json` with TTFT p50/p99, TPOT, tokens/s,
+//!    preemption and deadline-miss rates. Every number is a pure
+//!    function of the step schedule, so `scripts/bench_check.py` can
+//!    gate TTFT and throughput tightly without machine-speed slack.
 //!    `SIKV_BENCH_FAST=1` shrinks the trace for smoke runs.
 //! 2. **End-to-end validation** (needs artifacts — `make artifacts`):
 //!    load the build-time-trained tiny model via PJRT, serve the trace
@@ -59,7 +63,11 @@ fn serving_bench(fast: bool) -> anyhow::Result<()> {
         max_batch: 8,
         ..EngineConfig::default()
     };
-    let mut eng = ServingEngine::new(cfg, exec)?;
+    // one engine step = 1 ms of virtual time: arrivals, deadlines, TTFT
+    // and latency all live on the step clock, making the replay (and the
+    // gated metrics) bit-deterministic across machines
+    let tick = Duration::from_millis(1);
+    let mut eng = ServingEngine::new(cfg, exec)?.with_virtual_clock(tick);
 
     let tcfg = TraceConfig {
         requests: if fast { 16 } else { 48 },
@@ -78,13 +86,16 @@ fn serving_bench(fast: bool) -> anyhow::Result<()> {
         tcfg.slo_ms.unwrap_or(0.0)
     );
 
-    // open-loop replay against the wall clock: submit each request at its
-    // trace arrival time, step the engine whenever work is pending
+    // open-loop replay on the virtual clock: submit each request the
+    // first step whose virtual "now" reaches its Poisson arrival offset,
+    // then step unconditionally (an idle step still advances the clock
+    // toward the next arrival — no sleeps, no wall-clock reads)
     let t0 = Instant::now();
     let mut next = 0usize;
+    let mut steps = 0u64;
     while next < n || !eng.is_drained() {
-        let now = t0.elapsed();
-        while next < n && reqs[next].at <= now {
+        let vnow = tick * steps as u32;
+        while next < n && reqs[next].at <= vnow {
             let r = &reqs[next];
             match r.slo {
                 Some(slo) => eng.submit_with_deadline(r.prompt.clone(), r.max_new_tokens, slo),
@@ -93,13 +104,11 @@ fn serving_bench(fast: bool) -> anyhow::Result<()> {
             .expect("trace fits the admission queue");
             next += 1;
         }
-        if eng.is_drained() {
-            std::thread::sleep(Duration::from_micros(200)); // idle until the next arrival
-            continue;
-        }
         eng.step()?;
+        steps += 1;
     }
     let wall = t0.elapsed();
+    let vwall = tick * steps as u32;
 
     let mut results = eng.take_results();
     results.sort_by_key(|r| r.id);
@@ -119,7 +128,8 @@ fn serving_bench(fast: bool) -> anyhow::Result<()> {
         .collect();
     let tpot_ms = tpots.iter().sum::<f64>() / tpots.len().max(1) as f64;
     let total_tokens: usize = results.iter().map(|r| r.generated.len()).sum();
-    let tokens_per_sec = total_tokens as f64 / wall.as_secs_f64();
+    // throughput on the virtual clock — deterministic, so it gates tight
+    let tokens_per_sec = total_tokens as f64 / vwall.as_secs_f64();
     let completed = results.iter().filter(|r| r.outcome == Outcome::Completed).count();
     let misses = results
         .iter()
@@ -137,7 +147,8 @@ fn serving_bench(fast: bool) -> anyhow::Result<()> {
     tab.row(vec!["throughput".into(), format!("{tokens_per_sec:.0} tok/s")]);
     tab.row(vec!["preemptions".into(), preemptions.to_string()]);
     tab.row(vec!["deadline misses".into(), format!("{misses}/{n}")]);
-    tab.row(vec!["wall".into(), fmt_duration(wall)]);
+    tab.row(vec!["virtual wall".into(), format!("{} ({steps} steps)", fmt_duration(vwall))]);
+    tab.row(vec!["real wall".into(), fmt_duration(wall)]);
     println!("{}", tab.render());
 
     let payload = obj(vec![
@@ -151,6 +162,8 @@ fn serving_bench(fast: bool) -> anyhow::Result<()> {
         ("preemption_rate", num(preemptions as f64 / n as f64)),
         ("deadline_miss_rate", num(misses as f64 / n as f64)),
         ("chunk_tokens", num(CHUNK as f64)),
+        ("virtual_secs", num(vwall.as_secs_f64())),
+        ("steps", num(steps as f64)),
         ("wall_secs", num(wall.as_secs_f64())),
     ]);
     match write_bench_json("serving", payload) {

@@ -13,6 +13,14 @@
 //! identical prompts. It reports pool occupancy, preemption and
 //! prefix-hit counts, and emits `BENCH_memory.json` (uploaded as a CI
 //! artifact next to `BENCH_decode.json`).
+//!
+//! Since the tiered-storage PR the bench also measures the
+//! **resume-vs-recompute crossover**: the same oversubscribed pair run
+//! uncontended, with plain drop-and-re-prefill eviction, and with
+//! block-granular swap to the host tier. It asserts the swap run is
+//! bit-exact versus never having been evicted with strictly fewer
+//! re-prefills, and emits `resume_speedup` / `swap_fallback_rate`
+//! (gated by `rust/BENCH_baseline.json`).
 
 mod common;
 
@@ -119,6 +127,77 @@ fn run_trace(
     panic!("oversubscribed trace did not converge");
 }
 
+/// One run of the resume-vs-recompute crossover trace (DESIGN.md §Tiered
+/// storage): a survivor whose decode grows past a block boundary plus a
+/// victim that never grows. Under a tight pool the survivor's boundary
+/// decode forces the victim out exactly once; it comes back either by
+/// host-tier resume (`swap = true`) or by chunked re-prefill
+/// (`swap = false`). Geometry (BT = 64, `LAYERS * KVH = 4` pool blocks
+/// per cache block): survivor 126 tokens = 8 pool blocks growing to 12,
+/// victim 120 tokens = 8 for life — 16 blocks admit both, the boundary
+/// step finds `free 0 < step 4`, and re-admission stays blocked until
+/// the survivor completes. Returns per-request generated bytes + final
+/// attention outputs (the bit-exactness witnesses) and the step/counter
+/// readings the crossover metrics are built from.
+struct CrossoverRun {
+    generated: Vec<Vec<u8>>,
+    finals: Vec<Vec<f32>>,
+    steps: u64,
+    re_prefills: u64,
+    swap_outs: u64,
+    swap_ins: u64,
+    swap_fallbacks: u64,
+}
+
+fn crossover_run(swap: bool, capacity_blocks: usize) -> CrossoverRun {
+    let si = SelfIndexConfig::default();
+    let mgr = Arc::new(KvManager::for_head(DIM, &si, BT, capacity_blocks));
+    let exec = NativeExecutor::new(DIM, LAYERS, KVH, R, BUDGET, si, Arc::clone(&mgr));
+    let mut cfg = EngineConfig {
+        max_batch: 2,
+        block_tokens: BT,
+        // two chunks per prompt: a re-prefill pays >= 2 steps where a
+        // host-tier resume pays 1 — the crossover the bench measures
+        prefill_chunk_tokens: 64,
+        preempt_budget: 8,
+        ..EngineConfig::default()
+    };
+    cfg.swap.enabled = swap;
+    cfg.swap.swap_cost = 0.1;
+    cfg.swap.recompute_cost = 1.0;
+    cfg.swap.cold_after_sweeps = 2; // victim chills while the survivor runs
+    let mut eng = ServingEngine::new(cfg, exec).expect("valid config");
+    let prompt = |pid: u64, len: usize| -> Vec<u8> {
+        (0..len)
+            .map(|t| (pid as u8).wrapping_mul(41) ^ (t as u8).wrapping_mul(29))
+            .collect()
+    };
+    let mut ids = vec![];
+    for (p, max_new) in [(prompt(11, 126), 30), (prompt(13, 120), 8)] {
+        ids.push(eng.submit(p, max_new).expect("queue admits the pair").id);
+    }
+    let mut res = eng.run_to_completion().expect("no state drift");
+    assert!(
+        res.iter().all(|r| r.outcome == Outcome::Completed),
+        "crossover trace must complete every request"
+    );
+    res.sort_by_key(|r| r.id);
+    assert!(
+        eng.executor().mgr().pool().free_blocks() == capacity_blocks
+            && eng.executor().mgr().tier().entries() == 0,
+        "crossover trace must drain device pool and host tier"
+    );
+    CrossoverRun {
+        generated: res.iter().map(|r| r.generated.clone()).collect(),
+        finals: ids.iter().map(|id| eng.executor().finals()[id].clone()).collect(),
+        steps: eng.step_index(),
+        re_prefills: eng.metrics.counter("engine.retries").get(),
+        swap_outs: eng.metrics.counter("engine.swap_outs").get(),
+        swap_ins: eng.metrics.counter("engine.swap_ins").get(),
+        swap_fallbacks: eng.metrics.counter("engine.swap_fallbacks").get(),
+    }
+}
+
 /// Pool bytes for one prefilled sequence vs a second identical one on the
 /// same manager: the prefix registry counts shared blocks once, so the
 /// pair lands strictly below 2x.
@@ -199,6 +278,51 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(tr.completed, prompts.len(), "oversubscribed trace must finish");
     assert!(leak_free, "pool must drain to capacity after the trace");
 
+    // ---- resume-vs-recompute crossover (tiered KV storage) ----
+    // three deterministic runs of the same pair: uncontended reference,
+    // oversubscribed with plain eviction, oversubscribed with the host
+    // tier. Swap must be bit-exact vs never having been evicted and must
+    // re-prefill strictly less; the step ratio is the measured speedup.
+    println!("== tiered storage: resume-vs-recompute crossover ==\n");
+    let uncontended = crossover_run(false, 24);
+    let evicting = crossover_run(false, 16);
+    let swapping = crossover_run(true, 16);
+    assert_eq!(
+        uncontended.generated, evicting.generated,
+        "drop + recompute must replay bit-identically"
+    );
+    assert_eq!(
+        (&uncontended.generated, &uncontended.finals),
+        (&swapping.generated, &swapping.finals),
+        "swap + resume must be bit-exact vs never having been evicted"
+    );
+    assert!(swapping.swap_ins >= 1, "the tight pool must swap and resume");
+    assert_eq!(evicting.swap_ins, 0, "swap disabled never touches the tier");
+    assert!(
+        swapping.re_prefills < evicting.re_prefills,
+        "the tier must re-prefill strictly less (swap {} vs evict {})",
+        swapping.re_prefills,
+        evicting.re_prefills
+    );
+    let resume_speedup = evicting.steps as f64 / swapping.steps as f64;
+    let swap_fallback_rate =
+        swapping.swap_fallbacks as f64 / swapping.swap_outs.max(1) as f64;
+    let mut xo_tab = Table::new(&["run", "steps", "re-prefills", "swap out/in"]);
+    for (name, r) in [
+        ("uncontended (24 blk)", &uncontended),
+        ("evicting (16 blk)", &evicting),
+        ("swapping (16 blk)", &swapping),
+    ] {
+        xo_tab.row(vec![
+            name.into(),
+            r.steps.to_string(),
+            r.re_prefills.to_string(),
+            format!("{}/{}", r.swap_outs, r.swap_ins),
+        ]);
+    }
+    xo_tab.row(vec!["resume speedup".into(), format!("{resume_speedup:.3}x"), "".into(), "".into()]);
+    println!("{}", xo_tab.render());
+
     let payload = obj(vec![
         ("bench", s("memory")),
         ("prompt_tokens", num(prompt_tokens as f64)),
@@ -216,6 +340,14 @@ fn main() -> anyhow::Result<()> {
         ("single_seq_pool_bytes", num(single_bytes as f64)),
         ("two_shared_seq_pool_bytes", num(pair_bytes as f64)),
         ("sharing_ratio", num(sharing_ratio)),
+        ("resume_speedup", num(resume_speedup)),
+        ("swap_fallback_rate", num(swap_fallback_rate)),
+        ("crossover_steps_evict", num(evicting.steps as f64)),
+        ("crossover_steps_swap", num(swapping.steps as f64)),
+        ("re_prefills_evict", num(evicting.re_prefills as f64)),
+        ("re_prefills_swap", num(swapping.re_prefills as f64)),
+        ("swap_outs", num(swapping.swap_outs as f64)),
+        ("swap_ins", num(swapping.swap_ins as f64)),
     ]);
     match write_bench_json("memory", payload) {
         Ok(p) => println!("wrote {}\n", p.display()),

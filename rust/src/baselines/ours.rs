@@ -263,6 +263,23 @@ impl SelfIndexing {
         &self.sinks
     }
 
+    /// Tier swap-out, step 2 (after the payloads were copied to the host
+    /// tier via [`HeadCache::blocks`]): detach the block table and
+    /// release every device reference. The head keeps its length, frozen
+    /// stats, codebook, sinks, and fp recent window, so a later
+    /// [`Self::attach_blocks`] resumes decoding bit-exactly.
+    pub fn detach_blocks(&mut self) {
+        for id in self.cache.take_blocks_for_swap() {
+            self.mgr.pool().release(id);
+        }
+    }
+
+    /// Tier swap-in: re-attach freshly allocated device blocks holding
+    /// bit-exact copies of the swapped-out payloads, in swap-out order.
+    pub fn attach_blocks(&mut self, blocks: Vec<crate::kvcache::BlockId>) {
+        self.cache.restore_blocks(blocks, self.mgr.pool());
+    }
+
     /// LUT-GEMV scores with sinks masked out (−inf), ready for top-k.
     /// (Diagnostic path; the decode hot path is [`Self::fused_select`],
     /// which never materializes this vector.)

@@ -65,6 +65,49 @@ impl ModelConfig {
     }
 }
 
+/// Tiered-storage policy: block-granular swap-to-host on preemption
+/// (see `kvcache::tier`). Off by default — the plain drop-and-re-prefill
+/// path stays the baseline behaviour.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SwapConfig {
+    /// master switch for the host tier
+    pub enabled: bool,
+    /// modelled cost of swapping one block out and back in (same
+    /// arbitrary units as `recompute_cost`)
+    pub swap_cost: f64,
+    /// modelled cost of re-prefilling one prompt token
+    pub recompute_cost: f64,
+    /// host-tier sweeps (one per engine step) an entry rests before the
+    /// cold sub-tier recompresses it (0 = cold tier off)
+    pub cold_after_sweeps: u64,
+}
+
+impl Default for SwapConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            // one 64-token block swaps for the modelled price of 8
+            // recomputed tokens: swapping wins for any full block, which
+            // matches a host-memory copy being far cheaper than a
+            // prefill forward pass
+            swap_cost: 8.0,
+            recompute_cost: 1.0,
+            cold_after_sweeps: 0,
+        }
+    }
+}
+
+impl SwapConfig {
+    /// The resume-vs-recompute crossover: swap a preempted sequence out
+    /// when restoring its `blocks` is modelled cheaper than
+    /// re-prefilling its `prefill_tokens`-token prompt.
+    pub fn favors_swap(&self, blocks: usize, prefill_tokens: usize) -> bool {
+        self.enabled
+            && (blocks as f64) * self.swap_cost
+                < (prefill_tokens as f64) * self.recompute_cost
+    }
+}
+
 /// Serving engine knobs.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -115,6 +158,9 @@ pub struct EngineConfig {
     /// scheduler pins it (never a victim again), past `2N` it fails with
     /// `Outcome::Thrashing` instead of re-stashing
     pub preempt_budget: u32,
+    /// tiered-storage policy: swap preempted sequences' blocks to the
+    /// host tier instead of dropping them (see `kvcache::tier`)
+    pub swap: SwapConfig,
 }
 
 impl Default for EngineConfig {
@@ -135,6 +181,7 @@ impl Default for EngineConfig {
             faults: String::new(),
             fault_seed: 0,
             preempt_budget: 4,
+            swap: SwapConfig::default(),
         }
     }
 }
@@ -191,6 +238,18 @@ impl EngineConfig {
         }
         if let Some(x) = v.get("preempt_budget").and_then(Json::as_usize) {
             cfg.preempt_budget = x as u32;
+        }
+        if let Some(x) = v.path("swap.enabled").and_then(Json::as_bool) {
+            cfg.swap.enabled = x;
+        }
+        if let Some(x) = v.path("swap.swap_cost").and_then(Json::as_f64) {
+            cfg.swap.swap_cost = x;
+        }
+        if let Some(x) = v.path("swap.recompute_cost").and_then(Json::as_f64) {
+            cfg.swap.recompute_cost = x;
+        }
+        if let Some(x) = v.path("swap.cold_after_sweeps").and_then(Json::as_usize) {
+            cfg.swap.cold_after_sweeps = x as u64;
         }
         if let Some(x) = v.get("method_overlay") {
             let obj = x
@@ -257,6 +316,18 @@ impl EngineConfig {
             return Err("preempt_budget must be >= 1 (0 would fail every \
                         first eviction as thrashing)"
                 .into());
+        }
+        if !(self.swap.swap_cost.is_finite() && self.swap.swap_cost > 0.0) {
+            return Err(format!(
+                "swap.swap_cost {} must be positive and finite",
+                self.swap.swap_cost
+            ));
+        }
+        if !(self.swap.recompute_cost.is_finite() && self.swap.recompute_cost > 0.0) {
+            return Err(format!(
+                "swap.recompute_cost {} must be positive and finite",
+                self.swap.recompute_cost
+            ));
         }
         if !self.faults.is_empty() {
             crate::substrate::faults::FaultInjector::parse(&self.faults, self.fault_seed)
@@ -403,6 +474,35 @@ mod tests {
         let j = Json::parse(r#"{"preempt_budget":0}"#).unwrap();
         let err = EngineConfig::from_json(&j).unwrap_err();
         assert!(err.contains("preempt_budget"), "{err}");
+    }
+
+    #[test]
+    fn swap_knobs_roundtrip_validate_and_model_the_crossover() {
+        let e = EngineConfig::default();
+        assert!(!e.swap.enabled, "swap is off by default");
+        assert!(!e.swap.favors_swap(1, 10_000), "disabled policy never swaps");
+
+        let j = Json::parse(
+            r#"{"swap":{"enabled":true,"swap_cost":16.0,
+                "recompute_cost":2.0,"cold_after_sweeps":3}}"#,
+        )
+        .unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert!(e.swap.enabled);
+        assert_eq!(e.swap.swap_cost, 16.0);
+        assert_eq!(e.swap.recompute_cost, 2.0);
+        assert_eq!(e.swap.cold_after_sweeps, 3);
+        // crossover: blocks*swap_cost vs tokens*recompute_cost
+        assert!(e.swap.favors_swap(2, 17), "2*16 < 17*2");
+        assert!(!e.swap.favors_swap(2, 16), "2*16 == 16*2: tie goes to recompute");
+        assert!(!e.swap.favors_swap(64, 64), "short prompts recompute");
+
+        let j = Json::parse(r#"{"swap":{"swap_cost":0.0}}"#).unwrap();
+        let err = EngineConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("swap.swap_cost"), "{err}");
+        let j = Json::parse(r#"{"swap":{"recompute_cost":-1.0}}"#).unwrap();
+        let err = EngineConfig::from_json(&j).unwrap_err();
+        assert!(err.contains("swap.recompute_cost"), "{err}");
     }
 
     #[test]

@@ -521,6 +521,12 @@ impl Engine {
                 "state_drift",
                 "scheduler planned a prefill chunk but this engine never starts one",
             )),
+            // the closed-batch engine never sets `swap_eligible` — tiered
+            // swap lives in `super::serving::ServingEngine`
+            StepPlan::SwapOut(_) => Err(anyhow::Error::coded(
+                "state_drift",
+                "scheduler planned a swap-out but this engine never enables the swap policy",
+            )),
             StepPlan::Idle => Ok(vec![]),
         };
         self.refresh_pool_gauges();

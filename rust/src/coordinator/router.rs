@@ -69,6 +69,19 @@ impl Router {
         max_new_tokens: usize,
         deadline: Option<Instant>,
     ) -> Result<RequestId, AdmitError> {
+        self.submit_at(prompt, max_new_tokens, deadline, Instant::now())
+    }
+
+    /// [`Self::submit_with`] with an explicit submission stamp: the
+    /// serving engine passes its own notion of "now", so under a virtual
+    /// clock TTFT/latency are pure functions of the step schedule.
+    pub fn submit_at(
+        &mut self,
+        prompt: Vec<u8>,
+        max_new_tokens: usize,
+        deadline: Option<Instant>,
+        now: Instant,
+    ) -> Result<RequestId, AdmitError> {
         if prompt.is_empty() {
             return Err(AdmitError::EmptyPrompt);
         }
@@ -87,7 +100,7 @@ impl Router {
             id,
             prompt,
             max_new_tokens,
-            submitted_at: Instant::now(),
+            submitted_at: now,
             prompt_hash,
             preempt_count: 0,
             deadline,

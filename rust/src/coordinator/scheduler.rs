@@ -32,6 +32,12 @@ pub enum StepPlan {
     /// evict this (youngest unpinned) running sequence: release its
     /// blocks and re-stash its request, then re-plan
     Preempt(RequestId),
+    /// evict this (youngest unpinned) running sequence by swapping its
+    /// blocks to the host tier instead of dropping them — emitted in
+    /// place of [`StepPlan::Preempt`] when the engine marked the victim
+    /// [`PoolPressure::swap_eligible`] (swap policy on AND the
+    /// resume-vs-recompute cost model favors restoring over re-prefill)
+    SwapOut(RequestId),
     /// every running sequence is pinned and the step still cannot fit:
     /// fail this (youngest) one with `Outcome::Thrashing` — the pool is
     /// too small for the pinned working set, and shedding beats livelock
@@ -60,6 +66,12 @@ pub struct PoolPressure {
     /// prompt can never stall an in-flight decode for more than one
     /// chunk's worth of work)
     pub chunk_last: bool,
+    /// the engine's swap policy verdict for the current preemption victim
+    /// candidate (the youngest unpinned running sequence): when true, a
+    /// preemption is planned as [`StepPlan::SwapOut`] instead of
+    /// [`StepPlan::Preempt`]. Default `false` — the policy knob is off
+    /// and preemption behaves exactly as before.
+    pub swap_eligible: bool,
 }
 
 pub struct Scheduler {
@@ -100,6 +112,22 @@ impl Scheduler {
 
     pub fn is_pinned(&self, id: RequestId) -> bool {
         self.pinned.contains(&id)
+    }
+
+    /// The sequence [`Scheduler::plan`] would evict if the next step does
+    /// not fit: the youngest unpinned running sequence. `None` when fewer
+    /// than two sequences are running (the last one is never evicted) or
+    /// when every candidate is pinned (the plan degrades to
+    /// [`StepPlan::Shed`]).
+    ///
+    /// The engine prices its swap-vs-recompute cost model against this
+    /// candidate *before* building [`PoolPressure`]: `swap_eligible` must
+    /// describe the same victim `plan` will pick.
+    pub fn victim_candidate(&self) -> Option<RequestId> {
+        if self.running.len() < 2 {
+            return None;
+        }
+        self.running.iter().rev().find(|&&id| !self.is_pinned(id)).copied()
     }
 
     /// Called when a sequence finishes (or is preempted / shed / failed).
@@ -149,6 +177,7 @@ impl Scheduler {
         }
         if pressure.free_blocks < pressure.step_blocks && self.running.len() > 1 {
             return match self.running.iter().rev().find(|&&id| !self.is_pinned(id)) {
+                Some(&victim) if pressure.swap_eligible => StepPlan::SwapOut(victim),
                 Some(&victim) => StepPlan::Preempt(victim),
                 None => StepPlan::Shed(*self.running.last().unwrap()),
             };
@@ -213,6 +242,36 @@ mod tests {
         s.remove(3);
         // after eviction frees blocks, the survivors decode
         assert_eq!(s.plan(&pressure(9, None, 2)), StepPlan::Decode(vec![1, 2]));
+    }
+
+    #[test]
+    fn swap_eligible_pressure_plans_swap_out() {
+        let mut s = Scheduler::new(4);
+        s.add_running(1);
+        s.add_running(2);
+        s.add_running(3);
+        let p = PoolPressure {
+            free_blocks: 1,
+            step_blocks: 3,
+            swap_eligible: true,
+            ..Default::default()
+        };
+        // same victim selection as Preempt, different disposition
+        assert_eq!(s.victim_candidate(), Some(3));
+        assert_eq!(s.plan(&p), StepPlan::SwapOut(3));
+        // pinning the youngest shifts both the candidate and the plan
+        s.pin(3);
+        assert_eq!(s.victim_candidate(), Some(2));
+        assert_eq!(s.plan(&p), StepPlan::SwapOut(2));
+        // all pinned: swap eligibility cannot rescue a thrashing set
+        s.pin(2);
+        s.pin(1);
+        assert_eq!(s.victim_candidate(), None);
+        assert_eq!(s.plan(&p), StepPlan::Shed(3));
+        // a lone sequence is never a victim candidate
+        let mut lone = Scheduler::new(4);
+        lone.add_running(9);
+        assert_eq!(lone.victim_candidate(), None);
     }
 
     #[test]
@@ -376,10 +435,12 @@ mod tests {
                     ..Default::default()
                 };
                 match s.plan(&after) {
-                    StepPlan::Preempt(_) | StepPlan::Shed(_) => Err(format!(
-                        "admit at free={free} need={need} step={step} \
-                         preempted immediately"
-                    )),
+                    StepPlan::Preempt(_) | StepPlan::SwapOut(_) | StepPlan::Shed(_) => {
+                        Err(format!(
+                            "admit at free={free} need={need} step={step} \
+                             preempted immediately"
+                        ))
+                    }
                     _ => Ok(()),
                 }
             },
@@ -495,6 +556,16 @@ mod tests {
                             free += held[id as usize];
                             held[id as usize] = 0;
                             s.remove(id);
+                        }
+                        StepPlan::PrefillChunk => {
+                            return Err(
+                                "PrefillChunk planned with inflight_prefill unset".into()
+                            );
+                        }
+                        StepPlan::SwapOut(_) => {
+                            return Err(
+                                "SwapOut planned with swap_eligible unset".into()
+                            );
                         }
                         StepPlan::Idle => {
                             if done + shed < n_req {

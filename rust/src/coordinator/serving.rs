@@ -21,7 +21,21 @@
 //! stamps `now + slo`), checked at every step boundary AND at admission,
 //! so an already-expired request never burns a long prefill. Tests pin
 //! time with [`ServingEngine::with_virtual_clock`] (the clock advances a
-//! fixed tick per step), keeping deadline scenarios deterministic.
+//! fixed tick per step), keeping deadline scenarios deterministic —
+//! submission stamps, TTFT, and end-to-end latency all read the same
+//! clock, so a virtual-clock replay is a pure function of the schedule.
+//!
+//! Tiered KV storage (DESIGN.md §Tiered storage): with
+//! `EngineConfig::swap` enabled, a preemption victim whose re-prefill
+//! would cost more than a host round-trip (`blocks × swap_cost <
+//! prompt_tokens × recompute_cost`) is swapped out instead of dropped —
+//! its block payloads move to the [`crate::kvcache::HostTier`] and the
+//! whole sequence state (generated tokens, frozen stats, codebooks)
+//! stays live, so resume is a checksum-verified block restore rather
+//! than a re-prefill + re-decode. A corrupt or faulted host copy is
+//! detected at re-admission and falls back to bit-identical
+//! recomputation (`engine.swap_fallbacks`); the stream's high-water
+//! mark keeps re-produced tokens duplicate-free either way.
 //!
 //! The engine is generic over a [`SeqExecutor`] — the thing that actually
 //! builds per-sequence caches and runs attention. [`NativeExecutor`]
@@ -46,6 +60,7 @@ use super::scheduler::{PoolPressure, Scheduler, StepPlan};
 use crate::baselines::{AttentionMethod, SelfIndexing};
 use crate::config::EngineConfig;
 use crate::kvcache::manager::KvManager;
+use crate::kvcache::{tier, BlockId};
 use crate::method::HeadTask;
 use crate::selfindex::SelfIndexConfig;
 use crate::substrate::faults::FaultInjector;
@@ -107,6 +122,68 @@ pub trait SeqExecutor {
     /// state first (e.g. [`NativeExecutor`] keeps the last attention
     /// output as a bit-exactness witness).
     fn retire(&mut self, _req: &Request, _seq: Option<Self::Seq>, _outcome: Outcome) {}
+
+    // --- tiered KV storage hooks (DESIGN.md §Tiered storage) ---
+    // Default implementations make swap unsupported: the engine then
+    // behaves exactly as before (`swap_eligible` never set, evictions
+    // drop + re-prefill). Executors with a `HostTier` override all five.
+
+    /// Device pool blocks this sequence currently holds (the `blocks`
+    /// side of the swap-vs-recompute cost model).
+    fn held_blocks(&self, _seq: &Self::Seq) -> usize {
+        0
+    }
+
+    /// Copy `seq`'s device blocks to the host tier under `key` and
+    /// release the device copies; returns the block count. `None` means
+    /// unsupported or the `swap.out` fault fired *before* anything was
+    /// copied (device state untouched) — the engine falls back to the
+    /// plain drop + re-prefill eviction.
+    fn swap_out(&mut self, _key: RequestId, _seq: &mut Self::Seq) -> Option<usize> {
+        None
+    }
+
+    /// Device blocks needed to swap `key` back in (its host-tier entry
+    /// size) — the admission cost of a resume.
+    fn swapped_blocks(&self, _key: RequestId) -> usize {
+        0
+    }
+
+    /// Restore `key`'s blocks from the host tier into `seq`, verifying
+    /// per-block checksums at re-admission.
+    fn swap_in(&mut self, _key: RequestId, _seq: &mut Self::Seq) -> SeqSwapIn {
+        SeqSwapIn::Failed
+    }
+
+    /// Drop `key`'s host-tier entry (the request went terminal while
+    /// swapped out, or the engine gave up on the host copy).
+    fn swap_discard(&mut self, _key: RequestId) {}
+
+    /// Age the host tier by one sweep, recompressing entries idle for
+    /// `cold_after` sweeps (PackKV-style cold sub-tier); returns how
+    /// many blocks went cold this sweep.
+    fn tier_sweep(&mut self, _cold_after: u64) -> usize {
+        0
+    }
+
+    /// `(host_blocks, host_bytes, cold_bytes)` snapshot for the
+    /// `tier.*` gauges.
+    fn tier_stats(&self) -> (usize, usize, usize) {
+        (0, 0, 0)
+    }
+}
+
+/// Outcome of a [`SeqExecutor::swap_in`] restore attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqSwapIn {
+    /// blocks restored bit-exactly; the sequence can rejoin the batch
+    Restored,
+    /// the device pool cannot host the entry right now; the host copy is
+    /// kept parked for a later retry
+    NoCapacity,
+    /// the host copy is gone (swap-in fault) or failed its checksum at
+    /// re-admission — the engine must fall back to re-prefill
+    Failed,
 }
 
 /// One streamed event on a [`SubmitHandle`]'s channel.
@@ -158,6 +235,11 @@ pub struct ServingEngine<X: SeqExecutor> {
     seqs: HashMap<RequestId, Active<X::Seq>>,
     /// preempted requests awaiting recomputation, FIFO, ahead of the queue
     stash: VecDeque<Request>,
+    /// swapped-out sequences awaiting re-admission, FIFO, ahead of both
+    /// the stash and the queue: their whole state (generated tokens,
+    /// frozen stats, codebooks) stays live — only the block payloads sit
+    /// in the host tier — so resume is a block restore, not a re-prefill
+    swapped: VecDeque<Active<X::Seq>>,
     inflight: Option<Inflight<X::Seq>>,
     /// true iff the previous executed plan was a prefill chunk — the
     /// scheduler uses it to hand the running batch a decode turn between
@@ -183,6 +265,7 @@ impl<X: SeqExecutor> ServingEngine<X> {
             scheduler: Scheduler::new(cfg.max_batch),
             seqs: HashMap::new(),
             stash: VecDeque::new(),
+            swapped: VecDeque::new(),
             inflight: None,
             chunk_last: false,
             sinks: HashMap::new(),
@@ -236,18 +319,22 @@ impl<X: SeqExecutor> ServingEngine<X> {
         max_new: usize,
         slo: Option<Duration>,
     ) -> Result<SubmitHandle, AdmitError> {
-        let deadline = slo.map(|s| self.now() + s);
-        let id = self.router.submit_with(prompt, max_new, deadline)?;
+        let now = self.now();
+        let deadline = slo.map(|s| now + s);
+        // stamp submission off the engine clock: under a virtual clock,
+        // TTFT and latency become pure functions of the step schedule
+        let id = self.router.submit_at(prompt, max_new, deadline, now)?;
         let (tx, rx) = channel();
         self.sinks.insert(id, (tx, 0));
         Ok(SubmitHandle { id, tokens: rx })
     }
 
-    /// No queued, stashed, in-flight, or running work remains.
+    /// No queued, stashed, swapped, in-flight, or running work remains.
     pub fn is_drained(&self) -> bool {
         self.router.is_empty()
             && self.seqs.is_empty()
             && self.stash.is_empty()
+            && self.swapped.is_empty()
             && self.inflight.is_none()
     }
 
@@ -295,8 +382,10 @@ impl<X: SeqExecutor> ServingEngine<X> {
         if let Some((tx, _)) = self.sinks.remove(&req.id) {
             let _ = tx.send(StreamEvent::Done(outcome));
         }
-        let ttft = first_token_at.map(|t| t - req.submitted_at).unwrap_or_default();
-        let latency = req.submitted_at.elapsed();
+        let ttft = first_token_at
+            .map(|t| t.saturating_duration_since(req.submitted_at))
+            .unwrap_or_default();
+        let latency = self.now().saturating_duration_since(req.submitted_at);
         self.metrics.histogram("serving.ttft").observe(ttft);
         if decode_steps > 1 {
             // time-per-output-token over the decode phase (excludes prefill)
@@ -326,7 +415,7 @@ impl<X: SeqExecutor> ServingEngine<X> {
             generated: vec![],
             prompt_len: req.prompt.len(),
             ttft: Duration::default(),
-            latency: req.submitted_at.elapsed(),
+            latency: self.now().saturating_duration_since(req.submitted_at),
             decode_steps: 0,
             outcome,
         };
@@ -365,7 +454,7 @@ impl<X: SeqExecutor> ServingEngine<X> {
             n += 1;
         }
         let mut kept = VecDeque::with_capacity(self.stash.len());
-        for r in self.stash.drain(..) {
+        for r in std::mem::take(&mut self.stash) {
             if r.deadline.is_some_and(|d| now >= d) {
                 self.never_ran(r, Outcome::DeadlineExceeded);
                 n += 1;
@@ -374,6 +463,18 @@ impl<X: SeqExecutor> ServingEngine<X> {
             }
         }
         self.stash = kept;
+        let mut kept_swapped = VecDeque::with_capacity(self.swapped.len());
+        for st in std::mem::take(&mut self.swapped) {
+            if st.req.deadline.is_some_and(|d| now >= d) {
+                // the host copy is dead weight once the request expires
+                self.exec.swap_discard(st.req.id);
+                self.finish(st, Outcome::DeadlineExceeded);
+                n += 1;
+            } else {
+                kept_swapped.push_back(st);
+            }
+        }
+        self.swapped = kept_swapped;
         for r in self.router.expire_before(now) {
             self.never_ran(r, Outcome::DeadlineExceeded);
             n += 1;
@@ -399,28 +500,42 @@ impl<X: SeqExecutor> ServingEngine<X> {
         self.step_idx += 1;
         let now = self.now();
         self.expire_deadlines(now);
-        let candidate = self
-            .stash
-            .front()
-            .map(|r| r.prompt.len())
-            .or_else(|| self.router.peek().map(|r| r.prompt.len()));
+        // re-admission of a swapped sequence comes ahead of the stash and
+        // the queue (it blocks nothing behind it for long: a resume is a
+        // block restore, not a prefill)
+        let candidate = if let Some(st) = self.swapped.front() {
+            Some(self.exec.swapped_blocks(st.req.id))
+        } else {
+            self.stash
+                .front()
+                .map(|r| r.prompt.len())
+                .or_else(|| self.router.peek().map(|r| r.prompt.len()))
+                .map(|len| self.exec.admit_blocks(len))
+        };
+        // swap policy verdict for the victim `plan` would pick: swap
+        // pays when moving the blocks costs less than re-prefilling
+        let swap_eligible = self.cfg.swap.enabled
+            && self.scheduler.victim_candidate().is_some_and(|id| {
+                let st = &self.seqs[&id];
+                self.cfg
+                    .swap
+                    .favors_swap(self.exec.held_blocks(&st.seq), st.req.prompt.len())
+            });
         let pressure = PoolPressure {
             free_blocks: self.exec.free_blocks(),
             // no new admissions while a chunked prefill is mid-flight
-            admit_blocks: if self.inflight.is_some() {
-                None
-            } else {
-                candidate.map(|len| self.exec.admit_blocks(len))
-            },
+            admit_blocks: if self.inflight.is_some() { None } else { candidate },
             step_blocks: self.step_blocks(),
             inflight_prefill: self.inflight.is_some(),
             chunk_last: self.chunk_last,
+            swap_eligible,
         };
         let plan = self.scheduler.plan(&pressure);
         match &plan {
             StepPlan::Prefill => self.start_prefill(now)?,
             StepPlan::PrefillChunk => self.continue_prefill()?,
             StepPlan::Preempt(id) => self.preempt(*id)?,
+            StepPlan::SwapOut(id) => self.swap_out(*id)?,
             StepPlan::Shed(id) => {
                 // every running sequence is pinned and the step cannot
                 // fit: fail the youngest structurally, never livelock
@@ -438,6 +553,15 @@ impl<X: SeqExecutor> ServingEngine<X> {
             }
             StepPlan::Idle => {}
         }
+        if self.cfg.swap.enabled {
+            if self.cfg.swap.cold_after_sweeps > 0 {
+                self.exec.tier_sweep(self.cfg.swap.cold_after_sweeps);
+            }
+            let (host_blocks, host_bytes, cold_bytes) = self.exec.tier_stats();
+            self.metrics.gauge("tier.host_blocks").set(host_blocks as i64);
+            self.metrics.gauge("tier.host_bytes").set(host_bytes as i64);
+            self.metrics.gauge("tier.cold_bytes").set(cold_bytes as i64);
+        }
         Ok(plan)
     }
 
@@ -449,10 +573,14 @@ impl<X: SeqExecutor> ServingEngine<X> {
         Ok(self.take_results())
     }
 
-    /// Admit the next request (stash first, FIFO) and run its first
-    /// prefill chunk. The admission-time deadline check lives here: an
-    /// expired request finishes empty instead of burning a prefill.
+    /// Admit the next request (swapped first, then stash, FIFO) and run
+    /// its first prefill chunk. The admission-time deadline check lives
+    /// here: an expired request finishes empty instead of burning a
+    /// prefill.
     fn start_prefill(&mut self, now: Instant) -> anyhow::Result<()> {
+        if !self.swapped.is_empty() {
+            return self.resume_swapped(now);
+        }
         let from_stash = !self.stash.is_empty();
         let req = self
             .stash
@@ -545,13 +673,16 @@ impl<X: SeqExecutor> ServingEngine<X> {
                     )
                 })?;
                 self.stream_new_tokens(id, &[first]);
+                // the engine clock, not the host clock: under a virtual
+                // clock TTFT is a pure function of the step schedule
+                let first_token_at = Some(self.now());
                 self.seqs.insert(
                     id,
                     Active {
                         req: fl.req,
                         seq,
                         generated: vec![first],
-                        first_token_at: Some(Instant::now()),
+                        first_token_at,
                         decode_steps: 1,
                     },
                 );
@@ -565,6 +696,96 @@ impl<X: SeqExecutor> ServingEngine<X> {
                 Ok(())
             }
         }
+    }
+
+    /// Re-admit the oldest swapped-out sequence: restore its blocks from
+    /// the host tier (checksum-verified) and rejoin the running set with
+    /// generated tokens and frozen per-head state intact — no re-prefill,
+    /// no re-decode. A corrupt or faulted host copy falls back to
+    /// bit-identical recomputation via the stash; the stream's per-request
+    /// high-water mark keeps re-produced tokens duplicate-free.
+    fn resume_swapped(&mut self, now: Instant) -> anyhow::Result<()> {
+        let mut st = self.swapped.pop_front().ok_or_else(|| {
+            anyhow::Error::coded("state_drift", "resume planned with nothing swapped")
+        })?;
+        if st.req.deadline.is_some_and(|d| now >= d) {
+            // expire_deadlines runs every step; this guards the same-step
+            // race where the deadline lands between the sweep and the plan
+            self.exec.swap_discard(st.req.id);
+            self.metrics.counter("engine.deadline_expired").inc();
+            self.finish(st, Outcome::DeadlineExceeded);
+            return Ok(());
+        }
+        match self.exec.swap_in(st.req.id, &mut st.seq) {
+            SeqSwapIn::Restored => {
+                self.metrics.counter("engine.swap_ins").inc();
+                let id = st.req.id;
+                let pin = st.req.preempt_count >= self.cfg.preempt_budget;
+                self.seqs.insert(id, st);
+                self.scheduler.add_running(id);
+                if pin {
+                    self.scheduler.pin(id);
+                }
+            }
+            SeqSwapIn::NoCapacity if !self.scheduler.running().is_empty() => {
+                // transient: the running set still holds the blocks; the
+                // exact admission check retries once pressure eases
+                self.swapped.push_front(st);
+            }
+            SeqSwapIn::NoCapacity => {
+                // even an otherwise-idle pool cannot host the entry
+                // (prefix retention can pin blocks): give up on the host
+                // copy and recompute from the prompt instead of spinning
+                self.exec.swap_discard(st.req.id);
+                self.metrics.counter("engine.swap_fallbacks").inc();
+                let Active { req, seq, .. } = st;
+                drop(seq);
+                self.stash.push_back(req);
+            }
+            SeqSwapIn::Failed => {
+                // swap-in fault or checksum mismatch at re-admission: the
+                // tier entry is already gone, recompute bit-identically
+                self.metrics.counter("engine.swap_fallbacks").inc();
+                let Active { req, seq, .. } = st;
+                drop(seq);
+                self.stash.push_back(req);
+            }
+        }
+        Ok(())
+    }
+
+    /// Swap a running sequence's blocks to the host tier instead of
+    /// dropping them: the eviction still charges the preemption budget
+    /// (repeated swaps must age into pinning, then [`Outcome::Thrashing`],
+    /// exactly like drops — the tier must never enable a livelock), but
+    /// on success the sequence parks whole and resumes without a
+    /// re-prefill. A swap-out fault falls back to the plain eviction.
+    fn swap_out(&mut self, id: RequestId) -> anyhow::Result<()> {
+        let mut st = self.seqs.remove(&id).ok_or_else(|| {
+            anyhow::Error::coded("state_drift", format!("swap-out of unknown sequence {id}"))
+        })?;
+        self.scheduler.remove(id);
+        st.req.preempt_count += 1;
+        self.metrics.counter("engine.preemptions").inc();
+        if st.req.preempt_count > 2 * self.cfg.preempt_budget {
+            self.metrics.counter("engine.request_failures").inc();
+            self.finish(st, Outcome::Thrashing);
+            return Ok(());
+        }
+        match self.exec.swap_out(id, &mut st.seq) {
+            Some(_blocks) => {
+                self.metrics.counter("engine.swap_outs").inc();
+                self.swapped.push_back(st);
+            }
+            None => {
+                // fault before anything was copied: device state is
+                // untouched, evict the classic way (drop + re-prefill)
+                let Active { req, seq, .. } = st;
+                drop(seq);
+                self.stash.push_back(req);
+            }
+        }
+        Ok(())
     }
 
     /// Evict a running sequence: drop its cache (blocks back to the
@@ -859,6 +1080,71 @@ impl SeqExecutor for NativeExecutor {
         }
         // dropping `seq` releases every pool block the sequence held
     }
+
+    fn held_blocks(&self, seq: &NativeSeq) -> usize {
+        seq.heads.iter().map(|h| h.cache().blocks().len()).sum()
+    }
+
+    fn swap_out(&mut self, key: RequestId, seq: &mut NativeSeq) -> Option<usize> {
+        // head-major order; swap_in re-splits by each head's block count,
+        // so the concatenation order must be reproducible from lengths
+        let all: Vec<BlockId> = seq
+            .heads
+            .iter()
+            .flat_map(|h| h.cache().blocks().iter().copied())
+            .collect();
+        match self.mgr.tier().swap_out(key, self.mgr.pool(), &all) {
+            Ok(()) => {
+                for h in seq.heads.iter_mut() {
+                    h.detach_blocks();
+                }
+                Some(all.len())
+            }
+            Err(tier::SwapOutFault) => None,
+        }
+    }
+
+    fn swapped_blocks(&self, key: RequestId) -> usize {
+        self.mgr.tier().blocks_of(key)
+    }
+
+    fn swap_in(&mut self, key: RequestId, seq: &mut NativeSeq) -> SeqSwapIn {
+        let pool = self.mgr.pool();
+        let bt = pool.block_tokens;
+        match self.mgr.tier().swap_in(key, pool) {
+            tier::SwapIn::Restored(ids) => {
+                let mut it = ids.into_iter();
+                for h in seq.heads.iter_mut() {
+                    let n = h.len().div_ceil(bt);
+                    let part: Vec<BlockId> = it.by_ref().take(n).collect();
+                    h.attach_blocks(part);
+                }
+                debug_assert!(it.next().is_none(), "swap-in split drift");
+                SeqSwapIn::Restored
+            }
+            tier::SwapIn::NoCapacity => SeqSwapIn::NoCapacity,
+            tier::SwapIn::Faulted => SeqSwapIn::Failed,
+            tier::SwapIn::Corrupt => {
+                // detected at re-admission: surfaces on the same counter
+                // the store's epoch/checksum guards use
+                self.mgr.note_integrity_failure();
+                SeqSwapIn::Failed
+            }
+        }
+    }
+
+    fn swap_discard(&mut self, key: RequestId) {
+        self.mgr.tier().discard(key);
+    }
+
+    fn tier_sweep(&mut self, cold_after: u64) -> usize {
+        self.mgr.tier().sweep(cold_after)
+    }
+
+    fn tier_stats(&self) -> (usize, usize, usize) {
+        let t = self.mgr.tier();
+        (t.host_blocks(), t.bytes(), t.cold_bytes())
+    }
 }
 
 #[cfg(test)]
@@ -975,6 +1261,68 @@ mod tests {
         let n = res[0].generated.len();
         assert!(n > 0 && n < 1000, "partial output, got {n} tokens");
         assert_eq!(eng.executor().mgr().pool().used_blocks(), 0);
+    }
+
+    #[test]
+    fn swap_resume_is_bit_exact_and_re_prefills_strictly_less() {
+        let prompts: Vec<Vec<u8>> = vec![vec![11; 48], vec![13; 48]];
+        // (generated, finals, swap_ins, retries) for one engine run
+        let run = |swap: bool, blocks: usize| {
+            let mut c = cfg(0);
+            c.preempt_budget = 8; // same thrashing horizon in every mode
+            c.swap.enabled = swap;
+            c.swap.swap_cost = 0.1; // tight pool: always favor the tier
+            c.swap.recompute_cost = 1.0;
+            c.swap.cold_after_sweeps = 2; // exercise cold recompression too
+            let mut eng = ServingEngine::new(c, native(blocks)).unwrap();
+            for p in &prompts {
+                eng.submit(p.clone(), 40).unwrap();
+            }
+            let mut res = eng.run_to_completion().unwrap();
+            assert!(res.iter().all(|r| r.outcome == Outcome::Completed));
+            res.sort_by_key(|r| r.id);
+            let finals: Vec<Vec<f32>> = res
+                .iter()
+                .map(|r| eng.executor().finals()[&r.id].clone())
+                .collect();
+            let gen: Vec<Vec<u8>> = res.iter().map(|r| r.generated.clone()).collect();
+            assert_eq!(
+                eng.executor().mgr().pool().used_blocks(),
+                0,
+                "drained engine leaks no device blocks"
+            );
+            assert_eq!(
+                eng.executor().mgr().tier().entries(),
+                0,
+                "drained engine leaks no host-tier entries"
+            );
+            (
+                gen,
+                finals,
+                eng.metrics.counter("engine.swap_ins").get(),
+                eng.metrics.counter("engine.retries").get(),
+            )
+        };
+        let uncontended = run(false, 256);
+        let evicting = run(false, 8);
+        let swapping = run(true, 8);
+        assert_eq!(
+            uncontended.0, evicting.0,
+            "drop + recompute must replay bit-identically"
+        );
+        assert_eq!(
+            (&uncontended.0, &uncontended.1),
+            (&swapping.0, &swapping.1),
+            "swap + resume must be bit-exact vs never having been evicted"
+        );
+        assert!(swapping.2 > 0, "the tight pool must actually swap and resume");
+        assert_eq!(evicting.2, 0, "swap disabled must never swap in");
+        assert!(
+            swapping.3 < evicting.3,
+            "swap must re-prefill strictly less (swap {} vs evict {})",
+            swapping.3,
+            evicting.3
+        );
     }
 
     #[test]

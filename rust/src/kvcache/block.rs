@@ -67,6 +67,12 @@ impl Block {
     /// whose bytes drifted (injected bit-flip, or a real aliasing bug in
     /// the unsafe tail-writer discipline) fails adoption and falls back to
     /// fresh prefill instead of silently corrupting an adopter's output.
+    /// The host tier reuses the same digest end-to-end: `swap_out`
+    /// captures it per block and `swap_in` re-verifies it after restore,
+    /// so a corrupted host copy is detected at re-admission. Because the
+    /// `codes_w` mirror is a pure repack of `codes`, the cold sub-tier's
+    /// drop-and-rehydrate round trip leaves this checksum unchanged
+    /// (property-tested in `substrate/prop.rs`).
     pub fn checksum(&self) -> u64 {
         const OFFSET: u64 = 0xcbf29ce484222325;
         const PRIME: u64 = 0x00000100000001b3;

@@ -62,6 +62,7 @@ use std::sync::{Arc, Mutex};
 use super::block::BlockId;
 use super::layout::RecordLayout;
 use super::pool::BlockPool;
+use super::tier::HostTier;
 use crate::selfindex::SelfIndexConfig;
 use crate::substrate::faults::{FaultInjector, FaultPoint};
 
@@ -150,6 +151,9 @@ const KEY_MEMO_CAP: usize = 1 << 14;
 
 pub struct KvManager {
     pool: BlockPool,
+    /// host tier for swapped-out sequences (empty unless the serving
+    /// layer's swap policy is enabled)
+    tier: HostTier,
     prefix: Mutex<HashMap<PrefixKey, PrefixEntry>>,
     /// `(prompt_hash, params_sig, block_idx) → content key` — lets a
     /// re-prefill of an already-hashed prompt (preemption restart, shared
@@ -184,6 +188,7 @@ impl KvManager {
     ) -> Self {
         Self {
             pool: BlockPool::with_faults(layout, block_tokens, capacity_blocks, faults),
+            tier: HostTier::new(),
             prefix: Mutex::new(HashMap::new()),
             key_memo: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
@@ -206,6 +211,11 @@ impl KvManager {
 
     pub fn pool(&self) -> &BlockPool {
         &self.pool
+    }
+
+    /// The engine-wide host tier for swapped-out block payloads.
+    pub fn tier(&self) -> &HostTier {
+        &self.tier
     }
 
     /// Per-engine random key that every content-hash chain starts from
@@ -312,6 +322,14 @@ impl KvManager {
     /// registration checksum (`pool.integrity_failures` gauge).
     pub fn integrity_failures(&self) -> u64 {
         self.integrity_failures.load(Ordering::Relaxed)
+    }
+
+    /// Record an integrity failure detected outside the prefix registry —
+    /// the tier's swap-in checksum verification reports through the same
+    /// counter, so `pool.integrity_failures` covers every detected-
+    /// corruption fallback in the engine.
+    pub fn note_integrity_failure(&self) {
+        self.integrity_failures.fetch_add(1, Ordering::Relaxed);
     }
 }
 

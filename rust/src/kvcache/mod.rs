@@ -25,6 +25,9 @@
 //!   LUT-GEMV scoring over the packed blocks, gather + dequantize — a
 //!   *view* over borrowed pool blocks, not a pool owner.
 //! * [`sink`] — SnapKV-style sink-token selection + full-precision store.
+//! * [`tier`] — the host tier: block-granular swap-to-host for preempted
+//!   sequences, with checksum-verified swap-in and a PackKV-style
+//!   recompressed cold sub-tier.
 
 pub mod block;
 pub mod layout;
@@ -32,6 +35,7 @@ pub mod manager;
 pub mod pool;
 pub mod sink;
 pub mod store;
+pub mod tier;
 
 pub use block::BlockId;
 pub use layout::RecordLayout;
@@ -39,3 +43,4 @@ pub use manager::{fnv128_bytes, random_seed128, KvManager, PrefixKey};
 pub use pool::BlockPool;
 pub use sink::{snapkv_select, SinkStore};
 pub use store::{CacheFull, GatheredQuant, HeadCache};
+pub use tier::{HostTier, Residency, SwapIn};

@@ -185,7 +185,10 @@ impl BlockPool {
     /// exactly one block table) and must not let the returned borrow
     /// overlap any other `get`/`block_mut` of the same id. The append
     /// path upholds this: only the partially-filled tail block is ever
-    /// written, and tail blocks are never registered for sharing.
+    /// written, and tail blocks are never registered for sharing. The
+    /// tier's swap-in restore upholds it the same way: it writes only
+    /// into blocks it just allocated and has not yet handed to any
+    /// block table (`HostTier::swap_in`).
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn block_mut(&self, id: BlockId) -> &mut Block {
         #[cfg(debug_assertions)]

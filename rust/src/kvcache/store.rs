@@ -807,6 +807,35 @@ impl HeadCache {
         self.len = 0;
     }
 
+    /// The block table (swap-out reads it to copy payloads to the host
+    /// tier before the references are dropped).
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Detach the block table for a tier swap-out, **keeping** `len`,
+    /// frozen stats, and the codebook — everything a restored copy needs
+    /// to keep scoring bit-exactly. The caller copies the payloads to the
+    /// host tier and then releases the returned references; until
+    /// [`Self::restore_blocks`] this cache holds tokens but no blocks
+    /// (and `free`/`Drop` release nothing — no double free).
+    pub fn take_blocks_for_swap(&mut self) -> Vec<BlockId> {
+        std::mem::take(&mut self.blocks)
+    }
+
+    /// Re-attach freshly allocated device blocks after a tier swap-in.
+    /// The restored payloads must be bit-exact copies of the swapped-out
+    /// table, in the same order.
+    pub fn restore_blocks(&mut self, blocks: Vec<BlockId>, pool: &BlockPool) {
+        assert!(self.blocks.is_empty(), "restore over a live block table");
+        assert_eq!(
+            blocks.len(),
+            self.len.div_ceil(pool.block_tokens),
+            "restored table must cover exactly the swapped tokens"
+        );
+        self.blocks = blocks;
+    }
+
     /// Pool blocks the **next** append will allocate (1 exactly at block
     /// boundaries, else 0) — the scheduler's exact preemption input.
     pub fn blocks_for_next_append(&self, pool: &BlockPool) -> usize {

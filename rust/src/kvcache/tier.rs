@@ -1,0 +1,476 @@
+//! Host tier: block-granular swap-to-host with a recompressed cold
+//! sub-tier (DESIGN.md §Tiered storage).
+//!
+//! Preemption used to drop a sequence's blocks and re-prefill from the
+//! prompt on resume — correct, but it burns exactly the work chunked
+//! prefill protects. The compressed block is already a checksummed,
+//! self-contained unit of storage, so spilling it to host memory is
+//! cheap: [`HostTier`] copies the payloads of a preempted sequence's
+//! blocks out of the device pool, the device references are released,
+//! and resume allocates fresh blocks and copies the payloads back —
+//! bit-exact versus never having been evicted, verified per block by
+//! re-computing [`Block::checksum`] against the value captured at
+//! swap-out (a corrupt host copy is *detected*, and the caller falls
+//! back to re-prefill).
+//!
+//! Cold sub-tier (PackKV-style): a block idle in host memory past a
+//! configurable sweep age is recompressed by dropping its word-packed
+//! `codes_w` mirror — the mirror is a pure function of the packed nibble
+//! codes (written lockstep by `HeadCache::push_record`, zero where codes
+//! are zero), so rehydration at swap-in re-packs it losslessly via
+//! [`pack::pack_signs_u64`] and the device checksum still matches. Byte
+//! accounting is exact: [`HostTier::bytes`] drops by precisely
+//! `codes_w.len() * 8` per recompressed block.
+//!
+//! Residency state machine, per swapped sequence:
+//!
+//! ```text
+//! Device --swap_out--> SwappingOut --copy done--> Host
+//!   ^                      | (swap.out fault: entry discarded)
+//!   |                      v
+//!   +--restore+verify-- SwappingIn <--swap_in-- Host
+//!        | checksum mismatch / swap.in fault: entry discarded,
+//!        v caller re-prefills
+//!      (gone)
+//! ```
+//!
+//! Blocks never swapped have no entry here — absence means
+//! [`Residency::Device`]. The transient states are observable only
+//! across a failed transition (e.g. `NoCapacity` parks the entry back
+//! at `Host`).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::block::{Block, BlockId};
+use super::pool::BlockPool;
+use crate::quant::int2::QuantParams;
+use crate::quant::pack;
+use crate::substrate::faults::FaultPoint;
+
+/// Where a (sequence's) block currently lives in the two-tier store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// In the device pool (the default — such blocks have no tier entry).
+    Device,
+    /// Mid swap-out copy.
+    SwappingOut,
+    /// Payload rests in host memory; device references released.
+    Host,
+    /// Mid swap-in restore.
+    SwappingIn,
+}
+
+/// One block's payload resting in host memory.
+struct HostBlock {
+    codes: Vec<u8>,
+    /// word-packed mirror of `codes`; `None` once the cold sweep
+    /// recompressed this block (losslessly re-packed at swap-in)
+    codes_w: Option<Vec<u64>>,
+    k_mag: Vec<u8>,
+    k_prm: Vec<QuantParams>,
+    v_val: Vec<u8>,
+    v_prm: Vec<QuantParams>,
+    used: usize,
+    /// device-side [`Block::checksum`] captured at swap-out, re-verified
+    /// after the swap-in restore lands in the fresh device block
+    checksum: u64,
+}
+
+impl HostBlock {
+    fn capture(b: &Block) -> Self {
+        Self {
+            codes: b.codes.clone(),
+            codes_w: Some(b.codes_w.clone()),
+            k_mag: b.k_mag.clone(),
+            k_prm: b.k_prm.clone(),
+            v_val: b.v_val.clone(),
+            v_prm: b.v_prm.clone(),
+            used: b.used,
+            checksum: b.checksum(),
+        }
+    }
+
+    /// Exact host bytes this copy occupies right now — mirrors
+    /// [`Block::bytes`], minus the mirror once recompressed.
+    fn bytes(&self) -> usize {
+        self.codes.len()
+            + self.codes_w.as_ref().map_or(0, |w| w.len() * std::mem::size_of::<u64>())
+            + self.k_mag.len()
+            + self.v_val.len()
+            + (self.k_prm.len() + self.v_prm.len()) * std::mem::size_of::<QuantParams>()
+    }
+
+    fn is_cold(&self) -> bool {
+        self.codes_w.is_none()
+    }
+}
+
+/// A preempted sequence's swapped block set.
+struct SwappedSeq {
+    blocks: Vec<HostBlock>,
+    residency: Residency,
+    /// sweep ticks spent at `Host` (resets never — one-way aging)
+    age: u64,
+}
+
+/// How a [`HostTier::swap_in`] attempt ended.
+#[derive(Debug)]
+pub enum SwapIn {
+    /// Payloads restored bit-exact into these freshly allocated device
+    /// blocks (in swap-out order); the tier entry is gone.
+    Restored(Vec<BlockId>),
+    /// The pool cannot hold the working set right now; the entry is
+    /// parked back at `Host` — retry on a later step.
+    NoCapacity,
+    /// An injected `swap.in` fault (or a vanished entry) aborted the
+    /// restore before any device state changed; the entry is discarded
+    /// and the caller must re-prefill.
+    Faulted,
+    /// The host copy failed checksum verification after restore; all
+    /// restored device blocks were released, the entry is discarded, and
+    /// the caller must re-prefill (and bump the integrity counter).
+    Corrupt,
+}
+
+/// Engine-wide host tier for swapped-out block payloads, keyed by the
+/// owning request id. Interior mutability (one `Mutex`) so it can sit
+/// inside the `Arc<KvManager>` every head shares.
+#[derive(Default)]
+pub struct HostTier {
+    inner: Mutex<HashMap<u64, SwappedSeq>>,
+}
+
+/// Swap-out aborted by an injected `swap.out` fault; nothing was copied
+/// and no device state changed.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SwapOutFault;
+
+impl HostTier {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Copy `blocks`' payloads (and per-block checksums) into host
+    /// memory under `key`. Device references are **not** released here —
+    /// the caller drops them after this returns `Ok`, so an aborted
+    /// swap-out leaves the device side untouched.
+    pub fn swap_out(
+        &self,
+        key: u64,
+        pool: &BlockPool,
+        blocks: &[BlockId],
+    ) -> Result<(), SwapOutFault> {
+        if pool.faults().should_fire(FaultPoint::SwapOut) {
+            return Err(SwapOutFault);
+        }
+        let mut seq = SwappedSeq {
+            blocks: Vec::with_capacity(blocks.len()),
+            residency: Residency::SwappingOut,
+            age: 0,
+        };
+        for &id in blocks {
+            seq.blocks.push(HostBlock::capture(pool.get(id)));
+        }
+        seq.residency = Residency::Host;
+        let prev = self.inner.lock().unwrap().insert(key, seq);
+        debug_assert!(prev.is_none(), "sequence {key} swapped out twice");
+        Ok(())
+    }
+
+    /// Restore `key`'s payloads into freshly allocated device blocks,
+    /// rehydrating recompressed cold blocks and verifying every block's
+    /// captured checksum against the restored device bytes.
+    pub fn swap_in(&self, key: u64, pool: &BlockPool) -> SwapIn {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(mut seq) = inner.remove(&key) else {
+            return SwapIn::Faulted;
+        };
+        seq.residency = Residency::SwappingIn;
+        if pool.faults().should_fire(FaultPoint::SwapIn) {
+            return SwapIn::Faulted;
+        }
+        if pool.faults().should_fire(FaultPoint::TierCorrupt) {
+            // the fault models silent host-memory rot: flip one payload
+            // byte so the verification below must catch it
+            if let Some(hb) = seq.blocks.first_mut() {
+                hb.k_mag[0] ^= 0x01;
+            }
+        }
+        let mut ids: Vec<BlockId> = Vec::with_capacity(seq.blocks.len());
+        for _ in 0..seq.blocks.len() {
+            match pool.alloc() {
+                Some(id) => ids.push(id),
+                None => {
+                    for id in ids {
+                        pool.release(id);
+                    }
+                    seq.residency = Residency::Host;
+                    inner.insert(key, seq);
+                    return SwapIn::NoCapacity;
+                }
+            }
+        }
+        for (hb, &id) in seq.blocks.iter_mut().zip(&ids) {
+            let codes_w = hb.codes_w.take().unwrap_or_else(|| {
+                pack::pack_signs_u64(&hb.codes, pool.block_tokens, pool.layout.codes_bytes)
+            });
+            // SAFETY: `id` was just allocated (refcount 1) and its table
+            // entry exists nowhere else yet; no other borrow is live.
+            let blk = unsafe { pool.block_mut(id) };
+            blk.codes.copy_from_slice(&hb.codes);
+            blk.codes_w.copy_from_slice(&codes_w);
+            blk.k_mag.copy_from_slice(&hb.k_mag);
+            blk.k_prm.copy_from_slice(&hb.k_prm);
+            blk.v_val.copy_from_slice(&hb.v_val);
+            blk.v_prm.copy_from_slice(&hb.v_prm);
+            blk.used = hb.used;
+            if blk.checksum() != hb.checksum {
+                for &id in &ids {
+                    pool.release(id);
+                }
+                return SwapIn::Corrupt;
+            }
+        }
+        SwapIn::Restored(ids)
+    }
+
+    /// Drop `key`'s host copy (request finished or fell back while
+    /// swapped).
+    pub fn discard(&self, key: u64) {
+        self.inner.lock().unwrap().remove(&key);
+    }
+
+    /// Age every resident entry by one tick; entries at or past
+    /// `cold_after` sweeps are recompressed (the `codes_w` mirror is
+    /// dropped). Returns how many blocks went cold this sweep.
+    pub fn sweep(&self, cold_after: u64) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let mut chilled = 0;
+        for seq in inner.values_mut() {
+            seq.age += 1;
+            if seq.age >= cold_after {
+                for hb in seq.blocks.iter_mut() {
+                    if hb.codes_w.take().is_some() {
+                        chilled += 1;
+                    }
+                }
+            }
+        }
+        chilled
+    }
+
+    /// Residency of `key`'s block set (`None` = never swapped / already
+    /// restored, i.e. [`Residency::Device`]).
+    pub fn residency(&self, key: u64) -> Option<Residency> {
+        self.inner.lock().unwrap().get(&key).map(|s| s.residency)
+    }
+
+    /// Blocks a restore of `key` would need from the device pool.
+    pub fn blocks_of(&self, key: u64) -> usize {
+        self.inner.lock().unwrap().get(&key).map_or(0, |s| s.blocks.len())
+    }
+
+    /// Swapped block copies resident in host memory (`tier.host_blocks`).
+    pub fn host_blocks(&self) -> usize {
+        self.inner.lock().unwrap().values().map(|s| s.blocks.len()).sum()
+    }
+
+    /// Exact host bytes held across all entries (`tier.host_bytes`).
+    pub fn bytes(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .flat_map(|s| s.blocks.iter())
+            .map(HostBlock::bytes)
+            .sum()
+    }
+
+    /// Bytes held by recompressed (cold) blocks (`tier.cold_bytes`).
+    pub fn cold_bytes(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .flat_map(|s| s.blocks.iter())
+            .filter(|hb| hb.is_cold())
+            .map(HostBlock::bytes)
+            .sum()
+    }
+
+    /// Entries currently swapped out.
+    pub fn entries(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::layout::RecordLayout;
+    use crate::selfindex::SelfIndexConfig;
+    use crate::substrate::faults::FaultInjector;
+    use std::sync::Arc;
+
+    const BT: usize = 16;
+
+    fn pool(cap: usize) -> BlockPool {
+        BlockPool::new(RecordLayout::new(64, &SelfIndexConfig::default()), BT, cap)
+    }
+
+    fn pool_with(cap: usize, spec: &str) -> BlockPool {
+        BlockPool::with_faults(
+            RecordLayout::new(64, &SelfIndexConfig::default()),
+            BT,
+            cap,
+            Arc::new(FaultInjector::parse(spec, 0).unwrap()),
+        )
+    }
+
+    /// Fill a block with a deterministic pattern, keeping the
+    /// `codes_w == pack(codes)` lockstep invariant `push_record` upholds.
+    fn fill(p: &BlockPool, id: BlockId, salt: u8, used: usize) {
+        let cb = p.layout.codes_bytes;
+        // SAFETY: test-owned block, refcount 1.
+        let b = unsafe { p.block_mut(id) };
+        for (i, x) in b.codes.iter_mut().enumerate() {
+            *x = (i as u8).wrapping_mul(31).wrapping_add(salt);
+        }
+        let w = pack::pack_signs_u64(&b.codes, BT, cb);
+        b.codes_w.copy_from_slice(&w);
+        for (i, x) in b.k_mag.iter_mut().enumerate() {
+            *x = (i as u8).wrapping_add(salt).wrapping_mul(7);
+        }
+        for (i, x) in b.v_val.iter_mut().enumerate() {
+            *x = (i as u8).wrapping_mul(13) ^ salt;
+        }
+        for (i, q) in b.k_prm.iter_mut().enumerate() {
+            q.scale = i as u16 + salt as u16;
+            q.zero = 3 * i as u16;
+        }
+        b.used = used;
+    }
+
+    fn swap_out_and_release(p: &BlockPool, tier: &HostTier, key: u64, ids: &[BlockId]) {
+        tier.swap_out(key, p, ids).unwrap();
+        for &id in ids {
+            p.release(id);
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_and_leak_free() {
+        let p = pool(4);
+        let tier = HostTier::new();
+        let ids: Vec<BlockId> = (0..3).map(|_| p.alloc().unwrap()).collect();
+        for (i, &id) in ids.iter().enumerate() {
+            fill(&p, id, i as u8 * 17 + 1, if i == 2 { 5 } else { BT });
+        }
+        let sums: Vec<u64> = ids.iter().map(|&id| p.get(id).checksum()).collect();
+        swap_out_and_release(&p, &tier, 7, &ids);
+        assert_eq!(p.free_blocks(), 4, "device side fully released");
+        assert_eq!(tier.residency(7), Some(Residency::Host));
+        assert_eq!(tier.host_blocks(), 3);
+        assert_eq!(tier.blocks_of(7), 3);
+
+        let SwapIn::Restored(back) = tier.swap_in(7, &p) else {
+            panic!("clean swap-in restores");
+        };
+        assert_eq!(back.len(), 3);
+        for (&id, &sum) in back.iter().zip(&sums) {
+            assert_eq!(p.get(id).checksum(), sum, "restored block bit-exact");
+        }
+        assert_eq!(tier.residency(7), None, "entry consumed");
+        assert_eq!(tier.entries(), 0);
+        for id in back {
+            p.release(id);
+        }
+        assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    fn cold_sweep_saves_exactly_the_mirror_and_rehydrates_bit_exact() {
+        let p = pool(2);
+        let tier = HostTier::new();
+        let id = p.alloc().unwrap();
+        fill(&p, id, 5, BT);
+        let sum = p.get(id).checksum();
+        let device_bytes = p.get(id).bytes();
+        let mirror_bytes = p.get(id).codes_w.len() * 8;
+        swap_out_and_release(&p, &tier, 1, &[id]);
+        assert_eq!(tier.bytes(), device_bytes, "warm copy matches device accounting");
+        assert_eq!(tier.cold_bytes(), 0);
+
+        assert_eq!(tier.sweep(2), 0, "not old enough yet");
+        assert_eq!(tier.sweep(2), 1, "second sweep crosses the age threshold");
+        assert_eq!(
+            tier.bytes(),
+            device_bytes - mirror_bytes,
+            "recompression saves exactly the codes_w mirror"
+        );
+        assert_eq!(tier.cold_bytes(), device_bytes - mirror_bytes);
+        assert_eq!(tier.sweep(2), 0, "already cold");
+
+        let SwapIn::Restored(back) = tier.swap_in(1, &p) else {
+            panic!("cold swap-in rehydrates");
+        };
+        assert_eq!(p.get(back[0]).checksum(), sum, "rehydrated mirror bit-exact");
+        p.release(back[0]);
+    }
+
+    #[test]
+    fn corrupt_host_copy_is_detected_and_leaks_nothing() {
+        let p = pool_with(2, "tier.corrupt=nth:1");
+        let tier = HostTier::new();
+        let id = p.alloc().unwrap();
+        fill(&p, id, 9, BT);
+        swap_out_and_release(&p, &tier, 3, &[id]);
+        assert!(matches!(tier.swap_in(3, &p), SwapIn::Corrupt));
+        assert_eq!(p.free_blocks(), 2, "restored blocks released on corrupt");
+        assert_eq!(tier.entries(), 0, "corrupt entry discarded");
+    }
+
+    #[test]
+    fn swap_faults_abort_cleanly() {
+        let p = pool_with(2, "swap.out=nth:1,swap.in=nth:1");
+        let tier = HostTier::new();
+        let id = p.alloc().unwrap();
+        fill(&p, id, 2, BT);
+        assert_eq!(tier.swap_out(5, &p, &[id]), Err(SwapOutFault));
+        assert_eq!(tier.entries(), 0, "aborted swap-out stores nothing");
+        // device side untouched: the caller keeps its reference
+        assert_eq!(p.free_blocks(), 1);
+
+        tier.swap_out(5, &p, &[id]).unwrap();
+        p.release(id);
+        assert!(matches!(tier.swap_in(5, &p), SwapIn::Faulted));
+        assert_eq!(p.free_blocks(), 2, "faulted swap-in allocates nothing");
+        assert_eq!(tier.entries(), 0);
+    }
+
+    #[test]
+    fn no_capacity_parks_the_entry_for_retry() {
+        let p = pool(2);
+        let tier = HostTier::new();
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        fill(&p, a, 1, BT);
+        fill(&p, b, 2, BT);
+        swap_out_and_release(&p, &tier, 11, &[a, b]);
+        // another tenant takes one block: only 1 of the 2 needed are free
+        let hog = p.alloc().unwrap();
+        assert!(matches!(tier.swap_in(11, &p), SwapIn::NoCapacity));
+        assert_eq!(p.free_blocks(), 1, "partial allocation rolled back");
+        assert_eq!(tier.residency(11), Some(Residency::Host), "entry parked");
+        p.release(hog);
+        let SwapIn::Restored(back) = tier.swap_in(11, &p) else {
+            panic!("retry succeeds once capacity returns");
+        };
+        assert_eq!(back.len(), 2);
+        for id in back {
+            p.release(id);
+        }
+        assert_eq!(p.free_blocks(), 2);
+    }
+}

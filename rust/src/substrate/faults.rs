@@ -42,14 +42,28 @@ pub enum FaultPoint {
     /// `block.corrupt` — one bit of a block's payload is flipped right
     /// after prefix registration (integrity-check paths).
     BlockCorrupt,
+    /// `swap.out` — a tier swap-out aborts mid-copy; the engine must fall
+    /// back to the plain drop-and-re-prefill preemption path with no
+    /// blocks leaked on either tier.
+    SwapOut,
+    /// `swap.in` — a tier swap-in fails before any payload is restored;
+    /// the sequence falls back to re-prefill from its prompt.
+    SwapIn,
+    /// `tier.corrupt` — one byte of a host-tier payload copy is flipped
+    /// while it rests in host memory, so the checksum verification at
+    /// swap-in must detect it and fall back to re-prefill.
+    TierCorrupt,
 }
 
 impl FaultPoint {
-    pub const ALL: [FaultPoint; 4] = [
+    pub const ALL: [FaultPoint; 7] = [
         FaultPoint::PoolAlloc,
         FaultPoint::AppendCacheFull,
         FaultPoint::WorkerPanic,
         FaultPoint::BlockCorrupt,
+        FaultPoint::SwapOut,
+        FaultPoint::SwapIn,
+        FaultPoint::TierCorrupt,
     ];
 
     pub fn name(self) -> &'static str {
@@ -58,6 +72,9 @@ impl FaultPoint {
             FaultPoint::AppendCacheFull => "append.cache_full",
             FaultPoint::WorkerPanic => "worker.panic",
             FaultPoint::BlockCorrupt => "block.corrupt",
+            FaultPoint::SwapOut => "swap.out",
+            FaultPoint::SwapIn => "swap.in",
+            FaultPoint::TierCorrupt => "tier.corrupt",
         }
     }
 
@@ -71,6 +88,9 @@ impl FaultPoint {
             FaultPoint::AppendCacheFull => 1,
             FaultPoint::WorkerPanic => 2,
             FaultPoint::BlockCorrupt => 3,
+            FaultPoint::SwapOut => 4,
+            FaultPoint::SwapIn => 5,
+            FaultPoint::TierCorrupt => 6,
         }
     }
 }
@@ -117,7 +137,7 @@ pub struct FaultInjector {
     /// checked before anything else on every probe — a disarmed injector
     /// costs one predictable branch
     armed: bool,
-    points: [Option<PointState>; 4],
+    points: [Option<PointState>; 7],
 }
 
 impl Default for FaultInjector {
@@ -129,7 +149,7 @@ impl Default for FaultInjector {
 impl FaultInjector {
     /// No faults; every probe is a single cold branch.
     pub fn disarmed() -> Self {
-        Self { armed: false, points: [None, None, None, None] }
+        Self { armed: false, points: [None, None, None, None, None, None, None] }
     }
 
     /// Parse a spec like `pool.alloc=nth:5,block.corrupt=prob:0.125`.
@@ -342,6 +362,23 @@ mod tests {
         assert!(inj.should_fire(FaultPoint::BlockCorrupt));
         assert!(!inj.should_fire(FaultPoint::WorkerPanic), "unarmed point never fires");
         assert_eq!(inj.total_fired(), 2);
+    }
+
+    #[test]
+    fn tier_points_parse_and_fire_independently() {
+        let inj = FaultInjector::parse(
+            "swap.out=nth:1,swap.in=nth:2,tier.corrupt=every:2",
+            9,
+        )
+        .unwrap();
+        assert!(inj.should_fire(FaultPoint::SwapOut));
+        assert!(!inj.should_fire(FaultPoint::SwapOut), "nth fires once");
+        assert!(!inj.should_fire(FaultPoint::SwapIn));
+        assert!(inj.should_fire(FaultPoint::SwapIn));
+        assert!(!inj.should_fire(FaultPoint::TierCorrupt));
+        assert!(inj.should_fire(FaultPoint::TierCorrupt));
+        assert_eq!(inj.total_fired(), 3);
+        assert!(!inj.should_fire(FaultPoint::PoolAlloc), "unarmed point untouched");
     }
 
     #[test]

@@ -2,6 +2,13 @@
 //!
 //! Cheap enough for the hot path (relaxed atomics), with a registry that
 //! snapshots everything for the `/stats`-style dump the CLI prints.
+//!
+//! Naming convention: dotted `subsystem.metric` — e.g. the engine's
+//! `engine.preemptions` / `engine.swap_outs` / `engine.swap_ins` /
+//! `engine.swap_fallbacks` counters, the pool's `pool.free_blocks` /
+//! `pool.integrity_failures` gauges, and the host tier's
+//! `tier.host_blocks` / `tier.host_bytes` / `tier.cold_bytes` gauges
+//! (set once per engine step while the swap policy is enabled).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;

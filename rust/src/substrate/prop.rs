@@ -209,6 +209,118 @@ mod tests {
         }
     }
 
+    /// Swap-out → (recompress → rehydrate) → swap-in round-trip over a
+    /// random block set: per-block checksums are stable across the host
+    /// round-trip (cold recompression included), host byte accounting is
+    /// exact (a chilled block saves precisely its `codes_w` mirror), and
+    /// a non-multiple-of-block tail (`used < block_tokens`) survives.
+    #[test]
+    fn prop_tier_roundtrip_checksum_bytes_and_tail() {
+        use crate::kvcache::tier::{HostTier, SwapIn};
+        use crate::kvcache::{BlockId, BlockPool, RecordLayout};
+        use crate::quant::pack;
+        use crate::selfindex::SelfIndexConfig;
+        const BT: usize = 16;
+        // deterministic payload upholding the `codes_w == pack(codes)`
+        // lockstep invariant `push_record` maintains on real blocks
+        fn fill(p: &BlockPool, id: BlockId, salt: u8, used: usize) {
+            let cb = p.layout.codes_bytes;
+            // SAFETY: test-owned block, refcount 1.
+            let b = unsafe { p.block_mut(id) };
+            for (i, x) in b.codes.iter_mut().enumerate() {
+                *x = (i as u8).wrapping_mul(29).wrapping_add(salt);
+            }
+            let w = pack::pack_signs_u64(&b.codes, BT, cb);
+            b.codes_w.copy_from_slice(&w);
+            for (i, x) in b.k_mag.iter_mut().enumerate() {
+                *x = (i as u8).wrapping_add(salt).wrapping_mul(11);
+            }
+            for (i, x) in b.v_val.iter_mut().enumerate() {
+                *x = (i as u8).wrapping_mul(17) ^ salt;
+            }
+            for (i, q) in b.k_prm.iter_mut().enumerate() {
+                q.scale = i as u16 ^ (salt as u16) << 3;
+                q.zero = 5 * i as u16;
+            }
+            b.used = used;
+        }
+        check(
+            13,
+            60,
+            |r| {
+                let n = 1 + r.below(4) as usize;
+                let tail = 1 + r.below(BT as u64) as usize;
+                let salts: Vec<u8> = (0..n).map(|_| r.below(256) as u8).collect();
+                let chill = r.below(2) == 1;
+                (n, tail, salts, chill)
+            },
+            |(n, tail, salts, chill)| {
+                let layout = RecordLayout::new(64, &SelfIndexConfig::default());
+                let pool = BlockPool::new(layout, BT, *n);
+                let tier = HostTier::new();
+                let ids: Vec<BlockId> = (0..*n).map(|_| pool.alloc().unwrap()).collect();
+                for (i, &id) in ids.iter().enumerate() {
+                    let used = if i + 1 == *n { *tail } else { BT };
+                    fill(&pool, id, salts[i], used);
+                }
+                let sums: Vec<u64> = ids.iter().map(|&id| pool.get(id).checksum()).collect();
+                let warm: usize = ids.iter().map(|&id| pool.get(id).bytes()).sum();
+                let mirror: usize =
+                    ids.iter().map(|&id| pool.get(id).codes_w.len() * 8).sum();
+                if tier.swap_out(1, &pool, &ids).is_err() {
+                    return Err("swap-out faulted with no injector armed".into());
+                }
+                for &id in &ids {
+                    pool.release(id);
+                }
+                prop_assert!(pool.free_blocks() == *n, "device side fully released");
+                prop_assert!(
+                    tier.bytes() == warm,
+                    "warm host bytes {} != device accounting {warm}",
+                    tier.bytes()
+                );
+                prop_assert!(tier.cold_bytes() == 0, "nothing cold before the sweep");
+                if *chill {
+                    let chilled = tier.sweep(1);
+                    prop_assert!(chilled == *n, "every block chills: {chilled} != {n}");
+                    prop_assert!(
+                        tier.bytes() == warm - mirror,
+                        "recompression must save exactly the codes_w mirror: \
+                         {} != {warm} - {mirror}",
+                        tier.bytes()
+                    );
+                    prop_assert!(
+                        tier.cold_bytes() == tier.bytes(),
+                        "all-cold entry: cold bytes track total bytes"
+                    );
+                }
+                let SwapIn::Restored(back) = tier.swap_in(1, &pool) else {
+                    return Err("clean swap-in must restore".into());
+                };
+                for (i, (&id, &sum)) in back.iter().zip(&sums).enumerate() {
+                    prop_assert!(
+                        pool.get(id).checksum() == sum,
+                        "block {i} checksum drifted across the round-trip \
+                         (chill={chill})"
+                    );
+                }
+                prop_assert!(
+                    pool.get(back[*n - 1]).used == *tail,
+                    "tail occupancy must survive: {} != {tail}",
+                    pool.get(back[*n - 1]).used
+                );
+                for id in back {
+                    pool.release(id);
+                }
+                prop_assert!(
+                    tier.entries() == 0 && tier.bytes() == 0,
+                    "consumed entry must free its host bytes"
+                );
+                Ok(())
+            },
+        );
+    }
+
     /// Random (dim, tokens) sign-code workload: raw key rows, their nibble
     /// codes, and a query's codes — the shared generator for the
     /// pack→score round-trip properties below.

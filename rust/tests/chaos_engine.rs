@@ -45,7 +45,15 @@ const PROMPT: usize = 128;
 /// they share prefix blocks); recomputation after eviction replays the
 /// identical stream, making outputs bit-exact.
 fn prompt_bytes(content: u64) -> Vec<u8> {
-    (0..PROMPT)
+    prompt_bytes_n(content, PROMPT)
+}
+
+/// [`prompt_bytes`] with an explicit length — the tiered-swap scenarios
+/// need prompts off the block boundary (a prompt at an exact multiple of
+/// `BT` wants its growth block on the very first decode, which makes two
+/// symmetric sequences contend forever instead of transiently).
+fn prompt_bytes_n(content: u64, len: usize) -> Vec<u8> {
+    (0..len)
         .map(|t| (content as u8).wrapping_mul(37) ^ (t as u8).wrapping_mul(31))
         .collect()
 }
@@ -54,6 +62,9 @@ fn prompt_bytes(content: u64) -> Vec<u8> {
 /// prompt bytes; `deadline_ms` is a wall-clock SLO on the virtual clock
 /// (one engine step = 1 ms), so `Some(10)` expires at step 10 exactly.
 type Spec = (u64, usize, Option<u64>);
+
+/// A fully spelled-out request: `(prompt, max_new, deadline_ms)`.
+type ReqSpec = (Vec<u8>, usize, Option<u64>);
 
 /// Structured terminal state — the harness's `Outcome` mirror.
 #[derive(Clone, Debug, PartialEq)]
@@ -73,6 +84,9 @@ struct ChaosRun {
     integrity_failures: u64,
     prefix_hits: u64,
     drained: bool,
+    swap_outs: u64,
+    swap_ins: u64,
+    swap_fallbacks: u64,
 }
 
 impl ChaosRun {
@@ -101,6 +115,37 @@ fn run_chaos(
     max_batch: usize,
     reqs: &[Spec],
 ) -> ChaosRun {
+    let reqs: Vec<ReqSpec> = reqs
+        .iter()
+        .map(|&(content, max_new, dl)| (prompt_bytes(content), max_new, dl))
+        .collect();
+    run_chaos_with(false, faults_spec, fault_seed, capacity_blocks, preempt_budget, max_batch, &reqs)
+}
+
+/// [`run_chaos`] with the tiered-storage swap policy enabled: preemption
+/// victims spill to the host tier instead of dropping, and the scenario
+/// can arm the `swap.out` / `swap.in` / `tier.corrupt` fault points.
+/// Takes fully spelled-out requests so scenarios control prompt length.
+fn run_chaos_swap(
+    faults_spec: &str,
+    fault_seed: u64,
+    capacity_blocks: usize,
+    preempt_budget: u32,
+    max_batch: usize,
+    reqs: &[ReqSpec],
+) -> ChaosRun {
+    run_chaos_with(true, faults_spec, fault_seed, capacity_blocks, preempt_budget, max_batch, reqs)
+}
+
+fn run_chaos_with(
+    swap: bool,
+    faults_spec: &str,
+    fault_seed: u64,
+    capacity_blocks: usize,
+    preempt_budget: u32,
+    max_batch: usize,
+    reqs: &[ReqSpec],
+) -> ChaosRun {
     let si = SelfIndexConfig::default();
     let faults = Arc::new(FaultInjector::parse(faults_spec, fault_seed).unwrap());
     let mgr = Arc::new(KvManager::with_faults(
@@ -110,24 +155,25 @@ fn run_chaos(
         Arc::clone(&faults),
     ));
     let exec = NativeExecutor::new(DIM, LAYERS, KVH, R, BUDGET, si, Arc::clone(&mgr));
-    let cfg = EngineConfig {
+    let mut cfg = EngineConfig {
         max_batch,
         block_tokens: BT,
         preempt_budget,
         ..EngineConfig::default()
     };
+    cfg.swap.enabled = swap;
     let mut eng = ServingEngine::new(cfg, exec)
         .expect("valid config")
         .with_virtual_clock(Duration::from_millis(1));
 
     let mut ids = Vec::with_capacity(reqs.len());
-    for &(content, max_new, deadline_ms) in reqs {
+    for (prompt, max_new, deadline_ms) in reqs {
         let h = match deadline_ms {
             Some(d) => eng
-                .submit_with_deadline(prompt_bytes(content), max_new, Duration::from_millis(d))
+                .submit_with_deadline(prompt.clone(), *max_new, Duration::from_millis(*d))
                 .expect("queue admits the scenario"),
             None => eng
-                .submit(prompt_bytes(content), max_new)
+                .submit(prompt.clone(), *max_new)
                 .expect("queue admits the scenario"),
         };
         ids.push(h.id);
@@ -161,7 +207,11 @@ fn run_chaos(
                 evictions: eng.metrics.counter("engine.preemptions").get() as usize,
                 integrity_failures: mgr.integrity_failures(),
                 prefix_hits: mgr.prefix_hits(),
-                drained: mgr.pool().free_blocks() == mgr.pool().capacity_blocks(),
+                drained: mgr.pool().free_blocks() == mgr.pool().capacity_blocks()
+                    && mgr.tier().entries() == 0,
+                swap_outs: eng.metrics.counter("engine.swap_outs").get(),
+                swap_ins: eng.metrics.counter("engine.swap_ins").get(),
+                swap_fallbacks: eng.metrics.counter("engine.swap_fallbacks").get(),
             };
         }
         eng.step().expect("no state drift");
@@ -189,6 +239,12 @@ fn scenario_json(run: &ChaosRun) -> Json {
     m.insert("evictions".to_string(), Json::Num(run.evictions as f64));
     let integrity = run.integrity_failures as f64;
     m.insert("integrity_failures".to_string(), Json::Num(integrity));
+    m.insert("swap_outs".to_string(), Json::Num(run.swap_outs as f64));
+    m.insert("swap_ins".to_string(), Json::Num(run.swap_ins as f64));
+    m.insert(
+        "swap_fallbacks".to_string(),
+        Json::Num(run.swap_fallbacks as f64),
+    );
     m.insert("drained".to_string(), Json::Bool(run.drained));
     Json::Obj(m)
 }
@@ -300,6 +356,87 @@ fn chaos_suite() {
     );
     assert!(dl.drained);
     summary.insert("deadline".to_string(), scenario_json(&dl));
+
+    // -- tiered swap: a 4-block pool forces the victim to the host tier -
+    // Geometry (BT = 64, 4 blocks): a 126-token survivor that grows past
+    // the 128-row boundary (2 → 3 blocks) plus a 120-token victim that
+    // never grows (120 + 7 rows < 128, 2 blocks for life). Both admit
+    // (2 + 2 = 4); the survivor's boundary decode finds `free 0 <
+    // step 1`, so the youngest swaps out. Resume then stays blocked
+    // (free − step < 2) until the survivor completes and releases —
+    // a transient squeeze with one clean swap cycle, not a livelock.
+    let swap_work: Vec<ReqSpec> = vec![
+        (prompt_bytes_n(20, 126), 30, None),
+        (prompt_bytes_n(21, 120), 8, None),
+    ];
+    // uncontended reference: 64 blocks never pressure, so never swap
+    let swap_base = run_chaos_swap("", 0, 64, 4, 2, &swap_work);
+    assert_eq!(swap_base.count(|f| matches!(f, Fin::Completed(_))), 2);
+    assert_eq!(swap_base.swap_outs, 0, "no pressure, no swap");
+    assert!(swap_base.drained);
+    summary.insert("swap_base".to_string(), scenario_json(&swap_base));
+
+    let swap_clean = run_chaos_swap("", 0, 4, 4, 2, &swap_work);
+    assert!(swap_clean.swap_outs >= 1, "the tight pool must swap out");
+    assert!(swap_clean.swap_ins >= 1, "the swapped victim must resume");
+    assert_eq!(swap_clean.swap_fallbacks, 0, "clean tier never falls back");
+    for i in 0..swap_work.len() {
+        assert_eq!(
+            swap_clean.completed(i),
+            swap_base.completed(i),
+            "request {i}: swap + resume must be bit-identical to never \
+             having been evicted"
+        );
+    }
+    assert!(swap_clean.drained, "swap round-trip must leak nothing");
+    summary.insert("swap_clean".to_string(), scenario_json(&swap_clean));
+
+    // -- swap-in corruption: detected at re-admission, bit-exact fallback
+    let swap_corrupt = run_chaos_swap("tier.corrupt=nth:1", 0, 4, 4, 2, &swap_work);
+    assert!(
+        swap_corrupt.integrity_failures >= 1,
+        "the flipped host byte must fail checksum verification"
+    );
+    assert!(
+        swap_corrupt.swap_fallbacks >= 1,
+        "a corrupt host copy must fall back to re-prefill"
+    );
+    for i in 0..swap_work.len() {
+        assert_eq!(
+            swap_corrupt.completed(i),
+            swap_base.completed(i),
+            "request {i}: corruption fallback recomputes bit-identically — \
+             never silent corruption"
+        );
+    }
+    assert!(swap_corrupt.drained, "corrupt fallback must leak nothing");
+    summary.insert("swap_corrupt".to_string(), scenario_json(&swap_corrupt));
+
+    // -- swap faults mid-flight: abort cleanly on either side, no leaks -
+    let swap_out_fault = run_chaos_swap("swap.out=nth:1", 0, 4, 4, 2, &swap_work);
+    assert_eq!(
+        swap_out_fault.swap_outs, 0,
+        "the faulted swap-out must fall back to a plain eviction"
+    );
+    assert!(swap_out_fault.evictions >= 1);
+    for i in 0..swap_work.len() {
+        assert_eq!(swap_out_fault.completed(i), swap_base.completed(i));
+    }
+    assert!(swap_out_fault.drained, "swap-out fault must leak nothing");
+    summary.insert("swap_fault_out".to_string(), scenario_json(&swap_out_fault));
+
+    let swap_in_fault = run_chaos_swap("swap.in=nth:1", 0, 4, 4, 2, &swap_work);
+    assert!(swap_in_fault.swap_outs >= 1, "swap-out side is clean here");
+    assert_eq!(swap_in_fault.swap_ins, 0, "the faulted swap-in never lands");
+    assert!(
+        swap_in_fault.swap_fallbacks >= 1,
+        "a faulted swap-in must fall back to re-prefill"
+    );
+    for i in 0..swap_work.len() {
+        assert_eq!(swap_in_fault.completed(i), swap_base.completed(i));
+    }
+    assert!(swap_in_fault.drained, "swap-in fault must leak nothing");
+    summary.insert("swap_fault_in".to_string(), scenario_json(&swap_in_fault));
 
     // -- seeded sweep: alloc + append + panic armed at once ------------
     // No bit-exactness claim — the invariants are: the process never
