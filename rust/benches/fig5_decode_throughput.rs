@@ -27,6 +27,7 @@ use selfindex_kv::substrate::benchkit::{
 };
 use selfindex_kv::substrate::exec::ThreadPool;
 use selfindex_kv::substrate::json::{num, obj, s};
+use selfindex_kv::substrate::rng::Rng;
 
 fn main() {
     let tokens = if common::fast_mode() { 4096 } else { 65536 };
@@ -163,6 +164,113 @@ fn main() {
         "popcount score stage vs byte-LUT: {popcnt_score_speedup:.2}x (bench gate: >= 1.0x)\n"
     );
 
+    // ---- hierarchical page skipping @ 1M tokens (needle retrieval) -----
+    // DESIGN.md §Perf iteration 9: per-page majority sketch + Hamming
+    // radius lets `stream_select` reject whole 4096-token pages against
+    // the running top-k threshold. A needle workload makes the win
+    // visible: homogeneous per-page background (tight radius) with
+    // query-aligned needles planted in page 0, so the selector's bar
+    // fills at +dim and every later page's bound falls below it. The
+    // paged cache must return the SAME selection as a flat sweep.
+    let hier_tokens = 1usize << 20;
+    let hier_bt = 64usize;
+    let page_tokens = 64 * hier_bt; // page_blocks=64 pages of 4096 tokens
+    let n_pages = hier_tokens / page_tokens;
+    let needles = 256usize;
+    let mut pat_rng = Rng::new(0x5ee1);
+    let sign_pat: Vec<f32> = (0..dim)
+        .map(|_| if pat_rng.below(2) == 0 { 1.0 } else { -1.0 })
+        .collect();
+    let build_hier = |page_blocks: usize| {
+        let cfg = SelfIndexConfig { page_blocks, ..SelfIndexConfig::default() };
+        let mgr = KvManager::for_head(dim, &cfg, hier_bt, hier_tokens / hier_bt + 2);
+        let mut hc = HeadCache::new(dim, cfg);
+        // page 0 doubles as the prompt: needles first, then background
+        let mut rows_rng = Rng::new(0xba5e);
+        let mut base = vec![0.0f32; dim];
+        let fill_base = |r: &mut Rng, base: &mut [f32]| {
+            for b in base.iter_mut() {
+                *b = if r.below(2) == 0 { 3.0 } else { -3.0 };
+            }
+        };
+        let mut prompt = Vec::with_capacity(page_tokens * dim);
+        for _ in 0..needles {
+            prompt.extend(sign_pat.iter().map(|&s| 5.0 * s));
+        }
+        fill_base(&mut rows_rng, &mut base);
+        let mut row = vec![0.0f32; dim];
+        let emit_bg = |r: &mut Rng, base: &[f32], row: &mut [f32]| {
+            row.copy_from_slice(base);
+            for _ in 0..2 {
+                let j = r.below(dim as u64) as usize;
+                row[j] = -row[j];
+            }
+        };
+        for _ in needles..page_tokens {
+            emit_bg(&mut rows_rng, &base, &mut row);
+            prompt.extend_from_slice(&row);
+        }
+        hc.ingest_prefill(&mgr, &prompt, &prompt, 0).unwrap();
+        for _ in 1..n_pages {
+            fill_base(&mut rows_rng, &mut base);
+            for _ in 0..page_tokens {
+                emit_bg(&mut rows_rng, &base, &mut row);
+                hc.append(mgr.pool(), &row, &row).unwrap();
+            }
+        }
+        assert_eq!(hc.len(), hier_tokens);
+        (mgr, hc)
+    };
+    let (hmgr_flat, hc_flat) = build_hier(0);
+    let (hmgr_paged, hc_paged) = build_hier(64);
+    assert_eq!(hc_flat.pages(), 0);
+    assert_eq!(hc_paged.pages(), n_pages);
+
+    let hq_codes: Vec<u8> = sign_pat.chunks_exact(4).map(sign_code).collect();
+    let hq_packed = pack::pack_codes(&hq_codes);
+    let hq_words = pack::pack_signs_u64(&hq_packed, 1, dim / 8);
+    let hscorer = BlockScorer::Popcnt { q_words: &hq_words, dim };
+    let mut hflat_out = Vec::new();
+    let mut hpaged_out = Vec::new();
+    let s_hflat = bench.run(|| {
+        hc_flat.stream_select(
+            hmgr_flat.pool(),
+            &hscorer,
+            hier_tokens,
+            &[],
+            budget,
+            &mut block_scores,
+            &mut selector,
+            &mut hflat_out,
+        );
+        std::hint::black_box(&hflat_out);
+    });
+    hc_paged.reset_page_stats();
+    let s_hpaged = bench.run(|| {
+        hc_paged.stream_select(
+            hmgr_paged.pool(),
+            &hscorer,
+            hier_tokens,
+            &[],
+            budget,
+            &mut block_scores,
+            &mut selector,
+            &mut hpaged_out,
+        );
+        std::hint::black_box(&hpaged_out);
+    });
+    assert_eq!(hflat_out, hpaged_out, "page skipping must stay bit-exact at 1M tokens");
+    let (h_scanned, h_skipped) = hc_paged.page_stats();
+    let page_skip_rate = h_skipped as f64 / (h_scanned.max(1)) as f64;
+    let hier_retrieval_speedup = s_hflat.mean.as_secs_f64() / s_hpaged.mean.as_secs_f64();
+    println!(
+        "hierarchical retrieval @ {hier_tokens} tokens ({n_pages} pages): flat {} | paged {} \
+         — {hier_retrieval_speedup:.1}x, skip rate {page_skip_rate:.3} \
+         (gates: >= 3.0x, >= 0.9)\n",
+        fmt_duration(s_hflat.mean),
+        fmt_duration(s_hpaged.mean)
+    );
+
     // ---- end-to-end decode step (single head, GQA group of 4) ---------
     let r_heads = 4usize;
     let mut ours = SelfIndexing::with_capacity(dim, si.clone(), tokens / 64 + 8);
@@ -256,6 +364,12 @@ fn main() {
             s(popcnt_kernel_name(pack::words_per_token(dim / 8))),
         ),
         ("stage_us", stages.to_json()),
+        ("hier_context_tokens", num(hier_tokens as f64)),
+        ("hier_pages", num(n_pages as f64)),
+        ("hier_flat_sweep_us", num(s_hflat.mean.as_secs_f64() * 1e6)),
+        ("hier_paged_sweep_us", num(s_hpaged.mean.as_secs_f64() * 1e6)),
+        ("hier_retrieval_speedup", num(hier_retrieval_speedup)),
+        ("page_skip_rate", num(page_skip_rate)),
         ("single_head_steps_per_sec", num(single_steps_per_sec)),
         ("parallel_heads", num(n_heads as f64)),
         ("parallel_workers", num(workers.workers() as f64)),

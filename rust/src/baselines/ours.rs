@@ -132,7 +132,10 @@ impl SelfIndexing {
     /// codes block-by-block out of the pool — scoring, sink/recent
     /// masking, and threshold top-k selection all happen in the same pass
     /// while each block's scores are L1-hot. No flat score vector, no
-    /// -inf masking sweep, no second O(L) selection scan.
+    /// -inf masking sweep, no second O(L) selection scan. Under the
+    /// popcount scorer the cache additionally consults its page sketches
+    /// (§Perf iteration 9) to skip whole pages the top-k threshold
+    /// already rules out — same selection, O(L/page) memory touched.
     ///
     /// `queries` is one or more concatenated query heads (R × dim); the
     /// selection is written to `self.retrieval.selected`.
@@ -650,6 +653,37 @@ mod tests {
         let delta = thread_allocations() - before;
         assert_eq!(delta, 0, "popcnt decode step allocated {delta} times");
         assert!(outs.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn paged_popcnt_selection_is_bit_identical() {
+        // the hierarchical page tier (DESIGN.md §Perf iteration 9) is an
+        // internal fast path: selection through the full method must not
+        // change by a single index when it engages, needles included
+        let dim = 64;
+        let (mut keys, vals, query) = clustered(13, 1024, dim, 4.0);
+        for &t in &[40usize, 777] {
+            for j in 0..dim {
+                keys[t * dim + j] = 10.0 * query[j];
+            }
+        }
+        let run = |page_blocks: usize| {
+            let mut cfg = SelfIndexConfig::default();
+            cfg.scorer = Scorer::Popcnt;
+            cfg.page_blocks = page_blocks;
+            let mut m = SelfIndexing::new(dim, cfg);
+            m.prefill(&keys, &vals, &[], 1);
+            for i in 0..5 {
+                let k = &keys[i * dim..(i + 1) * dim];
+                m.append(k, k); // fp recent tail + a ragged open page
+            }
+            m.fused_select(&query, 96);
+            m.retrieval.selected.clone()
+        };
+        let flat = run(0);
+        for pb in [1usize, 2, 7] {
+            assert_eq!(run(pb), flat, "page_blocks={pb}");
+        }
     }
 
     #[test]

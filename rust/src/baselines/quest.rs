@@ -9,7 +9,7 @@
 
 use super::AttentionMethod;
 use crate::attention::dense::attend_dense;
-use crate::selfindex::topk::top_k_indices;
+use crate::selfindex::topk::TopKStream;
 
 pub const PAGE: usize = 16;
 
@@ -21,6 +21,12 @@ pub struct QuestCache {
     page_minmax: Vec<f32>,
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
+    /// decode arenas: per-page bounds, the page selector, and the
+    /// selected page list — reused every step so `attend` allocates
+    /// nothing once warm (`attend_is_allocation_free_once_warm`)
+    bounds: Vec<f32>,
+    selector: TopKStream,
+    sel_pages: Vec<u32>,
 }
 
 impl QuestCache {
@@ -32,6 +38,9 @@ impl QuestCache {
             page_minmax: vec![],
             scratch_k: vec![],
             scratch_v: vec![],
+            bounds: vec![],
+            selector: TopKStream::new(0),
+            sel_pages: vec![],
         }
     }
 
@@ -72,20 +81,31 @@ impl QuestCache {
         }
     }
 
-    /// Upper-bound score of each page for `query` (Quest's criterion).
-    pub fn page_bounds(&self, query: &[f32]) -> Vec<f32> {
+    /// Upper-bound score of each page for `query` (Quest's criterion),
+    /// written into the caller's arena — the repo's `*_into` discipline,
+    /// so the decode hot path reuses one buffer instead of allocating a
+    /// fresh vector per step.
+    pub fn page_bounds_into(&self, query: &[f32], out: &mut Vec<f32>) {
         let dim = self.dim;
-        (0..self.pages())
-            .map(|p| {
-                let mins = &self.page_minmax[p * 2 * dim..p * 2 * dim + dim];
-                let maxs = &self.page_minmax[p * 2 * dim + dim..(p + 1) * 2 * dim];
-                let mut s = 0.0f32;
-                for j in 0..dim {
-                    s += (query[j] * mins[j]).max(query[j] * maxs[j]);
-                }
-                s
-            })
-            .collect()
+        out.clear();
+        out.reserve(self.pages());
+        for p in 0..self.pages() {
+            let mins = &self.page_minmax[p * 2 * dim..p * 2 * dim + dim];
+            let maxs = &self.page_minmax[p * 2 * dim + dim..(p + 1) * 2 * dim];
+            let mut s = 0.0f32;
+            for j in 0..dim {
+                s += (query[j] * mins[j]).max(query[j] * maxs[j]);
+            }
+            out.push(s);
+        }
+    }
+
+    /// Allocating convenience wrapper over [`Self::page_bounds_into`]
+    /// (diagnostics/tests; `attend` uses the arena form).
+    pub fn page_bounds(&self, query: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.page_bounds_into(query, &mut out);
+        out
     }
 }
 
@@ -130,12 +150,22 @@ impl AttentionMethod for QuestCache {
     fn attend(&mut self, query: &[f32], budget: usize, out: &mut [f32]) {
         let dim = self.dim;
         let n_pages = budget.div_ceil(PAGE).max(1);
-        let bounds = self.page_bounds(query);
-        let sel = top_k_indices(&bounds, n_pages);
+        let mut bounds = std::mem::take(&mut self.bounds);
+        self.page_bounds_into(query, &mut bounds);
+        // top pages by bound through the reusable threshold selector
+        // (same descending-score order `top_k_indices` produced)
+        let mut selector = std::mem::replace(&mut self.selector, TopKStream::new(0));
+        selector.reset(n_pages.min(bounds.len()));
+        for (p, &b) in bounds.iter().enumerate() {
+            selector.push(p as u32, b);
+        }
+        selector.finish_into(&mut self.sel_pages);
+        self.selector = selector;
+        self.bounds = bounds;
         self.scratch_k.clear();
         self.scratch_v.clear();
         let mut tokens = 0;
-        for &p in &sel {
+        for &p in &self.sel_pages {
             let start = p as usize * PAGE;
             let end = ((p as usize + 1) * PAGE).min(self.len());
             self.scratch_k
@@ -171,6 +201,7 @@ impl AttentionMethod for QuestCache {
 mod tests {
     use super::*;
     use crate::baselines::testutil::clustered;
+    use crate::selfindex::topk::top_k_indices;
     use crate::substrate::rng::Rng;
 
     #[test]
@@ -227,6 +258,28 @@ mod tests {
         let p = 2;
         let maxs = &qc.page_minmax[p * 2 * dim + dim..(p + 1) * 2 * dim];
         assert!(maxs.iter().all(|&m| m == 100.0));
+    }
+
+    #[test]
+    fn attend_is_allocation_free_once_warm() {
+        // the decode step reuses the bounds/selector/page-list arenas —
+        // the old `page_bounds` returned a fresh Vec per call
+        use crate::substrate::metrics::thread_allocations;
+        let dim = 32;
+        let (keys, vals, query) = clustered(6, 512, dim, 3.0);
+        let mut qc = QuestCache::new(dim);
+        qc.prefill(&keys, &vals, &[], 1);
+        let mut out = vec![0.0f32; dim];
+        for _ in 0..4 {
+            qc.attend(&query, 96, &mut out); // size every arena
+        }
+        let before = thread_allocations();
+        for _ in 0..8 {
+            qc.attend(&query, 96, &mut out);
+        }
+        let delta = thread_allocations() - before;
+        assert_eq!(delta, 0, "quest attend allocated {delta} times");
+        assert!(out.iter().any(|&x| x != 0.0));
     }
 
     #[test]

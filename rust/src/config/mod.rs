@@ -80,6 +80,9 @@ pub struct SwapConfig {
     /// host-tier sweeps (one per engine step) an entry rests before the
     /// cold sub-tier recompresses it (0 = cold tier off)
     pub cold_after_sweeps: u64,
+    /// host bytes the tier may hold before LRU discard of cold entries
+    /// kicks in (`HostTier::enforce_budget`; 0 = unbounded)
+    pub max_host_bytes: usize,
 }
 
 impl Default for SwapConfig {
@@ -93,6 +96,7 @@ impl Default for SwapConfig {
             swap_cost: 8.0,
             recompute_cost: 1.0,
             cold_after_sweeps: 0,
+            max_host_bytes: 0,
         }
     }
 }
@@ -251,6 +255,9 @@ impl EngineConfig {
         if let Some(x) = v.path("swap.cold_after_sweeps").and_then(Json::as_usize) {
             cfg.swap.cold_after_sweeps = x as u64;
         }
+        if let Some(x) = v.path("swap.max_host_bytes").and_then(Json::as_usize) {
+            cfg.swap.max_host_bytes = x;
+        }
         if let Some(x) = v.get("method_overlay") {
             let obj = x
                 .as_obj()
@@ -277,6 +284,9 @@ impl EngineConfig {
             si.scorer = crate::selfindex::Scorer::parse(x).ok_or_else(|| {
                 format!("selfindex.scorer '{x}' unknown (expects bytelut or popcnt)")
             })?;
+        }
+        if let Some(x) = v.path("selfindex.page_blocks").and_then(Json::as_usize) {
+            si.page_blocks = x;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -412,6 +422,21 @@ mod tests {
     }
 
     #[test]
+    fn selfindex_page_blocks_parses_and_defaults_on() {
+        assert_eq!(
+            EngineConfig::default().selfindex.page_blocks,
+            64,
+            "hierarchical page tier on by default"
+        );
+        let j = Json::parse(r#"{"selfindex":{"page_blocks":0}}"#).unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.selfindex.page_blocks, 0, "0 = flat sweep");
+        let j = Json::parse(r#"{"selfindex":{"page_blocks":32}}"#).unwrap();
+        let e = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e.selfindex.page_blocks, 32);
+    }
+
+    #[test]
     fn block_tokens_is_validated() {
         let j = Json::parse(r#"{"block_tokens":60}"#).unwrap();
         let err = EngineConfig::from_json(&j).unwrap_err();
@@ -482,9 +507,12 @@ mod tests {
         assert!(!e.swap.enabled, "swap is off by default");
         assert!(!e.swap.favors_swap(1, 10_000), "disabled policy never swaps");
 
+        assert_eq!(e.swap.max_host_bytes, 0, "host tier unbounded by default");
+
         let j = Json::parse(
             r#"{"swap":{"enabled":true,"swap_cost":16.0,
-                "recompute_cost":2.0,"cold_after_sweeps":3}}"#,
+                "recompute_cost":2.0,"cold_after_sweeps":3,
+                "max_host_bytes":65536}}"#,
         )
         .unwrap();
         let e = EngineConfig::from_json(&j).unwrap();
@@ -492,6 +520,7 @@ mod tests {
         assert_eq!(e.swap.swap_cost, 16.0);
         assert_eq!(e.swap.recompute_cost, 2.0);
         assert_eq!(e.swap.cold_after_sweeps, 3);
+        assert_eq!(e.swap.max_host_bytes, 65536);
         // crossover: blocks*swap_cost vs tokens*recompute_cost
         assert!(e.swap.favors_swap(2, 17), "2*16 < 17*2");
         assert!(!e.swap.favors_swap(2, 16), "2*16 == 16*2: tie goes to recompute");

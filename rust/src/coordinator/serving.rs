@@ -126,7 +126,7 @@ pub trait SeqExecutor {
     // --- tiered KV storage hooks (DESIGN.md §Tiered storage) ---
     // Default implementations make swap unsupported: the engine then
     // behaves exactly as before (`swap_eligible` never set, evictions
-    // drop + re-prefill). Executors with a `HostTier` override all five.
+    // drop + re-prefill). Executors with a `HostTier` override them all.
 
     /// Device pool blocks this sequence currently holds (the `blocks`
     /// side of the swap-vs-recompute cost model).
@@ -170,6 +170,13 @@ pub trait SeqExecutor {
     /// `tier.*` gauges.
     fn tier_stats(&self) -> (usize, usize, usize) {
         (0, 0, 0)
+    }
+
+    /// Bound the host tier to `swap.max_host_bytes` by LRU-discarding
+    /// cold entries (`HostTier::enforce_budget`); returns how many
+    /// entries were evicted (`tier.host_evictions`).
+    fn tier_enforce_budget(&mut self, _max_bytes: usize) -> usize {
+        0
     }
 }
 
@@ -556,6 +563,15 @@ impl<X: SeqExecutor> ServingEngine<X> {
         if self.cfg.swap.enabled {
             if self.cfg.swap.cold_after_sweeps > 0 {
                 self.exec.tier_sweep(self.cfg.swap.cold_after_sweeps);
+            }
+            if self.cfg.swap.max_host_bytes > 0 {
+                // bound the host tier; an evicted entry's later swap-in
+                // reports Failed and the request re-prefills (the
+                // already-hardened fallback path)
+                let evicted = self.exec.tier_enforce_budget(self.cfg.swap.max_host_bytes);
+                if evicted > 0 {
+                    self.metrics.counter("tier.host_evictions").add(evicted as u64);
+                }
             }
             let (host_blocks, host_bytes, cold_bytes) = self.exec.tier_stats();
             self.metrics.gauge("tier.host_blocks").set(host_blocks as i64);
@@ -1145,6 +1161,10 @@ impl SeqExecutor for NativeExecutor {
         let t = self.mgr.tier();
         (t.host_blocks(), t.bytes(), t.cold_bytes())
     }
+
+    fn tier_enforce_budget(&mut self, max_bytes: usize) -> usize {
+        self.mgr.tier().enforce_budget(max_bytes)
+    }
 }
 
 #[cfg(test)]
@@ -1322,6 +1342,47 @@ mod tests {
             "swap must re-prefill strictly less (swap {} vs evict {})",
             swapping.3,
             evicting.3
+        );
+    }
+
+    #[test]
+    fn host_tier_budget_evicts_and_evicted_entries_re_prefill() {
+        let prompts: Vec<Vec<u8>> = vec![vec![11; 48], vec![13; 48]];
+        // same tight-pool workload as the swap e2e test, with the host
+        // tier bounded by swap.max_host_bytes
+        let run = |max_host_bytes: usize| {
+            let mut c = cfg(0);
+            c.preempt_budget = 8;
+            c.swap.enabled = true;
+            c.swap.swap_cost = 0.1;
+            c.swap.recompute_cost = 1.0;
+            c.swap.max_host_bytes = max_host_bytes;
+            let mut eng = ServingEngine::new(c, native(8)).unwrap();
+            for p in &prompts {
+                eng.submit(p.clone(), 40).unwrap();
+            }
+            let mut res = eng.run_to_completion().unwrap();
+            assert!(res.iter().all(|r| r.outcome == Outcome::Completed));
+            res.sort_by_key(|r| r.id);
+            let gen: Vec<Vec<u8>> = res.iter().map(|r| r.generated.clone()).collect();
+            assert_eq!(eng.executor().mgr().tier().entries(), 0, "tier drains");
+            (
+                gen,
+                eng.metrics.counter("tier.host_evictions").get(),
+                eng.executor().mgr().tier().host_evictions(),
+            )
+        };
+        let unbounded = run(0);
+        assert_eq!(unbounded.1, 0, "0 = unbounded: nothing evicted");
+        // a 1-byte budget evicts every host entry the step it lands, so
+        // each resume takes the failed-swap-in → re-prefill path
+        let tight = run(1);
+        assert!(tight.1 > 0, "tight budget must evict host entries");
+        assert_eq!(tight.1, tight.2, "engine counter mirrors the tier's");
+        assert_eq!(
+            unbounded.0,
+            tight.0,
+            "evicted sequences must replay bit-identically via re-prefill"
         );
     }
 

@@ -15,6 +15,8 @@
 //! block already registered by another sequence is `retain`ed instead of
 //! re-encoded (prefix reuse; DESIGN.md §Memory manager).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use super::block::BlockId;
 use super::manager::{fnv128_f32s, fnv128_u64, KvManager};
 use super::pool::BlockPool;
@@ -24,7 +26,7 @@ use crate::quant::pack;
 use crate::selfindex::codebook::{Codebook, CodebookBuilder};
 use crate::selfindex::codes::code_signs;
 use crate::selfindex::normalize::ChannelStats;
-use crate::selfindex::score::{score_tokens_bytelut, BlockScorer, ByteLut};
+use crate::selfindex::score::{page_bound, score_tokens_bytelut, BlockScorer, ByteLut};
 use crate::selfindex::topk::TopKStream;
 use crate::selfindex::SelfIndexConfig;
 
@@ -53,6 +55,22 @@ pub struct HeadCache {
     enc_words: Vec<u64>,
     enc_packed_k: Vec<u8>,
     enc_packed_v: Vec<u8>,
+    /// hierarchical page tier (DESIGN.md §Perf iteration 9): per CLOSED
+    /// page of `cfg.page_blocks` full blocks, the bit-majority sketch of
+    /// the page's sign codes — `codes_words()` u64s per page, page-major,
+    /// same word layout as `Block::codes_w` rows
+    page_m: Vec<u64>,
+    /// per closed page, the Hamming radius `max_t popcount(codes_t ⊕ m)`
+    /// over every token in the page; together with `page_m` it yields a
+    /// sound upper bound on any token score (see `score::page_bound`)
+    page_r: Vec<u32>,
+    /// per-bit vote counter arena reused by `close_page`
+    page_counts: Vec<u32>,
+    /// retrieval instrumentation: closed pages bounded / skipped by the
+    /// paged fast path. Atomics because `stream_select` takes `&self`;
+    /// Relaxed ordering — these are counters, not synchronization.
+    pages_scanned: AtomicU64,
+    pages_skipped: AtomicU64,
 }
 
 fn empty_token_quant(dim: usize, group: usize, bits: u32) -> TokenQuant {
@@ -97,6 +115,11 @@ impl HeadCache {
             enc_words: vec![],
             enc_packed_k: vec![],
             enc_packed_v: vec![],
+            page_m: vec![],
+            page_r: vec![],
+            page_counts: vec![],
+            pages_scanned: AtomicU64::new(0),
+            pages_skipped: AtomicU64::new(0),
             cfg,
         }
     }
@@ -296,6 +319,7 @@ impl HeadCache {
                     debug_assert_eq!(pool.get(id).used, bt);
                     self.blocks.push(id);
                     self.len += bt;
+                    self.maybe_close_page(pool);
                 } else {
                     for i in t..t + bt {
                         let local = i - start;
@@ -441,7 +465,75 @@ impl HeadCache {
             .copy_from_slice(&vq.params[t * ng..(t + 1) * ng]);
         block.used = block.used.max(slot + 1);
         self.len += 1;
+        self.maybe_close_page(pool);
         Ok(())
+    }
+
+    /// Close the retrieval page that `self.len` just completed, if any
+    /// (the hierarchical tier of DESIGN.md §Perf iteration 9). Runs after
+    /// every token write AND after adopting a shared prefix block —
+    /// adoption bypasses `push_record`, but the sketch is a pure function
+    /// of the pool blocks' `codes_w`, so summarizing from the pool covers
+    /// both paths identically (and keeps adopted summaries equal to the
+    /// encoder's, see `adopted_prefix_blocks_feed_the_page_index`).
+    fn maybe_close_page(&mut self, pool: &BlockPool) {
+        let pb = self.cfg.page_blocks;
+        if pb == 0 {
+            return;
+        }
+        let page_tokens = pb * pool.block_tokens;
+        if self.len == 0 || !self.len.is_multiple_of(page_tokens) {
+            return;
+        }
+        let page = self.len / page_tokens - 1;
+        debug_assert_eq!(page, self.page_r.len(), "pages close in order");
+        self.close_page(pool, page);
+    }
+
+    /// Summarize closed page `page` — `cfg.page_blocks` consecutive full
+    /// blocks — into its bit-majority sketch (appended to `page_m`) and
+    /// Hamming radius (appended to `page_r`). Two passes over the page's
+    /// `codes_w` words: amortized O(dim) per token, only at page close,
+    /// through the reusable `page_counts` arena.
+    fn close_page(&mut self, pool: &BlockPool, page: usize) {
+        let pb = self.cfg.page_blocks;
+        let bt = pool.block_tokens;
+        let wpt = pool.layout.codes_words();
+        let mut counts = std::mem::take(&mut self.page_counts);
+        counts.clear();
+        counts.resize(wpt * 64, 0);
+        for &id in &self.blocks[page * pb..(page + 1) * pb] {
+            let block = pool.get(id);
+            debug_assert_eq!(block.used, bt, "closed pages hold only full blocks");
+            pack::count_sign_bits(&block.codes_w, wpt, &mut counts);
+        }
+        let m_start = self.page_m.len();
+        debug_assert_eq!(m_start, page * wpt, "sketches are page-major");
+        pack::majority_from_counts(&counts, pb * bt, &mut self.page_m);
+        self.page_counts = counts;
+        let m = &self.page_m[m_start..];
+        let mut r = 0u32;
+        for &id in &self.blocks[page * pb..(page + 1) * pb] {
+            r = r.max(pack::hamming_radius(&pool.get(id).codes_w, m));
+        }
+        self.page_r.push(r);
+    }
+
+    /// Rebuild every closed page's sketch/radius from the current block
+    /// table. Used after a tier swap-in: the host tier restores payloads
+    /// bit-exactly (checksum-verified), so the rebuilt summaries equal the
+    /// pre-swap ones without the tier ever storing sketch state — and
+    /// `Block::checksum` stays a pure payload function.
+    fn rebuild_page_index(&mut self, pool: &BlockPool) {
+        self.page_m.clear();
+        self.page_r.clear();
+        if self.cfg.page_blocks == 0 {
+            return;
+        }
+        let pages = self.len / (self.cfg.page_blocks * pool.block_tokens);
+        for page in 0..pages {
+            self.close_page(pool, page);
+        }
     }
 
     /// LUT-GEMV scores of every cached token (appends to `out`, which is
@@ -510,6 +602,11 @@ impl HeadCache {
     /// (`baselines::ours`) and the benches measure — they cannot drift.
     /// All buffers are caller-owned arenas: zero allocations at steady
     /// state.
+    ///
+    /// When the popcount scorer is active and closed-page summaries exist
+    /// (`cfg.page_blocks > 0`), selection takes the hierarchical fast
+    /// path ([`Self::stream_select_paged`]) — bit-identical output,
+    /// O(L/page) memory touched for pages the sketch bound rejects.
     #[allow(clippy::too_many_arguments)]
     pub fn stream_select(
         &self,
@@ -522,6 +619,21 @@ impl HeadCache {
         selector: &mut TopKStream,
         selected: &mut Vec<u32>,
     ) {
+        if let BlockScorer::Popcnt { q_words, dim } = scorer {
+            if self.cfg.page_blocks > 0 && !self.page_r.is_empty() {
+                return self.stream_select_paged(
+                    pool,
+                    q_words,
+                    *dim,
+                    end,
+                    sink_ids,
+                    k,
+                    block_scores,
+                    selector,
+                    selected,
+                );
+            }
+        }
         selector.reset(k);
         let mut si = 0usize; // cursor into the ascending sink list
         self.stream_scores(pool, scorer, end, block_scores, |base, scores, bmax| {
@@ -547,6 +659,116 @@ impl HeadCache {
             }
         });
         selector.finish_into(selected);
+    }
+
+    /// The hierarchical fast path behind [`Self::stream_select`]
+    /// (DESIGN.md §Perf iteration 9): bound each closed page with
+    /// `score::page_bound` over its bit-majority sketch + radius and
+    /// descend into the page's blocks only when the bound can still beat
+    /// the selector threshold. Block and token handling inside a
+    /// descended page is the flat pipeline's exact logic (same kernels,
+    /// same sink cursor, same `<=` rejection), and the bound
+    /// over-approximates every skipped token's score, so the kept set —
+    /// and therefore `selected` — is bit-identical to the flat sweep
+    /// (asserted by `paged_stream_select_is_bit_identical_to_flat` here
+    /// and `tests/score_parity.rs` in the CI RUSTFLAGS matrix). The
+    /// open/partial tail page has no sketch yet and is always descended.
+    #[allow(clippy::too_many_arguments)]
+    fn stream_select_paged(
+        &self,
+        pool: &BlockPool,
+        q_words: &[u64],
+        dim: usize,
+        end: usize,
+        sink_ids: &[u32],
+        k: usize,
+        block_scores: &mut Vec<f32>,
+        selector: &mut TopKStream,
+        selected: &mut Vec<u32>,
+    ) {
+        let bt = pool.block_tokens;
+        if block_scores.len() < bt {
+            block_scores.resize(bt, 0.0);
+        }
+        let end = end.min(self.len);
+        let page_tokens = self.cfg.page_blocks * bt;
+        let wpt = pool.layout.codes_words();
+        let scorer = BlockScorer::Popcnt { q_words, dim };
+        selector.reset(k);
+        let mut si = 0usize; // cursor into the ascending sink list
+        let mut base = 0usize;
+        let mut page = 0usize;
+        while base < end {
+            let page_end = (base + page_tokens).min(end);
+            if page < self.page_r.len() {
+                self.pages_scanned.fetch_add(1, Ordering::Relaxed);
+                let m = &self.page_m[page * wpt..(page + 1) * wpt];
+                let bound = page_bound(q_words, m, self.page_r[page], dim);
+                // whole-page rejection: the radius covers every token in
+                // the page (a superset of the `end`-clamped range scored
+                // here), so nothing below can enter the kept set — same
+                // `<=` semantics as the flat path's block rejection
+                if selector.is_full() && bound <= selector.threshold() {
+                    self.pages_skipped.fetch_add(1, Ordering::Relaxed);
+                    base = page_end;
+                    page += 1;
+                    continue;
+                }
+            }
+            // descend: stream this page's blocks exactly like the flat path
+            while base < page_end {
+                let n = (page_end - base).min(bt);
+                let block = pool.get(self.blocks[base / bt]);
+                let bmax =
+                    scorer.score_block(&block.codes, &block.codes_w, n, &mut block_scores[..n]);
+                while si < sink_ids.len() && (sink_ids[si] as usize) < base {
+                    si += 1;
+                }
+                if selector.is_full() && bmax <= selector.threshold() {
+                    base += n;
+                    continue;
+                }
+                let mut next_sink = sink_ids.get(si).map_or(usize::MAX, |&s| s as usize);
+                for (o, &s) in block_scores[..n].iter().enumerate() {
+                    let idx = base + o;
+                    if idx == next_sink {
+                        si += 1;
+                        next_sink =
+                            sink_ids.get(si).map_or(usize::MAX, |&s| s as usize);
+                        continue;
+                    }
+                    selector.push(idx as u32, s);
+                }
+                base += n;
+            }
+            page += 1;
+        }
+        selector.finish_into(selected);
+    }
+
+    /// `(pages bounded, pages skipped)` by the hierarchical fast path
+    /// since the last [`Self::reset_page_stats`] — the benches'
+    /// `page_skip_rate` denominator/numerator. Interior atomics because
+    /// `stream_select` takes `&self`.
+    pub fn page_stats(&self) -> (u64, u64) {
+        (self.pages_scanned.load(Ordering::Relaxed), self.pages_skipped.load(Ordering::Relaxed))
+    }
+
+    pub fn reset_page_stats(&self) {
+        self.pages_scanned.store(0, Ordering::Relaxed);
+        self.pages_skipped.store(0, Ordering::Relaxed);
+    }
+
+    /// Closed pages currently summarized.
+    pub fn pages(&self) -> usize {
+        self.page_r.len()
+    }
+
+    /// Heap bytes held by the page tier (sketches + radii): O(L/page),
+    /// counted into [`Self::fixed_overhead_bytes`].
+    pub fn page_index_bytes(&self) -> usize {
+        self.page_m.len() * std::mem::size_of::<u64>()
+            + self.page_r.len() * std::mem::size_of::<u32>()
     }
 
     /// Dequantize token `idx`'s key (K') and value rows into `k_out`/`v_out`.
@@ -805,6 +1027,8 @@ impl HeadCache {
             pool.release(id);
         }
         self.len = 0;
+        self.page_m.clear();
+        self.page_r.clear();
     }
 
     /// The block table (swap-out reads it to copy payloads to the host
@@ -818,8 +1042,14 @@ impl HeadCache {
     /// to keep scoring bit-exactly. The caller copies the payloads to the
     /// host tier and then releases the returned references; until
     /// [`Self::restore_blocks`] this cache holds tokens but no blocks
-    /// (and `free`/`Drop` release nothing — no double free).
+    /// (and `free`/`Drop` release nothing — no double free). Page
+    /// summaries are derived state over `codes_w`: dropped here, rebuilt
+    /// from the restored payloads by [`Self::restore_blocks`] — the host
+    /// tier never carries them, so its cold sweep can keep dropping
+    /// `codes_w` without touching the sketch path.
     pub fn take_blocks_for_swap(&mut self) -> Vec<BlockId> {
+        self.page_m.clear();
+        self.page_r.clear();
         std::mem::take(&mut self.blocks)
     }
 
@@ -834,6 +1064,7 @@ impl HeadCache {
             "restored table must cover exactly the swapped tokens"
         );
         self.blocks = blocks;
+        self.rebuild_page_index(pool);
     }
 
     /// Pool blocks the **next** append will allocate (1 exactly at block
@@ -853,7 +1084,9 @@ impl HeadCache {
     }
 
     pub fn fixed_overhead_bytes(&self) -> usize {
-        self.codebook.as_ref().map(|c| c.bytes()).unwrap_or(0) + 2 * self.dim * 4
+        self.codebook.as_ref().map(|c| c.bytes()).unwrap_or(0)
+            + 2 * self.dim * 4
+            + self.page_index_bytes()
     }
 }
 
@@ -1092,5 +1325,128 @@ mod tests {
             4 * 16 * crate::kvcache::layout::RecordLayout::new(64, &hc.cfg).bytes_per_token();
         assert_eq!(hc.payload_bytes(pool), expect);
         assert!(hc.fixed_overhead_bytes() > 0);
+    }
+
+    fn paged_cfg(page_blocks: usize) -> SelfIndexConfig {
+        SelfIndexConfig { page_blocks, ..Default::default() }
+    }
+
+    /// A popcount-scorer query in the serving path's exact form:
+    /// random sign nibbles → packed bytes → word-packed u64 row.
+    fn rand_q_words(r: &mut Rng, dim: usize) -> Vec<u64> {
+        let codes: Vec<u8> = (0..dim / 4).map(|_| r.below(16) as u8).collect();
+        let mut packed = Vec::new();
+        pack::pack_codes_into(&codes, &mut packed);
+        pack::pack_signs_u64(&packed, 1, dim / 8)
+    }
+
+    #[test]
+    fn paged_stream_select_is_bit_identical_to_flat() {
+        // the tentpole's hard guarantee: for ANY k / page size / sink
+        // geometry / end clamp, sketch-bounded page skipping selects
+        // exactly the flat sweep's set, in the same order
+        let mut r = Rng::new(21);
+        let mgr = mk_mgr(256); // block_tokens = 16
+        let pool = mgr.pool();
+        let keys = rand_rows(&mut r, 600, 64);
+        let vals = rand_rows(&mut r, 600, 64);
+        let mut flat = HeadCache::new(64, paged_cfg(0));
+        flat.ingest_prefill(&mgr, &keys, &vals, 0).unwrap();
+        let sink_sets: [Vec<u32>; 3] = [vec![], vec![0, 5, 31, 32, 100, 599], (0..64).collect()];
+        let (mut scratch_a, mut scratch_b) = (Vec::new(), Vec::new());
+        let (mut sel_a, mut sel_b) = (TopKStream::new(0), TopKStream::new(0));
+        let (mut out_a, mut out_b) = (Vec::new(), Vec::new());
+        for &pb in &[1usize, 2, 3, 5, 64] {
+            let mut paged = HeadCache::new(64, paged_cfg(pb));
+            paged.ingest_prefill(&mgr, &keys, &vals, 0).unwrap();
+            assert_eq!(paged.pages(), 600 / (pb * 16), "closed pages at pb={pb}");
+            for &k in &[0usize, 1, 17, 96, 600] {
+                for &end in &[600usize, 599, 333, 16, 1] {
+                    for sink_ids in &sink_sets {
+                        let q_words = rand_q_words(&mut r, 64);
+                        let scorer = BlockScorer::Popcnt {
+                            q_words: &q_words,
+                            dim: 64,
+                        };
+                        flat.stream_select(
+                            pool,
+                            &scorer,
+                            end,
+                            sink_ids,
+                            k,
+                            &mut scratch_a,
+                            &mut sel_a,
+                            &mut out_a,
+                        );
+                        paged.stream_select(
+                            pool,
+                            &scorer,
+                            end,
+                            sink_ids,
+                            k,
+                            &mut scratch_b,
+                            &mut sel_b,
+                            &mut out_b,
+                        );
+                        assert_eq!(out_a, out_b, "pb={pb} k={k} end={end}");
+                    }
+                }
+            }
+            let (scanned, skipped) = paged.page_stats();
+            assert!(skipped <= scanned);
+            paged.free(pool);
+        }
+        flat.free(pool);
+    }
+
+    #[test]
+    fn adopted_prefix_blocks_feed_the_page_index() {
+        // a second cache that ADOPTS registered full blocks (bypassing
+        // push_record entirely) must build the same page summaries as the
+        // cache that encoded them
+        let mut r = Rng::new(22);
+        let mgr = mk_mgr(64);
+        let pool = mgr.pool();
+        let keys = rand_rows(&mut r, 96, 64); // 6 full blocks = 3 pages of 2
+        let vals = rand_rows(&mut r, 96, 64);
+        let mut a = HeadCache::new(64, paged_cfg(2));
+        a.ingest_prefill(&mgr, &keys, &vals, 0).unwrap();
+        let mut b = HeadCache::new(64, paged_cfg(2));
+        b.ingest_prefill(&mgr, &keys, &vals, 0).unwrap();
+        assert!(mgr.prefix_hits() >= 6, "second ingest adopts every block");
+        assert_eq!(a.pages(), 3);
+        assert_eq!(a.page_m, b.page_m, "adopted sketches match encoded ones");
+        assert_eq!(a.page_r, b.page_r);
+        a.free(pool);
+        b.free(pool);
+    }
+
+    #[test]
+    fn page_index_rebuilds_after_swap_roundtrip() {
+        use crate::kvcache::tier::{HostTier, SwapIn};
+        let mut r = Rng::new(23);
+        let mgr = mk_mgr(64);
+        let pool = mgr.pool();
+        let mut hc = HeadCache::new(64, paged_cfg(2));
+        // 6 full blocks + a ragged tail → 3 closed pages + an open one
+        hc.ingest_prefill(&mgr, &rand_rows(&mut r, 100, 64), &rand_rows(&mut r, 100, 64), 0)
+            .unwrap();
+        assert_eq!(hc.pages(), 3);
+        let m0 = hc.page_m.clone();
+        let r0 = hc.page_r.clone();
+        let tier = HostTier::new();
+        let blocks = hc.take_blocks_for_swap();
+        assert_eq!(hc.pages(), 0, "derived summaries drop with the table");
+        tier.swap_out(9, pool, &blocks).unwrap();
+        for id in blocks {
+            pool.release(id);
+        }
+        let SwapIn::Restored(back) = tier.swap_in(9, pool) else {
+            panic!("clean swap-in restores");
+        };
+        hc.restore_blocks(back, pool);
+        assert_eq!(hc.page_m, m0, "bit-exact restore rebuilds equal sketches");
+        assert_eq!(hc.page_r, r0);
+        hc.free(pool);
     }
 }

@@ -40,6 +40,7 @@
 //! at `Host`).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::block::{Block, BlockId};
@@ -139,6 +140,8 @@ pub enum SwapIn {
 #[derive(Default)]
 pub struct HostTier {
     inner: Mutex<HashMap<u64, SwappedSeq>>,
+    /// entries discarded by [`Self::enforce_budget`] (`tier.host_evictions`)
+    evictions: AtomicU64,
 }
 
 /// Swap-out aborted by an injected `swap.out` fault; nothing was copied
@@ -303,6 +306,59 @@ impl HostTier {
     pub fn entries(&self) -> usize {
         self.inner.lock().unwrap().len()
     }
+
+    /// Enforce `swap.max_host_bytes`: while the tier holds more than
+    /// `max_bytes`, discard whole `Host`-resident entries — coldest
+    /// first (recompressed entries, then oldest by sweep age) — so the
+    /// host tier is bounded instead of growing with every preemption. An
+    /// evicted sequence's next `swap_in` finds no entry and returns
+    /// [`SwapIn::Faulted`]; the caller re-prefills from the prompt — the
+    /// already-hardened fallback path doubles as the budget's relief
+    /// valve. `max_bytes == 0` means unbounded (no-op). Returns how many
+    /// entries were evicted (also summed into [`Self::host_evictions`]).
+    pub fn enforce_budget(&self, max_bytes: usize) -> usize {
+        if max_bytes == 0 {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let mut held: usize = inner
+            .values()
+            .flat_map(|s| s.blocks.iter())
+            .map(HostBlock::bytes)
+            .sum();
+        if held <= max_bytes {
+            return 0;
+        }
+        let mut order: Vec<(bool, u64, u64, usize)> = inner
+            .iter()
+            .filter(|(_, s)| s.residency == Residency::Host)
+            .map(|(&key, s)| {
+                let cold = !s.blocks.is_empty() && s.blocks.iter().all(HostBlock::is_cold);
+                let bytes = s.blocks.iter().map(HostBlock::bytes).sum::<usize>();
+                (cold, s.age, key, bytes)
+            })
+            .collect();
+        // eviction order: cold before warm, then descending age (LRU —
+        // age only grows while resident), then key for determinism
+        order.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(b.1.cmp(&a.1)).then(a.2.cmp(&b.2)));
+        let mut evicted = 0usize;
+        for (_, _, key, bytes) in order {
+            if held <= max_bytes {
+                break;
+            }
+            inner.remove(&key);
+            held -= bytes;
+            evicted += 1;
+        }
+        self.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        evicted
+    }
+
+    /// Entries discarded by [`Self::enforce_budget`] over this tier's
+    /// lifetime (`tier.host_evictions`).
+    pub fn host_evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -447,6 +503,38 @@ mod tests {
         assert!(matches!(tier.swap_in(5, &p), SwapIn::Faulted));
         assert_eq!(p.free_blocks(), 2, "faulted swap-in allocates nothing");
         assert_eq!(tier.entries(), 0);
+    }
+
+    #[test]
+    fn budget_evicts_coldest_first_and_counts() {
+        let p = pool(8);
+        let tier = HostTier::new();
+        // three single-block entries; each sweep ages everything resident,
+        // so entry 1 ends oldest (age 3), entry 3 youngest (age 1)
+        for key in [1u64, 2, 3] {
+            let id = p.alloc().unwrap();
+            fill(&p, id, key as u8 * 11, BT);
+            swap_out_and_release(&p, &tier, key, &[id]);
+            tier.sweep(u64::MAX); // age only — nothing recompresses
+        }
+        let warm = tier.bytes() / 3; // identical layouts → equal sizes
+        assert_eq!(tier.enforce_budget(0), 0, "0 = unbounded");
+        assert_eq!(tier.enforce_budget(3 * warm), 0, "under budget");
+        tier.sweep(4); // entry 1 crosses the age-4 threshold: goes cold
+        assert_eq!(tier.host_blocks(), 3);
+
+        // budget of one warm entry: evict cold entry 1 first, then the
+        // oldest warm entry 2; entry 3 fits and survives
+        assert_eq!(tier.enforce_budget(warm), 2);
+        assert_eq!(tier.residency(1), None, "cold entry evicted first");
+        assert_eq!(tier.residency(2), None, "then the oldest warm entry");
+        assert_eq!(tier.residency(3), Some(Residency::Host));
+        assert_eq!(tier.host_evictions(), 2);
+        assert!(tier.bytes() <= warm);
+
+        // an evicted sequence's swap-in takes the re-prefill path
+        assert!(matches!(tier.swap_in(1, &p), SwapIn::Faulted));
+        assert_eq!(p.free_blocks(), 8, "faulted swap-in allocates nothing");
     }
 
     #[test]

@@ -136,6 +136,9 @@ pub fn selfindex_overlayed(
             si.scorer = sc;
         }
     }
+    if let Some(p) = get("page_blocks").and_then(Json::as_usize) {
+        si.page_blocks = p;
+    }
     si
 }
 
@@ -253,6 +256,13 @@ impl CacheMethod for SelfIndexMethod {
                       XOR+popcount over word-packed sign codes)",
                 default: "bytelut",
                 kind: KnobKind::Choice(&["bytelut", "popcnt"]),
+            },
+            Knob {
+                name: "page_blocks",
+                doc: "blocks per hierarchical retrieval page under the \
+                      popcount scorer (0 = flat sweep)",
+                default: "64",
+                kind: KnobKind::Usize,
             },
         ]
     }
@@ -561,6 +571,17 @@ mod tests {
         assert!(err.contains("expects one of bytelut, popcnt"), "{err}");
         // wrong type (number where a choice string is expected)
         let bad = vec![("scorer".to_string(), Json::Num(1.0))];
+        assert!(validate_overlay("ours", &bad).is_err());
+    }
+
+    #[test]
+    fn page_blocks_overlay_flows_into_resolved_config() {
+        let si = SelfIndexConfig::default();
+        assert_eq!(selfindex_overlayed(&si, &[]).page_blocks, 64);
+        let overlay = vec![("page_blocks".to_string(), Json::Num(0.0))];
+        assert_eq!(selfindex_overlayed(&si, &overlay).page_blocks, 0);
+        assert!(validate_overlay("ours", &overlay).is_ok());
+        let bad = vec![("page_blocks".to_string(), Json::Str("big".to_string()))];
         assert!(validate_overlay("ours", &bad).is_err());
     }
 

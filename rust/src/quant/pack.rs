@@ -125,6 +125,77 @@ pub fn pack_signs_u64_into(
     }
 }
 
+/// Accumulate per-bit set counts over word-packed token rows (`wpt`
+/// words per token, from [`pack_signs_u64`]): `counts[w * 64 + b]` gains
+/// one for every row whose word `w` has bit `b` set. The page tier folds
+/// several block-sized slices into one counter arena and then derives
+/// the page's bit-majority sketch via [`majority_from_counts`] — the
+/// summaries are built from the same packed words the popcount scorer
+/// reads, so the second retrieval tier is pure 1-bit material
+/// (DESIGN.md §Perf iteration 9).
+pub fn count_sign_bits(words: &[u64], wpt: usize, counts: &mut [u32]) {
+    assert!(wpt > 0 && words.len().is_multiple_of(wpt), "ragged word rows");
+    assert_eq!(counts.len(), wpt * 64, "one counter per sketch bit");
+    for row in words.chunks_exact(wpt) {
+        for (w, &word) in row.iter().enumerate() {
+            for (b, c) in counts[w * 64..(w + 1) * 64].iter_mut().enumerate() {
+                *c += ((word >> b) & 1) as u32;
+            }
+        }
+    }
+}
+
+/// Bit-majority sketch from [`count_sign_bits`] counters over `n_tokens`
+/// rows: a sketch bit is set iff strictly more than half the rows set
+/// it. Ties (possible only for even `n_tokens`) resolve to 0 — any
+/// deterministic choice is sound, the Hamming radius absorbs the slack.
+/// Appends `counts.len() / 64` words to `out`. Padding bits beyond the
+/// token's `codes_bytes` stay 0 (no row ever sets them), so sketches XOR
+/// against [`pack_signs_u64`]-packed queries with no mask, exactly like
+/// token words do.
+pub fn majority_from_counts(counts: &[u32], n_tokens: usize, out: &mut Vec<u64>) {
+    assert!(counts.len().is_multiple_of(64), "counters come in 64-bit words");
+    let half = (n_tokens / 2) as u32;
+    for word_counts in counts.chunks_exact(64) {
+        let mut word = 0u64;
+        for (b, &c) in word_counts.iter().enumerate() {
+            if c > half {
+                word |= 1u64 << b;
+            }
+        }
+        out.push(word);
+    }
+}
+
+/// One-shot [`count_sign_bits`] + [`majority_from_counts`] over one
+/// contiguous row set (tests, benches, property oracles; the page
+/// builder in `kvcache/store.rs` folds per-block slices instead).
+pub fn majority_sketch(words: &[u64], wpt: usize) -> Vec<u64> {
+    let mut counts = vec![0u32; wpt * 64];
+    count_sign_bits(words, wpt, &mut counts);
+    let mut out = Vec::with_capacity(wpt);
+    majority_from_counts(&counts, words.len() / wpt, &mut out);
+    out
+}
+
+/// Hamming radius of word-packed token rows around sketch `m`: the
+/// largest per-row `popcount(row ⊕ m)`. Together with a query's
+/// `popcount(q ⊕ m)` this lower-bounds every row's distance to the query
+/// (triangle inequality), which is what lets the page tier skip whole
+/// pages soundly — see `selfindex::score::page_bound`.
+pub fn hamming_radius(words: &[u64], m: &[u64]) -> u32 {
+    assert!(!m.is_empty() && words.len().is_multiple_of(m.len()), "ragged word rows");
+    let mut r = 0u32;
+    for row in words.chunks_exact(m.len()) {
+        let mut d = 0u32;
+        for (&x, &y) in row.iter().zip(m) {
+            d += (x ^ y).count_ones();
+        }
+        r = r.max(d);
+    }
+    r
+}
+
 pub fn unpack_codes(bytes: &[u8], n: usize) -> Vec<u8> {
     assert!(bytes.len() * 2 >= n, "not enough bytes");
     (0..n).map(|i| (bytes[i / 2] >> ((i % 2) * 4)) & 0x0f).collect()
@@ -253,6 +324,55 @@ mod tests {
         pack_signs_u64_into(&b, 2, 8, &mut arena);
         assert_eq!(arena, vec![0u64; 2]);
         assert_eq!(arena.capacity(), cap, "arena must not reallocate");
+    }
+
+    #[test]
+    fn majority_sketch_votes_bitwise_and_radius_covers_every_row() {
+        // 3 one-word rows: bits set in >= 2 of them win the vote
+        let rows = vec![0b1011u64, 0b0011, 0b0110];
+        let m = majority_sketch(&rows, 1);
+        assert_eq!(m, vec![0b0011]);
+        // per-row distances to the sketch: 1, 0, 2 — radius is the max
+        let r = hamming_radius(&rows, &m);
+        assert_eq!(r, 2);
+        for &row in &rows {
+            assert!((row ^ m[0]).count_ones() <= r, "radius must cover {row:#b}");
+        }
+    }
+
+    #[test]
+    fn majority_tie_resolves_to_zero_and_empty_input_votes_zero() {
+        assert_eq!(majority_sketch(&[0b1u64, 0b0], 1), vec![0]);
+        assert_eq!(majority_sketch(&[], 1), vec![0]);
+    }
+
+    #[test]
+    fn majority_counts_fold_incrementally_across_slices() {
+        // folding block-sized slices into one counter arena must equal the
+        // one-shot sketch over the concatenation (what `close_page` relies
+        // on when a page's rows span several pool blocks)
+        let rows: Vec<u64> = (0..10u64)
+            .map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1)
+            .collect();
+        let wpt = 2; // 5 rows of 2 words
+        let mut counts = vec![0u32; wpt * 64];
+        count_sign_bits(&rows[..4], wpt, &mut counts);
+        count_sign_bits(&rows[4..], wpt, &mut counts);
+        let mut folded = Vec::new();
+        majority_from_counts(&counts, 5, &mut folded);
+        assert_eq!(folded, majority_sketch(&rows, wpt));
+    }
+
+    #[test]
+    fn sketch_padding_bits_stay_zero() {
+        // rows from a ragged codes_bytes width: padding bits are zero in
+        // every row, so they must be zero in the sketch too
+        let cb = 9usize; // 2 words/token, second word has a 1-byte payload
+        let bytes: Vec<u8> = (0..5 * cb).map(|i| (i * 41 + 3) as u8).collect();
+        let words = pack_signs_u64(&bytes, 5, cb);
+        let m = majority_sketch(&words, words_per_token(cb));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[1] & !0xff, 0, "padding bits beyond codes_bytes leak");
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub use codes::{encode_token, encode_tokens_packed, sign_code};
 pub use lut::Lut;
 pub use normalize::ChannelStats;
 pub use score::{
-    popcnt_kernel_name, score_block_bytelut, score_block_popcnt,
+    page_bound, popcnt_kernel_name, score_block_bytelut, score_block_popcnt,
     score_block_popcnt_scalar, score_tokens, score_tokens_bytelut, BlockScorer, ByteLut,
 };
 pub use topk::{top_k_indices, TopKStream};
@@ -94,6 +94,14 @@ pub struct SelfIndexConfig {
     pub use_sinks: bool,
     /// decode-retrieval score kernel (byte-LUT oracle vs popcount).
     pub scorer: Scorer,
+    /// blocks per retrieval page for the hierarchical popcount tier
+    /// (DESIGN.md §Perf iteration 9): each closed page of this many full
+    /// blocks gets a bit-majority sketch + Hamming radius, and
+    /// `stream_select` skips pages whose sound score bound cannot beat
+    /// the running top-k threshold. 0 disables paging (flat sweep). Only
+    /// the [`Scorer::Popcnt`] path consults pages; selection stays
+    /// bit-identical to the flat sweep either way.
+    pub page_blocks: usize,
 }
 
 impl Default for SelfIndexConfig {
@@ -108,6 +116,7 @@ impl Default for SelfIndexConfig {
             sign_plane_quant: true,
             use_sinks: true,
             scorer: Scorer::ByteLut,
+            page_blocks: 64,
         }
     }
 }
@@ -154,6 +163,7 @@ mod tests {
         assert_eq!(c.sink_tokens, 64);
         assert_eq!(c.sparse_k, 96);
         assert_eq!(c.scorer, Scorer::ByteLut, "byte-LUT stays the oracle default");
+        assert_eq!(c.page_blocks, 64, "hierarchical page tier on by default");
         assert!(c.validate(64).is_ok());
         assert!(c.validate(128).is_ok());
     }

@@ -334,6 +334,32 @@ pub fn popcnt_kernel_name(words_per_token: usize) -> &'static str {
     "scalar"
 }
 
+/// Sound upper bound on the popcount score of every token in a page,
+/// from the page's bit-majority sketch `m` and Hamming radius
+/// `r = max_t popcount(codes_t ⊕ m)` (`quant::pack::hamming_radius`).
+/// By the Hamming triangle inequality,
+///
+/// ```text
+/// popcount(q ⊕ t) ≥ popcount(q ⊕ m) − popcount(t ⊕ m) ≥ popcount(q ⊕ m) − r
+/// ```
+///
+/// so `score(t) = dim − 2·popcount(q ⊕ t) ≤ dim − 2·(popcount(q ⊕ m) − r)`
+/// for every token `t` the radius covers. The gap `popcount(q⊕m) − r` can
+/// be negative — signed arithmetic keeps the bound valid (just loose).
+/// The radius is monotone in its token set, so a bound over a page whose
+/// scored suffix was clamped by `end` is still sound. All-integer
+/// arithmetic cast to f32 once: bit-identical under any RUSTFLAGS, like
+/// every kernel above, so page skipping preserves the CI parity matrix.
+#[inline]
+pub fn page_bound(q_words: &[u64], m: &[u64], r: u32, dim: usize) -> f32 {
+    debug_assert_eq!(q_words.len(), m.len());
+    let mut qm = 0u32;
+    for (&q, &mw) in q_words.iter().zip(m) {
+        qm += (q ^ mw).count_ones();
+    }
+    (dim as i64 - 2 * (qm as i64 - r as i64)) as f32
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use super::popcnt_body;
@@ -554,6 +580,33 @@ mod tests {
             score_block_bytelut(&blut, &packed, 0, &mut out),
             f32::NEG_INFINITY
         );
+    }
+
+    #[test]
+    fn page_bound_dominates_every_token_score() {
+        // random word rows: the sketch/radius bound must sit at or above
+        // the popcount kernel's block max for any query, including ragged
+        // word tails (dim 72 → 9 codes bytes → 2 words, 1-byte payload)
+        let mut r = Rng::new(0xb0b);
+        for &dim in &[8usize, 64, 72, 128] {
+            let cb = dim / 8;
+            let wpt = crate::quant::pack::words_per_token(cb);
+            for &tokens in &[1usize, 5, 33] {
+                let bytes: Vec<u8> = (0..tokens * cb).map(|_| r.below(256) as u8).collect();
+                let words = crate::quant::pack::pack_signs_u64(&bytes, tokens, cb);
+                let m = crate::quant::pack::majority_sketch(&words, wpt);
+                let rad = crate::quant::pack::hamming_radius(&words, &m);
+                let qb: Vec<u8> = (0..cb).map(|_| r.below(256) as u8).collect();
+                let q_words = crate::quant::pack::pack_signs_u64(&qb, 1, cb);
+                let mut out = vec![0.0f32; tokens];
+                let bmax = score_block_popcnt(&q_words, &words, tokens, dim, &mut out);
+                let bound = page_bound(&q_words, &m, rad, dim);
+                assert!(bound >= bmax, "dim {dim} n {tokens}: bound {bound} < block max {bmax}");
+            }
+        }
+        // the query exactly at the sketch with radius 0: bound == dim
+        let m = vec![0xdead_beefu64];
+        assert_eq!(page_bound(&m, &m, 0, 64), 64.0);
     }
 
     #[test]

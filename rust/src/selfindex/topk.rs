@@ -40,7 +40,8 @@ fn worse(a: &Entry, b: &Entry) -> bool {
 /// Scores are pushed as they are produced (block by block, straight out
 /// of the compressed cache); a running k-th-score bar rejects most pushes
 /// with a single `f32` compare before any heap work, and
-/// [`TopKStream::threshold`] lets callers skip *entire blocks* whose
+/// [`TopKStream::threshold`] lets callers skip *entire blocks* — or, with
+/// the sketch bound of DESIGN.md §Perf iteration 9, entire pages — whose
 /// maximum score cannot enter the kept set. Same contract as
 /// [`top_k_indices`] (descending scores, ties → smaller index, NaN ranks
 /// last), verified by an equivalence property test.

@@ -421,4 +421,44 @@ mod tests {
             Ok(())
         });
     }
+
+    /// The page sketch bound of DESIGN.md §Perf iteration 9 must dominate
+    /// every token score it covers: `dim - 2*(popcount(q^m) - r)` is an
+    /// upper bound on `dim - 2*popcount(q^t)` for every row `t` inside the
+    /// sketched set. Exercised across sub-word tail dims (8..=136) and on
+    /// row subsets, which model the end-clamped partial page a truncated
+    /// `stream_select` descends: the radius then covers a superset of the
+    /// scored rows, so the bound only loosens and stays sound.
+    #[test]
+    fn prop_page_bound_is_sound_for_full_and_partial_pages() {
+        use crate::quant::pack;
+        use crate::selfindex::score::{page_bound, score_block_popcnt};
+        check(13, 300, sign_workload, |(dim, tokens, key_codes, q_codes)| {
+            if *tokens == 0 {
+                return Ok(());
+            }
+            let cb = dim / 8;
+            let packed = pack::pack_codes(key_codes);
+            let words = pack::pack_signs_u64(&packed, *tokens, cb);
+            let q_packed = pack::pack_codes(q_codes);
+            let q_words = pack::pack_signs_u64(&q_packed, 1, cb);
+            let wpt = pack::words_per_token(cb);
+            let m = pack::majority_sketch(&words, wpt);
+            let r = pack::hamming_radius(&words, &m);
+            let bound = page_bound(&q_words, &m, r, *dim);
+            let mut scores = vec![0.0f32; *tokens];
+            let best = score_block_popcnt(&q_words, &words, *tokens, *dim, &mut scores);
+            prop_assert!(best <= bound, "best {best} beats page bound {bound} (r {r})");
+            // any prefix of the sketched rows must also be dominated
+            let sub = 1 + (*tokens - 1) / 2;
+            let mut sub_scores = vec![0.0f32; sub];
+            let sub_best =
+                score_block_popcnt(&q_words, &words[..sub * wpt], sub, *dim, &mut sub_scores);
+            prop_assert!(
+                sub_best <= bound,
+                "prefix best {sub_best} beats page bound {bound} (r {r})"
+            );
+            Ok(())
+        });
+    }
 }

@@ -8,13 +8,17 @@
 //! order, so equality holds under ANY RUSTFLAGS — the workflow runs this
 //! file twice (baseline and `-C target-cpu=native`) to pin exactly that.
 
+use selfindex_kv::kvcache::manager::KvManager;
+use selfindex_kv::kvcache::store::HeadCache;
 use selfindex_kv::quant::pack;
 use selfindex_kv::selfindex::codes::{encode_tokens_packed, sign_code};
 use selfindex_kv::selfindex::lut::Lut;
 use selfindex_kv::selfindex::score::{
-    popcnt_kernel_name, score_block_bytelut, score_block_popcnt, score_block_popcnt_scalar,
-    score_tokens, score_tokens_bytelut, BlockScorer, ByteLut,
+    page_bound, popcnt_kernel_name, score_block_bytelut, score_block_popcnt,
+    score_block_popcnt_scalar, score_tokens, score_tokens_bytelut, BlockScorer, ByteLut,
 };
+use selfindex_kv::selfindex::topk::TopKStream;
+use selfindex_kv::selfindex::SelfIndexConfig;
 use selfindex_kv::substrate::rng::Rng;
 
 /// The ground-truth oracle: unpack nibbles, count agreeing minus
@@ -144,6 +148,115 @@ fn parity_at_extremes() {
             assert_parity(q, keys, 3, dim, &format!("extreme {label} d{dim}"));
         }
     }
+}
+
+#[test]
+fn parity_page_bound_dominates_block_scores() {
+    // the hierarchical page bound (DESIGN.md §Perf iteration 9) is pure
+    // integer arithmetic: under any RUSTFLAGS it must stay a sound upper
+    // bound on every kernel's token scores, bit-for-bit
+    let mut r = Rng::new(0xbead);
+    for &dim in &[8usize, 40, 64, 104, 128] {
+        for &tokens in &[1usize, 13, 64, 200] {
+            let cb = dim / 8;
+            let packed: Vec<u8> = (0..tokens * cb).map(|_| r.below(256) as u8).collect();
+            let q_codes: Vec<u8> = (0..dim / 4).map(|_| r.below(16) as u8).collect();
+            let words = pack::pack_signs_u64(&packed, tokens, cb);
+            let q_packed = pack::pack_codes(&q_codes);
+            let q_words = pack::pack_signs_u64(&q_packed, 1, cb);
+            let wpt = pack::words_per_token(cb);
+            let m = pack::majority_sketch(&words, wpt);
+            let rad = pack::hamming_radius(&words, &m);
+            let bound = page_bound(&q_words, &m, rad, dim);
+            let mut scores = vec![f32::NAN; tokens];
+            let best = score_block_popcnt(&q_words, &words, tokens, dim, &mut scores);
+            let mut scores_s = vec![f32::NAN; tokens];
+            let best_s = score_block_popcnt_scalar(&q_words, &words, tokens, dim, &mut scores_s);
+            assert_eq!(best.to_bits(), best_s.to_bits(), "d{dim} n{tokens} kernel max");
+            assert!(
+                best <= bound,
+                "d{dim} n{tokens}: best {best} beats page bound {bound} (r {rad})"
+            );
+            // a sketch self-query at radius zero is exactly +dim
+            assert_eq!(
+                page_bound(&m, &m, 0, dim).to_bits(),
+                (dim as f32).to_bits(),
+                "d{dim} self-query"
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_paged_stream_select_is_bit_identical_to_flat() {
+    // end-to-end through the public cache API: sketch-bounded page
+    // skipping must return the SAME (index, score) selection as the flat
+    // sweep under every RUSTFLAGS configuration the matrix pins
+    const DIM: usize = 64;
+    const BT: usize = 16;
+    const TOKENS: usize = 900;
+    let mut r = Rng::new(0xcafe);
+    let keys: Vec<f32> = (0..TOKENS * DIM).map(|_| r.normal_f32()).collect();
+    let vals: Vec<f32> = (0..TOKENS * DIM).map(|_| r.normal_f32()).collect();
+    let build = |page_blocks: usize| {
+        let cfg = SelfIndexConfig { page_blocks, ..Default::default() };
+        let mgr = KvManager::for_head(DIM, &cfg, BT, 128);
+        let mut hc = HeadCache::new(DIM, cfg);
+        let prefill = 768 * DIM; // block-aligned prompt, decode tail after
+        hc.ingest_prefill(&mgr, &keys[..prefill], &vals[..prefill], 0).unwrap();
+        for t in 768..TOKENS {
+            hc.append(mgr.pool(), &keys[t * DIM..(t + 1) * DIM], &vals[t * DIM..(t + 1) * DIM])
+                .unwrap();
+        }
+        (mgr, hc)
+    };
+    let (mgr_f, flat) = build(0);
+    let (mgr_p, paged) = build(4); // 64-token pages: 14 closed + open tail
+    assert_eq!(flat.pages(), 0, "page_blocks 0 keeps the flat sweep");
+    assert_eq!(paged.pages(), TOKENS / (4 * BT), "closed full pages");
+
+    let sinks: [&[u32]; 3] = [&[], &[0, 5, 100, 899], &[0, 1, 2, 3]];
+    let mut scores = Vec::new();
+    let mut sel = TopKStream::new(0);
+    let mut out_f = Vec::new();
+    let mut out_p = Vec::new();
+    for qi in 0..8u64 {
+        let mut qr = Rng::new(0x9000 + qi);
+        let q_codes: Vec<u8> = (0..DIM / 4).map(|_| qr.below(16) as u8).collect();
+        let q_packed = pack::pack_codes(&q_codes);
+        let q_words = pack::pack_signs_u64(&q_packed, 1, DIM / 8);
+        let scorer = BlockScorer::Popcnt { q_words: &q_words, dim: DIM };
+        for &k in &[0usize, 1, 17, 96] {
+            for &end in &[TOKENS, 641, 64, 1] {
+                for sink_ids in sinks {
+                    flat.stream_select(
+                        mgr_f.pool(),
+                        &scorer,
+                        end,
+                        sink_ids,
+                        k,
+                        &mut scores,
+                        &mut sel,
+                        &mut out_f,
+                    );
+                    paged.stream_select(
+                        mgr_p.pool(),
+                        &scorer,
+                        end,
+                        sink_ids,
+                        k,
+                        &mut scores,
+                        &mut sel,
+                        &mut out_p,
+                    );
+                    assert_eq!(out_f, out_p, "q{qi} k{k} end{end} sinks{sink_ids:?}");
+                }
+            }
+        }
+    }
+    let (scanned, skipped) = paged.page_stats();
+    assert!(scanned > 0, "paged path must have engaged");
+    assert!(skipped <= scanned);
 }
 
 #[test]
